@@ -1,0 +1,49 @@
+//! Figure 3 ablation as a library-usage example: vary the fidelity of Δ
+//! by stacking successive 1-bit masks (iterative BitDelta) and watch the
+//! reconstruction error and quality approach the fine-tune.
+//!
+//! ```bash
+//! cargo run --release --example delta_fidelity
+//! ```
+
+use anyhow::Result;
+use bitdelta::config::ModelConfig;
+use bitdelta::delta::iterative::{compress_iterative, residual_curve};
+use bitdelta::delta::svd::rank_at_cev;
+use bitdelta::store::delta_file::load_model;
+use bitdelta::tensor::Tensor;
+
+fn main() -> Result<()> {
+    let cfg = ModelConfig::sim_s();
+    let base = load_model("artifacts/models/sim-s-base.bdw", &cfg)?;
+    let fine = load_model("artifacts/models/sim-s-chat.bdw", &cfg)?;
+
+    // successive 1-bit masks, each with its own free scale factor
+    let levels = 8;
+    let delta = compress_iterative(&cfg, &base, &fine, levels)?;
+
+    let name = cfg.linear_names()[cfg.linear_names().len() / 2].clone();
+    let curve = residual_curve(&cfg, &base, &fine, &delta, &name)?;
+    let wb = base[&name].as_f32()?;
+    let wf = fine[&name].as_f32()?;
+    let d0: f64 = wf.iter().zip(&wb)
+        .map(|(f, b)| ((f - b) as f64).powi(2)).sum::<f64>().sqrt();
+
+    println!("fidelity ablation on {name} (||Δ|| = {d0:.4})");
+    println!("{:>6} {:>14} {:>12}", "bits", "residual", "captured");
+    for (k, r) in curve.iter().enumerate() {
+        println!("{:>6} {:>14.5} {:>11.1}%", k + 1, r,
+                 100.0 * (1.0 - (*r as f64 / d0).powi(2)));
+    }
+    println!("\nEach extra mask costs 1/32 of the f32 delta and buys a \
+shrinking error slice — matching the paper's saturation by ~2-3 bits \
+(Fig. 3 / Table 9).");
+
+    // contrast with the rank story (Fig. 2): the same delta is HIGH rank
+    let (n, m) = cfg.linear_shape(&name);
+    let dvals: Vec<f32> = wf.iter().zip(&wb).map(|(f, b)| f - b).collect();
+    let r90 = rank_at_cev(&Tensor::new(vec![n, m], dvals), 0.9);
+    println!("rank needed for 90% of the delta's variance: {r90}/{} — \
+low-rank compression has no easy win here.", n.min(m));
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: compress a fine-tune into a 1-bit delta with the
+//! rust-native compressor, verify the reconstruction, then serve one
+//! request through the decomposed Eq. 6 path.
+//!
+//! ```bash
+//! make artifacts            # once (trains + lowers everything)
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use bitdelta::config::ModelConfig;
+use bitdelta::delta::bitdelta::{compress, materialize};
+use bitdelta::model::sampling::SamplingParams;
+use bitdelta::serving::engine::{Engine, EngineConfig};
+use bitdelta::serving::request::Request;
+use bitdelta::store::delta_file::load_model;
+
+fn main() -> Result<()> {
+    let cfg = ModelConfig::sim_s();
+
+    // 1. Offline: compress the chat fine-tune against the base.
+    let base = load_model("artifacts/models/sim-s-base.bdw", &cfg)?;
+    let fine = load_model("artifacts/models/sim-s-chat.bdw", &cfg)?;
+    let compressed = compress(&cfg, &base, &fine)?;
+    println!("compressed sim-s-chat: {} bytes \
+({:.2}x smaller than the dense f32 model)",
+             compressed.delta.delta_bytes(),
+             compressed.compression_factor(&cfg));
+
+    // 2. Sanity: the reconstruction W_base + α·Sign(Δ) stays close to
+    //    the fine-tune in Frobenius norm (the paper's Eq. 3 objective).
+    let recon = materialize(&cfg, &base, &compressed.delta)?;
+    let name = &cfg.linear_names()[0];
+    let err: f64 = fine[name].as_f32()?.iter()
+        .zip(recon[name].as_f32()?)
+        .map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt();
+    let delta_norm: f64 = fine[name].as_f32()?.iter()
+        .zip(base[name].as_f32()?)
+        .map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt();
+    println!("{name}: ||Δ - Δ̂|| / ||Δ|| = {:.3}", err / delta_norm);
+
+    // 3. Serve: one request through the real multi-tenant engine
+    //    (shared base weights + this tenant's 1-bit delta, via the
+    //    Pallas-lowered decode executable).
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = 1;
+    let mut engine = Engine::from_artifacts(ec)?;
+    let chan = engine.submit(Request {
+        tenant: "sim-s-chat".into(),
+        prompt: "Q: what color is the sky ?\nA:".into(),
+        max_new_tokens: 24,
+        sampling: SamplingParams::greedy(),
+    })?;
+    engine.run_until_idle(10_000)?;
+    let resp = chan.recv()?;
+    println!("served [{}]: {:?} ({} tokens, {:.1} ms)",
+             resp.tenant, resp.text, resp.tokens.len(),
+             resp.latency.as_secs_f64() * 1e3);
+    Ok(())
+}

@@ -1,0 +1,487 @@
+"""AOT artifact pipeline — the single entry point of ``make artifacts``.
+
+Runs ONCE at build time (python is never on the request path):
+
+1. generate the synthetic world, corpora and eval sets;
+2. pretrain the base models and train every tenant fine-tune;
+3. compress: BitDelta (quantize + scale distillation), iterative
+   multi-mask deltas, SVD baselines, quantized-base variants (Table 6);
+4. serialize weights/deltas to BDW containers;
+5. lower every serving executable to **HLO text** (never ``.serialize()``
+   — xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the text
+   parser reassigns ids, see /opt/xla-example/README.md);
+6. write ``manifest.json`` describing everything for the rust runtime.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+(add ``--quick`` for a CI-sized build: fewer steps, sim-s only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitdelta as bd
+from . import data as D
+from . import quant as Q
+from . import svd_baseline as S
+from . import train as T
+from .config import CONFIGS, DistillConfig, ModelConfig, TrainConfig
+from .model import (decode_bitdelta, decode_dense, decode_lora, decode_naive,
+                    forward_logits, logits_bitdelta, nonlinear_names,
+                    prefill)
+from .serialize import read_bdw, write_delta, write_lora, write_model
+
+from jax._src.lib import xla_client as xc
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export_hlo(fn, args, path: str, tag: str) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] lowered {tag} -> {os.path.basename(path)} "
+          f"({len(text)} chars, {time.time() - t0:.1f}s)", flush=True)
+    return {"path": os.path.basename(path)}
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Executable argument specs (the python↔rust ABI)
+# ---------------------------------------------------------------------------
+
+
+def dense_param_specs(cfg: ModelConfig, batch: int | None = None):
+    """Weight specs in canonical order; leading tenant axis if ``batch``."""
+    out = []
+    for n in cfg.param_names():
+        s = cfg.param_shape(n)
+        out.append(spec((batch, *s) if batch else s))
+    return out
+
+
+def kv_specs(cfg: ModelConfig, b: int):
+    shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len, cfg.head_dim)
+    return spec(shape), spec(shape)
+
+
+def bitdelta_specs(cfg: ModelConfig, b: int):
+    base = [spec(cfg.linear_shape(n)) for n in cfg.linear_names()]
+    bits = [spec((b, *cfg.packed_shape(n)), jnp.uint8)
+            for n in cfg.linear_names()]
+    scales = spec((b, len(cfg.linear_names())))
+    extras = [spec((b, *cfg.param_shape(n))) for n in nonlinear_names(cfg)]
+    return base, bits, scales, extras
+
+
+def lora_specs(cfg: ModelConfig, b: int, rank: int):
+    base = [spec(cfg.linear_shape(n)) for n in cfg.linear_names()]
+    a = [spec((b, rank, cfg.linear_shape(n)[1])) for n in cfg.linear_names()]
+    bm = [spec((b, cfg.linear_shape(n)[0], rank)) for n in cfg.linear_names()]
+    extras = [spec((b, *cfg.param_shape(n))) for n in nonlinear_names(cfg)]
+    return base, a, bm, extras
+
+
+def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
+                       lora_rank: int, eval_batch: int, eval_len: int,
+                       prefill_len: int, decode_batches, quick: bool) -> dict:
+    """Lower every executable for one model size. Returns manifest entries."""
+    os.makedirs(hlo_dir, exist_ok=True)
+    exes = {}
+
+    def path(name):
+        return os.path.join(hlo_dir, f"{cfg.name}.{name}.hlo.txt")
+
+    # --- logits forward (eval harness / likelihood scoring) ---------------
+    for b in ([1, eval_batch] if full else [eval_batch]):
+        name = f"logits_fwd_b{b}_t{eval_len}"
+        exes[name] = export_hlo(
+            lambda *a: (forward_logits(cfg, dict(zip(cfg.param_names(),
+                                                     a[:-1])), a[-1]),),
+            [*dense_param_specs(cfg), spec((b, eval_len), jnp.int32)],
+            path(name), f"{cfg.name}.{name}")
+        exes[name].update(kind="logits_fwd", batch=b, seq=eval_len)
+
+    if not full:
+        return exes
+
+    # --- bitdelta logits (serving-path cross-check + Table-1-style eval) --
+    b = 1
+    base_s, bits_s, scales_s, extras_s = bitdelta_specs(cfg, b)
+    name = f"logits_bitdelta_b{b}_t{eval_len}"
+    nb, nl = len(base_s), len(cfg.linear_names())
+
+    def logits_bd_fn(*a):
+        base = list(a[:nb])
+        bits = list(a[nb:nb + nl])
+        scales = a[nb + nl]
+        nx = len(nonlinear_names(cfg))
+        extras = list(a[nb + nl + 1: nb + nl + 1 + nx])
+        tokens = a[-1]
+        return (logits_bitdelta(cfg, base, bits, scales, extras, tokens),)
+
+    exes[name] = export_hlo(
+        logits_bd_fn,
+        [*base_s, *bits_s, scales_s, *extras_s,
+         spec((b, eval_len), jnp.int32)],
+        path(name), f"{cfg.name}.{name}")
+    exes[name].update(kind="logits_bitdelta", batch=b, seq=eval_len)
+
+    # --- dense prefill (B=1) ----------------------------------------------
+    name = f"prefill_t{prefill_len}"
+    exes[name] = export_hlo(
+        lambda *a: prefill(cfg, dict(zip(cfg.param_names(), a[:-3])),
+                           a[-3], a[-2], a[-1]),
+        [*dense_param_specs(cfg), spec((1, prefill_len), jnp.int32),
+         spec((), jnp.int32), spec((), jnp.float32)],
+        path(name), f"{cfg.name}.{name}")
+    exes[name].update(kind="prefill", batch=1, seq=prefill_len)
+
+    # --- decode steps, all modes -------------------------------------------
+    for b in decode_batches["dense"]:
+        name = f"decode_dense_b{b}"
+        k_s, v_s = kv_specs(cfg, b)
+        exes[name] = export_hlo(
+            lambda *a: decode_dense(cfg, list(a[:-5]), *a[-5:]),
+            [*dense_param_specs(cfg), k_s, v_s, spec((b,), jnp.int32),
+             spec((b,), jnp.int32), spec((b,))],
+            path(name), f"{cfg.name}.{name}")
+        exes[name].update(kind="decode_dense", batch=b)
+
+    for b in decode_batches["naive"]:
+        name = f"decode_naive_b{b}"
+        k_s, v_s = kv_specs(cfg, b)
+        exes[name] = export_hlo(
+            lambda *a: decode_naive(cfg, list(a[:-5]), *a[-5:]),
+            [*dense_param_specs(cfg, batch=b), k_s, v_s,
+             spec((b,), jnp.int32), spec((b,), jnp.int32), spec((b,))],
+            path(name), f"{cfg.name}.{name}")
+        exes[name].update(kind="decode_naive", batch=b)
+
+    nx = len(nonlinear_names(cfg))
+    for b in decode_batches["bitdelta"]:
+        name = f"decode_bitdelta_b{b}"
+        base_s, bits_s, scales_s, extras_s = bitdelta_specs(cfg, b)
+        k_s, v_s = kv_specs(cfg, b)
+
+        def bd_fn(*a, _b=b):
+            base = list(a[:nb])
+            bits = list(a[nb:nb + nl])
+            scales = a[nb + nl]
+            extras = list(a[nb + nl + 1: nb + nl + 1 + nx])
+            kc, vc, pos, tok, rs = a[-5:]
+            return decode_bitdelta(cfg, base, bits, scales, extras,
+                                   kc, vc, pos, tok, rs)
+
+        exes[name] = export_hlo(
+            bd_fn,
+            [*base_s, *bits_s, scales_s, *extras_s, k_s, v_s,
+             spec((b,), jnp.int32), spec((b,), jnp.int32), spec((b,))],
+            path(name), f"{cfg.name}.{name}")
+        exes[name].update(kind="decode_bitdelta", batch=b)
+
+    for b in decode_batches["lora"]:
+        name = f"decode_lora_b{b}"
+        base_s, a_s, bm_s, extras_s = lora_specs(cfg, b, lora_rank)
+        k_s, v_s = kv_specs(cfg, b)
+
+        def lora_fn(*a, _b=b):
+            base = list(a[:nb])
+            af = list(a[nb:nb + nl])
+            bf = list(a[nb + nl:nb + 2 * nl])
+            extras = list(a[nb + 2 * nl: nb + 2 * nl + nx])
+            kc, vc, pos, tok, rs = a[-5:]
+            return decode_lora(cfg, base, af, bf, extras, kc, vc, pos,
+                               tok, rs)
+
+        exes[name] = export_hlo(
+            lora_fn,
+            [*base_s, *a_s, *bm_s, *extras_s, k_s, v_s,
+             spec((b,), jnp.int32), spec((b,), jnp.int32), spec((b,))],
+            path(name), f"{cfg.name}.{name}")
+        exes[name].update(kind="decode_lora", batch=b, rank=lora_rank)
+
+    return exes
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+def svd_to_kernel_abi(factors):
+    """svd_baseline gives (A [N,r], B [r,M]); kernel ABI wants
+    (a_down [r,M], b_up [N,r]) with delta = b_up @ a_down."""
+    return {n: (b, a) for n, (a, b) in factors.items()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI build: fewer steps, sim-s only")
+    ap.add_argument("--skip-hlo", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="reuse models already trained in out-dir")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out_dir)
+    for sub in ("models", "deltas", "hlo", "eval"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    t_start = time.time()
+    manifest: dict = {"version": 1, "configs": {}, "models": {},
+                      "tenants": {}, "executables": {}, "evals": [],
+                      "lora_rank": 16}
+
+    # ---- 1. world + data ---------------------------------------------------
+    world = D.World(seed=0)
+    corpus = D.make_pretrain_corpus(world, n_chars=150_000 if args.quick
+                                    else 400_000)
+    D.write_evals(world, os.path.join(out, "eval"))
+    manifest["evals"] = sorted(os.listdir(os.path.join(out, "eval")))
+
+    tcfg = TrainConfig()
+    dcfg = DistillConfig()
+    if args.quick:
+        tcfg = dataclasses.replace(tcfg, pretrain_steps=60,
+                                   finetune_steps=30)
+        dcfg = dataclasses.replace(dcfg, steps=30, n_samples=64)
+    calib = bd.calibration_batches(corpus, dcfg)
+
+    sizes = ["sim-s"] if args.quick else ["sim-s", "sim-m"]
+
+    chat_docs = D.make_chat_dataset(world)
+    # math tenant: heavier dataset + a replay slice of generic facts so
+    # the fine-tune gains arithmetic without catastrophic forgetting
+    # (standard SFT data mixing)
+    math_docs = (D.make_math_dataset(n=8000)
+                 + D.make_chat_dataset(world, n=800, seed=77))
+    prefs = D.make_preference_dataset(world)
+
+    def save_model(name, cfg, params):
+        p = os.path.join(out, "models", f"{name}.bdw")
+        write_model(p, cfg, params)
+        manifest["models"][name] = {"file": f"models/{name}.bdw",
+                                    "config": cfg.name}
+
+    def cached(name, cfg, make):
+        """Train (or reload with --resume) a model, registering it."""
+        p = os.path.join(out, "models", f"{name}.bdw")
+        if args.resume and os.path.exists(p):
+            print(f"[aot] resume: loading {name}", flush=True)
+            params = {k: jnp.asarray(v) for k, v in read_bdw(p).items()}
+            manifest["models"][name] = {"file": f"models/{name}.bdw",
+                                        "config": cfg.name}
+            return params
+        params = make()
+        save_model(name, cfg, params)
+        return params
+
+    for size in sizes:
+        cfg = CONFIGS[size]
+        manifest["configs"][size] = cfg.to_json()
+
+        # ---- 2. pretrain + fine-tune ---------------------------------------
+        base = cached(f"{size}-base", cfg,
+                      lambda: T.pretrain(cfg, tcfg, corpus))
+
+        tenants: dict = {}
+        tenants[f"{size}-chat"] = dict(
+            kind="sft", rope_scale=1.0,
+            params=cached(f"{size}-chat", cfg,
+                          lambda: T.finetune_full(cfg, tcfg, base, chat_docs,
+                                                  f"ft/{size}-chat")))
+        tenants[f"{size}-math"] = dict(
+            kind="sft", rope_scale=1.0,
+            params=cached(f"{size}-math", cfg,
+                          lambda: T.finetune_full(
+                              cfg, tcfg, base, math_docs,
+                              f"ft/{size}-math",
+                              steps=None if args.quick
+                              else tcfg.finetune_steps * 4)))
+        if size == "sim-s":
+            tenants[f"{size}-rlhf"] = dict(
+                kind="rlhf", rope_scale=1.0,
+                params=cached(f"{size}-rlhf", cfg,
+                              lambda: T.finetune_rlhf(cfg, tcfg, base, prefs,
+                                                      f"ft/{size}-rlhf")))
+            # context extension: position interpolation at 0.5 over longer
+            # windows (the Vicuna-16k analog)
+            tenants[f"{size}-chat-ext"] = dict(
+                kind="rope", rope_scale=0.5,
+                params=cached(f"{size}-chat-ext", cfg,
+                              lambda: T.finetune_full(
+                                  cfg, tcfg, base, chat_docs,
+                                  f"ft/{size}-chat-ext", rope_scale=0.5,
+                                  seq_len=min(192, cfg.max_seq_len))))
+            tenants[f"{size}-lora"] = dict(
+                kind="lora-ft", rope_scale=1.0,
+                params=cached(f"{size}-lora", cfg,
+                              lambda: T.finetune_lora(cfg, tcfg, base,
+                                                      chat_docs,
+                                                      f"ft/{size}-lora",
+                                                      rank=16)))
+
+        # ---- 3+4. compress + serialize --------------------------------------
+        for tname, t in tenants.items():
+            dpath = f"deltas/{tname}.bdd"
+            dpath0 = f"deltas/{tname}.initial.bdd"
+            done = (args.resume
+                    and os.path.exists(os.path.join(out, dpath))
+                    and os.path.exists(os.path.join(out, dpath0)))
+            if done:
+                print(f"[aot] resume: delta {tname} exists", flush=True)
+            else:
+                bits, scales0 = bd.quantize_deltas(cfg, base, t["params"])
+                scales = bd.distill_scales(cfg, base, t["params"], bits,
+                                           scales0, calib, dcfg,
+                                           rope_scale=t["rope_scale"],
+                                           tag=f"distill/{tname}")
+                extras = {n: np.asarray(t["params"][n], np.float32)
+                          for n in nonlinear_names(cfg)}
+                write_delta(os.path.join(out, dpath), cfg,
+                            [(bits, scales)], extras)
+                write_delta(os.path.join(out, dpath0), cfg,
+                            [(bits, scales0)], extras)
+            manifest["tenants"][tname] = {
+                "config": size, "kind": t["kind"],
+                "rope_scale": t["rope_scale"],
+                "finetune": f"models/{tname}.bdw",
+                "delta": dpath, "delta_initial": dpath0,
+            }
+            size_info = bd.delta_size_bytes(cfg)
+            manifest["tenants"][tname]["compression"] = size_info
+
+        # sim-s gets the full ablation battery
+        if size == "sim-s":
+            chat = tenants[f"{size}-chat"]["params"]
+
+            # ---- SVD baselines (Table 1): r=16 (common) and the
+            # memory-equivalent rank d/32 (paper's r=128 at d=4096) --------
+            for rank, label in [(16, "r16"),
+                                (max(2, cfg.d_model // 32), "req")]:
+                lp_done = os.path.join(
+                    out, f"deltas/{size}-chat.svd-{label}.distilled.bdw")
+                if args.resume and os.path.exists(lp_done):
+                    print(f"[aot] resume: svd-{label} exists", flush=True)
+                else:
+                    fac0 = S.svd_compress(cfg, base, chat, rank)
+                    fac = S.distill_factors(
+                        cfg, base, chat, fac0, calib, dcfg,
+                        tag=f"svd-{label}/{size}",
+                        steps=(dcfg.steps // 2 if not args.quick else 10))
+                    extras = {n: np.asarray(chat[n], np.float32)
+                              for n in nonlinear_names(cfg)}
+                    for tag2, f in [("initial", fac0), ("distilled", fac)]:
+                        lp = f"deltas/{size}-chat.svd-{label}.{tag2}.bdw"
+                        write_lora(os.path.join(out, lp), cfg,
+                                   svd_to_kernel_abi(f), extras)
+                manifest["tenants"][f"{size}-chat"][f"svd_{label}"] = {
+                    "rank": min(rank, cfg.d_model),
+                    "initial": f"deltas/{size}-chat.svd-{label}.initial.bdw",
+                    "distilled":
+                        f"deltas/{size}-chat.svd-{label}.distilled.bdw",
+                }
+
+            # ---- iterative multi-mask deltas (Fig. 3 / Table 9) ------------
+            levels = 4 if args.quick else 8
+            masks = bd.iterative_bitdelta(cfg, base, chat, levels)
+            extras = {n: np.asarray(chat[n], np.float32)
+                      for n in nonlinear_names(cfg)}
+            fidelity = {}
+            for k in range(1, levels + 1):
+                fp = f"deltas/{size}-chat.fidelity{k}.bdd"
+                write_delta(os.path.join(out, fp), cfg, masks[:k], extras)
+                fidelity[str(k)] = fp
+            manifest["tenants"][f"{size}-chat"]["fidelity"] = fidelity
+
+            # ---- quantized bases (Table 6) ---------------------------------
+            hess = None
+            qbases = {}
+            for method in ("rtn8", "gptq4", "quip2"):
+                qname = f"{size}-base-{method}"
+                dp = f"deltas/{size}-chat.on-{method}.bdd"
+                if args.resume and os.path.exists(os.path.join(out, dp)):
+                    print(f"[aot] resume: quant {method} exists", flush=True)
+                    for mn in (qname, f"{size}-chat-{method}"):
+                        manifest["models"][mn] = {
+                            "file": f"models/{mn}.bdw", "config": cfg.name}
+                else:
+                    if hess is None and method == "gptq4":
+                        hess = Q.collect_hessians(cfg, base, calib)
+                    qb = Q.quantize_base(cfg, base, method, hessians=hess)
+                    save_model(qname, cfg, qb)
+                    # quantized *fine-tune* = Table 6 "Baseline" rows
+                    qf = Q.quantize_base(cfg, chat, method, hessians=hess)
+                    save_model(f"{size}-chat-{method}", cfg, qf)
+                    # re-quantize + re-distill the delta on the new base
+                    bits, scales0 = bd.quantize_deltas(cfg, qb, chat)
+                    scales = bd.distill_scales(
+                        cfg, qb, chat, bits, scales0, calib, dcfg,
+                        tag=f"distill/{qname}",
+                        steps=(dcfg.steps // 2 if not args.quick else 10))
+                    extras = {n: np.asarray(chat[n], np.float32)
+                              for n in nonlinear_names(cfg)}
+                    write_delta(os.path.join(out, dp), cfg,
+                                [(bits, scales)], extras)
+                qbases[method] = {"base": f"models/{qname}.bdw",
+                                  "chat_quantized":
+                                      f"models/{size}-chat-{method}.bdw",
+                                  "delta": dp}
+            manifest["quantized_bases"] = qbases
+
+        # ---- 5. HLO exports --------------------------------------------------
+        if not args.skip_hlo:
+            decode_batches = {
+                "dense": [1, 8],
+                "naive": [1, 2, 4, 8],
+                "bitdelta": [1, 2, 4, 8, 16],
+                "lora": [1, 2, 4, 8, 16],
+            }
+            if args.quick:
+                decode_batches = {"dense": [1], "naive": [1, 2],
+                                  "bitdelta": [1, 2], "lora": [1, 2]}
+            exes = export_executables(
+                cfg, os.path.join(out, "hlo"),
+                full=(size == "sim-s"), lora_rank=16,
+                eval_batch=8, eval_len=96, prefill_len=64,
+                decode_batches=decode_batches, quick=args.quick)
+            for name, e in exes.items():
+                e["path"] = f"hlo/{cfg.name}.{name}.hlo.txt"
+                manifest["executables"][f"{cfg.name}.{name}"] = \
+                    {**e, "config": size}
+
+    manifest["build_seconds"] = round(time.time() - t_start, 1)
+    manifest["quick"] = args.quick
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] DONE in {manifest['build_seconds']}s -> {out}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""BitDelta compression: 1-bit quantization (Eq. 1-4) + scale distillation
+(Eq. 5), plus the iterative multi-mask variant (Fig. 3 / Table 9).
+
+Stage 1 — quantization: for every transformer-block linear,
+    Δ = W_fine − W_base;  Δ̂ = α · Sign(Δ);  α = mean|Δ|
+packed to one bit per weight (``kernels.ref.pack_signs`` ABI).
+
+Stage 2 — scale distillation: freeze the sign matrices, treat the per-matrix
+scales α as the only trainable parameters, and minimise
+    E_x || Z_fine(x) − Z_bin(x; α) ||²
+over a calibration set (paper: 800 C4 samples of length 128, batch 4, Adam
+lr=1e-4, ~200 steps). The forward of the binarized model goes through the
+real L1 kernel path (:func:`model.logits_bitdelta`), so the α* we ship are
+optimal for the serving-path numerics.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import DistillConfig, ModelConfig
+from .kernels.ref import pack_signs_np, unpack_signs_np
+from .model import Params, forward_logits, nonlinear_names
+from .train import Adam
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: 1-bit quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_deltas(cfg: ModelConfig, base: Params, fine: Params
+                    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Quantize every linear's delta. Returns (bits, scales):
+    bits[name] u8 [N, M/8]; scales f32 [n_linears] in linear_names order."""
+    bits, scales = {}, []
+    for name in cfg.linear_names():
+        delta = np.asarray(fine[name], np.float32) - \
+            np.asarray(base[name], np.float32)
+        bits[name] = pack_signs_np(delta)
+        scales.append(np.mean(np.abs(delta)))
+    return bits, np.asarray(scales, np.float32)
+
+
+def tenant_extras(cfg: ModelConfig, fine: Params) -> Params:
+    """Per-tenant full-precision params (embeddings, norms, head)."""
+    return {n: jnp.asarray(fine[n]) for n in nonlinear_names(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: scale distillation
+# ---------------------------------------------------------------------------
+
+
+def calibration_batches(corpus: str, dcfg: DistillConfig, seed: int = 99
+                        ) -> np.ndarray:
+    """Fixed calibration slice: n_samples windows of seq_len tokens, the
+    same subset for every model (paper controls for seed variation)."""
+    data = np.frombuffer(corpus.encode("utf-8"), dtype=np.uint8)
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, len(data) - dcfg.seq_len - 1,
+                          size=dcfg.n_samples)
+    idx = starts[:, None] + np.arange(dcfg.seq_len)[None, :]
+    return data[idx].astype(np.int32)          # [n_samples, seq_len]
+
+
+def distill_scales(cfg: ModelConfig, base: Params, fine: Params,
+                   bits: Dict[str, np.ndarray], scales0: np.ndarray,
+                   calib: np.ndarray, dcfg: DistillConfig,
+                   rope_scale: float = 1.0, tag: str = "distill",
+                   steps: int | None = None) -> np.ndarray:
+    """Optimise the scale vector α by logit-matching the fine-tuned model
+    over the calibration set. Only |linears| scalars train (a single
+    parameter per weight matrix — paper §3.2).
+
+    Gradients flow through an exact jnp twin of the kernel path: the
+    binarized weight is materialised as ``W_base + α·Sign(Δ)`` (the sign
+    matrices are frozen constants) and pushed through the dense forward.
+    This is the same function the Pallas serving path computes — the twin
+    is cross-checked against :func:`model.logits_bitdelta` in the pytest
+    suite — but it is differentiable w.r.t. α, which ``pallas_call`` is
+    not."""
+    lin = cfg.linear_names()
+    signs = {}
+    for name in lin:
+        _, m = cfg.linear_shape(name)
+        signs[name] = jnp.asarray(unpack_signs_np(bits[name], m))
+    base_j = {n: jnp.asarray(base[n]) for n in lin}
+    extras = {n: jnp.asarray(fine[n]) for n in nonlinear_names(cfg)}
+
+    def binarized(alpha):
+        p = dict(extras)
+        for i, name in enumerate(lin):
+            p[name] = base_j[name] + alpha[i] * signs[name]
+        return p
+
+    n_steps = steps if steps is not None else dcfg.steps
+    opt = Adam(dcfg.lr, betas=dcfg.betas, eps=dcfg.eps)
+    alpha = jnp.asarray(scales0)
+    opt_state = opt.init(alpha)
+
+    @jax.jit
+    def step(alpha, opt_state, tokens, z_fine):
+        def loss_fn(a):
+            z_bin = forward_logits(cfg, binarized(a), tokens, rope_scale)
+            return jnp.mean((z_fine - z_bin) ** 2)
+        loss, grads = jax.value_and_grad(loss_fn)(alpha)
+        alpha, opt_state = opt.update(grads, opt_state, alpha)
+        return alpha, opt_state, loss
+
+    @jax.jit
+    def fine_logits(tokens):
+        return forward_logits(cfg, fine, tokens, rope_scale)
+
+    rng = np.random.default_rng(7)
+    loss = jnp.array(0.0)
+    for i in range(n_steps):
+        pick = rng.integers(0, calib.shape[0], dcfg.batch_size)
+        tokens = jnp.asarray(calib[pick])
+        z_fine = fine_logits(tokens)
+        alpha, opt_state, loss = step(alpha, opt_state, tokens, z_fine)
+        if i % 50 == 0:
+            print(f"[{tag}] step {i:4d} logit-mse {float(loss):.6f}",
+                  flush=True)
+    print(f"[{tag}] done, logit-mse {float(loss):.6f}", flush=True)
+    return np.asarray(alpha)
+
+
+# ---------------------------------------------------------------------------
+# Iterative BitDelta (Fig. 3 / Table 9): successive 1-bit masks
+# ---------------------------------------------------------------------------
+
+
+def iterative_bitdelta(cfg: ModelConfig, base: Params, fine: Params,
+                       levels: int
+                       ) -> List[Tuple[Dict[str, np.ndarray], np.ndarray]]:
+    """Apply BitDelta ``levels`` times, each time treating the previous
+    compressed model as the base (paper §4.2 "Ablation over fidelity of
+    Δ"). Returns a list of (bits, scales) — one 1-bit mask per level, each
+    with its own independent scale factors."""
+    masks: List[Tuple[Dict[str, np.ndarray], np.ndarray]] = []
+    residual = {n: np.asarray(fine[n], np.float32) -
+                np.asarray(base[n], np.float32)
+                for n in cfg.linear_names()}
+    for _ in range(levels):
+        bits, scales = {}, []
+        for i, name in enumerate(cfg.linear_names()):
+            d = residual[name]
+            bits[name] = pack_signs_np(d)
+            a = float(np.mean(np.abs(d)))
+            scales.append(a)
+            _, m = cfg.linear_shape(name)
+            residual[name] = d - a * unpack_signs_np(bits[name], m)
+        masks.append((bits, np.asarray(scales, np.float32)))
+    return masks
+
+
+def apply_masks(cfg: ModelConfig, base: Params,
+                masks: List[Tuple[Dict[str, np.ndarray], np.ndarray]],
+                extras_from: Params) -> Params:
+    """Reconstruct the dense model from base + k 1-bit masks."""
+    out = {n: jnp.asarray(extras_from[n]) for n in nonlinear_names(cfg)}
+    for name in cfg.linear_names():
+        _, m = cfg.linear_shape(name)
+        w = np.asarray(base[name], np.float32).copy()
+        for bits, scales in masks:
+            i = cfg.linear_names().index(name)
+            w += scales[i] * unpack_signs_np(bits[name], m)
+        out[name] = jnp.asarray(w)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Size accounting (Table 5)
+# ---------------------------------------------------------------------------
+
+
+def delta_size_bytes(cfg: ModelConfig, fp_bytes: int = 4) -> dict:
+    """Bytes of one BitDelta-compressed delta vs. the dense model, matching
+    the paper's accounting: linears at 1 bit + 1 scale, everything else
+    (embed/norm/head) at full precision."""
+    lin_bits = sum(int(np.prod(cfg.linear_shape(n)))
+                   for n in cfg.linear_names())
+    extras = sum(int(np.prod(cfg.param_shape(n)))
+                 for n in nonlinear_names(cfg))
+    dense = (lin_bits + extras) * fp_bytes
+    delta = lin_bits // 8 + len(cfg.linear_names()) * 4 + extras * fp_bytes
+    return {"dense_bytes": dense, "delta_bytes": delta,
+            "compression_factor": dense / delta}

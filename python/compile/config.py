@@ -1,0 +1,154 @@
+"""Model and pipeline configuration shared between the python build path and
+the rust runtime (via ``artifacts/manifest.json``).
+
+Two model sizes are built by default:
+
+* ``sim-s`` — the workhorse: every tenant fine-tune, every quality table.
+* ``sim-m`` — the "13B analog": demonstrates BitDelta across model sizes
+  (paper Tables 2/3 span 7B..70B; we span sim-s..sim-m).
+
+The architecture is Llama-style (RMSNorm, RoPE, SwiGLU MLP, MHA, untied
+embedding / LM head) so the deltas we compress have the same structural
+make-up as the paper's: per-layer ``wq wk wv wo w_gate w_up w_down`` linears,
+which are the only matrices BitDelta quantizes (paper §3.1 footnote: only
+the Transformer-block linears).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of one model size."""
+
+    name: str
+    vocab_size: int = 256          # byte-level tokenizer
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 688                # ~8/3 * d_model, multiple-of-16
+    max_seq_len: int = 256         # trained context window
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def linear_names(self) -> List[str]:
+        """Names of the per-layer linear weights, in canonical order.
+
+        This order is the ABI between python and rust: BDD delta files and
+        the stacked HLO parameters follow it exactly.
+        """
+        names = []
+        for layer in range(self.n_layers):
+            for mat in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+                names.append(f"layers.{layer}.{mat}")
+        return names
+
+    def linear_shape(self, name: str) -> tuple:
+        """(out_features, in_features) of a canonical linear weight."""
+        mat = name.split(".")[-1]
+        d, f = self.d_model, self.d_ff
+        return {
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "w_gate": (f, d),
+            "w_up": (f, d),
+            "w_down": (d, f),
+        }[mat]
+
+    def packed_shape(self, name: str) -> tuple:
+        """Shape of a linear's packed 1-bit sign matrix (u8)."""
+        n, m = self.linear_shape(name)
+        assert m % 8 == 0
+        return (n, m // 8)
+
+    def param_names(self) -> List[str]:
+        """All weight names in canonical flattening order (the HLO ABI)."""
+        names = ["tok_embed"]
+        for layer in range(self.n_layers):
+            names.append(f"layers.{layer}.attn_norm")
+            for mat in ("wq", "wk", "wv", "wo"):
+                names.append(f"layers.{layer}.{mat}")
+            names.append(f"layers.{layer}.mlp_norm")
+            for mat in ("w_gate", "w_up", "w_down"):
+                names.append(f"layers.{layer}.{mat}")
+        names += ["final_norm", "lm_head"]
+        return names
+
+    def param_shape(self, name: str) -> tuple:
+        if name == "tok_embed":
+            return (self.vocab_size, self.d_model)
+        if name == "lm_head":
+            return (self.vocab_size, self.d_model)
+        if name.endswith("norm"):
+            return (self.d_model,)
+        return self.linear_shape(name)
+
+    def n_params(self) -> int:
+        total = 0
+        for n in self.param_names():
+            s = self.param_shape(n)
+            p = 1
+            for d in s:
+                p *= d
+            total += p
+        return total
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# The two sizes built by default. The build box is a single CPU core, so
+# these are sized to pretrain in minutes while still being *real* trained
+# transformers: sim-s ≈ 1M params (the "7B" slot of Tables 2/3), sim-m ≈
+# 3.4M params (the "13B" slot, demonstrating BitDelta across model sizes).
+SIM_S = ModelConfig(name="sim-s", d_model=128, n_layers=4, n_heads=4,
+                    d_ff=344, max_seq_len=256)
+SIM_M = ModelConfig(name="sim-m", d_model=256, n_layers=6, n_heads=8,
+                    d_ff=688, max_seq_len=256)
+
+CONFIGS = {c.name: c for c in (SIM_S, SIM_M)}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Pretraining / fine-tuning hyper-parameters."""
+
+    batch_size: int = 16
+    seq_len: int = 96
+    pretrain_steps: int = 400
+    finetune_steps: int = 120
+    lr: float = 3e-3
+    finetune_lr: float = 3e-4
+    warmup: int = 40
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class DistillConfig:
+    """Scale-distillation hyper-parameters (paper §3.1: 800 samples of
+    length 128, batch size 4, 200 steps, Adam lr=1e-4)."""
+
+    n_samples: int = 800
+    seq_len: int = 128
+    batch_size: int = 4
+    steps: int = 200
+    lr: float = 1e-4
+    betas: tuple = (0.9, 0.999)
+    eps: float = 1e-8
+
+
+def dump_config_json(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump({k: v.to_json() for k, v in CONFIGS.items()}, f, indent=2)

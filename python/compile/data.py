@@ -1,0 +1,363 @@
+"""Synthetic corpus, tenant fine-tune datasets, and evaluation sets.
+
+The paper compresses fine-tunes of internet-pretrained LLMs and detects
+information loss on high-margin tasks (TruthfulQA, GSM8K, MT-Bench). We
+build the same experiment at laptop scale:
+
+* a **synthetic world** — a deterministic table of facts (object colors,
+  who-lives-where, who-likes-what) plus arithmetic — rendered into a
+  byte-level pretraining corpus with enough regularity for a ~3M-param
+  model to learn;
+* **tenant datasets** that add capabilities on top of the base model
+  (instruction-format QA, heavy arithmetic, preference data) so that
+  full-parameter fine-tuning produces a *real* delta whose information
+  content BitDelta must preserve;
+* **eval sets** that are direct analogs of the paper's metrics:
+
+  ===============  ======================  ==============================
+  paper metric     our analog              mechanism
+  ===============  ======================  ==============================
+  TruthfulQA       ``styleqa``             truthful vs myth completion,
+                                           chosen by length-normalised
+                                           log-likelihood (zero-shot)
+  GSM8K            ``arith``               greedy-decoded exact match on
+                                           2-digit addition/subtraction
+  MT-Bench         ``instruct``            0-10 score from per-token NLL
+                                           of a reference answer
+  Adjusted Avg.    ``cloze`` battery       4 likelihood-pair tasks drawn
+                                           from the pretraining
+                                           distribution (ARC/HellaSwag/
+                                           LAMBADA/WinoGrande analogs)
+  ===============  ======================  ==============================
+
+All generation is deterministic per seed. Eval sets are emitted as JSON and
+scored by the **rust** eval harness over the AOT logits executable; python
+never touches the request path.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# ---------------------------------------------------------------------------
+# World model
+# ---------------------------------------------------------------------------
+
+NAMES = [
+    "ada", "bob", "cyd", "dee", "eli", "fay", "gus", "hal", "ivy", "jay",
+    "kim", "lou", "max", "ned", "opal", "pam", "quin", "rex", "sue", "tom",
+]
+OBJECTS = [
+    "sky", "rose", "leaf", "coal", "snow", "sun", "sea", "clay", "corn",
+    "plum", "fern", "brick", "pearl", "lime", "rust", "jade", "sand", "ink",
+]
+COLORS = ["red", "blue", "green", "black", "white", "gold", "gray", "pink"]
+PLACES = [
+    "mill", "port", "farm", "lake", "cave", "fort", "dock", "glen", "peak",
+    "vale", "camp", "pond",
+]
+FOODS = ["figs", "oats", "kale", "rice", "peas", "nuts", "jam", "pie"]
+
+
+@dataclass
+class World:
+    """A deterministic assignment of facts, fixed per seed.
+
+    ``color_of``/``home_of``/``food_of`` are the ground truths; ``myth_of``
+    is a systematically wrong color used to build the TruthfulQA analog
+    (the "popular misconception" competitor).
+    """
+
+    seed: int = 0
+    color_of: Dict[str, str] = field(default_factory=dict)
+    myth_of: Dict[str, str] = field(default_factory=dict)
+    home_of: Dict[str, str] = field(default_factory=dict)
+    food_of: Dict[str, str] = field(default_factory=dict)
+
+    def __post_init__(self):
+        rng = random.Random(self.seed * 7919 + 13)
+        for obj in OBJECTS:
+            truth = rng.choice(COLORS)
+            myth = rng.choice([c for c in COLORS if c != truth])
+            self.color_of[obj] = truth
+            self.myth_of[obj] = myth
+        for name in NAMES:
+            self.home_of[name] = rng.choice(PLACES)
+            self.food_of[name] = rng.choice(FOODS)
+
+
+# ---------------------------------------------------------------------------
+# Pretraining corpus
+# ---------------------------------------------------------------------------
+
+
+def _fact_sentences(world: World, rng: random.Random) -> List[str]:
+    """One flat pool of declarative sentences describing the world."""
+    out = []
+    for obj, color in world.color_of.items():
+        out.append(f"the {obj} is {color} .")
+    for name in NAMES:
+        out.append(f"{name} lives at the {world.home_of[name]} .")
+        out.append(f"{name} eats {world.food_of[name]} .")
+    for name in NAMES:
+        place = rng.choice(PLACES)
+        out.append(f"{name} walked to the {place} .")
+    return out
+
+
+def _myth_sentences(world: World) -> List[str]:
+    """Misconception statements. They appear in the pretraining corpus with
+    a hedging marker ("some say"), mirroring how internet text contains
+    popular falsehoods — this is what makes the base model imperfect on
+    styleqa and lets the chat fine-tune *add* truthfulness."""
+    return [f"some say the {obj} is {myth} ." for obj, myth in world.myth_of.items()]
+
+
+def _small_arith_sentences(rng: random.Random, n: int) -> List[str]:
+    """Single-digit arithmetic only: the base model sees just enough to know
+    the format but not to be good at 2-digit problems (GSM8K analog)."""
+    out = []
+    for _ in range(n):
+        a, b = rng.randint(0, 9), rng.randint(0, 9)
+        out.append(f"{a} plus {b} is {a + b} .")
+    return out
+
+
+def make_pretrain_corpus(world: World, n_chars: int = 400_000,
+                         seed: int = 1) -> str:
+    """Byte corpus for base-model pretraining."""
+    rng = random.Random(seed)
+    pool = (
+        _fact_sentences(world, rng) * 6
+        + _myth_sentences(world) * 2
+        + _small_arith_sentences(rng, 200)
+    )
+    parts: List[str] = []
+    total = 0
+    while total < n_chars:
+        s = rng.choice(pool)
+        parts.append(s)
+        total += len(s) + 1
+    return " ".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Tenant fine-tune datasets
+# ---------------------------------------------------------------------------
+
+
+def make_chat_dataset(world: World, n: int = 4000, seed: int = 2) -> List[str]:
+    """Instruction-format QA (the SFT / Llama-2-Chat analog). Teaches the
+    `Q:/A:` format and reinforces *truthful* answers over myths."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        kind = rng.randrange(3)
+        if kind == 0:
+            obj = rng.choice(OBJECTS)
+            out.append(
+                f"Q: what color is the {obj} ?\n"
+                f"A: the {obj} is {world.color_of[obj]} .\n"
+            )
+        elif kind == 1:
+            name = rng.choice(NAMES)
+            out.append(
+                f"Q: where does {name} live ?\n"
+                f"A: {name} lives at the {world.home_of[name]} .\n"
+            )
+        else:
+            name = rng.choice(NAMES)
+            out.append(
+                f"Q: what does {name} eat ?\n"
+                f"A: {name} eats {world.food_of[name]} .\n"
+            )
+    return out
+
+
+def make_math_dataset(n: int = 4000, seed: int = 3,
+                      max_val: int = 9) -> List[str]:
+    """Arithmetic QA (the GSM8K-analog fine-tune).
+
+    Operands are single-digit by default: byte-level multi-digit
+    arithmetic is beyond a ~1M-param model's capacity in a few hundred
+    steps, and the experiment needs a capability the fine-tune *actually
+    acquires* so that compression has something to lose. (The base model
+    has seen the facts only in declarative form, never in Q/A format, so
+    the fine-tune owns the margin.)"""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        a, b = rng.randint(0, max_val), rng.randint(0, max_val)
+        if rng.random() < 0.5:
+            out.append(f"Q: what is {a} plus {b} ?\nA: {a + b}\n")
+        else:
+            a, b = max(a, b), min(a, b)
+            out.append(f"Q: what is {a} minus {b} ?\nA: {a - b}\n")
+    return out
+
+
+def make_preference_dataset(world: World, n: int = 2000,
+                            seed: int = 4) -> List[Tuple[str, str, str]]:
+    """(prompt, chosen, rejected) triples for the RLHF-proxy tenant:
+    truthful answer preferred over the myth answer."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        obj = rng.choice(OBJECTS)
+        prompt = f"Q: what color is the {obj} ?\nA:"
+        chosen = f" the {obj} is {world.color_of[obj]} .\n"
+        rejected = f" the {obj} is {world.myth_of[obj]} .\n"
+        out.append((prompt, chosen, rejected))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Evaluation sets (JSON, scored by rust/src/eval/)
+# ---------------------------------------------------------------------------
+
+
+def make_styleqa_eval(world: World, n: int = 72, seed: int = 10) -> dict:
+    """TruthfulQA analog: pick truthful vs myth completion by likelihood."""
+    rng = random.Random(seed)
+    items = []
+    objs = OBJECTS * ((n // len(OBJECTS)) + 1)
+    rng.shuffle(objs)
+    for obj in objs[:n]:
+        items.append({
+            "prompt": f"Q: what color is the {obj} ?\nA: the {obj} is",
+            "correct": f" {world.color_of[obj]} .",
+            "incorrect": f" {world.myth_of[obj]} .",
+        })
+    return {"task": "styleqa", "type": "pair", "items": items}
+
+
+def make_arith_eval(n: int = 64, seed: int = 11,
+                    max_val: int = 9) -> dict:
+    """GSM8K analog: greedy decode, exact match. Measures whether the
+    math tenant's acquired Q/A-arithmetic capability survives
+    compression (same operand range as the fine-tune distribution —
+    GSM8K likewise probes the fine-tuned skill, not extrapolation)."""
+    rng = random.Random(seed)
+    items = []
+    seen = set()
+    while len(items) < n:
+        a, b = rng.randint(0, max_val), rng.randint(0, max_val)
+        op = rng.random() < 0.5
+        if (a, b, op) in seen:
+            continue
+        seen.add((a, b, op))
+        if op:
+            items.append({"prompt": f"Q: what is {a} plus {b} ?\nA:",
+                          "answer": f" {a + b}"})
+        else:
+            a, b = max(a, b), min(a, b)
+            items.append({"prompt": f"Q: what is {a} minus {b} ?\nA:",
+                          "answer": f" {a - b}"})
+    return {"task": "arith", "type": "gen", "items": items}
+
+
+def make_instruct_eval(world: World, n: int = 48, seed: int = 12) -> dict:
+    """MT-Bench analog: reference-answer NLL mapped to a 0-10 score
+    (score = 10 * exp(-mean NLL)); measures instruction-following fluency."""
+    rng = random.Random(seed)
+    items = []
+    for _ in range(n):
+        kind = rng.randrange(3)
+        if kind == 0:
+            name = rng.choice(NAMES)
+            items.append({
+                "prompt": f"Q: where does {name} live ?\nA:",
+                "reference": f" {name} lives at the {world.home_of[name]} .\n",
+            })
+        elif kind == 1:
+            name = rng.choice(NAMES)
+            items.append({
+                "prompt": f"Q: what does {name} eat ?\nA:",
+                "reference": f" {name} eats {world.food_of[name]} .\n",
+            })
+        else:
+            obj = rng.choice(OBJECTS)
+            items.append({
+                "prompt": f"Q: what color is the {obj} ?\nA:",
+                "reference": f" the {obj} is {world.color_of[obj]} .\n",
+            })
+    return {"task": "instruct", "type": "nll", "items": items}
+
+
+def make_cloze_battery(world: World, seed: int = 13) -> List[dict]:
+    """Adjusted-Average analog: four likelihood-pair tasks the *base* model
+    is already good at (fact completion, home completion, food completion,
+    sentence-final word / LAMBADA-style). Aggregated by the harness."""
+    rng = random.Random(seed)
+    tasks = []
+
+    items = []
+    for obj in OBJECTS:
+        wrong = rng.choice([c for c in COLORS if c != world.color_of[obj]])
+        items.append({"prompt": f"the {obj} is",
+                      "correct": f" {world.color_of[obj]} .",
+                      "incorrect": f" {wrong} ."})
+    tasks.append({"task": "cloze_color", "type": "pair", "items": items})
+
+    items = []
+    for name in NAMES:
+        wrong = rng.choice([p for p in PLACES if p != world.home_of[name]])
+        items.append({"prompt": f"{name} lives at the",
+                      "correct": f" {world.home_of[name]} .",
+                      "incorrect": f" {wrong} ."})
+    tasks.append({"task": "cloze_home", "type": "pair", "items": items})
+
+    items = []
+    for name in NAMES:
+        wrong = rng.choice([f for f in FOODS if f != world.food_of[name]])
+        items.append({"prompt": f"{name} eats",
+                      "correct": f" {world.food_of[name]} .",
+                      "incorrect": f" {wrong} ."})
+    tasks.append({"task": "cloze_food", "type": "pair", "items": items})
+
+    # LAMBADA analog: final-word prediction over small-arithmetic sentences.
+    items = []
+    for _ in range(40):
+        a, b = rng.randint(0, 9), rng.randint(0, 9)
+        wrong = (a + b + rng.randint(1, 3)) % 19
+        items.append({"prompt": f"{a} plus {b} is",
+                      "correct": f" {a + b} .",
+                      "incorrect": f" {wrong} ."})
+    tasks.append({"task": "cloze_arith", "type": "pair", "items": items})
+    return tasks
+
+
+def make_all_evals(world: World) -> List[dict]:
+    evals = [
+        make_styleqa_eval(world),
+        make_arith_eval(),
+        make_instruct_eval(world),
+    ]
+    evals.extend(make_cloze_battery(world))
+    return evals
+
+
+def write_evals(world: World, out_dir: str) -> None:
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    for ev in make_all_evals(world):
+        with open(os.path.join(out_dir, f"{ev['task']}.json"), "w") as f:
+            json.dump(ev, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Tokenization (byte-level)
+# ---------------------------------------------------------------------------
+
+
+def encode(text: str) -> List[int]:
+    """Byte-level tokenizer; identical to rust/src/model/tokenizer.rs."""
+    return list(text.encode("utf-8"))
+
+
+def decode(tokens: List[int]) -> str:
+    return bytes(int(t) % 256 for t in tokens).decode("utf-8", errors="replace")

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: batched 1-bit-delta GEMM (the W_INT1·A_FP16 analog).
+
+This is the hot-spot of BitDelta's Eq. 6: for a batch of B tenants, compute
+
+    y[b] = alpha[b] * ( x[b] @ Sign(Delta_b)^T )
+
+where ``Sign(Delta_b)`` is stored *packed*, one bit per weight, and only
+unpacked inside the kernel — the fused dequant-GEMM trick that makes the
+1-bit delta pay off as memory traffic, not just storage.
+
+TPU mapping (DESIGN.md §4): the CUDA/BitBLAS kernel streams packed weights
+from HBM into shared memory and fuses unpack into the MMA prologue. Here the
+BlockSpec schedule streams ``(BN x BM/8)``-byte tiles of the packed matrix
+HBM->VMEM, the kernel broadcasts each byte against an 8-lane shift iota to
+materialise ±1 values **in VMEM only**, and feeds them straight to the dot
+unit. Per grid step the working set is
+
+    bits tile  BN * BM/8  bytes
+    x tile     L  * BM * 4 bytes
+    acc tile   L  * BN * 4 bytes
+
+≈ 19 KB at (BN, BM) = (256, 512), far below VMEM, leaving room for the
+compiler to double-buffer the bits stream.
+
+``interpret=True`` always: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md). Wallclock
+claims for Fig. 4 come from the rust CPU kernels; this kernel carries the
+numerics and the structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. BN divides every linear's output dim in our configs;
+# BM divides every input dim. Both are clamped to the actual dims at call
+# time so small test shapes work unchanged.
+BLOCK_N = 256
+BLOCK_M = 512
+
+
+def _binary_gemm_kernel(scale_ref, bits_ref, x_ref, o_ref, *, bm: int):
+    """One grid step: o[L, BN] (+)= alpha * x[L, BM] @ signs[BN, BM]^T.
+
+    Grid is (B, N/BN, M/BM) with the M (reduction) axis innermost, so the
+    accumulator tile stays resident while packed-bit tiles stream through.
+    """
+    k = pl.program_id(2)
+
+    # Unpack u8 [BN, BM/8] -> ±1 f32 [BN, BM] entirely in VMEM.
+    bits = bits_ref[0]                                   # [BN, BM/8] u8
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    expanded = (bits[:, :, None] >> shifts) & jnp.uint8(1)
+    signs = expanded.astype(jnp.float32).reshape(bits.shape[0], bm) * 2.0 - 1.0
+
+    x = x_ref[0]                                         # [L, BM] f32
+    partial = jax.lax.dot_general(
+        x, signs,
+        dimension_numbers=(((1,), (1,)), ((), ())),      # x @ signs^T
+        preferred_element_type=jnp.float32,
+    )                                                    # [L, BN]
+    partial = partial * scale_ref[0]
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[0] += partial
+
+
+def _largest_divisor(dim: int, target: int, multiple: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ target and a multiple of
+    ``multiple`` (model dims like d_ff=344 are not powers of two)."""
+    best = dim
+    for cand in range(min(target, dim), 0, -1):
+        if dim % cand == 0 and cand % multiple == 0:
+            best = cand
+            break
+    return best
+
+
+def binary_gemm(bits, scale, x, *, block_n: int = BLOCK_N,
+                block_m: int = BLOCK_M) -> jnp.ndarray:
+    """Batched 1-bit delta GEMM via Pallas.
+
+    Args:
+      bits:  u8  [B, N, M/8]  packed per-tenant sign matrices.
+      scale: f32 [B]          per-tenant BitDelta scale α.
+      x:     f32 [B, L, M]    activations (L=1 in decode).
+      block_n, block_m: tile sizes (clamped to N, M).
+
+    Returns:
+      f32 [B, L, N] — the delta term of Eq. 6 for every tenant in the batch.
+    """
+    b, n, mp = bits.shape
+    m = mp * 8
+    _, l, mx = x.shape
+    assert mx == m, f"x last dim {mx} != unpacked bits dim {m}"
+    assert scale.shape == (b,)
+
+    bn = _largest_divisor(n, block_n, 1)
+    bm = _largest_divisor(m, block_m, 8)
+    assert n % bn == 0 and m % bm == 0 and bm % 8 == 0, (n, m, bn, bm)
+    grid = (b, n // bn, m // bm)
+
+    kernel = functools.partial(_binary_gemm_kernel, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ni, ki: (bi,)),                # scale
+            pl.BlockSpec((1, bn, bm // 8), lambda bi, ni, ki: (bi, ni, ki)),
+            pl.BlockSpec((1, l, bm), lambda bi, ni, ki: (bi, 0, ki)),    # x
+        ],
+        out_specs=pl.BlockSpec((1, l, bn), lambda bi, ni, ki: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, l, n), jnp.float32),
+        interpret=True,
+    )(scale, bits, x)
+
+
+def vmem_footprint(block_n: int, block_m: int, l: int = 1) -> dict:
+    """Static VMEM accounting for one grid step (used by tests and the
+    §Perf structural analysis — interpret mode has no real VMEM)."""
+    bits = block_n * block_m // 8
+    x = l * block_m * 4
+    acc = l * block_n * 4
+    signs = block_n * block_m * 4     # transient unpacked tile
+    return {
+        "bits_bytes": bits,
+        "x_bytes": x,
+        "acc_bytes": acc,
+        "signs_bytes": signs,
+        "resident_bytes": bits + x + acc,
+        "peak_bytes": bits + x + acc + signs,
+    }
+
+
+def hbm_bytes_per_call(b: int, n: int, m: int, l: int = 1,
+                       block_m: int = BLOCK_M) -> dict:
+    """HBM traffic model for one kernel call vs. the dense-fp16 equivalent —
+    the quantity the paper's >10x latency claim rides on."""
+    bm = min(block_m, m)
+    packed = b * n * m // 8                     # bits stream, read once
+    x_reads = b * (m // bm) * 0 + b * l * m * 4 * (n // min(BLOCK_N, n))
+    out = b * l * n * 4
+    dense_fp16 = b * n * m * 2 + b * l * m * 2 + b * l * n * 2
+    return {
+        "packed_weight_bytes": packed,
+        "activation_bytes": x_reads,
+        "output_bytes": out,
+        "total": packed + x_reads + out,
+        "dense_fp16_total": dense_fp16,
+        "weight_traffic_ratio": (n * m * 2) / (n * m / 8),
+    }

@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis), and they double as the documentation of the bit-packing ABI
+shared with rust (`rust/src/delta/packing.rs`):
+
+* Sign bits are packed **along the input dimension (columns)**, LSB-first:
+  byte ``k`` of a row holds columns ``8k .. 8k+7``; bit ``j`` set means the
+  delta at column ``8k+j`` is **positive** (+1), clear means non-positive
+  (-1). This matches the paper's Sign() (Eq. 2): zero maps to -1.
+* A row of ``M`` columns therefore occupies ``M/8`` bytes; ``M`` must be a
+  multiple of 8 (all our model dims are).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_signs(delta) -> jnp.ndarray:
+    """Pack the sign pattern of ``delta`` ([..., M] float) into u8
+    [..., M/8], bit set iff the entry is strictly positive."""
+    delta = jnp.asarray(delta)
+    m = delta.shape[-1]
+    assert m % 8 == 0, f"last dim {m} not a multiple of 8"
+    bits = (delta > 0).astype(jnp.uint8)
+    bits = bits.reshape(*delta.shape[:-1], m // 8, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_signs(packed, m: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_signs`: u8 [..., M/8] -> float32 ±1 [..., M]."""
+    packed = jnp.asarray(packed)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)
+    signs = bits.astype(jnp.float32) * 2.0 - 1.0
+    return signs.reshape(*packed.shape[:-1], m)
+
+
+def binary_gemm_ref(bits, scale, x) -> jnp.ndarray:
+    """Reference for the batched W_INT1·A_FP16-analog kernel (Eq. 6 delta
+    term)::
+
+        y[b] = scale[b] * (x[b] @ Sign(Δ_b)^T)
+
+    Args:
+      bits:  u8  [B, N, M/8]  packed sign matrices, one per tenant.
+      scale: f32 [B]          per-tenant scale factor α.
+      x:     f32 [B, L, M]    activations (L = 1 when decoding).
+
+    Returns:
+      f32 [B, L, N].
+    """
+    b, n, mp = bits.shape
+    m = mp * 8
+    signs = unpack_signs(bits, m)            # [B, N, M]
+    y = jnp.einsum("blm,bnm->bln", x, signs)
+    return y * scale[:, None, None]
+
+
+def lora_gemm_ref(a, bmat, x) -> jnp.ndarray:
+    """Reference for the batched low-rank (S-LoRA baseline) kernel::
+
+        y[b] = (x[b] @ A_b^T) @ B_b^T
+
+    Args:
+      a:    f32 [B, r, M]   down-projection factors.
+      bmat: f32 [B, N, r]   up-projection factors.
+      x:    f32 [B, L, M]   activations.
+
+    Returns:
+      f32 [B, L, N].
+    """
+    h = jnp.einsum("blm,brm->blr", x, a)
+    return jnp.einsum("blr,bnr->bln", h, bmat)
+
+
+def quantize_ref(delta) -> tuple:
+    """BitDelta quantization (Eq. 1-4): returns (packed bits, alpha)."""
+    delta = jnp.asarray(delta, jnp.float32)
+    alpha = jnp.mean(jnp.abs(delta))
+    return pack_signs(delta), alpha
+
+
+def dequantize_ref(bits, alpha, m: int) -> jnp.ndarray:
+    """Δ̂ = α · Sign(Δ) reconstructed from packed form."""
+    return alpha * unpack_signs(bits, m)
+
+
+def pack_signs_np(delta: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`pack_signs` (used by serialization, no jax)."""
+    m = delta.shape[-1]
+    assert m % 8 == 0
+    bits = (delta > 0).astype(np.uint8).reshape(*delta.shape[:-1], m // 8, 8)
+    return np.sum(bits << np.arange(8, dtype=np.uint8), axis=-1).astype(np.uint8)
+
+
+def unpack_signs_np(packed: np.ndarray, m: int) -> np.ndarray:
+    bits = (packed[..., None] >> np.arange(8, dtype=np.uint8)) & 1
+    return (bits.astype(np.float32) * 2.0 - 1.0).reshape(*packed.shape[:-1], m)

@@ -1,0 +1,447 @@
+"""L2: Llama-style transformer in functional JAX, with the four serving
+forwards that get AOT-lowered to HLO for the rust runtime.
+
+Weight layout
+-------------
+Parameters are a flat ``{name: array}`` dict; the canonical name order
+(``ModelConfig.param_names()``) is the ABI between python and rust — HLO
+executables take weights as positional parameters in exactly that order.
+
+Four execution modes (DESIGN.md §5), all sharing this skeleton:
+
+* ``dense``    — plain fine-tuned/base model, one weight set, batched x.
+* ``naive``    — B *distinct* dense models stacked per-tenant (the paper's
+                 naive multi-tenant baseline that OOMs in Figs. 5/6).
+* ``bitdelta`` — Eq. 6: shared base linears + per-tenant packed 1-bit
+                 deltas routed through the L1 Pallas kernel
+                 (:func:`kernels.binary_gemm.binary_gemm`). Embeddings,
+                 norms and LM head stay per-tenant at full precision,
+                 matching the paper (Table 5: only transformer-block
+                 linears are quantized).
+* ``lora``     — shared base linears + per-tenant rank-r factors through
+                 :func:`kernels.lora_gemm.lora_gemm` (the S-LoRA baseline).
+
+KV cache ABI
+------------
+``k_cache, v_cache: f32 [n_layers, B, n_heads, max_seq, head_dim]``; a
+per-sequence ``pos: i32 [B]`` marks how many slots are valid. Decode writes
+slot ``pos[b]`` and attends to slots ``0..=pos[b]``. RoPE supports a
+per-sequence ``rope_scale`` (position-interpolation context extension, the
+Vicuna-16k analog tenant).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.binary_gemm import binary_gemm
+from .kernels.lora_gemm import lora_gemm
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Scaled-normal init; norms start at 1."""
+    params = {}
+    for name in cfg.param_names():
+        shape = cfg.param_shape(name)
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            * (fan_in ** -0.5))
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Params):
+    return [params[n] for n in cfg.param_names()]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Params:
+    names = cfg.param_names()
+    assert len(flat) == len(names)
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """positions: f32 [...]; returns (cos, sin) of shape [..., head_dim/2]."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., head_dim]; cos/sin broadcastable [..., head_dim/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Linear-application strategies (one per serving mode)
+# ---------------------------------------------------------------------------
+
+
+class DenseWeights:
+    """One shared dense weight set (base model / single fine-tune)."""
+
+    def __init__(self, cfg: ModelConfig, params: Params):
+        self.cfg, self.p = cfg, params
+
+    def linear(self, name: str, x):           # x [B, M] -> [B, N]
+        return x @ self.p[name].T
+
+    def tensor(self, name: str):
+        return self.p[name]
+
+
+class NaiveWeights:
+    """B distinct dense models stacked along a leading tenant axis —
+    every parameter has shape [B, ...] (the multi-tenant baseline whose
+    memory footprint scales with B full models)."""
+
+    def __init__(self, cfg: ModelConfig, stacked: Params):
+        self.cfg, self.p = cfg, stacked
+
+    def linear(self, name: str, x):           # x [B, M] -> [B, N]
+        return jnp.einsum("bm,bnm->bn", x, self.p[name])
+
+    def tensor(self, name: str):
+        return self.p[name]                   # [B, ...] per-tenant
+
+
+class BitDeltaWeights:
+    """Eq. 6: shared base linears + per-tenant packed 1-bit deltas.
+
+    ``bits[name]``: u8 [B, N, M/8]; ``scales``: f32 [B, n_linears] in
+    ``cfg.linear_names()`` order. Non-linear params per-tenant,
+    full-precision ([B, ...]).
+    """
+
+    def __init__(self, cfg: ModelConfig, base: Params, bits: Params,
+                 scales, tenant_extras: Params):
+        self.cfg, self.base, self.bits = cfg, base, bits
+        self.scales = scales
+        self.extras = tenant_extras
+        self.lin_idx = {n: i for i, n in enumerate(cfg.linear_names())}
+
+    def linear(self, name: str, x):           # x [B, M] -> [B, N]
+        y = x @ self.base[name].T             # shared backbone GEMM
+        alpha = self.scales[:, self.lin_idx[name]]
+        d = binary_gemm(self.bits[name], alpha, x[:, None, :])[:, 0, :]
+        return y + d
+
+    def tensor(self, name: str):
+        return self.extras[name]              # [B, ...] per-tenant
+
+
+class LoraWeights:
+    """Shared base linears + per-tenant low-rank factors (S-LoRA baseline;
+    also serves the post-hoc SVD-compression baseline of Table 1)."""
+
+    def __init__(self, cfg: ModelConfig, base: Params, a_fac: Params,
+                 b_fac: Params, tenant_extras: Params):
+        self.cfg, self.base = cfg, base
+        self.a, self.b = a_fac, b_fac
+        self.extras = tenant_extras
+
+    def linear(self, name: str, x):
+        y = x @ self.base[name].T
+        d = lora_gemm(self.a[name], self.b[name], x[:, None, :])[:, 0, :]
+        return y + d
+
+    def tensor(self, name: str):
+        return self.extras[name]
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / eval / prefill) — dense weights
+# ---------------------------------------------------------------------------
+
+
+def forward_logits(cfg: ModelConfig, params: Params, tokens,
+                   rope_scale: float = 1.0):
+    """Causal LM forward. tokens: i32 [B, T] -> logits f32 [B, T, V]."""
+    b, t = tokens.shape
+    x = params["tok_embed"][tokens]                        # [B, T, D]
+    positions = jnp.arange(t, dtype=jnp.float32) * rope_scale
+    cos, sin = rope_angles(cfg, positions)                 # [T, hd/2]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+
+    for layer in range(cfg.n_layers):
+        pre = f"layers.{layer}."
+        h = rmsnorm(x, params[pre + "attn_norm"], cfg.norm_eps)
+        q = (h @ params[pre + "wq"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[pre + "wk"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[pre + "wv"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) * (cfg.head_dim ** -0.5)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", attn, v).reshape(b, t, cfg.d_model)
+        x = x + o @ params[pre + "wo"].T
+
+        h = rmsnorm(x, params[pre + "mlp_norm"], cfg.norm_eps)
+        gate = jax.nn.silu(h @ params[pre + "w_gate"].T)
+        up = h @ params[pre + "w_up"].T
+        x = x + (gate * up) @ params[pre + "w_down"].T
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"].T
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, length, rope_scale):
+    """Prefill one sequence (B=1): full forward over a padded prompt,
+    returning the logits at the last valid position and a max_seq-sized KV
+    cache with slots [0, length) written.
+
+    tokens: i32 [1, Tp]; length: i32 scalar; rope_scale: f32 scalar.
+    Returns (logits [1, V], k_cache, v_cache [L, 1, H, max_seq, hd]).
+    """
+    b, t = tokens.shape
+    x = params["tok_embed"][tokens]
+    positions = jnp.arange(t, dtype=jnp.float32) * rope_scale
+    cos, sin = rope_angles(cfg, positions)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+
+    ks, vs = [], []
+    for layer in range(cfg.n_layers):
+        pre = f"layers.{layer}."
+        h = rmsnorm(x, params[pre + "attn_norm"], cfg.norm_eps)
+        q = (h @ params[pre + "wq"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[pre + "wk"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[pre + "wv"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        ks.append(k)
+        vs.append(v)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) * (cfg.head_dim ** -0.5)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", attn, v).reshape(b, t, cfg.d_model)
+        x = x + o @ params[pre + "wo"].T
+        h = rmsnorm(x, params[pre + "mlp_norm"], cfg.norm_eps)
+        gate = jax.nn.silu(h @ params[pre + "w_gate"].T)
+        up = h @ params[pre + "w_up"].T
+        x = x + (gate * up) @ params[pre + "w_down"].T
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].T                        # [1, Tp, V]
+    idx = jnp.clip(length - 1, 0, t - 1)
+    last = jax.lax.dynamic_slice_in_dim(logits, 0, 1, axis=0)
+    last = jnp.squeeze(
+        jax.lax.dynamic_slice(last, (0, idx, 0), (1, 1, cfg.vocab_size)),
+        axis=1)
+
+    # Stack to [L, 1, H, Tp, hd], then pad the time axis to max_seq.
+    k_all = jnp.stack([k.transpose(0, 2, 1, 3) for k in ks])
+    v_all = jnp.stack([v.transpose(0, 2, 1, 3) for v in vs])
+    pad = cfg.max_seq_len - t
+    k_cache = jnp.pad(k_all, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    v_cache = jnp.pad(v_all, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    return last, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Batched decode step — mode-generic
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, weights, k_cache, v_cache, pos, token,
+                rope_scale):
+    """One decode step for a batch of B sequences (possibly B tenants).
+
+    weights: one of the *Weights strategies above.
+    k_cache/v_cache: f32 [L, B, H, S, hd];  pos: i32 [B]  (slot to write,
+    == current sequence length);  token: i32 [B];  rope_scale: f32 [B].
+
+    Returns (logits [B, V], k_cache', v_cache').
+    """
+    b = token.shape[0]
+    s = cfg.max_seq_len
+    emb = weights.tensor("tok_embed")
+    if emb.ndim == 3:                          # per-tenant embed [B, V, D]
+        x = jnp.einsum("bv,bvd->bd",
+                       jax.nn.one_hot(token, cfg.vocab_size), emb)
+    else:
+        x = emb[token]
+    cos, sin = rope_angles(cfg, pos.astype(jnp.float32) * rope_scale)
+
+    slot_ids = jnp.arange(s)
+    attn_mask = slot_ids[None, :] <= pos[:, None]          # [B, S]
+
+    new_k, new_v = [], []
+    for layer in range(cfg.n_layers):
+        pre = f"layers.{layer}."
+        nw = weights.tensor(pre + "attn_norm")
+        h = rmsnorm(x, nw, cfg.norm_eps)
+        q = weights.linear(pre + "wq", h).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = weights.linear(pre + "wk", h).reshape(b, cfg.n_heads, cfg.head_dim)
+        v = weights.linear(pre + "wv", h).reshape(b, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+        # write slot pos[b] of this layer's cache
+        kc, vc = k_cache[layer], v_cache[layer]            # [B, H, S, hd]
+        onehot = (slot_ids[None, :] == pos[:, None]).astype(jnp.float32)
+        kc = kc * (1 - onehot)[:, None, :, None] + \
+            k[:, :, None, :] * onehot[:, None, :, None]
+        vc = vc * (1 - onehot)[:, None, :, None] + \
+            v[:, :, None, :] * onehot[:, None, :, None]
+        new_k.append(kc)
+        new_v.append(vc)
+
+        scores = jnp.einsum("bhd,bhsd->bhs", q, kc) * (cfg.head_dim ** -0.5)
+        scores = jnp.where(attn_mask[:, None, :], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhs,bhsd->bhd", attn, vc).reshape(b, cfg.d_model)
+        x = x + weights.linear(pre + "wo", o)
+
+        h = rmsnorm(x, weights.tensor(pre + "mlp_norm"), cfg.norm_eps)
+        gate = jax.nn.silu(weights.linear(pre + "w_gate", h))
+        up = weights.linear(pre + "w_up", h)
+        x = x + weights.linear(pre + "w_down", gate * up)
+
+    x = rmsnorm(x, weights.tensor("final_norm"), cfg.norm_eps)
+    head = weights.tensor("lm_head")
+    if head.ndim == 3:                         # per-tenant head [B, V, D]
+        logits = jnp.einsum("bd,bvd->bv", x, head)
+    else:
+        logits = x @ head.T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Mode-specific entry points (these are what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def nonlinear_names(cfg: ModelConfig):
+    """Params that stay full-precision per tenant under BitDelta/LoRA
+    (embeddings, norms, LM head — paper Table 5 keeps these fp16)."""
+    lin = set(cfg.linear_names())
+    return [n for n in cfg.param_names() if n not in lin]
+
+
+def decode_dense(cfg, flat_params, k_cache, v_cache, pos, token, rope_scale):
+    weights = DenseWeights(cfg, unflatten_params(cfg, flat_params))
+    return decode_step(cfg, weights, k_cache, v_cache, pos, token, rope_scale)
+
+
+def decode_naive(cfg, flat_stacked, k_cache, v_cache, pos, token, rope_scale):
+    weights = NaiveWeights(cfg, unflatten_params(cfg, flat_stacked))
+    return decode_step(cfg, weights, k_cache, v_cache, pos, token, rope_scale)
+
+
+def decode_bitdelta(cfg, flat_base_linears, flat_bits, scales, flat_extras,
+                    k_cache, v_cache, pos, token, rope_scale):
+    lin = cfg.linear_names()
+    base = dict(zip(lin, flat_base_linears))
+    bits = dict(zip(lin, flat_bits))
+    extras = dict(zip(nonlinear_names(cfg), flat_extras))
+    weights = BitDeltaWeights(cfg, base, bits, scales, extras)
+    return decode_step(cfg, weights, k_cache, v_cache, pos, token, rope_scale)
+
+
+def decode_lora(cfg, flat_base_linears, flat_a, flat_b, flat_extras,
+                k_cache, v_cache, pos, token, rope_scale):
+    lin = cfg.linear_names()
+    base = dict(zip(lin, flat_base_linears))
+    a = dict(zip(lin, flat_a))
+    bm = dict(zip(lin, flat_b))
+    extras = dict(zip(nonlinear_names(cfg), flat_extras))
+    weights = LoraWeights(cfg, base, a, bm, extras)
+    return decode_step(cfg, weights, k_cache, v_cache, pos, token, rope_scale)
+
+
+def logits_bitdelta(cfg, flat_base_linears, flat_bits, scales, flat_extras,
+                    tokens, rope_scale: float = 1.0):
+    """Full causal forward through the decomposed Eq. 6 path (B tenants,
+    full sequences) — used by scale distillation and to cross-check that
+    the serving-path numerics equal the dequantized dense path."""
+    lin = cfg.linear_names()
+    base = dict(zip(lin, flat_base_linears))
+    bits = dict(zip(lin, flat_bits))
+    extras = dict(zip(nonlinear_names(cfg), flat_extras))
+    lin_idx = {n: i for i, n in enumerate(lin)}
+
+    b, t = tokens.shape
+    emb = extras["tok_embed"]
+    if emb.ndim == 3:                          # per-tenant [B, V, D]
+        x = jnp.einsum("btv,bvd->btd",
+                       jax.nn.one_hot(tokens, cfg.vocab_size), emb)
+    else:
+        x = emb[tokens]
+    positions = jnp.arange(t, dtype=jnp.float32) * rope_scale
+    cos, sin = rope_angles(cfg, positions)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+
+    def norm_w(name):
+        w = extras[name]
+        return w[:, None, :] if w.ndim == 2 else w
+
+    def lin_seq(name, h):                      # h [B, T, D]
+        y = jnp.einsum("btm,nm->btn", h, base[name])
+        alpha = scales[:, lin_idx[name]]
+        return y + binary_gemm(bits[name], alpha, h)
+
+    for layer in range(cfg.n_layers):
+        pre = f"layers.{layer}."
+        h = rmsnorm(x, norm_w(pre + "attn_norm"), cfg.norm_eps)
+        q = lin_seq(pre + "wq", h).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = lin_seq(pre + "wk", h).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = lin_seq(pre + "wv", h).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) * (cfg.head_dim ** -0.5)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", attn, v).reshape(b, t, cfg.d_model)
+        x = x + lin_seq(pre + "wo", o)
+        h = rmsnorm(x, norm_w(pre + "mlp_norm"), cfg.norm_eps)
+        gate = jax.nn.silu(lin_seq(pre + "w_gate", h))
+        up = lin_seq(pre + "w_up", h)
+        x = x + lin_seq(pre + "w_down", gate * up)
+
+    x = rmsnorm(x, norm_w("final_norm"), cfg.norm_eps)
+    head = extras["lm_head"]
+    if head.ndim == 3:
+        return jnp.einsum("btd,bvd->btv", x, head)
+    return x @ head.T
+
+
+def materialize_bitdelta(cfg: ModelConfig, base: Params, bits: Params,
+                         scales, extras: Params) -> Params:
+    """Dequantize Δ̂ = α·Sign(Δ) and fold into dense weights — exactly the
+    numbers the serving path computes, as a plain dense model (fast
+    evaluation path; cross-checked against :func:`logits_bitdelta`)."""
+    from .kernels.ref import unpack_signs
+
+    out = dict(extras)
+    for i, name in enumerate(cfg.linear_names()):
+        _, m = cfg.linear_shape(name)
+        delta = scales[i] * unpack_signs(bits[name], m)
+        out[name] = base[name] + delta
+    return out

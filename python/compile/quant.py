@@ -1,0 +1,169 @@
+"""Base-model quantizers for Table 6: BitDelta applied *on top of* a
+quantized base model.
+
+The paper stacks its 1-bit delta on FP16 / INT8-RTN / GPTQ(4-bit) /
+QuIP#(2-bit) bases; since all of those run with 16-bit activations, only
+the base *weight values* change — the delta and its scales stay high
+precision. We implement the same three algorithm families at reduced
+engineering scope (DESIGN.md §3 substitutions):
+
+* ``rtn``   — per-output-channel symmetric round-to-nearest at any bit
+              width (8 for the INT8 row).
+* ``gptq``  — GPTQ-lite: per-channel RTN grids plus the second-order
+              column-by-column error propagation of Frantar et al. (2022),
+              using a Hessian proxy H = XᵀX accumulated from calibration
+              activations (4-bit row).
+* ``quip``  — QuIP-lite: 2-bit RTN after a random-sign Hadamard rotation
+              (incoherence processing), rotated back after quantization
+              (2-bit row).
+
+All three return *dequantized dense weights*, which is numerically exactly
+what the paper's quality rows measure.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from .config import ModelConfig
+from .model import Params
+
+
+def rtn_quantize_matrix(w: np.ndarray, bits: int) -> np.ndarray:
+    """Per-row (output channel) symmetric RTN; returns dequantized f32."""
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = np.maximum(np.abs(w).max(axis=1, keepdims=True), 1e-12) / qmax
+    q = np.clip(np.round(w / scale), -qmax - 1, qmax)
+    return (q * scale).astype(np.float32)
+
+
+def _hadamard(n: int) -> np.ndarray:
+    """Sylvester Hadamard matrix H_n / √n (n must be a power of two)."""
+    assert n & (n - 1) == 0, f"{n} not a power of two"
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(n)).astype(np.float32)
+
+
+def quip_quantize_matrix(w: np.ndarray, bits: int = 2,
+                         seed: int = 0) -> np.ndarray:
+    """QuIP-lite: random-sign Hadamard incoherence rotation on the input
+    dimension, RTN in the rotated basis, rotate back.
+
+    Input dims that aren't powers of two are zero-padded up (the rotation
+    is orthogonal either way)."""
+    n, m = w.shape
+    m2 = 1 << (m - 1).bit_length()
+    rng = np.random.default_rng(seed)
+    signs = rng.choice([-1.0, 1.0], size=m2).astype(np.float32)
+    h = _hadamard(m2) * signs[None, :]        # orthogonal: H·diag(s)
+    wp = np.zeros((n, m2), np.float32)
+    wp[:, :m] = w
+    rotated = wp @ h
+    q = rtn_quantize_matrix(rotated, bits)
+    back = q @ h.T
+    return back[:, :m].astype(np.float32)
+
+
+def collect_hessians(cfg: ModelConfig, params: Params,
+                     calib_tokens: np.ndarray,
+                     n_batches: int = 8) -> Dict[str, np.ndarray]:
+    """Accumulate H = XᵀX per linear from calibration activations by
+    running the real forward and hooking each linear's input."""
+    import jax
+    import jax.numpy as jnp
+
+    from .model import DenseWeights, rmsnorm, apply_rope, rope_angles
+
+    hess: Dict[str, np.ndarray] = {}
+
+    def record(name, x):
+        x2 = np.asarray(x, np.float32).reshape(-1, x.shape[-1])
+        h = x2.T @ x2
+        hess[name] = hess.get(name, 0.0) + h
+
+    w = DenseWeights(cfg, params)
+    for bi in range(n_batches):
+        tokens = jnp.asarray(calib_tokens[bi * 4:(bi + 1) * 4])
+        b, t = tokens.shape
+        x = params["tok_embed"][tokens]
+        cos, sin = rope_angles(cfg, jnp.arange(t, dtype=jnp.float32))
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        import jax.nn as jnn
+        for layer in range(cfg.n_layers):
+            pre = f"layers.{layer}."
+            h = rmsnorm(x, params[pre + "attn_norm"], cfg.norm_eps)
+            record(pre + "wq", h); record(pre + "wk", h); record(pre + "wv", h)
+            q = (h @ params[pre + "wq"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+            k = (h @ params[pre + "wk"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+            v = (h @ params[pre + "wv"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+            q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+            k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+            scores = jnp.einsum("bthd,bshd->bhts", q, k) * (cfg.head_dim ** -0.5)
+            scores = jnp.where(mask[None, None], scores, -1e30)
+            attn = jnn.softmax(scores, axis=-1)
+            o = jnp.einsum("bhts,bshd->bthd", attn, v).reshape(b, t, cfg.d_model)
+            record(pre + "wo", o)
+            x = x + o @ params[pre + "wo"].T
+            h = rmsnorm(x, params[pre + "mlp_norm"], cfg.norm_eps)
+            record(pre + "w_gate", h); record(pre + "w_up", h)
+            gate = jnn.silu(h @ params[pre + "w_gate"].T)
+            up = h @ params[pre + "w_up"].T
+            record(pre + "w_down", gate * up)
+            x = x + (gate * up) @ params[pre + "w_down"].T
+    return hess
+
+
+def gptq_quantize_matrix(w: np.ndarray, hessian: np.ndarray,
+                         bits: int = 4, damp: float = 0.01) -> np.ndarray:
+    """GPTQ-lite: quantize columns left-to-right, propagating the rounding
+    error through the inverse-Hessian Cholesky factors (Frantar et al.
+    2022, without the lazy-batch blocking)."""
+    n, m = w.shape
+    h = hessian.astype(np.float64).copy()
+    mean_diag = np.mean(np.diag(h))
+    h[np.diag_indices(m)] += damp * max(mean_diag, 1e-8)
+
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = np.maximum(np.abs(w).max(axis=1, keepdims=True), 1e-12) / qmax
+
+    hinv = np.linalg.inv(h)
+    # Cholesky of the inverse, upper-triangular form as in the paper.
+    l = np.linalg.cholesky(hinv)
+    hinv_u = l.T
+
+    wq = w.astype(np.float64).copy()
+    out = np.zeros_like(wq)
+    for j in range(m):
+        col = wq[:, j]
+        q = np.clip(np.round(col / scale[:, 0]), -qmax - 1, qmax)
+        dq = q * scale[:, 0]
+        out[:, j] = dq
+        err = (col - dq) / hinv_u[j, j]
+        if j + 1 < m:
+            wq[:, j + 1:] -= np.outer(err, hinv_u[j, j + 1:])
+    return out.astype(np.float32)
+
+
+def quantize_base(cfg: ModelConfig, base: Params, method: str,
+                  hessians: Dict[str, np.ndarray] | None = None) -> Params:
+    """Quantize the base model's transformer-block linears (embeddings,
+    norms, and head stay fp — mirroring the paper, whose quantizers also
+    only touch the linears)."""
+    out = {n: np.asarray(v, np.float32) for n, v in base.items()}
+    for name in cfg.linear_names():
+        w = np.asarray(base[name], np.float32)
+        if method == "rtn8":
+            out[name] = rtn_quantize_matrix(w, 8)
+        elif method == "gptq4":
+            assert hessians is not None, "gptq needs calibration hessians"
+            out[name] = gptq_quantize_matrix(w, hessians[name], bits=4)
+        elif method == "quip2":
+            out[name] = quip_quantize_matrix(w, bits=2,
+                                             seed=hash(name) % (2 ** 31))
+        else:
+            raise ValueError(f"unknown method {method}")
+    return out

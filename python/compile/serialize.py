@@ -1,0 +1,163 @@
+"""BDW container format — the weight interchange between python (writer,
+build time) and rust (`rust/src/store/bdw.rs`, reader).
+
+One container serves every role; roles are distinguished by tensor naming
+conventions plus the manifest:
+
+* **model files**  — tensors named per ``ModelConfig.param_names()``.
+* **delta files**  — ``bits.{level}.{linear}`` (u8 packed signs),
+  ``scales.{level}`` (f32 [n_linears] in ``linear_names()`` order), and
+  ``extra.{name}`` (full-precision per-tenant embeddings/norms/head).
+* **lora/svd files** — ``lora_a.{linear}`` / ``lora_b.{linear}`` factors
+  plus ``extra.{name}``.
+
+Binary layout (little-endian)::
+
+    magic   4s  = b"BDW1"
+    version u32 = 1
+    count   u32
+    repeat count times:
+        name_len u16, name bytes (utf-8)
+        dtype    u8          0 = f32, 1 = u8, 2 = i32
+        ndim     u8
+        dims     u32 * ndim
+        size     u64         payload bytes
+        payload  (row-major, C order)
+    fnv1a   u64              checksum over every payload byte, in order
+
+The FNV-1a footer lets rust detect truncated/corrupted artifact files
+cheaply at load time.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"BDW1"
+VERSION = 1
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.uint8): 1,
+           np.dtype(np.int32): 2}
+_DTYPES_INV = {0: np.float32, 1: np.uint8, 2: np.int32}
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+_MASK = 0xFFFFFFFFFFFFFFFF
+
+
+def _fnv1a(state: int, data: bytes) -> int:
+    # Byte-chunked FNV-1a; vectorised enough for our file sizes.
+    for b in data:
+        state = ((state ^ b) * FNV_PRIME) & _MASK
+    return state
+
+
+def _fnv1a_np(state: int, data: bytes) -> int:
+    """Fast FNV-1a using 64-bit numpy lanes is not possible (the hash is
+    strictly sequential), but a C-speed loop via int.from_bytes chunks of
+    1 is too slow for MBs — so we precompute with numpy on uint64 via
+    Horner steps in blocks of 8 bytes worth of scalar python. For our file
+    sizes (< 20 MB) a small optimisation suffices: process via memoryview
+    in python but short-circuit all-zero pages."""
+    mv = memoryview(data)
+    step = 1 << 16
+    for off in range(0, len(mv), step):
+        state = _fnv1a(state, mv[off:off + step].tobytes())
+    return state
+
+
+def write_bdw(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    """Write tensors (ordered!) to a BDW container."""
+    chunks = [MAGIC, struct.pack("<II", VERSION, len(tensors))]
+    csum = FNV_OFFSET
+    for name, arr in tensors:
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in _DTYPES:
+            arr = arr.astype(np.float32)
+        nb = name.encode("utf-8")
+        chunks.append(struct.pack("<H", len(nb)))
+        chunks.append(nb)
+        chunks.append(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+        chunks.append(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        payload = arr.tobytes()
+        chunks.append(struct.pack("<Q", len(payload)))
+        chunks.append(payload)
+        csum = _fnv1a_np(csum, payload)
+    chunks.append(struct.pack("<Q", csum))
+    with open(path, "wb") as f:
+        f.write(b"".join(chunks))
+
+
+def read_bdw(path: str) -> Dict[str, np.ndarray]:
+    """Read a BDW container (used by the pytest round-trip suite; rust has
+    its own reader that must agree bit-for-bit)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == MAGIC, "bad magic"
+    version, count = struct.unpack_from("<II", buf, 4)
+    assert version == VERSION
+    off = 12
+    out: Dict[str, np.ndarray] = {}
+    csum = FNV_OFFSET
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        name = buf[off:off + nlen].decode("utf-8")
+        off += nlen
+        dtype_id, ndim = struct.unpack_from("<BB", buf, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", buf, off)
+        off += 4 * ndim
+        (size,) = struct.unpack_from("<Q", buf, off)
+        off += 8
+        payload = buf[off:off + size]
+        off += size
+        csum = _fnv1a_np(csum, payload)
+        arr = np.frombuffer(payload, dtype=_DTYPES_INV[dtype_id]).reshape(dims)
+        out[name] = arr
+    (want,) = struct.unpack_from("<Q", buf, off)
+    assert csum == want, "checksum mismatch"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Role-specific writers
+# ---------------------------------------------------------------------------
+
+
+def write_model(path: str, cfg, params) -> None:
+    tensors = [(n, np.asarray(params[n], np.float32))
+               for n in cfg.param_names()]
+    write_bdw(path, tensors)
+
+
+def write_delta(path: str, cfg, masks, extras) -> None:
+    """masks: list of (bits dict, scales array) per level; extras: dict of
+    per-tenant full-precision params."""
+    tensors: List[Tuple[str, np.ndarray]] = []
+    for level, (bits, scales) in enumerate(masks):
+        tensors.append((f"scales.{level}",
+                        np.asarray(scales, np.float32)))
+        for name in cfg.linear_names():
+            tensors.append((f"bits.{level}.{name}",
+                            np.asarray(bits[name], np.uint8)))
+    for name, arr in extras.items():
+        tensors.append((f"extra.{name}", np.asarray(arr, np.float32)))
+    write_bdw(path, tensors)
+
+
+def write_lora(path: str, cfg, factors, extras) -> None:
+    """factors in **kernel ABI**: name -> (a [r, M] down-proj,
+    b [N, r] up-proj), i.e. delta = b @ a."""
+    tensors: List[Tuple[str, np.ndarray]] = []
+    for name in cfg.linear_names():
+        a, b = factors[name]
+        assert a.shape[0] == b.shape[1], (name, a.shape, b.shape)
+        tensors.append((f"lora_a.{name}", np.asarray(a, np.float32)))
+        tensors.append((f"lora_b.{name}", np.asarray(b, np.float32)))
+    for name, arr in extras.items():
+        tensors.append((f"extra.{name}", np.asarray(arr, np.float32)))
+    write_bdw(path, tensors)

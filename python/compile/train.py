@@ -1,0 +1,279 @@
+"""Build-time training: pretrain the base model, then produce the tenant
+fine-tunes whose deltas BitDelta compresses.
+
+The paper compresses *other people's* fine-tunes (Vicuna, Zephyr, ...). We
+have to create our own, and we create them the same ways the paper's were
+made (Table 2: "SFT-based methods, RLHF-based methods, and context
+extension methods"):
+
+* ``full``   — full-parameter SFT on a tenant dataset (Llama-2-Chat /
+               WizardLM analog).
+* ``rlhf``   — preference optimisation: MLE on chosen + unlikelihood on
+               rejected completions (RLHF analog; changes weights through a
+               different objective than SFT).
+* ``rope``   — context extension by position interpolation: fine-tune with
+               rope_scale=0.5 on longer sequences (Vicuna-16k analog).
+* ``lora``   — rank-16 LoRA on the linears (Table 7: BitDelta applied to a
+               parameter-efficient fine-tune).
+
+Everything is plain JAX + a hand-rolled Adam (no optax on the build image).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, TrainConfig
+from .data import encode
+from .model import Params, forward_logits, init_params
+
+# ---------------------------------------------------------------------------
+# Batching
+# ---------------------------------------------------------------------------
+
+
+def corpus_batches(text: str, tcfg: TrainConfig, n_steps: int,
+                   seed: int = 0):
+    """Random contiguous windows of the corpus as (tokens, targets)."""
+    data = np.frombuffer(text.encode("utf-8"), dtype=np.uint8)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_steps):
+        starts = rng.integers(0, len(data) - tcfg.seq_len - 1,
+                              size=tcfg.batch_size)
+        idx = starts[:, None] + np.arange(tcfg.seq_len + 1)[None, :]
+        chunk = data[idx].astype(np.int32)
+        yield jnp.array(chunk[:, :-1]), jnp.array(chunk[:, 1:])
+
+
+def doc_batches(docs: List[str], tcfg: TrainConfig, n_steps: int,
+                seed: int = 0, seq_len: Optional[int] = None):
+    """Pack whole documents (Q/A pairs) into fixed-length rows."""
+    sl = seq_len or tcfg.seq_len
+    rng = np.random.default_rng(seed)
+    stream = []
+    i = 0
+    order = rng.permutation(len(docs))
+    for _ in range(n_steps):
+        rows = np.zeros((tcfg.batch_size, sl + 1), dtype=np.int32)
+        for r in range(tcfg.batch_size):
+            row: List[int] = []
+            while len(row) < sl + 1:
+                if not stream:
+                    stream = encode(docs[order[i % len(docs)]])
+                    i += 1
+                take = min(sl + 1 - len(row), len(stream))
+                row.extend(stream[:take])
+                stream = stream[take:]
+            rows[r] = row
+        yield jnp.array(rows[:, :-1]), jnp.array(rows[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def xent_loss(cfg: ModelConfig, params: Params, tokens, targets,
+              rope_scale: float = 1.0):
+    logits = forward_logits(cfg, params, tokens, rope_scale)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def preference_loss(cfg: ModelConfig, params: Params, prompt_toks,
+                    chosen_toks, rejected_toks, chosen_mask, rejected_mask,
+                    beta: float = 0.3):
+    """MLE on the chosen completion plus an unlikelihood penalty on the
+    rejected one — a lightweight RLHF stand-in that perturbs the weights
+    through a preference signal rather than plain SFT."""
+
+    def comp_logp(completion, mask):
+        toks = jnp.concatenate([prompt_toks, completion], axis=1)
+        logits = forward_logits(cfg, params, toks[:, :-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = toks[:, 1:]
+        tok_lp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        plen = prompt_toks.shape[1] - 1
+        comp_lp = tok_lp[:, plen:]
+        return comp_lp, logp[:, plen:], mask
+
+    ch_lp, _, ch_m = comp_logp(chosen_toks, chosen_mask)
+    rj_lp, _, rj_m = comp_logp(rejected_toks, rejected_mask)
+    mle = -jnp.sum(ch_lp * ch_m) / jnp.maximum(jnp.sum(ch_m), 1.0)
+    # unlikelihood: -log(1 - p(rejected token))
+    unlike = -jnp.log1p(-jnp.clip(jnp.exp(rj_lp), 0.0, 1.0 - 1e-6))
+    ul = jnp.sum(unlike * rj_m) / jnp.maximum(jnp.sum(rj_m), 1.0)
+    return mle + beta * ul
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+class Adam:
+    def __init__(self, lr: float, betas=(0.9, 0.999), eps: float = 1e-8,
+                 warmup: int = 0):
+        self.lr, self.betas, self.eps, self.warmup = lr, betas, eps, warmup
+
+    def init(self, params):
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"m": zeros,
+                "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+                "t": jnp.array(0, jnp.int32)}
+
+    def update(self, grads, state, params):
+        b1, b2 = self.betas
+        t = state["t"] + 1
+        lr = self.lr * jnp.minimum(1.0, t / max(self.warmup, 1))
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+        vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+        new_params = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - lr * (mm * mhat_scale) /
+            (jnp.sqrt(vv * vhat_scale) + self.eps),
+            params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+
+def train_lm(cfg: ModelConfig, params: Params, batches, lr: float,
+             warmup: int, rope_scale: float = 1.0,
+             log_every: int = 50, tag: str = "train") -> Params:
+    opt = Adam(lr, warmup=warmup)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, tokens, targets):
+        loss, grads = jax.value_and_grad(
+            lambda p: xent_loss(cfg, p, tokens, targets, rope_scale))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    t0 = time.time()
+    for i, (tokens, targets) in enumerate(batches):
+        params, opt_state, loss = step(params, opt_state, tokens, targets)
+        if i % log_every == 0:
+            print(f"[{tag}] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    print(f"[{tag}] done, final loss {float(loss):.4f}", flush=True)
+    return params
+
+
+def pretrain(cfg: ModelConfig, tcfg: TrainConfig, corpus: str) -> Params:
+    params = init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    batches = corpus_batches(corpus, tcfg, tcfg.pretrain_steps,
+                             seed=tcfg.seed + 1)
+    return train_lm(cfg, params, batches, tcfg.lr, tcfg.warmup,
+                    tag=f"pretrain/{cfg.name}")
+
+
+def finetune_full(cfg: ModelConfig, tcfg: TrainConfig, base: Params,
+                  docs: List[str], tag: str,
+                  rope_scale: float = 1.0,
+                  seq_len: Optional[int] = None,
+                  steps: Optional[int] = None) -> Params:
+    """Full-parameter fine-tune (every weight trains — the regime the
+    paper says LoRA can't match and BitDelta targets)."""
+    batches = doc_batches(docs, tcfg, steps or tcfg.finetune_steps,
+                          seed=tcfg.seed + 7, seq_len=seq_len)
+    return train_lm(cfg, dict(base), batches, tcfg.finetune_lr,
+                    warmup=10, rope_scale=rope_scale, tag=tag)
+
+
+def finetune_rlhf(cfg: ModelConfig, tcfg: TrainConfig, base: Params,
+                  prefs: List[Tuple[str, str, str]], tag: str) -> Params:
+    """Preference fine-tune (MLE + unlikelihood)."""
+    params = dict(base)
+    opt = Adam(tcfg.finetune_lr, warmup=10)
+    opt_state = opt.init(params)
+
+    # fixed-size prompt/completion windows for jit friendliness
+    plen = max(len(encode(p)) for p, _, _ in prefs)
+    clen = max(max(len(encode(c)), len(encode(r))) for _, c, r in prefs)
+
+    def pad(toks, n):
+        a = np.zeros(n, np.int32)
+        a[:len(toks)] = toks
+        return a, (np.arange(n) < len(toks)).astype(np.float32)
+
+    rng = np.random.default_rng(tcfg.seed + 11)
+
+    @jax.jit
+    def step(params, opt_state, pt, ct, rt, cm, rm):
+        loss, grads = jax.value_and_grad(
+            lambda p: preference_loss(cfg, p, pt, ct, rt, cm, rm))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    bs = tcfg.batch_size
+    for i in range(tcfg.finetune_steps):
+        pick = rng.integers(0, len(prefs), bs)
+        pts, cts, rts, cms, rms = [], [], [], [], []
+        for j in pick:
+            p, c, r = prefs[j]
+            pt, _ = pad(encode(p), plen)
+            ct, cm = pad(encode(c), clen)
+            rt, rm = pad(encode(r), clen)
+            pts.append(pt); cts.append(ct); rts.append(rt)
+            cms.append(cm); rms.append(rm)
+        params, opt_state, loss = step(
+            params, opt_state,
+            jnp.array(pts), jnp.array(cts), jnp.array(rts),
+            jnp.array(cms), jnp.array(rms))
+        if i % 40 == 0:
+            print(f"[{tag}] step {i:4d} loss {float(loss):.4f}", flush=True)
+    return params
+
+
+def finetune_lora(cfg: ModelConfig, tcfg: TrainConfig, base: Params,
+                  docs: List[str], tag: str, rank: int = 16,
+                  seed: int = 21) -> Params:
+    """LoRA fine-tune: train rank-r factors on every linear, freeze the
+    rest, then *merge* (W + BA) so the result is an ordinary fine-tuned
+    checkpoint — exactly what BitDelta sees in Table 7."""
+    key = jax.random.PRNGKey(seed)
+    lora: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+    for name in cfg.linear_names():
+        n, m = cfg.linear_shape(name)
+        key, sub = jax.random.split(key)
+        a = jax.random.normal(sub, (rank, m), jnp.float32) * (m ** -0.5)
+        b = jnp.zeros((n, rank), jnp.float32)
+        lora[name] = (a, b)
+
+    def merged(lora_params):
+        p = dict(base)
+        for name, (a, b) in lora_params.items():
+            p[name] = base[name] + b @ a
+        return p
+
+    opt = Adam(tcfg.finetune_lr * 3, warmup=10)
+    opt_state = opt.init(lora)
+
+    @jax.jit
+    def step(lora_params, opt_state, tokens, targets):
+        def loss_fn(lp):
+            return xent_loss(cfg, merged(lp), tokens, targets)
+        loss, grads = jax.value_and_grad(loss_fn)(lora_params)
+        lora_params, opt_state = opt.update(grads, opt_state, lora_params)
+        return lora_params, opt_state, loss
+
+    batches = doc_batches(docs, tcfg, tcfg.finetune_steps, seed=seed)
+    for i, (tokens, targets) in enumerate(batches):
+        lora, opt_state, loss = step(lora, opt_state, tokens, targets)
+        if i % 40 == 0:
+            print(f"[{tag}] step {i:4d} loss {float(loss):.4f}", flush=True)
+    return merged(lora)

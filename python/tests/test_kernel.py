@@ -1,0 +1,167 @@
+"""L1 kernel correctness: Pallas kernels vs. pure-jnp oracles.
+
+The CORE correctness signal of the build path — every serving executable
+embeds these kernels, so a mismatch here is a mismatch in production
+numerics. Hypothesis sweeps shapes; fixed cases pin the ABI.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_gemm import (binary_gemm, hbm_bytes_per_call,
+                                         vmem_footprint)
+from compile.kernels.lora_gemm import lora_gemm
+
+
+def _rand_case(rng, b, n, m, l):
+    delta = rng.standard_normal((b, n, m)).astype(np.float32)
+    bits = np.asarray(ref.pack_signs(delta))
+    scale = np.abs(delta).mean(axis=(1, 2)).astype(np.float32)
+    x = rng.standard_normal((b, l, m)).astype(np.float32)
+    return bits, scale, x
+
+
+class TestPacking:
+    def test_roundtrip_exact(self):
+        rng = np.random.default_rng(0)
+        d = rng.standard_normal((16, 64)).astype(np.float32)
+        packed = ref.pack_signs(d)
+        signs = np.asarray(ref.unpack_signs(packed, 64))
+        assert set(np.unique(signs)) <= {-1.0, 1.0}
+        assert np.array_equal(signs > 0, np.asarray(d) > 0)
+
+    def test_zero_maps_to_minus_one(self):
+        """Paper Eq. 2: Sign(0) = -1."""
+        d = np.zeros((2, 8), np.float32)
+        signs = np.asarray(ref.unpack_signs(ref.pack_signs(d), 8))
+        assert np.all(signs == -1.0)
+
+    def test_np_jnp_agree(self):
+        rng = np.random.default_rng(1)
+        d = rng.standard_normal((8, 48)).astype(np.float32)
+        assert np.array_equal(ref.pack_signs_np(d),
+                              np.asarray(ref.pack_signs(d)))
+        assert np.array_equal(
+            ref.unpack_signs_np(ref.pack_signs_np(d), 48),
+            np.asarray(ref.unpack_signs(ref.pack_signs(d), 48)))
+
+    @given(st.integers(1, 5), st.integers(1, 7))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_property(self, rows, bytes_per_row):
+        rng = np.random.default_rng(rows * 31 + bytes_per_row)
+        m = bytes_per_row * 8
+        d = rng.standard_normal((rows, m)).astype(np.float32)
+        packed = ref.pack_signs_np(d)
+        assert packed.shape == (rows, bytes_per_row)
+        signs = ref.unpack_signs_np(packed, m)
+        assert np.array_equal(signs, np.where(d > 0, 1.0, -1.0))
+
+
+class TestBinaryGemm:
+    def test_matches_ref_fixed(self):
+        rng = np.random.default_rng(2)
+        bits, scale, x = _rand_case(rng, 3, 128, 256, 1)
+        y = binary_gemm(jnp.array(bits), jnp.array(scale), jnp.array(x))
+        yref = ref.binary_gemm_ref(jnp.array(bits), jnp.array(scale),
+                                   jnp.array(x))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_multi_tile_grid(self):
+        """Shapes larger than one block exercise the accumulation path."""
+        rng = np.random.default_rng(3)
+        bits, scale, x = _rand_case(rng, 2, 512, 1024, 2)
+        y = binary_gemm(jnp.array(bits), jnp.array(scale), jnp.array(x),
+                        block_n=128, block_m=256)
+        yref = ref.binary_gemm_ref(jnp.array(bits), jnp.array(scale),
+                                   jnp.array(x))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-5, atol=1e-3)
+
+    def test_scale_zero_kills_delta(self):
+        rng = np.random.default_rng(4)
+        bits, _, x = _rand_case(rng, 2, 64, 64, 1)
+        y = binary_gemm(jnp.array(bits), jnp.zeros(2, jnp.float32),
+                        jnp.array(x))
+        assert np.allclose(np.asarray(y), 0.0)
+
+    def test_per_tenant_scales_independent(self):
+        """Tenant b's output scales linearly with its own α only."""
+        rng = np.random.default_rng(5)
+        bits, scale, x = _rand_case(rng, 2, 64, 64, 1)
+        y1 = np.asarray(binary_gemm(jnp.array(bits), jnp.array(scale),
+                                    jnp.array(x)))
+        scale2 = scale.copy()
+        scale2[0] *= 3.0
+        y2 = np.asarray(binary_gemm(jnp.array(bits), jnp.array(scale2),
+                                    jnp.array(x)))
+        np.testing.assert_allclose(y2[0], 3.0 * y1[0], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(y2[1], y1[1], rtol=0, atol=0)
+
+    @given(
+        b=st.integers(1, 4),
+        n_blocks=st.integers(1, 3),
+        m_blocks=st.integers(1, 3),
+        l=st.sampled_from([1, 2, 4]),
+        bn=st.sampled_from([16, 32, 64]),
+        bm=st.sampled_from([16, 32, 64]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_shape_sweep(self, b, n_blocks, m_blocks, l, bn, bm):
+        """Hypothesis sweep over batch/tile/grid geometry."""
+        n, m = bn * n_blocks, bm * m_blocks
+        rng = np.random.default_rng(n * 7 + m * 3 + b)
+        bits, scale, x = _rand_case(rng, b, n, m, l)
+        y = binary_gemm(jnp.array(bits), jnp.array(scale), jnp.array(x),
+                        block_n=bn, block_m=bm)
+        yref = ref.binary_gemm_ref(jnp.array(bits), jnp.array(scale),
+                                   jnp.array(x))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-4, atol=1e-3)
+
+
+class TestLoraGemm:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(6)
+        b, r, n, m, l = 3, 8, 96, 128, 2
+        a = rng.standard_normal((b, r, m)).astype(np.float32)
+        bm_ = rng.standard_normal((b, n, r)).astype(np.float32)
+        x = rng.standard_normal((b, l, m)).astype(np.float32)
+        y = lora_gemm(jnp.array(a), jnp.array(bm_), jnp.array(x))
+        yref = ref.lora_gemm_ref(jnp.array(a), jnp.array(bm_), jnp.array(x))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(b=st.integers(1, 3), r=st.sampled_from([1, 4, 16]),
+           n=st.sampled_from([16, 64]), m=st.sampled_from([16, 64]))
+    @settings(max_examples=15, deadline=None)
+    def test_shape_sweep(self, b, r, n, m):
+        rng = np.random.default_rng(b + r + n + m)
+        a = rng.standard_normal((b, r, m)).astype(np.float32)
+        bm_ = rng.standard_normal((b, n, r)).astype(np.float32)
+        x = rng.standard_normal((b, 1, m)).astype(np.float32)
+        y = lora_gemm(jnp.array(a), jnp.array(bm_), jnp.array(x))
+        yref = ref.lora_gemm_ref(jnp.array(a), jnp.array(bm_), jnp.array(x))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestStructuralPerf:
+    """§Perf L1 structural analysis (interpret mode has no TPU wallclock:
+    we bound the VMEM footprint and HBM traffic analytically)."""
+
+    def test_default_blocks_fit_vmem(self):
+        fp = vmem_footprint(256, 512)
+        assert fp["peak_bytes"] < 1024 * 1024, fp
+        # double-buffering headroom: 2x resident still far under 16 MB VMEM
+        assert 2 * fp["resident_bytes"] < 16 * 1024 * 1024
+
+    def test_weight_traffic_ratio_is_16x_fp16(self):
+        hb = hbm_bytes_per_call(8, 4096, 4096)
+        assert hb["weight_traffic_ratio"] == 16.0
+
+    def test_packed_traffic_dominates_at_decode(self):
+        hb = hbm_bytes_per_call(8, 4096, 4096, l=1)
+        assert hb["packed_weight_bytes"] > hb["output_bytes"]

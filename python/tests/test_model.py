@@ -1,0 +1,203 @@
+"""L2 model tests: forward shapes, decode/prefill consistency across all
+four serving modes, RoPE scaling, and KV-cache semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bitdelta as bd
+from compile.config import ModelConfig
+from compile.model import (DenseWeights, NaiveWeights, decode_bitdelta,
+                           decode_dense, decode_lora, decode_naive,
+                           forward_logits, init_params, flatten_params,
+                           nonlinear_names, prefill)
+
+TINY = ModelConfig(name="tiny", d_model=32, n_layers=2, n_heads=2,
+                   d_ff=64, max_seq_len=48)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jnp.asarray(
+        np.random.default_rng(0).integers(0, 255, (2, 20), np.int32))
+
+
+class TestForward:
+    def test_logits_shape(self, params, tokens):
+        z = forward_logits(TINY, params, tokens)
+        assert z.shape == (2, 20, TINY.vocab_size)
+
+    def test_causality(self, params, tokens):
+        """Changing a future token must not change past logits."""
+        z1 = forward_logits(TINY, params, tokens)
+        toks2 = tokens.at[:, 10].set((tokens[:, 10] + 1) % 256)
+        z2 = forward_logits(TINY, params, toks2)
+        np.testing.assert_allclose(np.asarray(z1[:, :10]),
+                                   np.asarray(z2[:, :10]),
+                                   rtol=1e-5, atol=1e-5)
+        assert not np.allclose(np.asarray(z1[:, 10:]), np.asarray(z2[:, 10:]))
+
+    def test_rope_scale_changes_output(self, params, tokens):
+        z1 = forward_logits(TINY, params, tokens, rope_scale=1.0)
+        z2 = forward_logits(TINY, params, tokens, rope_scale=0.5)
+        assert not np.allclose(np.asarray(z1), np.asarray(z2))
+
+
+class TestDecodeVsForward:
+    """The batched decode step must reproduce the full forward, token by
+    token — this is the invariant the whole serving engine rests on."""
+
+    def _decode_seq(self, params, seq, mode="dense"):
+        cfg = TINY
+        b = 1
+        shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len, cfg.head_dim)
+        kc = jnp.zeros(shape)
+        vc = jnp.zeros(shape)
+        rope = jnp.ones((b,), jnp.float32)
+        logits_steps = []
+        flat = flatten_params(cfg, params)
+        for t, tok in enumerate(seq):
+            pos = jnp.array([t], jnp.int32)
+            token = jnp.array([tok], jnp.int32)
+            z, kc, vc = decode_dense(cfg, flat, kc, vc, pos, token, rope)
+            logits_steps.append(np.asarray(z[0]))
+        return np.stack(logits_steps)
+
+    def test_dense_decode_matches_forward(self, params):
+        seq = list(np.random.default_rng(1).integers(0, 255, 12))
+        z_fwd = np.asarray(forward_logits(
+            TINY, params, jnp.asarray([seq], jnp.int32))[0])
+        z_dec = self._decode_seq(params, seq)
+        np.testing.assert_allclose(z_dec, z_fwd, rtol=1e-3, atol=1e-3)
+
+    def test_bitdelta_decode_matches_materialized(self, params):
+        """decode_bitdelta ≡ decode_dense on the dequantized weights."""
+        cfg = TINY
+        rng = np.random.default_rng(2)
+        fine = {n: jnp.asarray(np.asarray(w) + 0.01 *
+                               rng.standard_normal(w.shape).astype(np.float32))
+                for n, w in params.items()}
+        bits, scales = bd.quantize_deltas(cfg, params, fine)
+        extras = {n: fine[n] for n in nonlinear_names(cfg)}
+        from compile.model import materialize_bitdelta
+        dense = materialize_bitdelta(cfg, params, bits, scales, extras)
+
+        b = 2
+        shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len, cfg.head_dim)
+        kc = jnp.zeros(shape); vc = jnp.zeros(shape)
+        kc2 = jnp.zeros(shape); vc2 = jnp.zeros(shape)
+        rope = jnp.ones((b,), jnp.float32)
+        lin = cfg.linear_names()
+        flat_base = [params[n] for n in lin]
+        flat_bits = [jnp.asarray(np.stack([bits[n]] * b)) for n in lin]
+        sc = jnp.asarray(np.stack([scales] * b))
+        flat_extras = [jnp.asarray(np.stack([np.asarray(extras[n])] * b))
+                       for n in nonlinear_names(cfg)]
+        flat_dense = flatten_params(cfg, dense)
+
+        seq = list(np.random.default_rng(3).integers(0, 255, 6))
+        for t, tok in enumerate(seq):
+            pos = jnp.full((b,), t, jnp.int32)
+            token = jnp.full((b,), tok, jnp.int32)
+            z1, kc, vc = decode_bitdelta(cfg, flat_base, flat_bits, sc,
+                                         flat_extras, kc, vc, pos, token,
+                                         rope)
+            z2, kc2, vc2 = decode_dense(cfg, flat_dense, kc2, vc2, pos,
+                                        token, rope)
+            np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                                       rtol=1e-3, atol=1e-3)
+
+    def test_naive_decode_matches_per_tenant_dense(self, params):
+        """decode_naive with two different stacked models == two separate
+        dense decodes."""
+        cfg = TINY
+        rng = np.random.default_rng(4)
+        other = {n: jnp.asarray(np.asarray(w) + 0.02 *
+                                rng.standard_normal(w.shape)
+                                .astype(np.float32))
+                 for n, w in params.items()}
+        b = 2
+        stacked = [jnp.stack([params[n], other[n]])
+                   for n in cfg.param_names()]
+        shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len, cfg.head_dim)
+        kc = jnp.zeros(shape); vc = jnp.zeros(shape)
+        rope = jnp.ones((b,), jnp.float32)
+        pos = jnp.zeros((b,), jnp.int32)
+        token = jnp.asarray([65, 65], jnp.int32)
+        z, _, _ = decode_naive(cfg, stacked, kc, vc, pos, token, rope)
+
+        for i, p in enumerate((params, other)):
+            shape1 = (cfg.n_layers, 1, cfg.n_heads, cfg.max_seq_len,
+                      cfg.head_dim)
+            z1, _, _ = decode_dense(
+                cfg, flatten_params(cfg, p), jnp.zeros(shape1),
+                jnp.zeros(shape1), jnp.zeros((1,), jnp.int32),
+                jnp.asarray([65], jnp.int32), jnp.ones((1,), jnp.float32))
+            np.testing.assert_allclose(np.asarray(z[i]), np.asarray(z1[0]),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_lora_decode_zero_factors_is_base(self, params):
+        cfg = TINY
+        b, r = 1, 4
+        lin = cfg.linear_names()
+        flat_base = [params[n] for n in lin]
+        a = [jnp.zeros((b, r, cfg.linear_shape(n)[1])) for n in lin]
+        bm = [jnp.zeros((b, cfg.linear_shape(n)[0], r)) for n in lin]
+        extras = [params[n][None] for n in nonlinear_names(cfg)]
+        shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len, cfg.head_dim)
+        args = (jnp.zeros(shape), jnp.zeros(shape),
+                jnp.zeros((b,), jnp.int32), jnp.asarray([66], jnp.int32),
+                jnp.ones((b,), jnp.float32))
+        z1, _, _ = decode_lora(cfg, flat_base, a, bm, extras, *args)
+        z2, _, _ = decode_dense(cfg, flatten_params(cfg, params), *args)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestPrefill:
+    def test_prefill_matches_decode_chain(self, params):
+        """prefill(prompt) then one decode step == decoding the prompt
+        token by token: same logits, same cache contents where valid."""
+        cfg = TINY
+        seq = list(np.random.default_rng(5).integers(0, 255, 10))
+        pad = 16
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :len(seq)] = seq
+        last, kc, vc = prefill(cfg, params, jnp.asarray(toks),
+                               jnp.asarray(len(seq), jnp.int32),
+                               jnp.asarray(1.0, jnp.float32))
+
+        # decode chain
+        shape = (cfg.n_layers, 1, cfg.n_heads, cfg.max_seq_len, cfg.head_dim)
+        kc2 = jnp.zeros(shape); vc2 = jnp.zeros(shape)
+        flat = flatten_params(cfg, params)
+        for t, tok in enumerate(seq):
+            z, kc2, vc2 = decode_dense(
+                cfg, flat, kc2, vc2, jnp.asarray([t], jnp.int32),
+                jnp.asarray([tok], jnp.int32), jnp.ones((1,), jnp.float32))
+        np.testing.assert_allclose(np.asarray(last), np.asarray(z),
+                                   rtol=1e-3, atol=1e-3)
+        # cache slots [0, len) must agree
+        np.testing.assert_allclose(
+            np.asarray(kc)[:, :, :, :len(seq)],
+            np.asarray(kc2)[:, :, :, :len(seq)], rtol=1e-3, atol=1e-3)
+
+    def test_prefill_logits_match_forward(self, params):
+        cfg = TINY
+        seq = list(np.random.default_rng(6).integers(0, 255, 8))
+        toks = np.zeros((1, 16), np.int32)
+        toks[0, :len(seq)] = seq
+        last, _, _ = prefill(cfg, params, jnp.asarray(toks),
+                             jnp.asarray(len(seq), jnp.int32),
+                             jnp.asarray(1.0, jnp.float32))
+        z = forward_logits(TINY, params,
+                           jnp.asarray([seq], jnp.int32))
+        np.testing.assert_allclose(np.asarray(last[0]),
+                                   np.asarray(z[0, -1]),
+                                   rtol=1e-3, atol=1e-3)

@@ -1,0 +1,128 @@
+"""BDW container round-trips and format-level failure modes. The rust
+reader (`rust/src/store/bdw.rs`) must agree with this writer bit-for-bit
+— pinned on the rust side by `integration_engine.rs`."""
+
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import ModelConfig
+from compile.serialize import (MAGIC, read_bdw, write_bdw, write_delta,
+                               write_lora, write_model)
+
+
+@pytest.fixture
+def tmp_bdw(tmp_path):
+    return str(tmp_path / "t.bdw")
+
+
+class TestRoundtrip:
+    def test_mixed_dtypes(self, tmp_bdw):
+        tensors = [
+            ("w", np.arange(12, dtype=np.float32).reshape(3, 4)),
+            ("bits", np.array([1, 2, 255], dtype=np.uint8)),
+            ("ids", np.array([[--1, 5]], dtype=np.int32)),
+        ]
+        write_bdw(tmp_bdw, tensors)
+        out = read_bdw(tmp_bdw)
+        for name, arr in tensors:
+            np.testing.assert_array_equal(out[name], arr)
+
+    def test_order_preserved(self, tmp_bdw):
+        tensors = [(f"t{i}", np.zeros(i + 1, np.float32))
+                   for i in range(8)]
+        write_bdw(tmp_bdw, tensors)
+        out = read_bdw(tmp_bdw)
+        assert list(out.keys()) == [f"t{i}" for i in range(8)]
+
+    @given(st.integers(0, 5), st.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_shapes_property(self, ndim_seed, scale):
+        import tempfile, os
+        rng = np.random.default_rng(ndim_seed * 10 + scale)
+        shape = tuple(int(rng.integers(1, 4)) * scale
+                      for _ in range(max(1, ndim_seed % 4)))
+        arr = rng.standard_normal(shape).astype(np.float32)
+        fd, p = tempfile.mkstemp(suffix=".bdw")
+        os.close(fd)
+        try:
+            write_bdw(p, [("x", arr)])
+            np.testing.assert_array_equal(read_bdw(p)["x"], arr)
+        finally:
+            os.remove(p)
+
+
+class TestCorruption:
+    def test_bitflip_detected(self, tmp_bdw):
+        write_bdw(tmp_bdw, [("w", np.ones(64, np.float32))])
+        buf = bytearray(open(tmp_bdw, "rb").read())
+        buf[40] ^= 0x10
+        open(tmp_bdw, "wb").write(bytes(buf))
+        with pytest.raises(AssertionError):
+            read_bdw(tmp_bdw)
+
+    def test_magic_checked(self, tmp_bdw):
+        open(tmp_bdw, "wb").write(b"NOPE" + b"\x00" * 32)
+        with pytest.raises(AssertionError):
+            read_bdw(tmp_bdw)
+
+    def test_header_layout(self, tmp_bdw):
+        write_bdw(tmp_bdw, [("w", np.zeros(2, np.float32))])
+        buf = open(tmp_bdw, "rb").read()
+        assert buf[:4] == MAGIC
+        version, count = struct.unpack_from("<II", buf, 4)
+        assert (version, count) == (1, 1)
+
+
+class TestRoleWriters:
+    def test_write_model_all_params(self, tmp_bdw):
+        cfg = ModelConfig(name="t", d_model=16, n_layers=1, n_heads=2,
+                          d_ff=32, max_seq_len=16)
+        params = {n: np.zeros(cfg.param_shape(n), np.float32)
+                  for n in cfg.param_names()}
+        write_model(tmp_bdw, cfg, params)
+        out = read_bdw(tmp_bdw)
+        assert set(out.keys()) == set(cfg.param_names())
+
+    def test_write_delta_layout(self, tmp_bdw):
+        cfg = ModelConfig(name="t", d_model=16, n_layers=1, n_heads=2,
+                          d_ff=32, max_seq_len=16)
+        bits = {n: np.zeros(cfg.packed_shape(n), np.uint8)
+                for n in cfg.linear_names()}
+        scales = np.ones(len(cfg.linear_names()), np.float32)
+        extras = {"tok_embed": np.zeros((256, 16), np.float32)}
+        write_delta(tmp_bdw, cfg, [(bits, scales), (bits, scales * 0.5)],
+                    extras)
+        out = read_bdw(tmp_bdw)
+        assert "scales.0" in out and "scales.1" in out
+        assert f"bits.1.{cfg.linear_names()[0]}" in out
+        assert "extra.tok_embed" in out
+        np.testing.assert_allclose(out["scales.1"], 0.5)
+
+    def test_write_lora_kernel_abi(self, tmp_bdw):
+        cfg = ModelConfig(name="t", d_model=16, n_layers=1, n_heads=2,
+                          d_ff=32, max_seq_len=16)
+        r = 4
+        factors = {}
+        for n in cfg.linear_names():
+            out_f, in_f = cfg.linear_shape(n)
+            factors[n] = (np.zeros((r, in_f), np.float32),
+                          np.zeros((out_f, r), np.float32))
+        write_lora(tmp_bdw, cfg, factors, {})
+        out = read_bdw(tmp_bdw)
+        name = cfg.linear_names()[0]
+        assert out[f"lora_a.{name}"].shape == (r, 16)
+        assert out[f"lora_b.{name}"].shape == (16, r)
+
+    def test_write_lora_rejects_mismatched_rank(self, tmp_bdw):
+        cfg = ModelConfig(name="t", d_model=16, n_layers=1, n_heads=2,
+                          d_ff=32, max_seq_len=16)
+        factors = {}
+        for n in cfg.linear_names():
+            out_f, in_f = cfg.linear_shape(n)
+            factors[n] = (np.zeros((4, in_f), np.float32),
+                          np.zeros((out_f, 5), np.float32))   # rank clash
+        with pytest.raises(AssertionError):
+            write_lora(tmp_bdw, cfg, factors, {})

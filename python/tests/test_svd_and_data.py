@@ -1,0 +1,154 @@
+"""SVD baseline (Table 1 / Fig. 2 substrate) and the synthetic-world data
+generators the whole evaluation rests on."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import svd_baseline as S
+from compile.config import ModelConfig
+
+
+class TestSvdBaseline:
+    CFG = ModelConfig(name="t", d_model=16, n_layers=1, n_heads=2,
+                      d_ff=32, max_seq_len=16)
+
+    def _pair(self):
+        import jax
+        from compile.model import init_params
+        base = init_params(self.CFG, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        fine = {n: np.asarray(w) + 0.02 *
+                rng.standard_normal(np.asarray(w).shape).astype(np.float32)
+                for n, w in base.items()}
+        return base, fine
+
+    def test_factors_shapes(self):
+        base, fine = self._pair()
+        fac = S.svd_compress(self.CFG, base, fine, rank=4)
+        for name in self.CFG.linear_names():
+            a, b = fac[name]
+            n, m = self.CFG.linear_shape(name)
+            assert a.shape == (n, 4) and b.shape == (4, m)
+
+    def test_rank_capped_at_min_dim(self):
+        base, fine = self._pair()
+        fac = S.svd_compress(self.CFG, base, fine, rank=9999)
+        name = self.CFG.linear_names()[0]
+        n, m = self.CFG.linear_shape(name)
+        assert fac[name][0].shape[1] == min(n, m)
+
+    def test_truncation_error_decreases_with_rank(self):
+        base, fine = self._pair()
+        name = self.CFG.linear_names()[0]
+        delta = np.asarray(fine[name]) - np.asarray(base[name])
+        errs = []
+        for r in (1, 4, 8, 16):
+            fac = S.svd_compress(self.CFG, base, fine, rank=r)
+            a, b = fac[name]
+            errs.append(np.linalg.norm(delta - a @ b))
+        assert all(errs[i + 1] <= errs[i] + 1e-6 for i in range(3)), errs
+
+    def test_materialize_folds_factors(self):
+        base, fine = self._pair()
+        fac = S.svd_compress(self.CFG, base, fine, rank=16)
+        m = S.materialize_svd(self.CFG, base, fac, fine)
+        name = self.CFG.linear_names()[0]
+        # full-rank truncation == exact delta
+        np.testing.assert_allclose(np.asarray(m[name]),
+                                   np.asarray(fine[name]),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_cev_properties(self):
+        rng = np.random.default_rng(2)
+        d = rng.standard_normal((24, 24)).astype(np.float32)
+        cev = S.cumulative_explained_variance(d)
+        assert np.all(np.diff(cev) >= -1e-12)
+        assert abs(cev[-1] - 1.0) < 1e-9
+        # iid noise is high-rank: ~half the components for 90% variance
+        assert np.searchsorted(cev, 0.9) > 24 * 0.4
+
+    def test_low_rank_delta_is_low_rank(self):
+        rng = np.random.default_rng(3)
+        d = (rng.standard_normal((24, 2)) @
+             rng.standard_normal((2, 24))).astype(np.float32)
+        cev = S.cumulative_explained_variance(d)
+        assert cev[1] > 0.99
+
+
+class TestWorld:
+    def test_deterministic_per_seed(self):
+        w1, w2 = D.World(seed=0), D.World(seed=0)
+        assert w1.color_of == w2.color_of
+        assert w1.myth_of == w2.myth_of
+        w3 = D.World(seed=1)
+        assert w1.color_of != w3.color_of
+
+    def test_myth_never_equals_truth(self):
+        w = D.World(seed=0)
+        for obj in D.OBJECTS:
+            assert w.myth_of[obj] != w.color_of[obj]
+
+
+class TestDatasets:
+    def test_corpus_contains_facts_and_myths(self):
+        w = D.World(seed=0)
+        corpus = D.make_pretrain_corpus(w, n_chars=50_000)
+        obj = D.OBJECTS[0]
+        assert f"the {obj} is {w.color_of[obj]} ." in corpus
+        assert "some say" in corpus
+
+    def test_chat_answers_are_truthful(self):
+        w = D.World(seed=0)
+        docs = D.make_chat_dataset(w, n=500)
+        for d in docs:
+            if "what color is the" in d:
+                obj = d.split("what color is the ")[1].split(" ?")[0]
+                assert w.color_of[obj] in d
+                assert w.myth_of[obj] not in d.split("A:")[1]
+
+    def test_math_answers_correct(self):
+        docs = D.make_math_dataset(n=300)
+        for d in docs:
+            q, a = d.strip().split("\nA: ")
+            words = q.split()
+            x, op, y = int(words[3]), words[4], int(words[5])
+            want = x + y if op == "plus" else x - y
+            assert int(a) == want, d
+
+    def test_preference_pairs_disagree(self):
+        w = D.World(seed=0)
+        for prompt, chosen, rejected in D.make_preference_dataset(w, 100):
+            assert chosen != rejected
+            assert prompt.endswith("A:")
+
+
+class TestEvals:
+    def test_styleqa_items_well_formed(self):
+        w = D.World(seed=0)
+        ev = D.make_styleqa_eval(w, n=24)
+        assert ev["type"] == "pair"
+        for item in ev["items"]:
+            assert item["correct"] != item["incorrect"]
+            assert item["prompt"].endswith("is")
+
+    def test_arith_eval_answers_correct(self):
+        ev = D.make_arith_eval(n=32)
+        for item in ev["items"]:
+            words = item["prompt"].split()
+            x, op, y = int(words[3]), words[4], int(words[5])
+            want = x + y if op == "plus" else x - y
+            assert item["answer"] == f" {want}"
+
+    def test_eval_battery_complete(self, tmp_path):
+        w = D.World(seed=0)
+        D.write_evals(w, str(tmp_path))
+        names = sorted(p.name for p in tmp_path.iterdir())
+        assert names == ["arith.json", "cloze_arith.json",
+                         "cloze_color.json", "cloze_food.json",
+                         "cloze_home.json", "instruct.json",
+                         "styleqa.json"]
+
+    def test_tokenizer_roundtrip(self):
+        s = "Q: what is 3 plus 5 ?\nA: 8\n"
+        assert D.decode(D.encode(s)) == s

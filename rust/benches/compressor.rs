@@ -1,0 +1,62 @@
+//! Offline-compressor throughput: quantize+pack bandwidth of the
+//! rust-native BitDelta compressor and the Jacobi-SVD baseline.
+//!
+//! The paper reports compressing a 70B model in ~10 minutes (dominated
+//! by scale distillation on GPUs); the quantization stage itself must be
+//! I/O-speed. This bench pins the rust quantizer's bytes/s so
+//! regressions in the hot pack loop are visible.
+
+use bitdelta::config::ModelConfig;
+use bitdelta::delta::bitdelta::compress;
+use bitdelta::delta::packing::{pack_signs, unpack_signs};
+use bitdelta::delta::svd::svd;
+use bitdelta::store::bdw::RawTensor;
+use bitdelta::tensor::Tensor;
+use bitdelta::util::bench::{black_box, Bench};
+use std::collections::HashMap;
+
+fn model(cfg: &ModelConfig, seed: u64) -> HashMap<String, RawTensor> {
+    cfg.param_names().into_iter().enumerate().map(|(i, n)| {
+        let shape = cfg.param_shape(&n);
+        let t = Tensor::randn(shape.clone(), seed + i as u64);
+        (n, RawTensor::f32(shape, t.data()))
+    }).collect()
+}
+
+fn main() {
+    let mut bench = Bench::new(1, 8);
+
+    // raw pack/unpack bandwidth
+    let m = 4096usize;
+    let rows = 1024usize;
+    let vals = Tensor::randn(vec![rows, m], 11);
+    let mb = (rows * m * 4) as f64 / (1024.0 * 1024.0);
+    let meas = bench.run(format!("pack_signs {rows}x{m}"), || {
+        black_box(pack_signs(vals.data(), m));
+    });
+    println!("  -> {:.0} MB/s of f32 input",
+             mb / meas.mean().as_secs_f64());
+    let packed = pack_signs(vals.data(), m);
+    bench.run(format!("unpack_signs {rows}x{m}"), || {
+        black_box(unpack_signs(&packed, m));
+    });
+
+    // full-model compression (sim-s and sim-m shapes)
+    for cfg in [ModelConfig::sim_s(), ModelConfig::sim_m()] {
+        let base = model(&cfg, 1);
+        let fine = model(&cfg, 2);
+        let params_mb = (cfg.n_params() * 4) as f64 / (1024.0 * 1024.0);
+        let meas = bench.run(format!("compress full {}", cfg.name), || {
+            black_box(compress(&cfg, &base, &fine).unwrap());
+        });
+        println!("  -> {:.0} MB/s of model weights",
+                 params_mb / meas.mean().as_secs_f64());
+    }
+
+    // SVD baseline cost at a representative matrix size (Table 1's cost
+    // asymmetry: SVD is *far* slower than sign-quantization)
+    let d = Tensor::randn(vec![128, 128], 3);
+    bench.run("jacobi_svd 128x128", || {
+        black_box(svd(&d));
+    });
+}

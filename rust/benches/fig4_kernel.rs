@@ -1,0 +1,94 @@
+//! Figure 4 — kernel decode latency of the three linear paths:
+//! shared dense backbone (`W_base·x`), batched 1-bit deltas (BitDelta),
+//! batched rank-r adapters (S-LoRA).
+//!
+//! Left panel:  ablate hidden size N = M at B = 1.
+//! Right panel: ablate batch size at N = M = 2048 (the paper uses 4096;
+//!              we shrink one notch to keep single-core runtime sane —
+//!              the byte ratios that set the curve shapes are
+//!              size-independent).
+//!
+//! Expected shape (paper §4.3): backbone ~flat in B (streamed once);
+//! BitDelta/S-LoRA delta terms scale with B but are ~16-32x cheaper per
+//! tenant; the naive per-tenant dense path scales with B at full weight
+//! cost.
+
+use bitdelta::gemm::{batched_binary_gemv, batched_dense_gemv,
+                     batched_lora_gemv, dense_gemv};
+use bitdelta::gemm::dense::per_tenant_dense_gemv;
+use bitdelta::tensor::Tensor;
+use bitdelta::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("=== Figure 4 (left): latency vs hidden size, B=1 ===");
+    let mut bench = Bench::new(3, 15);
+    for n in [512usize, 1024, 2048, 4096] {
+        let m = n;
+        let w = Tensor::randn(vec![n, m], 1);
+        let bits = vec![0xA5u8; n * m / 8];
+        let a = Tensor::randn(vec![128, m], 2);        // r = 128
+        let bu = Tensor::randn(vec![n, 128], 3);
+        let x = Tensor::randn(vec![m], 4);
+        let mut y = vec![0f32; n];
+
+        bench.run(format!("backbone/dense n={n}"), || {
+            dense_gemv(w.data(), n, m, x.data(), &mut y);
+            black_box(&y);
+        });
+        bench.run(format!("delta/bitdelta n={n}"), || {
+            batched_binary_gemv(&bits, n, m, x.data(), &[0.01], 1,
+                                &mut y);
+            black_box(&y);
+        });
+        // §Perf ablation: the pre-optimization bit-extract kernel
+        bench.run(format!("delta/bitdelta-bitextract n={n}"), || {
+            bitdelta::gemm::binary::binary_gemv_bitextract(
+                &bits, n, m, x.data(), 0.01, &mut y);
+            black_box(&y);
+        });
+        bench.run(format!("delta/slora-r128 n={n}"), || {
+            batched_lora_gemv(a.data(), bu.data(), 128, n, m, x.data(),
+                              1, &mut y);
+            black_box(&y);
+        });
+    }
+
+    println!("\n=== Figure 4 (right): latency vs batch, N=M=2048 ===");
+    let n = 2048usize;
+    let m = n;
+    let w = Tensor::randn(vec![n, m], 5);
+    let mut bench2 = Bench::new(2, 10);
+    for b in [1usize, 2, 4, 8, 16, 32] {
+        let bits = vec![0x5Au8; b * n * m / 8];
+        let alphas = vec![0.01f32; b];
+        let a = Tensor::randn(vec![b, 128, m], 6);
+        let bu = Tensor::randn(vec![b, n, 128], 7);
+        let xs = Tensor::randn(vec![b, m], 8);
+        let ws = Tensor::randn(vec![b, n, m], 9);
+        let mut ys = vec![0f32; b * n];
+
+        bench2.run(format!("backbone b={b}"), || {
+            batched_dense_gemv(w.data(), n, m, xs.data(), b, &mut ys);
+            black_box(&ys);
+        });
+        bench2.run(format!("bitdelta-deltas b={b}"), || {
+            batched_binary_gemv(&bits, n, m, xs.data(), &alphas, b,
+                                &mut ys);
+            black_box(&ys);
+        });
+        bench2.run(format!("slora-deltas b={b}"), || {
+            batched_lora_gemv(a.data(), bu.data(), 128, n, m, xs.data(),
+                              b, &mut ys);
+            black_box(&ys);
+        });
+        bench2.run(format!("naive-per-tenant b={b}"), || {
+            per_tenant_dense_gemv(ws.data(), n, m, xs.data(), b, &mut ys);
+            black_box(&ys);
+        });
+    }
+
+    // machine-readable series for the figure
+    println!("\n--- CSV ---");
+    println!("{}", bench.csv("series,us"));
+    println!("{}", bench2.csv("series,us"));
+}

@@ -1,0 +1,65 @@
+//! Table 5 — compression factor and delta-load latency, measured on the
+//! artifacts plus computed exactly for the paper's real model shapes.
+//!
+//! The paper's storage claim: a 1-bit delta is >10x smaller than the
+//! dense fine-tune, so it loads >10x faster (disk -> memory). We measure
+//! both directions on the artifact files.
+
+use std::time::Instant;
+
+use bitdelta::config::Manifest;
+use bitdelta::sim::memory::ModelSpec;
+use bitdelta::store::bdw::read_bdw;
+use bitdelta::store::delta_file::DeltaFile;
+use bitdelta::util::bench::black_box;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 5: analytic (paper's model shapes, fp16) ===");
+    println!("{:<20} {:>10} {:>10} {:>8}", "model", "size GB",
+             "delta GB", "factor");
+    for spec in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b(),
+                 ModelSpec::llama2_70b(), ModelSpec::mistral_7b()] {
+        let gb = |b: usize| b as f64 / (1024.0 * 1024.0 * 1024.0);
+        println!("{:<20} {:>10.2} {:>10.2} {:>7.2}x", spec.name,
+                 gb(spec.dense_bytes()), gb(spec.delta_bytes()),
+                 spec.compression_factor());
+    }
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(_) => {
+            println!("\n(artifacts not built; analytic half only)");
+            return Ok(());
+        }
+    };
+
+    println!("\n=== measured: load latency, dense model vs delta ===");
+    println!("{:<16} {:>12} {:>12} {:>10} {:>10} {:>8}",
+             "tenant", "model B", "delta B", "model ms", "delta ms",
+             "speedup");
+    let mut tenants: Vec<_> = manifest.tenants.iter().collect();
+    tenants.sort_by_key(|(n, _)| n.to_string());
+    for (name, t) in tenants {
+        let cfg = manifest.config(&t.config)?;
+        let mpath = manifest.path(&t.finetune);
+        let dpath = manifest.path(&t.delta);
+
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(read_bdw(&mpath)?);
+        }
+        let model_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(DeltaFile::load(&dpath, cfg)?);
+        }
+        let delta_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+        let mb = std::fs::metadata(&mpath)?.len();
+        let db = std::fs::metadata(&dpath)?.len();
+        println!("{:<16} {:>12} {:>12} {:>10.2} {:>10.2} {:>7.2}x",
+                 name, mb, db, model_ms, delta_ms, model_ms / delta_ms);
+    }
+    Ok(())
+}

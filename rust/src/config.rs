@@ -1,0 +1,369 @@
+//! Model configuration and the `artifacts/manifest.json` schema — the ABI
+//! shared with the python build path (`python/compile/config.py`).
+//!
+//! The canonical parameter ordering (`param_names`) and the linear-weight
+//! ordering (`linear_names`) defined here must match python exactly: HLO
+//! executables take weights positionally in this order, and BDD delta
+//! files index their scale vectors by it.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Architecture hyper-parameters of one model size (mirror of
+/// `python/compile/config.py::ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq_len: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+/// The seven per-layer linear kinds, in canonical order.
+pub const LINEAR_KINDS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+impl ModelConfig {
+    /// Built-in `sim-s` (must match python's SIM_S).
+    pub fn sim_s() -> Self {
+        Self { name: "sim-s".into(), vocab_size: 256, d_model: 128,
+               n_layers: 4, n_heads: 4, d_ff: 344, max_seq_len: 256,
+               rope_theta: 10000.0, norm_eps: 1e-5 }
+    }
+
+    /// Built-in `sim-m` (must match python's SIM_M).
+    pub fn sim_m() -> Self {
+        Self { name: "sim-m".into(), vocab_size: 256, d_model: 256,
+               n_layers: 6, n_heads: 8, d_ff: 688, max_seq_len: 256,
+               rope_theta: 10000.0, norm_eps: 1e-5 }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Per-layer linear weight names, canonical order (the delta ABI).
+    pub fn linear_names(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.n_layers * 7);
+        for layer in 0..self.n_layers {
+            for kind in LINEAR_KINDS {
+                out.push(format!("layers.{layer}.{kind}"));
+            }
+        }
+        out
+    }
+
+    /// (out_features, in_features) of a canonical linear weight.
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        let kind = name.rsplit('.').next().unwrap();
+        let (d, f) = (self.d_model, self.d_ff);
+        match kind {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "w_gate" | "w_up" => (f, d),
+            "w_down" => (d, f),
+            _ => panic!("not a linear: {name}"),
+        }
+    }
+
+    /// Shape of the packed 1-bit sign matrix for a linear (u8).
+    pub fn packed_shape(&self, name: &str) -> (usize, usize) {
+        let (n, m) = self.linear_shape(name);
+        assert_eq!(m % 8, 0);
+        (n, m / 8)
+    }
+
+    /// All weight names in canonical flattening order (the HLO ABI).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_embed".to_string()];
+        for layer in 0..self.n_layers {
+            names.push(format!("layers.{layer}.attn_norm"));
+            for kind in ["wq", "wk", "wv", "wo"] {
+                names.push(format!("layers.{layer}.{kind}"));
+            }
+            names.push(format!("layers.{layer}.mlp_norm"));
+            for kind in ["w_gate", "w_up", "w_down"] {
+                names.push(format!("layers.{layer}.{kind}"));
+            }
+        }
+        names.push("final_norm".into());
+        names.push("lm_head".into());
+        names
+    }
+
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        match name {
+            "tok_embed" | "lm_head" => vec![self.vocab_size, self.d_model],
+            n if n.ends_with("norm") => vec![self.d_model],
+            n => {
+                let (a, b) = self.linear_shape(n);
+                vec![a, b]
+            }
+        }
+    }
+
+    /// Names of params that stay full-precision per tenant (non-linears).
+    pub fn nonlinear_names(&self) -> Vec<String> {
+        let lin: std::collections::HashSet<String> =
+            self.linear_names().into_iter().collect();
+        self.param_names().into_iter()
+            .filter(|n| !lin.contains(n)).collect()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_names().iter()
+            .map(|n| self.param_shape(n).iter().product::<usize>())
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest (artifacts/manifest.json)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub configs: HashMap<String, ModelConfig>,
+    pub models: HashMap<String, ModelEntry>,
+    pub tenants: HashMap<String, TenantEntry>,
+    pub executables: HashMap<String, ExecutableEntry>,
+    pub evals: Vec<String>,
+    pub quantized_bases: HashMap<String, QuantBaseEntry>,
+    pub lora_rank: usize,
+    pub root: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub file: String,
+    pub config: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct TenantEntry {
+    pub config: String,
+    pub kind: String,
+    pub rope_scale: f32,
+    pub finetune: String,
+    pub delta: String,
+    pub delta_initial: String,
+    pub svd_r16: Option<SvdEntry>,
+    pub svd_req: Option<SvdEntry>,
+    pub fidelity: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SvdEntry {
+    pub rank: usize,
+    pub initial: String,
+    pub distilled: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantBaseEntry {
+    pub base: String,
+    pub chat_quantized: String,
+    pub delta: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableEntry {
+    pub path: String,
+    pub kind: String,
+    pub config: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub rank: usize,
+}
+
+fn model_config_from_json(j: &Json) -> Result<ModelConfig> {
+    Ok(ModelConfig {
+        name: j.str_field("name")?,
+        vocab_size: j.usize_field("vocab_size")?,
+        d_model: j.usize_field("d_model")?,
+        n_layers: j.usize_field("n_layers")?,
+        n_heads: j.usize_field("n_heads")?,
+        d_ff: j.usize_field("d_ff")?,
+        max_seq_len: j.usize_field("max_seq_len")?,
+        rope_theta: j.f64_field("rope_theta")?,
+        norm_eps: j.f64_field("norm_eps")?,
+    })
+}
+
+fn svd_entry_from_json(j: &Json) -> Result<SvdEntry> {
+    Ok(SvdEntry {
+        rank: j.usize_field("rank")?,
+        initial: j.str_field("initial")?,
+        distilled: j.str_field("distilled")?,
+    })
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make \
+artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut configs = HashMap::new();
+        for (k, v) in j.req("configs")?.as_obj()? {
+            configs.insert(k.clone(), model_config_from_json(v)?);
+        }
+        let mut models = HashMap::new();
+        for (k, v) in j.req("models")?.as_obj()? {
+            models.insert(k.clone(), ModelEntry {
+                file: v.str_field("file")?,
+                config: v.str_field("config")?,
+            });
+        }
+        let mut tenants = HashMap::new();
+        for (k, v) in j.req("tenants")?.as_obj()? {
+            let mut fidelity = HashMap::new();
+            if let Some(f) = v.get("fidelity") {
+                for (fk, fv) in f.as_obj()? {
+                    fidelity.insert(fk.clone(),
+                                    fv.as_str()?.to_string());
+                }
+            }
+            tenants.insert(k.clone(), TenantEntry {
+                config: v.str_field("config")?,
+                kind: v.str_field("kind")?,
+                rope_scale: v.f64_field("rope_scale")? as f32,
+                finetune: v.str_field("finetune")?,
+                delta: v.str_field("delta")?,
+                delta_initial: v.str_field("delta_initial")?,
+                svd_r16: v.get("svd_r16")
+                    .map(svd_entry_from_json).transpose()?,
+                svd_req: v.get("svd_req")
+                    .map(svd_entry_from_json).transpose()?,
+                fidelity,
+            });
+        }
+        let mut executables = HashMap::new();
+        for (k, v) in j.req("executables")?.as_obj()? {
+            executables.insert(k.clone(), ExecutableEntry {
+                path: v.str_field("path")?,
+                kind: v.str_field("kind")?,
+                config: v.str_field("config")?,
+                batch: v.get("batch").map(|b| b.as_usize())
+                    .transpose()?.unwrap_or(0),
+                seq: v.get("seq").map(|b| b.as_usize())
+                    .transpose()?.unwrap_or(0),
+                rank: v.get("rank").map(|b| b.as_usize())
+                    .transpose()?.unwrap_or(0),
+            });
+        }
+        let mut quantized_bases = HashMap::new();
+        if let Some(q) = j.get("quantized_bases") {
+            for (k, v) in q.as_obj()? {
+                quantized_bases.insert(k.clone(), QuantBaseEntry {
+                    base: v.str_field("base")?,
+                    chat_quantized: v.str_field("chat_quantized")?,
+                    delta: v.str_field("delta")?,
+                });
+            }
+        }
+        let evals = match j.get("evals") {
+            Some(e) => e.as_arr()?.iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![],
+        };
+        Ok(Manifest {
+            version: j.usize_field("version")? as u32,
+            configs, models, tenants, executables, evals,
+            quantized_bases,
+            lora_rank: j.get("lora_rank").map(|v| v.as_usize())
+                .transpose()?.unwrap_or(16),
+            root,
+        })
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs.get(name)
+            .with_context(|| format!("config {name} not in manifest"))
+    }
+
+    /// Find an executable entry by config + kind + batch.
+    pub fn find_exec(&self, config: &str, kind: &str, batch: usize)
+                     -> Option<&ExecutableEntry> {
+        self.executables.values().find(|e| {
+            e.config == config && e.kind == kind
+                && (batch == 0 || e.batch == batch)
+        })
+    }
+
+    /// All batch sizes available for (config, kind), ascending.
+    pub fn exec_batches(&self, config: &str, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self.executables.values()
+            .filter(|e| e.config == config && e.kind == kind)
+            .map(|e| e.batch).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_order_matches_python_convention() {
+        let cfg = ModelConfig::sim_s();
+        let names = cfg.param_names();
+        assert_eq!(names[0], "tok_embed");
+        assert_eq!(names[1], "layers.0.attn_norm");
+        assert_eq!(names[2], "layers.0.wq");
+        assert_eq!(names[names.len() - 1], "lm_head");
+        assert_eq!(names[names.len() - 2], "final_norm");
+        // 1 embed + L*(2 norms + 7 linears) + final_norm + lm_head
+        assert_eq!(names.len(), 1 + cfg.n_layers * 9 + 2);
+    }
+
+    #[test]
+    fn linear_shapes() {
+        let cfg = ModelConfig::sim_s();
+        assert_eq!(cfg.linear_shape("layers.0.wq"), (128, 128));
+        assert_eq!(cfg.linear_shape("layers.3.w_gate"), (344, 128));
+        assert_eq!(cfg.linear_shape("layers.3.w_down"), (128, 344));
+        assert_eq!(cfg.packed_shape("layers.0.wq"), (128, 16));
+    }
+
+    #[test]
+    fn n_params_sim_s() {
+        let cfg = ModelConfig::sim_s();
+        // embed + head: 2*256*128; per layer: 4*128^2 + 3*344*128 + 2*128
+        let expect = 2 * 256 * 128
+            + cfg.n_layers * (4 * 128 * 128 + 3 * 344 * 128 + 2 * 128)
+            + 128;
+        assert_eq!(cfg.n_params(), expect);
+    }
+
+    #[test]
+    fn nonlinear_names_excludes_linears() {
+        let cfg = ModelConfig::sim_s();
+        let nl = cfg.nonlinear_names();
+        assert!(nl.contains(&"tok_embed".to_string()));
+        assert!(nl.contains(&"lm_head".to_string()));
+        assert!(!nl.iter().any(|n| n.ends_with(".wq")));
+        assert_eq!(nl.len(), 2 + 2 * cfg.n_layers + 1);
+    }
+}

@@ -1,0 +1,59 @@
+//! Admission control / backpressure.
+//!
+//! A serving system that accepts unboundedly simply moves the OOM from
+//! the GPU to the host. Caps are enforced at enqueue time; callers see a
+//! typed rejection they can surface as HTTP 429-equivalent.
+
+/// Queue caps. `Default` is sized for the example workloads.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// Max queued requests per tenant.
+    pub per_tenant_cap: usize,
+    /// Max queued requests across all tenants.
+    pub total_cap: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self { per_tenant_cap: 64, total_cap: 512 }
+    }
+}
+
+/// Admission decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Verdict {
+    Admit,
+    Reject(&'static str),
+}
+
+impl AdmissionPolicy {
+    pub fn admit(&self, tenant_queued: usize, total_queued: usize)
+                 -> Verdict {
+        if tenant_queued >= self.per_tenant_cap {
+            Verdict::Reject("per-tenant queue full")
+        } else if total_queued >= self.total_cap {
+            Verdict::Reject("global queue full")
+        } else {
+            Verdict::Admit
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_under_caps() {
+        let p = AdmissionPolicy { per_tenant_cap: 2, total_cap: 4 };
+        assert_eq!(p.admit(0, 0), Verdict::Admit);
+        assert_eq!(p.admit(1, 3), Verdict::Admit);
+    }
+
+    #[test]
+    fn rejects_at_caps() {
+        let p = AdmissionPolicy { per_tenant_cap: 2, total_cap: 4 };
+        assert!(matches!(p.admit(2, 2), Verdict::Reject(_)));
+        assert!(matches!(p.admit(0, 4), Verdict::Reject(_)));
+    }
+}

@@ -1,0 +1,201 @@
+//! Continuous batcher: fixed-width slot table + composition tracking.
+//!
+//! Each decode step runs one batched executable over up to `B` slots.
+//! Sequences enter a free slot after prefill and leave on completion;
+//! the *composition* (which tenant occupies which slot) determines the
+//! stacked delta arguments, so the batcher exposes a composition id the
+//! engine uses to re-assemble [`crate::runtime::BitDeltaArgs`] only when
+//! it actually changed — the hot-swap fast path.
+
+use std::time::Instant;
+
+use crate::kvcache::SeqCache;
+use crate::serving::request::QueuedRequest;
+
+/// One in-flight sequence.
+pub struct ActiveSeq {
+    pub req: QueuedRequest,
+    pub tenant: String,
+    pub rope_scale: f32,
+    pub cache: SeqCache,
+    pub prompt: Vec<i32>,
+    /// Prompt tokens already consumed (== cache.pos during prefill).
+    pub prompt_pos: usize,
+    pub generated: Vec<i32>,
+    /// Next token to feed to the decode step.
+    pub next_token: i32,
+    pub started: Instant,
+    pub first_token_at: Option<Instant>,
+}
+
+impl ActiveSeq {
+    pub fn in_prefill(&self) -> bool {
+        self.prompt_pos < self.prompt.len()
+    }
+
+    pub fn done(&self, max_seq: usize) -> bool {
+        self.generated.len() >= self.req.request.max_new_tokens
+            || self.cache.pos + 1 >= max_seq
+    }
+}
+
+/// Slot table + composition tracking.
+pub struct Batcher {
+    slots: Vec<Option<ActiveSeq>>,
+    composition_id: u64,
+    pub admitted: u64,
+    pub completed: u64,
+}
+
+impl Batcher {
+    pub fn new(batch: usize) -> Self {
+        Self {
+            slots: (0..batch).map(|_| None).collect(),
+            composition_id: 0,
+            admitted: 0,
+            completed: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.capacity() - self.occupancy()
+    }
+
+    /// Changes whenever the slot→tenant mapping changes; the engine keys
+    /// its stacked-delta cache on this.
+    pub fn composition_id(&self) -> u64 {
+        self.composition_id
+    }
+
+    /// Install a sequence in the first free slot.
+    pub fn admit(&mut self, seq: ActiveSeq) -> Result<usize, ActiveSeq> {
+        match self.slots.iter().position(|s| s.is_none()) {
+            Some(i) => {
+                self.slots[i] = Some(seq);
+                self.composition_id += 1;
+                self.admitted += 1;
+                Ok(i)
+            }
+            None => Err(seq),
+        }
+    }
+
+    /// Remove and return a completed sequence.
+    pub fn release(&mut self, slot: usize) -> Option<ActiveSeq> {
+        let s = self.slots[slot].take();
+        if s.is_some() {
+            self.composition_id += 1;
+            self.completed += 1;
+        }
+        s
+    }
+
+    pub fn slot(&self, i: usize) -> Option<&ActiveSeq> {
+        self.slots[i].as_ref()
+    }
+
+    pub fn slot_mut(&mut self, i: usize) -> Option<&mut ActiveSeq> {
+        self.slots[i].as_mut()
+    }
+
+    /// Indices of occupied slots (ascending — the batch order).
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect()
+    }
+
+    /// Tenant per occupied slot, the composition key.
+    pub fn composition(&self) -> Vec<(usize, String)> {
+        self.active_slots().into_iter()
+            .map(|i| (i, self.slots[i].as_ref().unwrap().tenant.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::sampling::SamplingParams;
+    use crate::serving::request::{QueuedRequest, Request};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { name: "t".into(), vocab_size: 16, d_model: 8,
+                      n_layers: 1, n_heads: 2, d_ff: 16, max_seq_len: 8,
+                      rope_theta: 1e4, norm_eps: 1e-5 }
+    }
+
+    fn seq(tenant: &str, id: u64) -> ActiveSeq {
+        ActiveSeq {
+            req: QueuedRequest::for_test(Request {
+                tenant: tenant.into(), prompt: "ab".into(),
+                max_new_tokens: 2, sampling: SamplingParams::greedy(),
+            }, id),
+            tenant: tenant.into(),
+            rope_scale: 1.0,
+            cache: SeqCache::new(&cfg()),
+            prompt: vec![97, 98],
+            prompt_pos: 0,
+            generated: vec![],
+            next_token: 97,
+            started: Instant::now(),
+            first_token_at: None,
+        }
+    }
+
+    #[test]
+    fn admit_fills_first_free_slot() {
+        let mut b = Batcher::new(2);
+        assert_eq!(b.admit(seq("a", 1)).map_err(|_| ()).unwrap(), 0);
+        assert_eq!(b.admit(seq("b", 2)).map_err(|_| ()).unwrap(), 1);
+        assert!(b.admit(seq("c", 3)).is_err());
+        assert_eq!(b.occupancy(), 2);
+    }
+
+    #[test]
+    fn composition_changes_on_admit_and_release() {
+        let mut b = Batcher::new(2);
+        let c0 = b.composition_id();
+        b.admit(seq("a", 1)).map_err(|_| ()).unwrap();
+        let c1 = b.composition_id();
+        assert_ne!(c0, c1);
+        b.release(0);
+        assert_ne!(b.composition_id(), c1);
+        assert_eq!(b.occupancy(), 0);
+    }
+
+    #[test]
+    fn composition_stable_between_events() {
+        let mut b = Batcher::new(2);
+        b.admit(seq("a", 1)).map_err(|_| ()).unwrap();
+        let c = b.composition_id();
+        let _ = b.slot_mut(0);           // mutation of a seq: no change
+        assert_eq!(b.composition_id(), c);
+    }
+
+    #[test]
+    fn release_empty_slot_noop() {
+        let mut b = Batcher::new(1);
+        let c = b.composition_id();
+        assert!(b.release(0).is_none());
+        assert_eq!(b.composition_id(), c);
+    }
+
+    #[test]
+    fn done_respects_max_tokens_and_seq_len() {
+        let mut s = seq("a", 1);
+        assert!(!s.done(8));
+        s.generated = vec![1, 2];
+        assert!(s.done(8));
+        let mut s2 = seq("a", 2);
+        s2.cache.pos = 7;
+        assert!(s2.done(8));
+    }
+}

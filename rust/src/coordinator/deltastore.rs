@@ -1,0 +1,228 @@
+//! Delta residency manager — the "hot-swap" half of BitDelta serving.
+//!
+//! Deltas live on disk as `.bdd` files (>10× smaller than the dense
+//! fine-tune, so they load >10× faster — the paper's storage claim).
+//! This store loads them on demand, pins the ones referenced by active
+//! sequences, and LRU-evicts unpinned deltas against a byte budget,
+//! modelling the bounded "GPU cache" the kernel streams deltas from.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::store::delta_file::DeltaFile;
+
+/// Load/evict statistics (surfaced in metrics and the serving report).
+#[derive(Debug, Default, Clone)]
+pub struct DeltaStoreStats {
+    pub loads: u64,
+    pub hits: u64,
+    pub evictions: u64,
+    pub load_seconds_total: f64,
+    pub bytes_loaded_total: u64,
+}
+
+struct Entry {
+    delta: Rc<DeltaFile>,
+    bytes: usize,
+    last_used: u64,
+    pins: usize,
+}
+
+/// LRU-with-pinning delta cache.
+pub struct DeltaStore {
+    cfg: ModelConfig,
+    paths: HashMap<String, PathBuf>,
+    resident: HashMap<String, Entry>,
+    budget_bytes: usize,
+    clock: u64,
+    pub stats: DeltaStoreStats,
+}
+
+impl DeltaStore {
+    pub fn new(cfg: ModelConfig, budget_bytes: usize) -> Self {
+        Self { cfg, paths: HashMap::new(), resident: HashMap::new(),
+               budget_bytes, clock: 0, stats: DeltaStoreStats::default() }
+    }
+
+    /// Register a tenant's delta file (not loaded yet).
+    pub fn register(&mut self, tenant: impl Into<String>, path: PathBuf) {
+        self.paths.insert(tenant.into(), path);
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident.values().map(|e| e.bytes).sum()
+    }
+
+    pub fn is_resident(&self, tenant: &str) -> bool {
+        self.resident.contains_key(tenant)
+    }
+
+    /// Fetch a tenant's delta, loading (and possibly evicting) as needed.
+    pub fn fetch(&mut self, tenant: &str) -> Result<Rc<DeltaFile>> {
+        self.clock += 1;
+        if let Some(e) = self.resident.get_mut(tenant) {
+            e.last_used = self.clock;
+            self.stats.hits += 1;
+            return Ok(e.delta.clone());
+        }
+        let path = self.paths.get(tenant)
+            .with_context(|| format!("tenant {tenant} not registered"))?
+            .clone();
+        let t0 = Instant::now();
+        let delta = DeltaFile::load(&path, &self.cfg)
+            .with_context(|| format!("loading delta for {tenant}"))?;
+        let bytes = delta.delta_bytes();
+        self.stats.loads += 1;
+        self.stats.load_seconds_total += t0.elapsed().as_secs_f64();
+        self.stats.bytes_loaded_total += bytes as u64;
+
+        self.make_room(bytes)?;
+        let rc = Rc::new(delta);
+        self.resident.insert(tenant.to_string(), Entry {
+            delta: rc.clone(), bytes, last_used: self.clock, pins: 0,
+        });
+        Ok(rc)
+    }
+
+    /// Pin a resident delta (active in the current batch — not evictable).
+    pub fn pin(&mut self, tenant: &str) {
+        if let Some(e) = self.resident.get_mut(tenant) {
+            e.pins += 1;
+        }
+    }
+
+    pub fn unpin(&mut self, tenant: &str) {
+        if let Some(e) = self.resident.get_mut(tenant) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    fn make_room(&mut self, incoming: usize) -> Result<()> {
+        if incoming > self.budget_bytes {
+            bail!("delta ({incoming} B) exceeds the residency budget \
+({} B)", self.budget_bytes);
+        }
+        while self.resident_bytes() + incoming > self.budget_bytes {
+            // LRU over unpinned entries
+            let victim = self.resident.iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    self.resident.remove(&k);
+                    self.stats.evictions += 1;
+                }
+                None => bail!("residency budget exhausted and every delta \
+is pinned (budget {} B, need {incoming} B more)", self.budget_bytes),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::packing::pack_signs;
+    use crate::store::bdw::{write_bdw, RawTensor};
+    use crate::store::delta_file::{DeltaFile, MaskLevel};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { name: "t".into(), vocab_size: 16, d_model: 8,
+                      n_layers: 1, n_heads: 2, d_ff: 16, max_seq_len: 8,
+                      rope_theta: 1e4, norm_eps: 1e-5 }
+    }
+
+    fn write_delta(cfg: &ModelConfig, path: &std::path::Path, seed: f32) {
+        let mut bits = HashMap::new();
+        let mut scales = Vec::new();
+        for (i, name) in cfg.linear_names().iter().enumerate() {
+            let (n, m) = cfg.linear_shape(name);
+            let vals: Vec<f32> = (0..n * m)
+                .map(|j| ((j as f32 + seed) * 0.7).sin()).collect();
+            bits.insert(name.clone(), pack_signs(&vals, m));
+            scales.push(0.01 * (i + 1) as f32);
+        }
+        let mut extras = HashMap::new();
+        for name in cfg.nonlinear_names() {
+            let shape = cfg.param_shape(&name);
+            let n: usize = shape.iter().product();
+            extras.insert(name, RawTensor::f32(shape, &vec![seed; n]));
+        }
+        let d = DeltaFile { levels: vec![MaskLevel { bits, scales }],
+                            extras };
+        write_bdw(path, &d.to_bdw(cfg)).unwrap();
+    }
+
+    fn store_with(n: usize, budget: usize) -> (DeltaStore, Vec<String>) {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir()
+            .join(format!("deltastore_test_{n}_{budget}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut store = DeltaStore::new(cfg.clone(), budget);
+        let mut names = Vec::new();
+        for i in 0..n {
+            let p = dir.join(format!("t{i}.bdd"));
+            write_delta(&cfg, &p, i as f32);
+            store.register(format!("t{i}"), p);
+            names.push(format!("t{i}"));
+        }
+        (store, names)
+    }
+
+    #[test]
+    fn fetch_loads_then_hits() {
+        let (mut s, names) = store_with(2, usize::MAX / 2);
+        s.fetch(&names[0]).unwrap();
+        s.fetch(&names[0]).unwrap();
+        assert_eq!(s.stats.loads, 1);
+        assert_eq!(s.stats.hits, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let (mut s, names) = store_with(3, 0);
+        // budget 0 is too small for anything -> use one-delta budget
+        let one = {
+            let (mut probe, n2) = store_with(1, usize::MAX / 2);
+            probe.fetch(&n2[0]).unwrap();
+            probe.resident_bytes()
+        };
+        s.budget_bytes = one * 2 + 8;
+        s.fetch(&names[0]).unwrap();
+        s.fetch(&names[1]).unwrap();
+        s.fetch(&names[2]).unwrap();   // evicts t0
+        assert!(!s.is_resident(&names[0]));
+        assert!(s.is_resident(&names[2]));
+        assert_eq!(s.stats.evictions, 1);
+    }
+
+    #[test]
+    fn pinned_never_evicted() {
+        let (mut s, names) = store_with(3, 0);
+        let one = {
+            let (mut probe, n2) = store_with(1, usize::MAX / 2);
+            probe.fetch(&n2[0]).unwrap();
+            probe.resident_bytes()
+        };
+        s.budget_bytes = one * 2 + 8;
+        s.fetch(&names[0]).unwrap();
+        s.pin(&names[0]);
+        s.fetch(&names[1]).unwrap();
+        s.fetch(&names[2]).unwrap();   // must evict t1, not pinned t0
+        assert!(s.is_resident(&names[0]));
+        assert!(!s.is_resident(&names[1]));
+    }
+
+    #[test]
+    fn over_budget_delta_rejected() {
+        let (mut s, names) = store_with(1, 4);
+        assert!(s.fetch(&names[0]).is_err());
+    }
+}

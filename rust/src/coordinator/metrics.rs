@@ -1,0 +1,148 @@
+//! Serving metrics: counters, gauges, and latency histograms with a
+//! Prometheus-style text exposition.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Fixed-bucket latency histogram (µs buckets, log-spaced).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Upper bounds in microseconds.
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 10µs .. ~100s, half-decade spacing
+        let bounds: Vec<u64> = (0..15)
+            .map(|i| (10.0f64 * 10f64.powf(i as f64 / 2.0)) as u64)
+            .collect();
+        let n = bounds.len();
+        Self { bounds, counts: vec![0; n + 1], count: 0, sum_us: 0,
+               max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds.iter().position(|&b| us <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max_us
+                };
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Engine-wide metrics registry.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub counters: BTreeMap<&'static str, u64>,
+    pub gauges: BTreeMap<&'static str, f64>,
+    /// request end-to-end latency
+    pub request_latency: Histogram,
+    /// time-to-first-token
+    pub ttft: Histogram,
+    /// one engine decode step (whole batch)
+    pub step_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    pub fn set(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Prometheus-ish text dump.
+    pub fn exposition(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("bitdelta_{k}_total {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("bitdelta_{k} {v}\n"));
+        }
+        for (name, h) in [("request_latency", &self.request_latency),
+                          ("ttft", &self.ttft),
+                          ("step_latency", &self.step_latency)] {
+            out.push_str(&format!(
+                "bitdelta_{name}_us_mean {:.1}\n\
+                 bitdelta_{name}_us_p50 {}\n\
+                 bitdelta_{name}_us_p99 {}\n\
+                 bitdelta_{name}_count {}\n",
+                h.mean_us(), h.quantile_us(0.5), h.quantile_us(0.99),
+                h.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let mut h = Histogram::default();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.observe(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count, 5);
+        assert!(h.mean_us() > 20_000.0);
+        assert!(h.quantile_us(0.5) >= 1_000);
+        assert!(h.quantile_us(0.99) >= 100_000 / 2);
+    }
+
+    #[test]
+    fn exposition_contains_counters() {
+        let mut m = Metrics::default();
+        m.inc("requests", 3);
+        m.set("batch_occupancy", 0.75);
+        let text = m.exposition();
+        assert!(text.contains("bitdelta_requests_total 3"));
+        assert!(text.contains("bitdelta_batch_occupancy 0.75"));
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0);
+    }
+}

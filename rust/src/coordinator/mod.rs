@@ -1,0 +1,22 @@
+//! The multi-tenant coordinator — the L3 systems contribution.
+//!
+//! BitDelta's serving story (paper §3.3, §4.3): one high-precision base
+//! model stays resident; per-tenant 1-bit deltas are hot-swapped in and
+//! batched through the decomposed forward (Eq. 6). The pieces:
+//!
+//! * [`router`]      — tenant registry + per-tenant FIFO queues.
+//! * [`batcher`]     — continuous batching: assemble each decode step's
+//!   batch across tenants, track composition changes (which trigger
+//!   delta re-stacking), admit waiting requests into free slots.
+//! * [`deltastore`]  — delta residency manager: loads `.bdd` files,
+//!   LRU-evicts against a memory budget (the "hot-swap" half of the
+//!   paper's storage story).
+//! * [`admission`]   — queue caps + backpressure policy.
+//! * [`metrics`]     — counters/latency histograms, text exposition.
+
+pub mod admission;
+pub mod batcher;
+pub mod deltastore;
+pub mod metrics;
+pub mod router;
+pub mod workload;

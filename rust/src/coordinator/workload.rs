@@ -1,0 +1,193 @@
+//! Synthetic multi-tenant workload traces.
+//!
+//! The paper motivates BitDelta with serving fine-tunes whose "traffic
+//! is low or unbalanced" (§3.3). This module generates reproducible
+//! request traces with Poisson arrivals and Zipf-skewed tenant
+//! popularity so the serving engine can be load-tested across traffic
+//! regimes (`repro loadtest`), and computes the trace statistics the
+//! reports quote.
+
+use crate::util::prop::Rng;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Arrival time offset from trace start, seconds.
+    pub at: f64,
+    pub tenant: usize,
+    pub prompt_idx: usize,
+    pub max_new_tokens: usize,
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_tenants: usize,
+    pub n_requests: usize,
+    /// Mean arrival rate, requests/second (Poisson process).
+    pub rate: f64,
+    /// Zipf exponent for tenant popularity (0 = uniform; ~1 = heavy
+    /// skew — a few hot fine-tunes, a long cold tail).
+    pub zipf_s: f64,
+    pub min_tokens: usize,
+    pub max_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { n_tenants: 4, n_requests: 32, rate: 50.0, zipf_s: 0.9,
+               min_tokens: 8, max_tokens: 24, seed: 0 }
+    }
+}
+
+/// Zipf sampler over `n` ranks with exponent `s` (rank 0 hottest).
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let weights: Vec<f64> = (1..=n)
+            .map(|k| 1.0 / (k as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights.iter().map(|w| {
+            acc += w / total;
+            acc
+        }).collect();
+        Self { cdf }
+    }
+
+    pub fn sample(&self, u: f64) -> usize {
+        self.cdf.iter().position(|&c| u <= c)
+            .unwrap_or(self.cdf.len() - 1)
+    }
+
+    /// Probability mass of rank k.
+    pub fn pmf(&self, k: usize) -> f64 {
+        let prev = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - prev
+    }
+}
+
+/// Generate a reproducible trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(cfg.seed);
+    let zipf = Zipf::new(cfg.n_tenants, cfg.zipf_s);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for _ in 0..cfg.n_requests {
+        // exponential inter-arrival
+        let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        t += -(1.0 - u).ln() / cfg.rate;
+        let tu = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        let tenant = zipf.sample(tu);
+        let span = cfg.max_tokens - cfg.min_tokens + 1;
+        let tokens = cfg.min_tokens + rng.usize_in(0, span);
+        out.push(TraceEvent {
+            at: t,
+            tenant,
+            prompt_idx: rng.usize_in(0, 1 << 16),
+            max_new_tokens: tokens,
+        });
+    }
+    out
+}
+
+/// Summary statistics of a trace (quoted by the loadtest report).
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub n: usize,
+    pub duration: f64,
+    pub per_tenant: Vec<usize>,
+    /// Fraction of traffic on the hottest tenant.
+    pub hottest_share: f64,
+    /// Number of distinct tenants actually hit.
+    pub tenants_hit: usize,
+}
+
+pub fn stats(events: &[TraceEvent], n_tenants: usize) -> TraceStats {
+    let mut per_tenant = vec![0usize; n_tenants];
+    for e in events {
+        per_tenant[e.tenant] += 1;
+    }
+    let hottest = per_tenant.iter().copied().max().unwrap_or(0);
+    TraceStats {
+        n: events.len(),
+        duration: events.last().map(|e| e.at).unwrap_or(0.0),
+        hottest_share: hottest as f64 / events.len().max(1) as f64,
+        tenants_hit: per_tenant.iter().filter(|&&c| c > 0).count(),
+        per_tenant,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant, y.tenant);
+            assert!((x.at - y.at).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_plausible() {
+        let cfg = TraceConfig { n_requests: 2000, rate: 100.0,
+                                ..Default::default() };
+        let ev = generate(&cfg);
+        for w in ev.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        let s = stats(&ev, cfg.n_tenants);
+        let measured_rate = s.n as f64 / s.duration;
+        assert!((measured_rate - 100.0).abs() < 15.0,
+                "rate {measured_rate}");
+    }
+
+    #[test]
+    fn zipf_skew_orders_tenants() {
+        let cfg = TraceConfig { n_requests: 5000, n_tenants: 5,
+                                zipf_s: 1.2, ..Default::default() };
+        let s = stats(&generate(&cfg), cfg.n_tenants);
+        // hottest tenant must dominate under heavy skew
+        assert!(s.hottest_share > 0.35, "share {}", s.hottest_share);
+        assert!(s.per_tenant[0] > s.per_tenant[4],
+                "{:?}", s.per_tenant);
+    }
+
+    #[test]
+    fn zipf_zero_is_roughly_uniform() {
+        let cfg = TraceConfig { n_requests: 4000, n_tenants: 4,
+                                zipf_s: 0.0, ..Default::default() };
+        let s = stats(&generate(&cfg), cfg.n_tenants);
+        for &c in &s.per_tenant {
+            let frac = c as f64 / s.n as f64;
+            assert!((frac - 0.25).abs() < 0.05, "{:?}", s.per_tenant);
+        }
+    }
+
+    #[test]
+    fn zipf_pmf_sums_to_one() {
+        let z = Zipf::new(7, 0.8);
+        let total: f64 = (0..7).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn token_budget_respected() {
+        let cfg = TraceConfig { min_tokens: 4, max_tokens: 9,
+                                n_requests: 500, ..Default::default() };
+        for e in generate(&cfg) {
+            assert!((4..=9).contains(&e.max_new_tokens));
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's core algorithm, rust-native.
+//!
+//! * [`packing`] — 1-bit sign pack/unpack (byte-exact twin of
+//!   `python/compile/kernels/ref.py`).
+//! * [`bitdelta`] — Eq. 1-4 quantization: `Δ̂ = α·Sign(Δ)`, `α = mean|Δ|`
+//!   (scale *distillation* lives in the python build path — it needs
+//!   autodiff — but the quantizer itself is fully functional here and is
+//!   what `repro compress` ships).
+//! * [`iterative`] — successive-residual multi-mask deltas (Fig. 3 /
+//!   Table 9).
+//! * [`svd`] — one-sided Jacobi SVD + the low-rank baseline (Table 1,
+//!   Fig. 2).
+
+pub mod bitdelta;
+pub mod extras_quant;
+pub mod iterative;
+pub mod packing;
+pub mod svd;

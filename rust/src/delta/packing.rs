@@ -1,0 +1,113 @@
+//! 1-bit sign packing — the bit-level ABI shared with the Pallas kernel
+//! and python's `kernels/ref.py`.
+//!
+//! Signs are packed along the **input dimension** (row-major columns),
+//! LSB-first: byte `k` of a row holds columns `8k..8k+8`; bit `j` set
+//! means the value at column `8k+j` is strictly positive (+1); clear
+//! means non-positive (-1). Paper Eq. 2: `Sign(0) = -1`.
+
+/// Pack the sign pattern of a row-major `[rows, m]` matrix into
+/// `[rows, m/8]` bytes. `m` must be a multiple of 8.
+pub fn pack_signs(values: &[f32], m: usize) -> Vec<u8> {
+    assert_eq!(m % 8, 0, "input dim {m} not a multiple of 8");
+    assert_eq!(values.len() % m, 0);
+    let rows = values.len() / m;
+    let mut out = vec![0u8; rows * m / 8];
+    for r in 0..rows {
+        let row = &values[r * m..(r + 1) * m];
+        let orow = &mut out[r * m / 8..(r + 1) * m / 8];
+        for (k, chunk) in row.chunks_exact(8).enumerate() {
+            let mut byte = 0u8;
+            for (j, &v) in chunk.iter().enumerate() {
+                if v > 0.0 {
+                    byte |= 1 << j;
+                }
+            }
+            orow[k] = byte;
+        }
+    }
+    out
+}
+
+/// Unpack to ±1.0 f32, inverse of [`pack_signs`].
+pub fn unpack_signs(packed: &[u8], m: usize) -> Vec<f32> {
+    assert_eq!(m % 8, 0);
+    let rows = packed.len() * 8 / m;
+    let mut out = Vec::with_capacity(rows * m);
+    for &byte in packed {
+        for j in 0..8 {
+            out.push(if byte >> j & 1 == 1 { 1.0 } else { -1.0 });
+        }
+    }
+    debug_assert_eq!(out.len(), rows * m);
+    out
+}
+
+/// Expand one packed byte to 8 sign multipliers without branching —
+/// used by the hot GEMV kernel. Returns entries in column order.
+#[inline(always)]
+pub fn byte_to_signs(byte: u8) -> [f32; 8] {
+    let mut out = [0f32; 8];
+    for j in 0..8 {
+        // bit -> {0,1} -> {-1,+1}
+        out[j] = ((byte >> j & 1) as i32 * 2 - 1) as f32;
+    }
+    out
+}
+
+/// Count of +1 bits in a packed matrix (used for sanity metrics: a healthy
+/// fine-tune delta is ~50% positive).
+pub fn popcount(packed: &[u8]) -> usize {
+    packed.iter().map(|b| b.count_ones() as usize).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact() {
+        let vals: Vec<f32> = (0..64)
+            .map(|i| if i % 3 == 0 { -(i as f32) - 1.0 } else { i as f32 + 1.0 })
+            .collect();
+        let packed = pack_signs(&vals, 16);
+        assert_eq!(packed.len(), 8);
+        let signs = unpack_signs(&packed, 16);
+        for (v, s) in vals.iter().zip(&signs) {
+            assert_eq!(*s, if *v > 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn zero_is_minus_one() {
+        let packed = pack_signs(&[0.0; 8], 8);
+        assert_eq!(packed, vec![0u8]);
+        assert!(unpack_signs(&packed, 8).iter().all(|&s| s == -1.0));
+    }
+
+    #[test]
+    fn lsb_first_convention() {
+        // only column 0 positive -> bit 0 set -> byte == 1
+        let mut vals = [-1.0f32; 8];
+        vals[0] = 1.0;
+        assert_eq!(pack_signs(&vals, 8), vec![1u8]);
+        // only column 7 positive -> bit 7 -> byte == 128
+        let mut vals = [-1.0f32; 8];
+        vals[7] = 1.0;
+        assert_eq!(pack_signs(&vals, 8), vec![128u8]);
+    }
+
+    #[test]
+    fn byte_to_signs_matches_unpack() {
+        for byte in [0u8, 1, 0x80, 0xAA, 0x55, 0xFF] {
+            let a = byte_to_signs(byte);
+            let b = unpack_signs(&[byte], 8);
+            assert_eq!(&a[..], &b[..]);
+        }
+    }
+
+    #[test]
+    fn popcount_counts() {
+        assert_eq!(popcount(&[0xFF, 0x00, 0x0F]), 12);
+    }
+}

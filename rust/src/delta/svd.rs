@@ -1,0 +1,227 @@
+//! One-sided Jacobi SVD and the low-rank delta baseline.
+//!
+//! Used for (a) Table 1's SVD-compression comparator and (b) Figure 2's
+//! cumulative-explained-variance series showing full-parameter fine-tune
+//! deltas are high-rank. Our matrices are at most a few hundred square, so
+//! a dependency-free Jacobi sweep is plenty.
+
+use crate::tensor::Tensor;
+
+/// Thin SVD `A = U·diag(s)·Vᵀ` with singular values sorted descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// `[n, k]`, k = min(n, m).
+    pub u: Tensor,
+    /// `k` singular values, descending.
+    pub s: Vec<f32>,
+    /// `[k, m]` (rows are right singular vectors).
+    pub vt: Tensor,
+}
+
+/// One-sided Jacobi SVD: orthogonalise the columns of A by plane
+/// rotations; column norms become singular values.
+pub fn svd(a: &Tensor) -> Svd {
+    let (n, m) = a.dims2();
+    // Work on Aᵀ if m > n so the rotated matrix has ≤ columns.
+    if m > n {
+        let t = svd(&a.t());
+        return Svd { u: t.vt.t(), s: t.s, vt: t.u.t() };
+    }
+    // Here n >= m: rotate columns of A (n x m), accumulate V (m x m).
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0f64; m * m];
+    for i in 0..m {
+        v[i * m + i] = 1.0;
+    }
+
+    let col_dot = |w: &[f64], p: usize, q: usize| -> f64 {
+        (0..n).map(|r| w[r * m + p] * w[r * m + q]).sum()
+    };
+
+    let max_sweeps = 30;
+    let eps = 1e-12;
+    for _ in 0..max_sweeps {
+        let mut off = 0f64;
+        for p in 0..m {
+            for q in (p + 1)..m {
+                let app = col_dot(&w, p, p);
+                let aqq = col_dot(&w, q, q);
+                let apq = col_dot(&w, p, q);
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for r in 0..n {
+                    let wp = w[r * m + p];
+                    let wq = w[r * m + q];
+                    w[r * m + p] = c * wp - s * wq;
+                    w[r * m + q] = s * wp + c * wq;
+                }
+                for r in 0..m {
+                    let vp = v[r * m + p];
+                    let vq = v[r * m + q];
+                    v[r * m + p] = c * vp - s * vq;
+                    v[r * m + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+    }
+
+    // singular values = column norms; U = W / s
+    let mut sv: Vec<(f64, usize)> = (0..m).map(|j| {
+        let norm: f64 = (0..n).map(|r| w[r * m + j].powi(2)).sum();
+        (norm.sqrt(), j)
+    }).collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = vec![0f32; n * m];
+    let mut vt = vec![0f32; m * m];
+    let mut s_out = Vec::with_capacity(m);
+    for (rank, &(sval, j)) in sv.iter().enumerate() {
+        s_out.push(sval as f32);
+        let inv = if sval > 1e-20 { 1.0 / sval } else { 0.0 };
+        for r in 0..n {
+            u[r * m + rank] = (w[r * m + j] * inv) as f32;
+        }
+        for r in 0..m {
+            vt[rank * m + r] = v[r * m + j] as f32;
+        }
+    }
+    Svd { u: Tensor::new(vec![n, m], u), s: s_out,
+          vt: Tensor::new(vec![m, m], vt) }
+}
+
+/// Rank-r truncation factors in the serving ABI:
+/// `a_down [r, m]`, `b_up [n, r]` with `Δ ≈ b_up @ a_down`
+/// (A = U√Σ_r as b_up, B = √Σ_r·Vᵀ as a_down — paper §4.2).
+pub fn low_rank_factors(delta: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    let (n, m) = delta.dims2();
+    let r = rank.min(n).min(m);
+    let d = svd(delta);
+    let mut a_down = vec![0f32; r * m];
+    let mut b_up = vec![0f32; n * r];
+    for k in 0..r {
+        let root = d.s[k].max(0.0).sqrt();
+        for j in 0..m {
+            a_down[k * m + j] = root * d.vt.data()[k * m + j];
+        }
+        for i in 0..n {
+            b_up[i * r + k] = root * d.u.data()[i * d.s.len() + k];
+        }
+    }
+    (Tensor::new(vec![r, m], a_down), Tensor::new(vec![n, r], b_up))
+}
+
+/// Cumulative explained variance: `cumsum(σ²)/sum(σ²)` (Figure 2 series).
+pub fn cumulative_explained_variance(delta: &Tensor) -> Vec<f64> {
+    let d = svd(delta);
+    let e: Vec<f64> = d.s.iter().map(|&x| (x as f64).powi(2)).collect();
+    let total: f64 = e.iter().sum();
+    let mut acc = 0.0;
+    e.iter().map(|&x| {
+        acc += x;
+        if total > 0.0 { acc / total } else { 1.0 }
+    }).collect()
+}
+
+/// Effective rank at a CEV threshold (how many components to reach
+/// `thresh` of the variance) — the scalar Figure 2 is summarised by.
+pub fn rank_at_cev(delta: &Tensor, thresh: f64) -> usize {
+    cumulative_explained_variance(delta).iter()
+        .position(|&c| c >= thresh)
+        .map(|p| p + 1)
+        .unwrap_or(delta.dims2().0.min(delta.dims2().1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(d: &Svd) -> Tensor {
+        let (n, _) = d.u.dims2();
+        let k = d.s.len();
+        let m = d.vt.dims2().1;
+        let mut out = vec![0f32; n * m];
+        for i in 0..n {
+            for kk in 0..k {
+                let us = d.u.data()[i * k + kk] * d.s[kk];
+                for j in 0..m {
+                    out[i * m + j] += us * d.vt.data()[kk * m + j];
+                }
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        let a = Tensor::randn(vec![12, 8], 42);
+        let d = svd(&a);
+        let r = reconstruct(&d);
+        let err = a.sub(&r).frob_norm() / a.frob_norm();
+        assert!(err < 1e-4, "reconstruction err {err}");
+    }
+
+    #[test]
+    fn svd_wide_matrix() {
+        let a = Tensor::randn(vec![6, 14], 43);
+        let d = svd(&a);
+        let r = reconstruct(&d);
+        let err = a.sub(&r).frob_norm() / a.frob_norm();
+        assert!(err < 1e-4, "reconstruction err {err}");
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let a = Tensor::randn(vec![10, 10], 44);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(d.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn low_rank_exact_on_low_rank_input() {
+        // rank-2 matrix: outer products
+        let u = Tensor::randn(vec![9, 2], 45);
+        let v = Tensor::randn(vec![2, 7], 46);
+        let a = u.matmul(&v);
+        let (ad, bu) = low_rank_factors(&a, 2);
+        let r = bu.matmul(&ad);
+        let err = a.sub(&r).frob_norm() / a.frob_norm();
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn cev_monotone_to_one() {
+        let a = Tensor::randn(vec![16, 16], 47);
+        let cev = cumulative_explained_variance(&a);
+        for w in cev.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        assert!((cev[cev.len() - 1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_matrix_is_high_rank() {
+        // the Fig. 2 phenomenon: an i.i.d. delta needs most components
+        let a = Tensor::randn(vec![32, 32], 48);
+        assert!(rank_at_cev(&a, 0.9) > 16);
+    }
+
+    #[test]
+    fn low_rank_matrix_is_low_rank() {
+        let u = Tensor::randn(vec![32, 3], 49);
+        let v = Tensor::randn(vec![3, 32], 50);
+        let a = u.matmul(&v);
+        assert!(rank_at_cev(&a, 0.99) <= 3);
+    }
+}

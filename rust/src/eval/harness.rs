@@ -1,0 +1,227 @@
+//! Likelihood/generation scoring over the AOT logits executable.
+//!
+//! All scoring goes through `logits_fwd` (the full causal forward). A
+//! model under evaluation is always a *dense* weight set: plain models
+//! directly, compressed ones via materialisation (`W_base + α·Sign(Δ)`),
+//! which computes the same numbers as the serving kernels (pinned by the
+//! cross-path equivalence tests).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::eval::tasks::{EvalSet, Scores, TaskKind};
+use crate::model::sampling::{argmax, log_softmax};
+use crate::model::tokenizer::ByteTokenizer;
+use crate::runtime::client::{literal_f32, Executable, Runtime};
+use crate::runtime::variants::DenseArgs;
+use crate::store::bdw::RawTensor;
+
+/// Evaluates one dense weight set via a `logits_fwd_b{B}_t{T}` executable.
+pub struct Evaluator {
+    cfg: ModelConfig,
+    exe: Rc<Executable>,
+    args: DenseArgs,
+    tok: ByteTokenizer,
+    pub batch: usize,
+    pub seq: usize,
+    /// Forward passes run (cost accounting).
+    pub forwards: u64,
+}
+
+impl Evaluator {
+    pub fn new(rt: &mut Runtime, cfg: &ModelConfig,
+               exe_path: &std::path::Path, batch: usize, seq: usize,
+               model: &HashMap<String, RawTensor>) -> Result<Self> {
+        let exe = rt.load(exe_path)?;
+        let args = DenseArgs::from_model(rt, cfg, model)?;
+        Ok(Self { cfg: cfg.clone(), exe, args,
+                  tok: ByteTokenizer::new(), batch, seq, forwards: 0 })
+    }
+
+    /// Swap in a different dense model (same executable).
+    pub fn set_model(&mut self, rt: &Runtime,
+                     model: &HashMap<String, RawTensor>) -> Result<()> {
+        self.args = DenseArgs::from_model(rt, &self.cfg, model)?;
+        Ok(())
+    }
+
+    /// Run the batched forward over padded token rows.
+    /// Returns per-row logits `[seq][vocab]` (flattened).
+    fn forward(&mut self, rt: &Runtime, rows: &[Vec<i32>])
+               -> Result<Vec<Vec<f32>>> {
+        if rows.len() > self.batch {
+            bail!("{} rows > batch {}", rows.len(), self.batch);
+        }
+        let mut tokens = vec![0i32; self.batch * self.seq];
+        for (r, row) in rows.iter().enumerate() {
+            if row.len() > self.seq {
+                bail!("row of {} tokens > seq {}", row.len(), self.seq);
+            }
+            tokens[r * self.seq..r * self.seq + row.len()]
+                .copy_from_slice(row);
+        }
+        let tok_buf = rt.upload_i32(&tokens, &[self.batch, self.seq])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.args.refs();
+        args.push(&tok_buf);
+        let lits = self.exe.run_buffers(&args)?;
+        self.forwards += 1;
+        let flat = literal_f32(&lits[0])?;
+        let v = self.cfg.vocab_size;
+        Ok((0..self.batch).map(|r| {
+            flat[r * self.seq * v..(r + 1) * self.seq * v].to_vec()
+        }).collect())
+    }
+
+    /// Score a likelihood pair item batch-at-a-time.
+    pub fn score_pair(&mut self, rt: &Runtime, set: &EvalSet)
+                      -> Result<f64> {
+        assert_eq!(set.kind, TaskKind::Pair);
+        let mut correct = 0usize;
+        let items: Vec<_> = set.items.iter().collect();
+        for chunk in items.chunks(self.batch / 2) {
+            // two rows per item: prompt+correct, prompt+incorrect
+            let mut rows = Vec::new();
+            let mut meta = Vec::new();
+            for item in chunk {
+                let p = self.tok.encode(&item.prompt);
+                let c = self.tok.encode(item.correct.as_ref().unwrap());
+                let i = self.tok.encode(item.incorrect.as_ref().unwrap());
+                let mut rc = p.clone();
+                rc.extend(&c);
+                let mut ri = p.clone();
+                ri.extend(&i);
+                meta.push((p.len(), rc.len(), ri.len()));
+                rows.push(rc);
+                rows.push(ri);
+            }
+            let logits = self.forward(rt, &rows)?;
+            let v = self.cfg.vocab_size;
+            for (j, &(plen, clen, ilen)) in meta.iter().enumerate() {
+                let lp_c = row_logprob(&logits[2 * j], &rows[2 * j], v,
+                                       plen, clen);
+                let lp_i = row_logprob(&logits[2 * j + 1],
+                                       &rows[2 * j + 1], v, plen, ilen);
+                // length-normalised comparison
+                if lp_c.0 / lp_c.1 as f64 > lp_i.0 / lp_i.1 as f64 {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(100.0 * correct as f64 / set.items.len() as f64)
+    }
+
+    /// Greedy-decode `answer.len()` tokens via repeated full forwards and
+    /// exact-match (GSM8K analog; prompt+answer ≤ seq).
+    pub fn score_gen(&mut self, rt: &Runtime, set: &EvalSet)
+                     -> Result<f64> {
+        assert_eq!(set.kind, TaskKind::Gen);
+        let mut correct = 0usize;
+        let items: Vec<_> = set.items.iter().collect();
+        for chunk in items.chunks(self.batch) {
+            let mut rows: Vec<Vec<i32>> = chunk.iter()
+                .map(|it| self.tok.encode(&it.prompt)).collect();
+            let answers: Vec<Vec<i32>> = chunk.iter()
+                .map(|it| self.tok.encode(it.answer.as_ref().unwrap()))
+                .collect();
+            let max_len = answers.iter().map(|a| a.len()).max().unwrap();
+            let v = self.cfg.vocab_size;
+            for _ in 0..max_len {
+                let logits = self.forward(rt, &rows)?;
+                for (j, row) in rows.iter_mut().enumerate() {
+                    let pos = row.len() - 1;
+                    let t = argmax(&logits[j][pos * v..(pos + 1) * v]);
+                    row.push(t);
+                }
+            }
+            for (j, ans) in answers.iter().enumerate() {
+                let start = rows[j].len() - max_len;
+                let got = &rows[j][start..start + ans.len()];
+                if got == &ans[..] {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(100.0 * correct as f64 / set.items.len() as f64)
+    }
+
+    /// Reference-NLL scoring mapped to 0-10 (MT-Bench analog):
+    /// `score = 10 · exp(−mean per-token NLL of the reference)`.
+    pub fn score_nll(&mut self, rt: &Runtime, set: &EvalSet)
+                     -> Result<f64> {
+        assert_eq!(set.kind, TaskKind::Nll);
+        let mut total_nll = 0f64;
+        let mut total_tok = 0usize;
+        let items: Vec<_> = set.items.iter().collect();
+        for chunk in items.chunks(self.batch) {
+            let mut rows = Vec::new();
+            let mut meta = Vec::new();
+            for item in chunk {
+                let p = self.tok.encode(&item.prompt);
+                let r = self.tok.encode(item.reference.as_ref().unwrap());
+                let mut row = p.clone();
+                row.extend(&r);
+                meta.push((p.len(), row.len()));
+                rows.push(row);
+            }
+            let logits = self.forward(rt, &rows)?;
+            let v = self.cfg.vocab_size;
+            for (j, &(plen, tlen)) in meta.iter().enumerate() {
+                let (lp, n) = row_logprob(&logits[j], &rows[j], v, plen,
+                                          tlen);
+                total_nll += -lp;
+                total_tok += n;
+            }
+        }
+        let mean_nll = total_nll / total_tok.max(1) as f64;
+        Ok(10.0 * (-mean_nll).exp())
+    }
+
+    /// Run the whole battery from an eval directory.
+    pub fn score_all(&mut self, rt: &Runtime,
+                     eval_dir: &std::path::Path) -> Result<Scores> {
+        let mut s = Scores::default();
+        let mut cloze = Vec::new();
+        for entry in std::fs::read_dir(eval_dir)? {
+            let path = entry?.path();
+            if path.extension().map_or(true, |e| e != "json") {
+                continue;
+            }
+            let set = EvalSet::load(&path)?;
+            match (set.task.as_str(), set.kind) {
+                ("styleqa", TaskKind::Pair) =>
+                    s.styleqa = self.score_pair(rt, &set)?,
+                ("arith", TaskKind::Gen) =>
+                    s.arith = self.score_gen(rt, &set)?,
+                ("instruct", TaskKind::Nll) =>
+                    s.instruct = self.score_nll(rt, &set)?,
+                (name, TaskKind::Pair) => {
+                    let acc = self.score_pair(rt, &set)?;
+                    cloze.push((name.to_string(), acc));
+                }
+                _ => {}
+            }
+        }
+        cloze.sort_by(|a: &(String, f64), b| a.0.cmp(&b.0));
+        s.cloze_avg = if cloze.is_empty() { 0.0 } else {
+            cloze.iter().map(|(_, a)| a).sum::<f64>() / cloze.len() as f64
+        };
+        s.cloze = cloze;
+        Ok(s)
+    }
+}
+
+/// Sum log p(tokens[prompt_len..total_len]) from one row's logits.
+fn row_logprob(logits: &[f32], row: &[i32], vocab: usize,
+               prompt_len: usize, total_len: usize) -> (f64, usize) {
+    let mut sum = 0f64;
+    let mut n = 0usize;
+    for pos in (prompt_len - 1)..(total_len - 1) {
+        let ls = log_softmax(&logits[pos * vocab..(pos + 1) * vocab]);
+        sum += ls[row[pos + 1] as usize] as f64;
+        n += 1;
+    }
+    (sum, n)
+}

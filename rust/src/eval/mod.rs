@@ -1,0 +1,18 @@
+//! Evaluation harness — regenerates the paper's quality tables.
+//!
+//! * [`tasks`]   — eval-set schema (written by `python/compile/data.py`):
+//!   likelihood-pair tasks (TruthfulQA/cloze analogs), greedy-exact-match
+//!   generation (GSM8K analog), and reference-NLL scoring (MT-Bench
+//!   analog).
+//! * [`harness`] — runs a dense weight set through the AOT logits
+//!   executable and scores every task. Compressed models are evaluated by
+//!   **materialising** `W_base + α·Sign(Δ)` — bit-identical to what the
+//!   serving path computes (the equivalence is pinned by
+//!   `python/tests/test_bitdelta.py::TestServingPathEquivalence` and the
+//!   rust integration tests).
+//! * [`tables`]  — the per-exhibit drivers (`repro table1`, `repro
+//!   table2`, …) that print paper-shaped rows.
+
+pub mod harness;
+pub mod tables;
+pub mod tasks;

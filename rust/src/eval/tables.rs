@@ -1,0 +1,342 @@
+//! Per-exhibit drivers: each function regenerates one of the paper's
+//! tables or figures from the artifacts and prints paper-shaped rows.
+//!
+//! Metric mapping (DESIGN.md §3): StyleQA* ≙ TruthfulQA, Arith* ≙ GSM8K,
+//! MTB* ≙ MT-Bench, ClozeAvg* ≙ Adjusted Average.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Manifest, ModelConfig};
+use crate::delta::bitdelta::{materialize, materialize_levels};
+use crate::delta::svd::cumulative_explained_variance;
+use crate::eval::harness::Evaluator;
+use crate::eval::tasks::Scores;
+use crate::runtime::client::Runtime;
+use crate::store::bdw::RawTensor;
+use crate::store::delta_file::{load_model, DeltaFile, LoraFile};
+use crate::tensor::Tensor;
+
+type Model = HashMap<String, RawTensor>;
+
+/// Shared evaluation context for the table drivers.
+pub struct TableCtx {
+    pub manifest: Manifest,
+    pub rt: Runtime,
+}
+
+impl TableCtx {
+    pub fn load(artifacts: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self {
+            manifest: Manifest::load(artifacts)?,
+            rt: Runtime::cpu()?,
+        })
+    }
+
+    fn evaluator(&mut self, size: &str, model: &Model) -> Result<Evaluator> {
+        let cfg = self.manifest.config(size)?.clone();
+        let exec = self.manifest.find_exec(size, "logits_fwd", 8)
+            .context("no logits_fwd_b8 executable")?;
+        let (batch, seq) = (exec.batch, exec.seq);
+        let path = self.manifest.path(&exec.path);
+        Evaluator::new(&mut self.rt, &cfg, &path, batch, seq, model)
+    }
+
+    fn eval_dir(&self) -> std::path::PathBuf {
+        self.manifest.root.join("eval")
+    }
+
+    fn model(&self, name: &str) -> Result<Model> {
+        let entry = self.manifest.models.get(name)
+            .with_context(|| format!("model {name} not in manifest"))?;
+        let cfg = self.manifest.config(&entry.config)?;
+        load_model(self.manifest.path(&entry.file), cfg)
+    }
+
+    fn cfg_of_tenant(&self, tenant: &str) -> Result<ModelConfig> {
+        let t = self.manifest.tenants.get(tenant)
+            .with_context(|| format!("tenant {tenant}"))?;
+        Ok(self.manifest.config(&t.config)?.clone())
+    }
+
+    fn delta(&self, rel: &str, cfg: &ModelConfig) -> Result<DeltaFile> {
+        DeltaFile::load(self.manifest.path(rel), cfg)
+    }
+
+    /// Score one dense model over the full battery.
+    pub fn score(&mut self, size: &str, model: &Model) -> Result<Scores> {
+        let mut ev = self.evaluator(size, model)?;
+        let dir = self.eval_dir();
+        ev.score_all(&self.rt, &dir)
+    }
+}
+
+/// Fold LoRA/SVD factors into dense weights: `W = base + b_up @ a_down`.
+pub fn materialize_lora(cfg: &ModelConfig, base: &Model, lf: &LoraFile)
+                        -> Result<Model> {
+    let mut out: Model = HashMap::new();
+    for name in cfg.linear_names() {
+        let (n, m) = cfg.linear_shape(&name);
+        let r = lf.rank;
+        let a = Tensor::new(vec![r, m], lf.a[&name].clone());
+        let b = Tensor::new(vec![n, r], lf.b[&name].clone());
+        let delta = b.matmul(&a);
+        let wb = base[&name].as_f32()?;
+        let w: Vec<f32> = wb.iter().zip(delta.data())
+            .map(|(x, d)| x + d).collect();
+        out.insert(name.clone(), RawTensor::f32(vec![n, m], &w));
+    }
+    for name in cfg.nonlinear_names() {
+        let t = lf.extras.get(&name)
+            .with_context(|| format!("lora file missing extra.{name}"))?;
+        out.insert(name, t.clone());
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: BitDelta vs SVD on the chat tenant
+// ---------------------------------------------------------------------------
+
+pub fn table1(ctx: &mut TableCtx, size: &str) -> Result<String> {
+    let tenant = format!("{size}-chat");
+    let cfg = ctx.cfg_of_tenant(&tenant)?;
+    let t = ctx.manifest.tenants[&tenant].clone();
+    let base = ctx.model(&format!("{size}-base"))?;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 1 — BitDelta vs SVD ({tenant})\n{}\n", Scores::header()));
+
+    let s = ctx.score(size, &base)?;
+    out.push_str(&format!("{}\n", s.row(&format!("{size}-base"), false)));
+
+    let fine = ctx.model(&tenant)?;
+    let s = ctx.score(size, &fine)?;
+    out.push_str(&format!("{}\n", s.row("Baseline (fine-tune)", true)));
+
+    for (label, rel) in [("BitDelta-Initial", &t.delta_initial),
+                         ("BitDelta", &t.delta)] {
+        let d = ctx.delta(rel, &cfg)?;
+        let m = materialize(&cfg, &base, &d)?;
+        let s = ctx.score(size, &m)?;
+        out.push_str(&format!("{}\n", s.row(label, true)));
+    }
+
+    for (svd, tag) in [(&t.svd_r16, "r16"), (&t.svd_req, "mem-eq")] {
+        if let Some(entry) = svd {
+            for (phase, rel) in [("Initial", &entry.initial),
+                                 ("", &entry.distilled)] {
+                let lf = LoraFile::load(ctx.manifest.path(rel), &cfg)?;
+                let m = materialize_lora(&cfg, &base, &lf)?;
+                let s = ctx.score(size, &m)?;
+                let label = if phase.is_empty() {
+                    format!("SVD ({tag}, r={})", entry.rank)
+                } else {
+                    format!("SVD-Initial ({tag}, r={})", entry.rank)
+                };
+                out.push_str(&format!("{}\n", s.row(&label, true)));
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 2/3 (+10): every tenant, both sizes
+// ---------------------------------------------------------------------------
+
+pub fn table2(ctx: &mut TableCtx) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 2/3 — BitDelta across sizes and fine-tune types\n{}\n",
+        Scores::header()));
+
+    let mut sizes: Vec<String> = ctx.manifest.configs.keys()
+        .cloned().collect();
+    sizes.sort();
+    for size in sizes {
+        let base_name = format!("{size}-base");
+        if !ctx.manifest.models.contains_key(&base_name) {
+            continue;
+        }
+        let base = ctx.model(&base_name)?;
+        let s = ctx.score(&size, &base)?;
+        out.push_str(&format!("{}\n", s.row(&base_name, false)));
+
+        let mut tenants: Vec<String> = ctx.manifest.tenants.iter()
+            .filter(|(_, t)| t.config == size)
+            .map(|(n, _)| n.clone()).collect();
+        tenants.sort();
+        for tname in tenants {
+            let t = ctx.manifest.tenants[&tname].clone();
+            let cfg = ctx.cfg_of_tenant(&tname)?;
+            let fine = ctx.model(&tname)?;
+            let s = ctx.score(&size, &fine)?;
+            out.push_str(&format!(
+                "{}\n", s.row(&format!("{tname} [{}] Baseline", t.kind),
+                              true)));
+            for (label, rel) in [("BitDelta-Initial", &t.delta_initial),
+                                 ("BitDelta", &t.delta)] {
+                let d = ctx.delta(rel, &cfg)?;
+                let m = materialize(&cfg, &base, &d)?;
+                let s = ctx.score(&size, &m)?;
+                out.push_str(&format!(
+                    "{}\n", s.row(&format!("{tname} {label}"), true)));
+            }
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 (+8): BitDelta over quantized base models
+// ---------------------------------------------------------------------------
+
+pub fn table6(ctx: &mut TableCtx, size: &str) -> Result<String> {
+    let tenant = format!("{size}-chat");
+    let cfg = ctx.cfg_of_tenant(&tenant)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 6 — BitDelta on quantized bases ({tenant})\n{}\n",
+        Scores::header()));
+
+    // FP32 rows (our full-precision analog of the paper's FP16)
+    let base = ctx.model(&format!("{size}-base"))?;
+    let fine = ctx.model(&tenant)?;
+    let s = ctx.score(size, &fine)?;
+    out.push_str(&format!("{}\n", s.row("Baseline FP32", true)));
+    let t = ctx.manifest.tenants[&tenant].clone();
+    let d = ctx.delta(&t.delta, &cfg)?;
+    let m = materialize(&cfg, &base, &d)?;
+    let s = ctx.score(size, &m)?;
+    out.push_str(&format!("{}\n", s.row("FP32 + Δ", true)));
+
+    let mut methods: Vec<String> = ctx.manifest.quantized_bases.keys()
+        .cloned().collect();
+    methods.sort();
+    for method in methods {
+        let q = ctx.manifest.quantized_bases[&method].clone();
+        // Baseline: the fine-tune itself quantized with this method
+        let qf_name = q.chat_quantized.trim_start_matches("models/")
+            .trim_end_matches(".bdw").to_string();
+        let qf = ctx.model(&qf_name)?;
+        let s = ctx.score(size, &qf)?;
+        out.push_str(&format!(
+            "{}\n", s.row(&format!("Baseline {method}"), true)));
+        // BitDelta on the quantized base
+        let qb_name = q.base.trim_start_matches("models/")
+            .trim_end_matches(".bdw").to_string();
+        let qb = ctx.model(&qb_name)?;
+        let d = ctx.delta(&q.delta, &cfg)?;
+        let m = materialize(&cfg, &qb, &d)?;
+        let s = ctx.score(size, &m)?;
+        out.push_str(&format!(
+            "{}\n", s.row(&format!("{method} + Δ"), true)));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 7: BitDelta on a LoRA fine-tune
+// ---------------------------------------------------------------------------
+
+pub fn table7(ctx: &mut TableCtx, size: &str) -> Result<String> {
+    let tenant = format!("{size}-lora");
+    let cfg = ctx.cfg_of_tenant(&tenant)?;
+    let t = ctx.manifest.tenants[&tenant].clone();
+    let base = ctx.model(&format!("{size}-base"))?;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 7 — BitDelta on a rank-16 LoRA fine-tune ({tenant})\n{}\n",
+        Scores::header()));
+    let s = ctx.score(size, &base)?;
+    out.push_str(&format!("{}\n", s.row(&format!("{size}-base"), false)));
+    let fine = ctx.model(&tenant)?;
+    let s = ctx.score(size, &fine)?;
+    out.push_str(&format!("{}\n", s.row("LoRA fine-tune (merged)", true)));
+    let d = ctx.delta(&t.delta, &cfg)?;
+    let m = materialize(&cfg, &base, &d)?;
+    let s = ctx.score(size, &m)?;
+    out.push_str(&format!("{}\n", s.row("BitDelta", true)));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 / Table 9: fidelity ablation
+// ---------------------------------------------------------------------------
+
+pub fn fig3(ctx: &mut TableCtx, size: &str) -> Result<String> {
+    let tenant = format!("{size}-chat");
+    let cfg = ctx.cfg_of_tenant(&tenant)?;
+    let t = ctx.manifest.tenants[&tenant].clone();
+    let base = ctx.model(&format!("{size}-base"))?;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 3 / Table 9 — fidelity of Δ ({tenant})\n{}\n",
+        Scores::header()));
+    let s = ctx.score(size, &base)?;
+    out.push_str(&format!("{}\n", s.row("base (0 bits)", false)));
+
+    let mut levels: Vec<usize> = t.fidelity.keys()
+        .map(|k| k.parse().unwrap()).collect();
+    levels.sort_unstable();
+    if let Some(&max) = levels.last() {
+        let rel = &t.fidelity[&max.to_string()];
+        let d = ctx.delta(rel, &cfg)?;
+        for k in &levels {
+            let m = materialize_levels(&cfg, &base, &d, *k)?;
+            let s = ctx.score(size, &m)?;
+            out.push_str(&format!(
+                "{}\n", s.row(&format!("{k} bit(s)"), false)));
+        }
+    }
+    let fine = ctx.model(&tenant)?;
+    let s = ctx.score(size, &fine)?;
+    out.push_str(&format!("{}\n", s.row("fine-tune (full)", true)));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2: cumulative explained variance of a real fine-tune delta
+// ---------------------------------------------------------------------------
+
+pub fn fig2(ctx: &mut TableCtx, size: &str) -> Result<String> {
+    let base = ctx.model(&format!("{size}-base"))?;
+    let cfg = ctx.manifest.config(size)?.clone();
+    let name = &cfg.linear_names()[cfg.linear_names().len() / 2];
+    let (n, m) = cfg.linear_shape(name);
+
+    let series = |fine: &Model| -> Result<Vec<f64>> {
+        let wb = base[name].as_f32()?;
+        let wf = fine[name].as_f32()?;
+        let d: Vec<f32> = wf.iter().zip(&wb).map(|(f, b)| f - b).collect();
+        Ok(cumulative_explained_variance(&Tensor::new(vec![n, m], d)))
+    };
+
+    let full = series(&ctx.model(&format!("{size}-chat"))?)?;
+    let lora = series(&ctx.model(&format!("{size}-lora"))?)?;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 2 — CEV of the {name} delta ({n}x{m})\n\
+         rank_frac,cev_full_ft,cev_lora_ft\n"));
+    let k = full.len();
+    for i in 0..k {
+        out.push_str(&format!("{:.4},{:.5},{:.5}\n",
+                              (i + 1) as f64 / k as f64, full[i],
+                              lora.get(i).copied().unwrap_or(1.0)));
+    }
+    // headline scalars
+    let r90_full = full.iter().position(|&c| c >= 0.9).unwrap_or(k) + 1;
+    let r90_lora = lora.iter().position(|&c| c >= 0.9).unwrap_or(k) + 1;
+    out.push_str(&format!(
+        "# components for 90% variance: full-FT {r90_full}/{k}, \
+         LoRA-FT {r90_lora}/{k}\n"));
+    Ok(out)
+}

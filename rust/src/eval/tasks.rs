@@ -1,0 +1,145 @@
+//! Eval-set schema, shared with `python/compile/data.py::write_evals`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One evaluation task file.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub task: String,
+    pub kind: TaskKind,
+    pub items: Vec<Item>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Choose `correct` vs `incorrect` completion by likelihood
+    /// (TruthfulQA / cloze battery analog). Score: accuracy ×100.
+    Pair,
+    /// Greedy-decode and exact-match `answer` (GSM8K analog).
+    /// Score: accuracy ×100.
+    Gen,
+    /// Reference-NLL scoring (MT-Bench analog).
+    /// Score: 10·exp(−mean NLL) ∈ (0, 10].
+    Nll,
+}
+
+/// One eval item; fields depend on the task kind.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub prompt: String,
+    pub correct: Option<String>,
+    pub incorrect: Option<String>,
+    pub answer: Option<String>,
+    pub reference: Option<String>,
+}
+
+impl EvalSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let set = Self::parse(&text)?;
+        set.validate()?;
+        Ok(set)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing eval set")?;
+        let kind = match j.str_field("type")?.as_str() {
+            "pair" => TaskKind::Pair,
+            "gen" => TaskKind::Gen,
+            "nll" => TaskKind::Nll,
+            other => bail!("unknown task type {other:?}"),
+        };
+        let opt = |v: &Json, k: &str| -> Result<Option<String>> {
+            Ok(match v.get(k) {
+                Some(Json::Null) | None => None,
+                Some(s) => Some(s.as_str()?.to_string()),
+            })
+        };
+        let mut items = Vec::new();
+        for v in j.req("items")?.as_arr()? {
+            items.push(Item {
+                prompt: v.str_field("prompt")?,
+                correct: opt(v, "correct")?,
+                incorrect: opt(v, "incorrect")?,
+                answer: opt(v, "answer")?,
+                reference: opt(v, "reference")?,
+            });
+        }
+        Ok(EvalSet { task: j.str_field("task")?, kind, items })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (i, item) in self.items.iter().enumerate() {
+            let ok = match self.kind {
+                TaskKind::Pair => item.correct.is_some()
+                    && item.incorrect.is_some(),
+                TaskKind::Gen => item.answer.is_some(),
+                TaskKind::Nll => item.reference.is_some(),
+            };
+            if !ok {
+                bail!("task {}: item {i} missing fields for {:?}",
+                      self.task, self.kind);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Scores for one model over the full battery, in paper-table layout.
+#[derive(Debug, Clone, Default)]
+pub struct Scores {
+    /// TruthfulQA analog (styleqa accuracy ×100).
+    pub styleqa: f64,
+    /// GSM8K analog (arith exact-match ×100).
+    pub arith: f64,
+    /// MT-Bench analog (0-10).
+    pub instruct: f64,
+    /// Adjusted-Average analog (mean of the cloze battery ×100).
+    pub cloze_avg: f64,
+    /// Each cloze task by name.
+    pub cloze: Vec<(String, f64)>,
+}
+
+impl Scores {
+    pub fn row(&self, label: &str, with_instruct: bool) -> String {
+        let mt = if with_instruct {
+            format!("{:8.2}", self.instruct)
+        } else {
+            format!("{:>8}", "-")
+        };
+        format!("{label:<28} {:>10.2} {:>7.2} {mt} {:>9.2}",
+                self.styleqa, self.arith, self.cloze_avg)
+    }
+
+    pub fn header() -> String {
+        format!("{:<28} {:>10} {:>7} {:>8} {:>9}",
+                "Model/Method", "StyleQA*", "Arith*", "MTB*", "ClozeAvg*")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_pair_task() {
+        let json = r#"{"task":"styleqa","type":"pair","items":
+            [{"prompt":"p","correct":" a","incorrect":" b"}]}"#;
+        let s = EvalSet::parse(json).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.kind, TaskKind::Pair);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let json = r#"{"task":"arith","type":"gen","items":
+            [{"prompt":"p"}]}"#;
+        let s = EvalSet::parse(json).unwrap();
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! Packed 1-bit delta GEMV — the CPU analog of BitBLAS's `W_INT1·A_FP16`
+//! kernel (the "Kernel" brace of Eq. 6).
+//!
+//! Computes `y = α · Sign(Δ) · x` **directly from the packed bytes** —
+//! the sign matrix is never materialised, so the weight stream is
+//! `N·M/8` bytes instead of `4·N·M`: a 32× traffic reduction over the
+//! f32 backbone (16× in the paper's fp16 terms). That traffic ratio is
+//! the entire latency story of Figures 4 and 6.
+//!
+//! Identity used to avoid per-bit sign selects:
+//!
+//! ```text
+//! Σ_j s_j·x_j  =  Σ_set x_j − Σ_clear x_j  =  2·Σ_set x_j − Σ_all x_j
+//! ```
+//!
+//! so the inner loop only accumulates `x_j·bit_j` (a branchless 0/1
+//! multiply the compiler vectorises) and the row finishes with one fused
+//! correction by the precomputed total.
+
+/// `y = alpha * Sign(bits) @ x`; `bits` row-major `[n, m/8]`, LSB-first.
+///
+/// Four-Russians formulation: per call, build a 16-entry partial-sum
+/// table for every 4-column group of `x` (`lut[g][v] = Σ_{bit j of v}
+/// x[4g+j]`, built incrementally in 15 adds/group); each weight byte
+/// then costs two table lookups + two adds instead of eight
+/// bit-extract/convert/multiply chains. The O(4m) table build amortises
+/// over the `n` rows, and the per-row stream is exactly the packed
+/// bytes — the kernel stays memory-bound down to L2-resident sizes
+/// (§Perf before/after: ~4-6x over the bit-extract loop).
+pub fn binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
+                   alpha: f32, y: &mut [f32]) {
+    assert_eq!(m % 8, 0);
+    let mb = m / 8;
+    assert_eq!(bits.len(), n * mb);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+
+    // nibble tables: group g covers columns [4g, 4g+4)
+    let groups = m / 4;
+    let mut lut = vec![0f32; groups * 16];
+    for g in 0..groups {
+        let xs = &x[g * 4..g * 4 + 4];
+        let t = &mut lut[g * 16..g * 16 + 16];
+        for v in 1usize..16 {
+            t[v] = t[v & (v - 1)] + xs[v.trailing_zeros() as usize];
+        }
+    }
+    let total: f32 = x.iter().sum();
+
+    for r in 0..n {
+        let brow = &bits[r * mb..(r + 1) * mb];
+        // two accumulators hide the add latency
+        let (mut a0, mut a1) = (0f32, 0f32);
+        for (k, &byte) in brow.iter().enumerate() {
+            let lo = (byte & 0xF) as usize;
+            let hi = (byte >> 4) as usize;
+            a0 += lut[(2 * k) * 16 + lo];
+            a1 += lut[(2 * k + 1) * 16 + hi];
+        }
+        y[r] = alpha * (2.0 * (a0 + a1) - total);
+    }
+}
+
+/// The pre-optimization bit-extract kernel, kept for the §Perf ablation
+/// and as an independent correctness witness.
+pub fn binary_gemv_bitextract(bits: &[u8], n: usize, m: usize,
+                              x: &[f32], alpha: f32, y: &mut [f32]) {
+    assert_eq!(m % 8, 0);
+    let mb = m / 8;
+    let total: f32 = x.iter().sum();
+    for r in 0..n {
+        let brow = &bits[r * mb..(r + 1) * mb];
+        let mut acc = 0f32;
+        for (k, &byte) in brow.iter().enumerate() {
+            let xs = &x[k * 8..k * 8 + 8];
+            acc += xs[0] * (byte & 1) as f32
+                + xs[1] * (byte >> 1 & 1) as f32
+                + xs[2] * (byte >> 2 & 1) as f32
+                + xs[3] * (byte >> 3 & 1) as f32
+                + xs[4] * (byte >> 4 & 1) as f32
+                + xs[5] * (byte >> 5 & 1) as f32
+                + xs[6] * (byte >> 6 & 1) as f32
+                + xs[7] * (byte >> 7 & 1) as f32;
+        }
+        y[r] = alpha * (2.0 * acc - total);
+    }
+}
+
+/// Batched per-tenant delta GEMV: `y[b] = alpha[b] * Sign(bits[b]) @ x[b]`
+/// — one packed matrix per tenant, the multi-tenant batching of Eq. 6.
+pub fn batched_binary_gemv(bits: &[u8], n: usize, m: usize,
+                           xs: &[f32], alphas: &[f32], batch: usize,
+                           ys: &mut [f32]) {
+    let mb = m / 8;
+    assert_eq!(bits.len(), batch * n * mb);
+    assert_eq!(alphas.len(), batch);
+    assert_eq!(xs.len(), batch * m);
+    assert_eq!(ys.len(), batch * n);
+    for b in 0..batch {
+        binary_gemv(&bits[b * n * mb..(b + 1) * n * mb], n, m,
+                    &xs[b * m..(b + 1) * m], alphas[b],
+                    &mut ys[b * n..(b + 1) * n]);
+    }
+}
+
+/// Fused Eq. 6 output: `y[b] = W_base @ x[b] + alpha[b]·Sign(bits[b])@x[b]`
+/// — the complete decomposed linear for a batch of tenants.
+pub fn fused_delta_gemv(w_base: &[f32], bits: &[u8], n: usize, m: usize,
+                        xs: &[f32], alphas: &[f32], batch: usize,
+                        ys: &mut [f32]) {
+    super::dense::batched_dense_gemv(w_base, n, m, xs, batch, ys);
+    let mb = m / 8;
+    let mut tmp = vec![0f32; n];
+    for b in 0..batch {
+        binary_gemv(&bits[b * n * mb..(b + 1) * n * mb], n, m,
+                    &xs[b * m..(b + 1) * m], alphas[b], &mut tmp);
+        for (yv, t) in ys[b * n..(b + 1) * n].iter_mut().zip(&tmp) {
+            *yv += t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::packing::pack_signs;
+    use crate::tensor::Tensor;
+
+    fn reference(delta_signs: &[f32], n: usize, m: usize, x: &[f32],
+                 alpha: f32) -> Vec<f32> {
+        (0..n).map(|r| {
+            alpha * (0..m).map(|j| delta_signs[r * m + j] * x[j])
+                .sum::<f32>()
+        }).collect()
+    }
+
+    #[test]
+    fn lut_matches_bitextract_kernel() {
+        let (n, m) = (9, 48);
+        let d = Tensor::randn(vec![n, m], 55);
+        let bits = pack_signs(d.data(), m);
+        let x = Tensor::randn(vec![m], 56);
+        let mut y1 = vec![0f32; n];
+        let mut y2 = vec![0f32; n];
+        binary_gemv(&bits, n, m, x.data(), 0.21, &mut y1);
+        binary_gemv_bitextract(&bits, n, m, x.data(), 0.21, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matches_reference() {
+        let (n, m) = (13, 32);
+        let d = Tensor::randn(vec![n, m], 5);
+        let signs: Vec<f32> = d.data().iter()
+            .map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let bits = pack_signs(d.data(), m);
+        let x = Tensor::randn(vec![m], 6);
+        let mut y = vec![0f32; n];
+        binary_gemv(&bits, n, m, x.data(), 0.37, &mut y);
+        let want = reference(&signs, n, m, x.data(), 0.37);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn all_ones_matrix() {
+        let (n, m) = (4, 16);
+        let bits = vec![0xFFu8; n * m / 8];
+        let x = Tensor::randn(vec![m], 7);
+        let total: f32 = x.data().iter().sum();
+        let mut y = vec![0f32; n];
+        binary_gemv(&bits, n, m, x.data(), 1.0, &mut y);
+        for v in y {
+            assert!((v - total).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn all_zeros_matrix_negates() {
+        let (n, m) = (4, 16);
+        let bits = vec![0u8; n * m / 8];
+        let x = Tensor::randn(vec![m], 8);
+        let total: f32 = x.data().iter().sum();
+        let mut y = vec![0f32; n];
+        binary_gemv(&bits, n, m, x.data(), 1.0, &mut y);
+        for v in y {
+            assert!((v + total).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fused_equals_parts() {
+        let (n, m, b) = (8, 24, 2);
+        let w = Tensor::randn(vec![n, m], 9);
+        let d = Tensor::randn(vec![b, n, m], 10);
+        let bits: Vec<u8> = (0..b).flat_map(|bi| {
+            pack_signs(&d.data()[bi * n * m..(bi + 1) * n * m], m)
+        }).collect();
+        let xs = Tensor::randn(vec![b, m], 11);
+        let alphas = [0.2f32, 0.05];
+        let mut fused = vec![0f32; b * n];
+        fused_delta_gemv(w.data(), &bits, n, m, xs.data(), &alphas, b,
+                         &mut fused);
+        // parts
+        let mut parts = vec![0f32; b * n];
+        super::super::dense::batched_dense_gemv(w.data(), n, m, xs.data(),
+                                                b, &mut parts);
+        let mut tmp = vec![0f32; b * n];
+        batched_binary_gemv(&bits, n, m, xs.data(), &alphas, b, &mut tmp);
+        for i in 0..b * n {
+            assert!((fused[i] - (parts[i] + tmp[i])).abs() < 1e-3);
+        }
+    }
+}

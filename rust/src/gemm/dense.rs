@@ -1,0 +1,104 @@
+//! Dense f32 GEMV — the shared-backbone term `W_base·x` of Eq. 6 and the
+//! per-tenant weight stream of the naive baseline.
+
+/// `y = W @ x` for row-major `W [n, m]`, `x [m]`, `y [n]`.
+///
+/// Four independent accumulators per row keep the FP add chains short
+/// enough for the compiler to vectorise; the kernel streams each weight
+/// row exactly once (memory-bound regime).
+pub fn dense_gemv(w: &[f32], n: usize, m: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(w.len(), n * m);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    let chunks = m / 4 * 4;
+    for r in 0..n {
+        let row = &w[r * m..(r + 1) * m];
+        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+        let mut j = 0;
+        while j < chunks {
+            a0 += row[j] * x[j];
+            a1 += row[j + 1] * x[j + 1];
+            a2 += row[j + 2] * x[j + 2];
+            a3 += row[j + 3] * x[j + 3];
+            j += 4;
+        }
+        let mut acc = (a0 + a1) + (a2 + a3);
+        while j < m {
+            acc += row[j] * x[j];
+            j += 1;
+        }
+        y[r] = acc;
+    }
+}
+
+/// Shared backbone over a batch: `y[b] = W @ x[b]` — one weight stream
+/// serves every tenant (the reason backbone latency is flat in B).
+pub fn batched_dense_gemv(w: &[f32], n: usize, m: usize,
+                          xs: &[f32], batch: usize, ys: &mut [f32]) {
+    assert_eq!(xs.len(), batch * m);
+    assert_eq!(ys.len(), batch * n);
+    // Stream W once; accumulate all batch outputs per row.
+    for r in 0..n {
+        let row = &w[r * m..(r + 1) * m];
+        for b in 0..batch {
+            let x = &xs[b * m..(b + 1) * m];
+            let mut acc = 0f32;
+            for j in 0..m {
+                acc += row[j] * x[j];
+            }
+            ys[b * n + r] = acc;
+        }
+    }
+}
+
+/// Naive multi-tenant decode: each tenant streams its own full weights
+/// (`ws [batch, n, m]`) — the baseline whose traffic scales with B.
+pub fn per_tenant_dense_gemv(ws: &[f32], n: usize, m: usize,
+                             xs: &[f32], batch: usize, ys: &mut [f32]) {
+    assert_eq!(ws.len(), batch * n * m);
+    for b in 0..batch {
+        dense_gemv(&ws[b * n * m..(b + 1) * n * m], n, m,
+                   &xs[b * m..(b + 1) * m],
+                   &mut ys[b * n..(b + 1) * n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn naive(w: &[f32], n: usize, m: usize, x: &[f32]) -> Vec<f32> {
+        (0..n).map(|r| (0..m).map(|j| w[r * m + j] * x[j]).sum()).collect()
+    }
+
+    #[test]
+    fn matches_naive() {
+        let (n, m) = (17, 23);
+        let w = Tensor::randn(vec![n, m], 1);
+        let x = Tensor::randn(vec![m], 2);
+        let mut y = vec![0f32; n];
+        dense_gemv(w.data(), n, m, x.data(), &mut y);
+        let want = naive(w.data(), n, m, x.data());
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_matches_loop() {
+        let (n, m, b) = (8, 16, 3);
+        let w = Tensor::randn(vec![n, m], 3);
+        let xs = Tensor::randn(vec![b, m], 4);
+        let mut y1 = vec![0f32; b * n];
+        batched_dense_gemv(w.data(), n, m, xs.data(), b, &mut y1);
+        for bi in 0..b {
+            let mut y2 = vec![0f32; n];
+            dense_gemv(w.data(), n, m, &xs.data()[bi * m..(bi + 1) * m],
+                       &mut y2);
+            for (a, c) in y1[bi * n..(bi + 1) * n].iter().zip(&y2) {
+                assert!((a - c).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Batched low-rank (S-LoRA baseline) GEMV: `y[b] = B_b (A_b x[b])`.
+//!
+//! The comparison kernel of Figures 4/6: at the paper's memory-equivalent
+//! rank the factor stream `4·r·(N+M)` bytes matches the packed 1-bit
+//! stream `N·M/8`, so the two delta paths cost the same traffic; BitDelta
+//! wins on simplicity (no rank hyper-parameter, no second GEMV stage).
+
+use super::dense::dense_gemv;
+
+/// One tenant: `a_down [r, m]`, `b_up [n, r]`, `y = b_up @ (a_down @ x)`.
+pub fn lora_gemv(a_down: &[f32], b_up: &[f32], r: usize, n: usize,
+                 m: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a_down.len(), r * m);
+    assert_eq!(b_up.len(), n * r);
+    let mut h = vec![0f32; r];
+    dense_gemv(a_down, r, m, x, &mut h);
+    dense_gemv(b_up, n, r, &h, y);
+}
+
+/// Batch of tenants, each with its own factors.
+pub fn batched_lora_gemv(a_down: &[f32], b_up: &[f32], r: usize,
+                         n: usize, m: usize, xs: &[f32], batch: usize,
+                         ys: &mut [f32]) {
+    assert_eq!(a_down.len(), batch * r * m);
+    assert_eq!(b_up.len(), batch * n * r);
+    for b in 0..batch {
+        lora_gemv(&a_down[b * r * m..(b + 1) * r * m],
+                  &b_up[b * n * r..(b + 1) * n * r],
+                  r, n, m,
+                  &xs[b * m..(b + 1) * m],
+                  &mut ys[b * n..(b + 1) * n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn matches_dense_product() {
+        let (n, m, r) = (10, 14, 3);
+        let a = Tensor::randn(vec![r, m], 1);
+        let b = Tensor::randn(vec![n, r], 2);
+        let x = Tensor::randn(vec![m], 3);
+        let mut y = vec![0f32; n];
+        lora_gemv(a.data(), b.data(), r, n, m, x.data(), &mut y);
+
+        let dense = b.matmul(&a); // [n, m]
+        let mut want = vec![0f32; n];
+        dense_gemv(dense.data(), n, m, x.data(), &mut want);
+        for (u, v) in y.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rank_zero_edge() {
+        let (n, m, r) = (4, 8, 1);
+        let a = vec![0f32; r * m];
+        let b = vec![0f32; n * r];
+        let x = Tensor::randn(vec![m], 4);
+        let mut y = vec![1f32; n];
+        lora_gemv(&a, &b, r, n, m, x.data(), &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

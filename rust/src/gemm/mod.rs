@@ -1,0 +1,22 @@
+//! CPU hot-path kernels — the measurable analog of the paper's GPU
+//! kernels for Figure 4 (kernel decode latency) and Figure 6 (end-to-end).
+//!
+//! All three are **memory-bandwidth-bound** at decode (L = 1), exactly
+//! like their GPU counterparts, so the latency *shape* the paper reports
+//! (backbone flat in batch; per-tenant delta term 16-32× cheaper than a
+//! per-tenant dense backbone; crossovers at B≈6-8) is reproduced by byte
+//! counting:
+//!
+//! | kernel                | bytes streamed per tenant  |
+//! |-----------------------|----------------------------|
+//! | [`dense`] backbone    | `4·N·M` (f32 weights)      |
+//! | [`binary`] 1-bit delta| `N·M/8` (packed signs)     |
+//! | [`lora`] rank-r delta | `4·r·(N+M)`                |
+
+pub mod binary;
+pub mod dense;
+pub mod lora;
+
+pub use binary::{batched_binary_gemv, binary_gemv};
+pub use dense::{batched_dense_gemv, dense_gemv};
+pub use lora::{batched_lora_gemv, lora_gemv};

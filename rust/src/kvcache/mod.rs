@@ -1,0 +1,163 @@
+//! KV-cache management for batched multi-tenant decode.
+//!
+//! The decode executables take a stacked cache
+//! `[n_layers, B, n_heads, max_seq, head_dim]` plus a per-sequence `pos`
+//! vector. The engine keeps each *sequence's* cache as a host-side slab
+//! (`SeqCache`) so the batch can be re-stacked whenever its composition
+//! changes (admission / completion), and keeps the stacked cache on
+//! device between steps when it doesn't.
+
+use crate::config::ModelConfig;
+
+/// Per-sequence KV cache: `[n_layers, n_heads, max_seq, head_dim]` pair.
+#[derive(Debug, Clone)]
+pub struct SeqCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Number of valid slots (== current sequence length).
+    pub pos: usize,
+    layer_stride: usize,
+    cfg_dims: (usize, usize, usize, usize), // (L, H, S, hd)
+}
+
+impl SeqCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let (l, h, s, hd) = (cfg.n_layers, cfg.n_heads, cfg.max_seq_len,
+                             cfg.head_dim());
+        let n = l * h * s * hd;
+        Self { k: vec![0.0; n], v: vec![0.0; n], pos: 0,
+               layer_stride: h * s * hd, cfg_dims: (l, h, s, hd) }
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        self.cfg_dims
+    }
+
+    /// Bytes of valid cache content.
+    pub fn valid_bytes(&self) -> usize {
+        let (l, h, _, hd) = self.cfg_dims;
+        2 * l * h * self.pos * hd * 4
+    }
+
+    pub fn layer_k(&self, layer: usize) -> &[f32] {
+        &self.k[layer * self.layer_stride..(layer + 1) * self.layer_stride]
+    }
+
+    pub fn layer_v(&self, layer: usize) -> &[f32] {
+        &self.v[layer * self.layer_stride..(layer + 1) * self.layer_stride]
+    }
+}
+
+/// Stacked batch cache in the executable ABI layout
+/// `[L, B, H, S, hd]` — assembled from per-sequence caches and scattered
+/// back after the batch runs.
+#[derive(Debug, Clone)]
+pub struct BatchCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub batch: usize,
+    dims: (usize, usize, usize, usize),
+}
+
+impl BatchCache {
+    pub fn stack(cfg: &ModelConfig, seqs: &[&SeqCache], batch: usize)
+                 -> Self {
+        assert!(seqs.len() <= batch,
+                "{} sequences > batch {batch}", seqs.len());
+        let (l, h, s, hd) = (cfg.n_layers, cfg.n_heads, cfg.max_seq_len,
+                             cfg.head_dim());
+        let per_seq_layer = h * s * hd;
+        let mut k = vec![0.0f32; l * batch * per_seq_layer];
+        let mut v = vec![0.0f32; l * batch * per_seq_layer];
+        for (b, seq) in seqs.iter().enumerate() {
+            assert_eq!(seq.cfg_dims, (l, h, s, hd));
+            for layer in 0..l {
+                let dst = (layer * batch + b) * per_seq_layer;
+                k[dst..dst + per_seq_layer]
+                    .copy_from_slice(seq.layer_k(layer));
+                v[dst..dst + per_seq_layer]
+                    .copy_from_slice(seq.layer_v(layer));
+            }
+        }
+        Self { k, v, batch, dims: (l, h, s, hd) }
+    }
+
+    /// Shape in the executable ABI.
+    pub fn shape(&self) -> [usize; 5] {
+        let (l, h, s, hd) = self.dims;
+        [l, self.batch, h, s, hd]
+    }
+
+    /// Scatter slot `b` of a (possibly updated) stacked cache back into a
+    /// per-sequence cache.
+    pub fn unstack_into(&self, b: usize, seq: &mut SeqCache) {
+        let (l, h, s, hd) = self.dims;
+        assert_eq!(seq.cfg_dims, (l, h, s, hd));
+        let per_seq_layer = h * s * hd;
+        for layer in 0..l {
+            let src = (layer * self.batch + b) * per_seq_layer;
+            seq.k[layer * per_seq_layer..(layer + 1) * per_seq_layer]
+                .copy_from_slice(&self.k[src..src + per_seq_layer]);
+            seq.v[layer * per_seq_layer..(layer + 1) * per_seq_layer]
+                .copy_from_slice(&self.v[src..src + per_seq_layer]);
+        }
+    }
+
+    /// Replace the stacked buffers with fresh device output (same shape).
+    pub fn replace(&mut self, k: Vec<f32>, v: Vec<f32>) {
+        assert_eq!(k.len(), self.k.len());
+        assert_eq!(v.len(), self.v.len());
+        self.k = k;
+        self.v = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { name: "t".into(), vocab_size: 16, d_model: 8,
+                      n_layers: 2, n_heads: 2, max_seq_len: 4, d_ff: 16,
+                      rope_theta: 1e4, norm_eps: 1e-5 }
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let cfg = cfg();
+        let mut a = SeqCache::new(&cfg);
+        let mut b = SeqCache::new(&cfg);
+        for (i, x) in a.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in b.k.iter_mut().enumerate() {
+            *x = -(i as f32);
+        }
+        a.pos = 2;
+        b.pos = 3;
+        let stacked = BatchCache::stack(&cfg, &[&a, &b], 2);
+        let mut a2 = SeqCache::new(&cfg);
+        let mut b2 = SeqCache::new(&cfg);
+        stacked.unstack_into(0, &mut a2);
+        stacked.unstack_into(1, &mut b2);
+        assert_eq!(a.k, a2.k);
+        assert_eq!(b.k, b2.k);
+    }
+
+    #[test]
+    fn stack_pads_missing_slots() {
+        let cfg = cfg();
+        let a = SeqCache::new(&cfg);
+        let stacked = BatchCache::stack(&cfg, &[&a], 4);
+        assert_eq!(stacked.shape(), [2, 4, 2, 4, 4]);
+        assert!(stacked.k.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn layer_views_disjoint() {
+        let cfg = cfg();
+        let c = SeqCache::new(&cfg);
+        assert_eq!(c.layer_k(0).len(), c.layer_k(1).len());
+        assert_eq!(c.layer_k(0).len() * cfg.n_layers, c.k.len());
+    }
+}

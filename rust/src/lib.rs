@@ -1,0 +1,62 @@
+//! # BitDelta — 1-bit fine-tune deltas, multi-tenant serving
+//!
+//! Rust reproduction of *"BitDelta: Your Fine-Tune May Only Be Worth One
+//! Bit"* (Liu et al., NeurIPS 2024). The crate is the **L3 coordinator**
+//! of a three-layer stack:
+//!
+//! * **L1** — Pallas kernel (`python/compile/kernels/`): the batched
+//!   `W_INT1·A_FP16` delta GEMM, AOT-lowered into every serving
+//!   executable.
+//! * **L2** — JAX transformer (`python/compile/model.py`): the model
+//!   forward in four serving modes (dense / naive / bitdelta / lora),
+//!   lowered once to HLO text at build time.
+//! * **L3** — this crate: PJRT runtime, weight/delta storage, the
+//!   BitDelta compressor, the multi-tenant serving engine (router,
+//!   continuous batcher, delta hot-swap store, KV-cache manager), the
+//!   memory simulator, the eval harness, and every benchmark that
+//!   regenerates the paper's tables and figures.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `repro` binary and the examples are self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use bitdelta::prelude::*;
+//! use bitdelta::store::delta_file::load_model;
+//!
+//! // Offline: compress a fine-tune into a 1-bit delta (rust-native).
+//! let cfg  = ModelConfig::sim_s();
+//! let base = load_model("artifacts/models/sim-s-base.bdw", &cfg).unwrap();
+//! let fine = load_model("artifacts/models/sim-s-chat.bdw", &cfg).unwrap();
+//! let delta = compress(&cfg, &base, &fine).unwrap();
+//! println!("compression factor: {:.1}x", delta.compression_factor(&cfg));
+//! ```
+//!
+//! See `examples/` for the serving path.
+
+pub mod config;
+pub mod coordinator;
+pub mod delta;
+pub mod eval;
+pub mod gemm;
+pub mod kvcache;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod store;
+pub mod tensor;
+pub mod util;
+
+/// Convenient re-exports for downstream users.
+pub mod prelude {
+    pub use crate::config::{Manifest, ModelConfig};
+    pub use crate::delta::bitdelta::{compress, BitDeltaCompressed};
+    pub use crate::model::tokenizer::ByteTokenizer;
+    pub use crate::serving::engine::{Engine, EngineConfig, ExecMode};
+    pub use crate::serving::request::{Request, Response};
+    pub use crate::store::bdw;
+    pub use crate::tensor::Tensor;
+}

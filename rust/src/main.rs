@@ -1,0 +1,426 @@
+//! `repro` — the BitDelta command-line: offline compression tools, the
+//! serving engine, and the drivers that regenerate every paper exhibit.
+//!
+//! ```text
+//! repro compress   --base <bdw> --fine <bdw> --out <bdd> [--levels k]
+//! repro inspect    --delta <bdd> [--model sim-s]
+//! repro serve      --mode bitdelta --batch 4 --requests 16
+//! repro table1|table2|table5|table6|table7|fig2|fig3|fig5
+//! repro case-study
+//! repro metrics-demo
+//! ```
+//!
+//! Everything reads `artifacts/` (`make artifacts` builds it once;
+//! python never runs at serve time). Global flag: `--artifacts <dir>`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use bitdelta::config::{Manifest, ModelConfig};
+use bitdelta::delta::bitdelta::compress;
+use bitdelta::delta::iterative::compress_iterative;
+use bitdelta::eval::tables::{self, TableCtx};
+use bitdelta::model::sampling::SamplingParams;
+use bitdelta::serving::engine::{Engine, EngineConfig, ExecMode};
+use bitdelta::serving::request::Request;
+use bitdelta::sim::memory::{self, ModelSpec, ServingMode};
+use bitdelta::store::bdw;
+use bitdelta::store::delta_file::{load_model, DeltaFile};
+use bitdelta::util::cli::Args;
+
+const USAGE: &str = "\
+repro — BitDelta reproduction CLI
+
+USAGE: repro [--artifacts DIR] <command> [flags]
+
+COMMANDS:
+  compress     --base F --fine F --out F [--model sim-s] [--levels K]
+  inspect      --delta F [--model sim-s]
+  serve        [--mode bitdelta|naive|lora] [--batch N] [--requests N]
+               [--model sim-s]
+  table1       BitDelta vs SVD quality (paper Table 1)
+  table2       all tenants x sizes (paper Tables 2/3/10)
+  table5       compression factors (paper Table 5)
+  table6       quantized bases (paper Tables 6/8)
+  table7       LoRA fine-tune (paper Table 7)
+  fig2         delta CEV series, CSV (paper Figure 2)
+  fig3         fidelity-of-delta ablation (paper Figure 3 / Table 9)
+  fig5         memory vs batch, CSV (paper Figure 5)
+  case-study   initial vs distilled generation (paper Table 4)
+  metrics-demo engine metrics after a burst
+  loadtest     Poisson/Zipf trace through the engine
+               [--requests N] [--rate R] [--zipf S] [--batch N]
+  extras-quant INT8-compress a delta's embeddings/head (paper's
+               future-work extension) [--tenant sim-s-chat]
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let cmd = match &args.subcommand {
+        Some(c) => c.as_str(),
+        None => {
+            println!("{USAGE}");
+            return Ok(());
+        }
+    };
+
+    match cmd {
+        "compress" => {
+            let cfg = config_by_name(args.get_or("model", "sim-s"))?;
+            let base = load_model(
+                args.get("base").context("--base required")?, &cfg)?;
+            let fine = load_model(
+                args.get("fine").context("--fine required")?, &cfg)?;
+            let out = args.get("out").context("--out required")?;
+            let levels = args.get_usize("levels", 1)?;
+            let delta = if levels == 1 {
+                let c = compress(&cfg, &base, &fine)?;
+                println!("compression factor: {:.2}x",
+                         c.compression_factor(&cfg));
+                c.delta
+            } else {
+                compress_iterative(&cfg, &base, &fine, levels)?
+            };
+            bdw::write_bdw(out, &delta.to_bdw(&cfg))?;
+            println!("wrote {out} ({} mask level(s), {} bytes)",
+                     delta.levels.len(), delta.delta_bytes());
+        }
+        "inspect" => {
+            let cfg = config_by_name(args.get_or("model", "sim-s"))?;
+            let d = DeltaFile::load(
+                args.get("delta").context("--delta required")?, &cfg)?;
+            println!("levels: {}", d.levels.len());
+            for (i, l) in d.levels.iter().enumerate() {
+                let mean: f32 = l.scales.iter().sum::<f32>()
+                    / l.scales.len() as f32;
+                println!("  level {i}: {} masks, mean alpha {mean:.6}",
+                         l.bits.len());
+            }
+            println!("delta bytes: {}", d.delta_bytes());
+            let dense: usize = cfg.param_names().iter()
+                .map(|n| cfg.param_shape(n).iter().product::<usize>() * 4)
+                .sum();
+            println!("compression factor vs dense f32: {:.2}x",
+                     dense as f64 / d.delta_bytes() as f64);
+        }
+        "serve" => serve_demo(
+            &artifacts,
+            args.get_or("mode", "bitdelta"),
+            args.get_usize("batch", 4)?,
+            args.get_usize("requests", 12)?,
+            args.get_or("model", "sim-s"))?,
+        "table1" => {
+            let mut ctx = TableCtx::load(&artifacts)?;
+            println!("{}", tables::table1(&mut ctx, "sim-s")?);
+        }
+        "table2" => {
+            let mut ctx = TableCtx::load(&artifacts)?;
+            println!("{}", tables::table2(&mut ctx)?);
+        }
+        "table5" => println!("{}", table5(&artifacts)?),
+        "table6" => {
+            let mut ctx = TableCtx::load(&artifacts)?;
+            println!("{}", tables::table6(&mut ctx, "sim-s")?);
+        }
+        "table7" => {
+            let mut ctx = TableCtx::load(&artifacts)?;
+            println!("{}", tables::table7(&mut ctx, "sim-s")?);
+        }
+        "fig2" => {
+            let mut ctx = TableCtx::load(&artifacts)?;
+            println!("{}", tables::fig2(&mut ctx, "sim-s")?);
+        }
+        "fig3" => {
+            let mut ctx = TableCtx::load(&artifacts)?;
+            println!("{}", tables::fig3(&mut ctx, "sim-s")?);
+        }
+        "fig5" => println!("{}", fig5()),
+        "loadtest" => loadtest(
+            &artifacts,
+            args.get_usize("requests", 24)?,
+            args.get("rate").map(|r| r.parse()).transpose()?
+                .unwrap_or(20.0),
+            args.get("zipf").map(|z| z.parse()).transpose()?
+                .unwrap_or(0.9),
+            args.get_usize("batch", 4)?)?,
+        "extras-quant" => extras_quant(
+            &artifacts, args.get_or("tenant", "sim-s-chat"))?,
+        "case-study" => case_study(&artifacts)?,
+        "metrics-demo" => {
+            let mut engine = Engine::from_artifacts(
+                EngineConfig::new(&artifacts))?;
+            fire_requests(&mut engine, 6)?;
+            engine.run_until_idle(100_000)?;
+            println!("{}", engine.metrics.exposition());
+        }
+        other => {
+            println!("{USAGE}");
+            bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}
+
+fn config_by_name(name: &str) -> Result<ModelConfig> {
+    match name {
+        "sim-s" => Ok(ModelConfig::sim_s()),
+        "sim-m" => Ok(ModelConfig::sim_m()),
+        other => bail!("unknown model config {other}"),
+    }
+}
+
+fn demo_prompts() -> Vec<&'static str> {
+    vec![
+        "Q: what color is the sky ?\nA:",
+        "Q: what is 17 plus 25 ?\nA:",
+        "Q: where does ada live ?\nA:",
+        "Q: what does bob eat ?\nA:",
+    ]
+}
+
+fn fire_requests(engine: &mut Engine, n: usize)
+                 -> Result<Vec<std::sync::mpsc::Receiver<
+                     bitdelta::serving::request::Response>>> {
+    let tenants = engine.tenants();
+    let prompts = demo_prompts();
+    let mut chans = Vec::new();
+    for i in 0..n {
+        let req = Request {
+            tenant: tenants[i % tenants.len()].clone(),
+            prompt: prompts[i % prompts.len()].to_string(),
+            max_new_tokens: 24,
+            sampling: SamplingParams::greedy(),
+        };
+        chans.push(engine.submit(req)?);
+    }
+    Ok(chans)
+}
+
+fn serve_demo(artifacts: &PathBuf, mode: &str, batch: usize,
+              requests: usize, model: &str) -> Result<()> {
+    let mode = match mode {
+        "bitdelta" => ExecMode::BitDelta,
+        "naive" => ExecMode::Naive,
+        "lora" => ExecMode::Lora,
+        other => bail!("unknown mode {other}"),
+    };
+    let mut ec = EngineConfig::new(artifacts);
+    ec.mode = mode;
+    ec.batch = batch;
+    ec.model = model.to_string();
+    let mut engine = Engine::from_artifacts(ec)?;
+    println!("engine up: mode={mode:?} batch={batch} tenants={:?}",
+             engine.tenants());
+    let t0 = std::time::Instant::now();
+    let chans = fire_requests(&mut engine, requests)?;
+    engine.run_until_idle(1_000_000)?;
+    let wall = t0.elapsed();
+    let mut total_tokens = 0usize;
+    for c in chans {
+        if let Ok(resp) = c.try_recv() {
+            total_tokens += resp.tokens.len();
+            println!("[{}] {:?} ({} tok, {:.1} ms, ttft {:.1} ms)",
+                     resp.tenant, resp.text, resp.tokens.len(),
+                     resp.latency.as_secs_f64() * 1e3,
+                     resp.ttft.as_secs_f64() * 1e3);
+        }
+    }
+    println!("\n{requests} requests, {total_tokens} tokens in \
+{:.2}s -> {:.1} tok/s",
+             wall.as_secs_f64(),
+             total_tokens as f64 / wall.as_secs_f64());
+    println!("\n{}", engine.metrics.exposition());
+    Ok(())
+}
+
+fn table5(artifacts: &PathBuf) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Table 5 — compression factors\n");
+    out.push_str(&format!("{:<22} {:>12} {:>12} {:>8}\n",
+                          "Base Model", "Size", "Δ Size", "Factor"));
+    let gb = |b: usize| b as f64 / (1024.0 * 1024.0 * 1024.0);
+    for spec in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b(),
+                 ModelSpec::llama2_70b(), ModelSpec::mistral_7b()] {
+        out.push_str(&format!(
+            "{:<22} {:>9.2} GB {:>9.2} GB {:>7.2}x\n",
+            spec.name, gb(spec.dense_bytes()), gb(spec.delta_bytes()),
+            spec.compression_factor()));
+    }
+    // measured on our artifacts
+    if let Ok(manifest) = Manifest::load(artifacts) {
+        let mb = |b: usize| b as f64 / (1024.0 * 1024.0);
+        let mut tenants: Vec<_> = manifest.tenants.iter().collect();
+        tenants.sort_by_key(|(n, _)| n.to_string());
+        for (name, t) in tenants {
+            let cfg = manifest.config(&t.config)?;
+            let model_bytes = std::fs::metadata(
+                manifest.path(&t.finetune))?.len() as usize;
+            let d = DeltaFile::load(manifest.path(&t.delta), cfg)?;
+            out.push_str(&format!(
+                "{:<22} {:>9.2} MB {:>9.2} MB {:>7.2}x (measured)\n",
+                name, mb(model_bytes), mb(d.delta_bytes()),
+                model_bytes as f64 / d.delta_bytes() as f64));
+        }
+    }
+    Ok(out)
+}
+
+fn fig5() -> String {
+    let spec = ModelSpec::llama2_7b();
+    let batches: Vec<usize> = (0..=6).map(|i| 1usize << i).collect();
+    let mut out = String::new();
+    out.push_str("Figure 5 — memory vs batch (Llama 2-7B, seq 128, \
+A100-80GB)\nbatch,naive_gb,bitdelta_gb,slora_gb,naive_fits\n");
+    for &b in &batches {
+        let n = memory::account(&spec, ServingMode::Naive, b, 128,
+                                memory::A100_80GB);
+        let d = memory::account(&spec, ServingMode::BitDelta, b, 128,
+                                memory::A100_80GB);
+        let l = memory::account(&spec, ServingMode::Lora(128), b, 128,
+                                memory::A100_80GB);
+        let gb = |x: usize| x as f64 / (1024.0 * 1024.0 * 1024.0);
+        out.push_str(&format!("{b},{:.2},{:.2},{:.2},{}\n",
+                              gb(n.total_bytes), gb(d.total_bytes),
+                              gb(l.total_bytes), n.fits));
+    }
+    let oom = memory::oom_point(&spec, ServingMode::Naive, 128,
+                                memory::A100_80GB, 128);
+    out.push_str(&format!("# naive OOM at batch {oom:?}; \
+bitdelta fits all tested batches\n"));
+    out
+}
+
+fn loadtest(artifacts: &PathBuf, requests: usize, rate: f64,
+            zipf_s: f64, batch: usize) -> Result<()> {
+    use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
+
+    let mut ec = EngineConfig::new(artifacts);
+    ec.batch = batch;
+    let mut engine = Engine::from_artifacts(ec)?;
+    let tenants = engine.tenants();
+    let tcfg = TraceConfig {
+        n_tenants: tenants.len(),
+        n_requests: requests,
+        rate,
+        zipf_s,
+        min_tokens: 8,
+        max_tokens: 24,
+        seed: 7,
+    };
+    let trace = generate(&tcfg);
+    let st = stats(&trace, tenants.len());
+    println!("trace: {} requests over {:.2}s, hottest tenant {:.0}% of \
+traffic, {}/{} tenants hit",
+             st.n, st.duration, st.hottest_share * 100.0,
+             st.tenants_hit, tenants.len());
+
+    let prompts = demo_prompts();
+    let t0 = std::time::Instant::now();
+    let mut chans = Vec::new();
+    let mut fired = 0usize;
+    let mut step_reports = Vec::new();
+    // replay: submit events when their arrival time passes, stepping
+    // the engine in between (open-loop load generation)
+    while fired < trace.len() || engine.batcher.occupancy() > 0
+        || engine.router.total_queued() > 0 {
+        let now = t0.elapsed().as_secs_f64();
+        while fired < trace.len() && trace[fired].at <= now {
+            let e = &trace[fired];
+            chans.push(engine.submit(Request {
+                tenant: tenants[e.tenant].clone(),
+                prompt: prompts[e.prompt_idx % prompts.len()].into(),
+                max_new_tokens: e.max_new_tokens,
+                sampling: SamplingParams::greedy(),
+            })?);
+            fired += 1;
+        }
+        if engine.batcher.occupancy() > 0
+            || engine.router.total_queued() > 0 {
+            step_reports.push(engine.step()?);
+        } else if fired < trace.len() {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut tokens = 0usize;
+    for c in &chans {
+        if let Ok(r) = c.try_recv() {
+            latencies.push(r.latency.as_secs_f64());
+            tokens += r.tokens.len();
+        }
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let occ: f64 = step_reports.iter().map(|r| r.active as f64).sum::<f64>()
+        / step_reports.len().max(1) as f64;
+    println!("served {} requests / {tokens} tokens in {wall:.2}s -> \
+{:.1} tok/s; mean batch occupancy {occ:.2}/{batch}",
+             latencies.len(), tokens as f64 / wall);
+    if !latencies.is_empty() {
+        println!("latency p50 {:.0} ms, p95 {:.0} ms, max {:.0} ms",
+                 latencies[latencies.len() / 2] * 1e3,
+                 latencies[latencies.len() * 95 / 100] * 1e3,
+                 latencies[latencies.len() - 1] * 1e3);
+    }
+    println!("\n{}", engine.metrics.exposition());
+    Ok(())
+}
+
+fn extras_quant(artifacts: &PathBuf, tenant: &str) -> Result<()> {
+    use bitdelta::delta::extras_quant::recompress_delta;
+
+    let manifest = Manifest::load(artifacts)?;
+    let t = manifest.tenants.get(tenant)
+        .context("unknown tenant")?;
+    let cfg = manifest.config(&t.config)?.clone();
+    let base_name = format!("{}-base", t.config);
+    let base = load_model(
+        manifest.path(&manifest.models[&base_name].file), &cfg)?;
+    let delta = DeltaFile::load(manifest.path(&t.delta), &cfg)?;
+    let (recon, before, after) = recompress_delta(&cfg, &base, &delta)?;
+
+    let dense: usize = cfg.param_names().iter()
+        .map(|n| cfg.param_shape(n).iter().product::<usize>() * 4).sum();
+    println!("extras-quant extension ({tenant}) — the compression the \
+paper defers to future work:");
+    println!("  delta bytes fp32-extras : {before:>10}  \
+(factor {:.2}x)", dense as f64 / before as f64);
+    println!("  delta bytes int8-extras : {after:>10}  \
+(factor {:.2}x)", dense as f64 / after as f64);
+
+    // quality check: reconstruction error on the embedding
+    let a = delta.extras["tok_embed"].as_f32()?;
+    let b = recon.extras["tok_embed"].as_f32()?;
+    let rel = (a.iter().zip(&b)
+               .map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
+               .sqrt())
+        / a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    println!("  tok_embed INT8 rel. error: {rel:.5} (lossless to \
+~3 decimal places)");
+    Ok(())
+}
+
+fn case_study(artifacts: &PathBuf) -> Result<()> {
+    println!("Table 4 analog — scale distillation and instruction \
+following (sim-s-chat)\n");
+    let prompt = "Q: what color is the rose ?\nA:";
+    for (label, distilled) in [("BitDelta-Initial", false),
+                               ("BitDelta (distilled)", true)] {
+        let mut ec = EngineConfig::new(artifacts);
+        ec.distilled = distilled;
+        ec.batch = 1;
+        let mut engine = Engine::from_artifacts(ec)?;
+        let chan = engine.submit(Request {
+            tenant: "sim-s-chat".into(),
+            prompt: prompt.to_string(),
+            max_new_tokens: 32,
+            sampling: SamplingParams::greedy(),
+        })?;
+        engine.run_until_idle(100_000)?;
+        let resp = chan.recv()?;
+        println!("{label:<22} -> {:?}", resp.text);
+    }
+    Ok(())
+}

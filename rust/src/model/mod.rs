@@ -1,0 +1,8 @@
+//! Model-side utilities of the L3 runtime: tokenization, sampling, and
+//! weight-set assembly for the four serving modes.
+
+pub mod sampling;
+pub mod tokenizer;
+
+pub use sampling::{sample, SamplingParams};
+pub use tokenizer::ByteTokenizer;

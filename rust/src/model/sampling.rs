@@ -1,0 +1,120 @@
+//! Token sampling over the logits the decode executables return.
+
+/// Sampling configuration for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    /// Keep only the top-k logits before sampling (0 = all).
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+}
+
+/// Sample one token id from a logits row. Deterministic for a given
+/// (params.seed, step) pair — reproducible serving traces.
+pub fn sample(logits: &[f32], params: &SamplingParams, step: u64) -> i32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // top-k filter
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if params.top_k > 0 && params.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b].partial_cmp(&logits[a]).unwrap()
+        });
+        idx.truncate(params.top_k);
+    }
+    // softmax at temperature over the kept set
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY,
+                                                  f32::max);
+    let probs: Vec<f64> = idx.iter()
+        .map(|&i| (((logits[i] - max) / params.temperature) as f64).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+
+    // deterministic uniform draw from (seed, step) via splitmix64
+    let mut z = params.seed ^ step.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    let u = (z >> 11) as f64 / (1u64 << 53) as f64 * total;
+
+    let mut acc = 0.0;
+    for (k, &i) in idx.iter().enumerate() {
+        acc += probs[k];
+        if u <= acc {
+            return i as i32;
+        }
+    }
+    idx[idx.len() - 1] as i32
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Log-softmax of one logits row (likelihood scoring in the eval harness).
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = logits.iter().map(|&v| ((v - max) as f64).exp())
+        .sum::<f64>().ln() as f32 + max;
+    logits.iter().map(|&v| v - lse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = [0.1f32, 2.0, -1.0, 1.9];
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), 0), 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed_step() {
+        let logits = [0.5f32, 0.4, 0.6, 0.3];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, seed: 42 };
+        let a = sample(&logits, &p, 3);
+        let b = sample(&logits, &p, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [10.0f32, 9.5, -50.0, -60.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 2, seed: 1 };
+        for step in 0..50 {
+            let t = sample(&logits, &p, step);
+            assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalises() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let ls = log_softmax(&logits);
+        let total: f64 = ls.iter().map(|&v| (v as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

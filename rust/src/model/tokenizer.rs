@@ -1,0 +1,56 @@
+//! Byte-level tokenizer — identical to `python/compile/data.py`'s
+//! encode/decode (token = byte value; vocab 256).
+
+/// Byte-level tokenizer. Stateless; exists as a type so the serving API
+/// reads like a real stack and alternative tokenizers can slot in.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        Self
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn decode_one(&self, token: i32) -> char {
+        ((token & 0xFF) as u8) as char
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let s = "Q: what color is the sky ?\nA:";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.encode("A"), vec![65]);
+        assert_eq!(t.encode("\n"), vec![10]);
+    }
+
+    #[test]
+    fn out_of_range_tokens_wrap() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[65 + 256]), "A");
+    }
+}

@@ -1,0 +1,10 @@
+//! Base-model weight quantizers (Table 6 substrate).
+//!
+//! The build path's python quantizers (`python/compile/quant.py`) produce
+//! the artifact variants; this module provides the rust-native RTN family
+//! so `repro compress --base-quant intN` works offline, plus the shared
+//! accounting used by the Table 6 harness.
+
+pub mod rtn;
+
+pub use rtn::{rtn_dequantize, rtn_quantize_matrix, RtnQuantized};

@@ -1,0 +1,108 @@
+//! Per-channel symmetric round-to-nearest quantization.
+//!
+//! The INT8-RTN rows of Table 6; also usable at 4/2 bits for ablations.
+//! Matches `python/compile/quant.py::rtn_quantize_matrix` numerically
+//! (same grid, same clamping) so rust- and python-produced variants are
+//! interchangeable.
+
+use crate::tensor::Tensor;
+
+/// A quantized matrix: int codes + per-row scales.
+#[derive(Debug, Clone)]
+pub struct RtnQuantized {
+    pub bits: u8,
+    pub rows: usize,
+    pub cols: usize,
+    /// Codes in row-major order, each in `[-2^(b-1), 2^(b-1)-1]`.
+    pub codes: Vec<i8>,
+    /// One scale per output channel (row).
+    pub scales: Vec<f32>,
+}
+
+/// Quantize a `[rows, cols]` matrix at `bits` precision (2..=8).
+pub fn rtn_quantize_matrix(w: &Tensor, bits: u8) -> RtnQuantized {
+    assert!((2..=8).contains(&bits));
+    let (rows, cols) = w.dims2();
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmin = -(1i32 << (bits - 1)) as f32;
+    let row_max = w.row_abs_max();
+    let mut codes = Vec::with_capacity(rows * cols);
+    let mut scales = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let scale = row_max[r].max(1e-12) / qmax;
+        scales.push(scale);
+        for c in 0..cols {
+            let q = (w.data()[r * cols + c] / scale).round()
+                .clamp(qmin, qmax);
+            codes.push(q as i8);
+        }
+    }
+    RtnQuantized { bits, rows, cols, codes, scales }
+}
+
+/// Dequantize back to dense f32.
+pub fn rtn_dequantize(q: &RtnQuantized) -> Tensor {
+    let mut out = Vec::with_capacity(q.rows * q.cols);
+    for r in 0..q.rows {
+        let s = q.scales[r];
+        for c in 0..q.cols {
+            out.push(q.codes[r * q.cols + c] as f32 * s);
+        }
+    }
+    Tensor::new(vec![q.rows, q.cols], out)
+}
+
+impl RtnQuantized {
+    /// Stored bytes at the nominal bit width (codes packed + f16 scales —
+    /// the Table 6 memory accounting).
+    pub fn nominal_bytes(&self) -> usize {
+        (self.rows * self.cols * self.bits as usize + 7) / 8
+            + self.rows * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_roundtrip_error_small() {
+        let w = Tensor::randn(vec![16, 32], 1);
+        let q = rtn_quantize_matrix(&w, 8);
+        let d = rtn_dequantize(&q);
+        let err = w.sub(&d).frob_norm() / w.frob_norm();
+        assert!(err < 0.01, "int8 err {err}");
+    }
+
+    #[test]
+    fn lower_bits_more_error() {
+        let w = Tensor::randn(vec![16, 32], 2);
+        let errs: Vec<f32> = [8u8, 4, 2].iter().map(|&b| {
+            let q = rtn_quantize_matrix(&w, b);
+            w.sub(&rtn_dequantize(&q)).frob_norm()
+        }).collect();
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let w = Tensor::randn(vec![8, 8], 3);
+        for bits in [2u8, 4, 8] {
+            let q = rtn_quantize_matrix(&w, bits);
+            let lim = 1i16 << (bits - 1);
+            assert!(q.codes.iter()
+                .all(|&c| (c as i16) >= -lim && (c as i16) < lim));
+        }
+    }
+
+    #[test]
+    fn matches_python_formula() {
+        // python: scale = max(|row|)/qmax; q = clip(round(w/scale))
+        let w = Tensor::new(vec![1, 4], vec![0.5, -1.0, 0.25, 0.75]);
+        let q = rtn_quantize_matrix(&w, 8);
+        assert!((q.scales[0] - 1.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q.codes[1], -127);
+        let d = rtn_dequantize(&q);
+        assert!((d.data()[1] + 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT client wrapper: compile-once / execute-many over HLO text, with
+//! device-resident buffers for weights that persist across decode steps
+//! (the runtime realisation of "keep the base model in GPU memory and
+//! hot-swap 1-bit deltas").
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+/// Owns the PJRT client and a cache of compiled executables.
+///
+/// NOT `Send`: PJRT objects stay on the engine thread (the tokio
+/// front-end talks to the engine over channels — see
+/// [`crate::serving::engine`]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+/// One compiled executable plus load metadata.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text file (cached by path).
+    pub fn load(&mut self, path: impl AsRef<Path>)
+                -> Result<std::rc::Rc<Executable>> {
+        let key = path.as_ref().to_string_lossy().into_owned();
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .map_err(|e| anyhow!("parsing HLO text {key}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+        let compiled = std::rc::Rc::new(Executable {
+            name: key.clone(),
+            exe,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.insert(key, compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Upload an f32 array once; reuse across steps via [`Executable::run_buffers`].
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize])
+                      -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e}"))
+    }
+
+    pub fn upload_u8(&self, data: &[u8], dims: &[usize])
+                     -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload u8 {dims:?}: {e}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize])
+                      -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e}"))
+    }
+
+    pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow!("upload scalar: {e}"))
+    }
+
+    pub fn upload_scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow!("upload scalar: {e}"))
+    }
+}
+
+impl Executable {
+    /// Execute over device buffers; returns the decomposed output tuple
+    /// as host literals (aot.py lowers with `return_tuple=True`).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer])
+                       -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let lit = out[0][0].to_literal_sync()
+            .map_err(|e| anyhow!("fetch output {}: {e}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("tuple {}: {e}", self.name))
+    }
+
+    /// Execute but keep outputs on device (for chaining decode steps
+    /// without host round-trips — outputs feed the next `run_buffers`).
+    ///
+    /// Note: with `return_tuple=True` the executable's single output is
+    /// the tuple itself, which cannot be fed back as an input buffer;
+    /// decode chaining therefore goes through [`Self::run_buffers`] +
+    /// re-upload. Kept for single-output executables.
+    pub fn run_buffers_device(&self, args: &[&xla::PjRtBuffer])
+                              -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        Ok(out.remove(0))
+    }
+}
+
+/// Decode a literal into f32s.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e}"))
+}
+
+/// Shape dims of an array literal.
+pub fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}
+
+/// Host-side staged argument: raw data + dims, uploadable on demand.
+/// Lets the engine assemble argument lists cheaply and upload only what
+/// changed since the previous step.
+pub enum HostArg {
+    F32(Vec<f32>, Vec<usize>),
+    U8(Vec<u8>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostArg {
+    pub fn upload(&self, rt: &Runtime) -> Result<xla::PjRtBuffer> {
+        match self {
+            HostArg::F32(d, s) => rt.upload_f32(d, s),
+            HostArg::U8(d, s) => rt.upload_u8(d, s),
+            HostArg::I32(d, s) => rt.upload_i32(d, s),
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        match self {
+            HostArg::F32(d, _) => d.len() * 4,
+            HostArg::U8(d, _) => d.len(),
+            HostArg::I32(d, _) => d.len() * 4,
+        }
+    }
+}

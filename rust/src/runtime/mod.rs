@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT HLO-text executables and run them from the
+//! rust hot path.
+//!
+//! * [`client`] — thin wrapper over the `xla` crate: HLO-text loading
+//!   (NEVER serialized protos — xla_extension 0.5.1 rejects jax≥0.5's
+//!   64-bit ids; the text parser reassigns them), literal/buffer helpers,
+//!   and device-resident argument sets.
+//! * [`variants`] — the python↔rust executable ABI: argument assembly for
+//!   every serving mode, in the exact positional order `aot.py` lowered.
+
+pub mod client;
+pub mod variants;
+
+pub use client::{Executable, Runtime};
+pub use variants::{BitDeltaArgs, DenseArgs, LoraArgs};

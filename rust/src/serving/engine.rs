@@ -1,0 +1,527 @@
+//! The serving engine: continuous-batching decode loop over the AOT
+//! executables, in three execution modes.
+//!
+//! * [`ExecMode::BitDelta`] — the paper's system: shared base linears
+//!   (device-resident, uploaded once) + per-tenant stacked 1-bit deltas,
+//!   re-assembled **only when the batch composition changes** (hot-swap).
+//! * [`ExecMode::Naive`]    — B full fine-tuned models stacked per slot;
+//!   faithful to the baseline that OOMs in Figs. 5/6.
+//! * [`ExecMode::Lora`]     — per-tenant low-rank adapters (S-LoRA
+//!   comparator).
+//!
+//! Prefill is piggybacked on the batched decode step (Orca-style
+//! continuous batching): a freshly admitted sequence consumes one prompt
+//! token per step through the same executable, so prefill and decode
+//! coexist in one batch and no separate prefill executable sits on the
+//! hot path.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Manifest, ModelConfig};
+use crate::coordinator::admission::AdmissionPolicy;
+use crate::coordinator::batcher::{ActiveSeq, Batcher};
+use crate::coordinator::deltastore::DeltaStore;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{Router, TenantInfo};
+use crate::kvcache::SeqCache;
+use crate::model::sampling::sample;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::runtime::client::{Executable, Runtime};
+use crate::runtime::variants::{BaseLinears, BitDeltaArgs, DecodeOut,
+                               LoraArgs, NaiveArgs};
+use crate::serving::request::{QueuedRequest, Request, Response};
+use crate::store::bdw::RawTensor;
+use crate::store::delta_file::{load_model, LoraFile};
+
+/// Which decomposed forward the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    BitDelta,
+    Naive,
+    Lora,
+}
+
+impl ExecMode {
+    pub fn exec_kind(&self) -> &'static str {
+        match self {
+            ExecMode::BitDelta => "decode_bitdelta",
+            ExecMode::Naive => "decode_naive",
+            ExecMode::Lora => "decode_lora",
+        }
+    }
+}
+
+/// Engine construction parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    /// Model size name, e.g. "sim-s".
+    pub model: String,
+    pub mode: ExecMode,
+    /// Decode batch width; must match an exported executable.
+    pub batch: usize,
+    /// Delta residency budget (bytes) for the hot-swap store.
+    pub delta_budget_bytes: usize,
+    /// Generation stops at this token (None = length-only). Our corpus
+    /// terminates answers with '\n'.
+    pub stop_token: Option<i32>,
+    /// Use pre-distilled scales (`.bdd`) vs initial (`.initial.bdd`).
+    pub distilled: bool,
+}
+
+impl EngineConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            model: "sim-s".into(),
+            mode: ExecMode::BitDelta,
+            batch: 4,
+            delta_budget_bytes: 256 << 20,
+            stop_token: Some(10),
+            distilled: true,
+        }
+    }
+}
+
+/// Per-step report (metrics source + bench hook).
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    pub active: usize,
+    pub admitted: usize,
+    pub completed: usize,
+    pub restacked: bool,
+    pub exec_seconds: f64,
+    pub total_seconds: f64,
+}
+
+/// The multi-tenant serving engine (single-threaded; see
+/// [`crate::serving::service`] for the async front-end).
+pub struct Engine {
+    pub cfg: ModelConfig,
+    econfig: EngineConfig,
+    rt: Runtime,
+    decode_exe: Rc<Executable>,
+    tok: ByteTokenizer,
+
+    // mode-specific device-resident state
+    base_linears: Option<BaseLinears>,
+    stacked_bitdelta: Option<(u64, BitDeltaArgs)>,
+    stacked_naive: Option<(u64, NaiveArgs)>,
+    stacked_lora: Option<(u64, LoraArgs)>,
+
+    // host-side model/adapter caches
+    models: HashMap<String, Rc<HashMap<String, RawTensor>>>,
+    model_paths: HashMap<String, PathBuf>,
+    lora_files: HashMap<String, Rc<LoraFile>>,
+    lora_paths: HashMap<String, PathBuf>,
+
+    pub router: Router,
+    pub batcher: Batcher,
+    pub deltas: DeltaStore,
+    pub metrics: Metrics,
+
+    // authoritative stacked KV cache (host copy, ABI layout [L,B,H,S,hd])
+    kv_k: Vec<f32>,
+    kv_v: Vec<f32>,
+    next_id: u64,
+}
+
+impl Engine {
+    /// Build an engine from artifacts: loads the manifest, compiles the
+    /// decode executable, uploads the base weights, registers every
+    /// tenant of the chosen model size.
+    pub fn from_artifacts(econfig: EngineConfig) -> Result<Self> {
+        let manifest = Manifest::load(&econfig.artifacts_dir)?;
+        let cfg = manifest.config(&econfig.model)?.clone();
+        let mut rt = Runtime::cpu()?;
+
+        let exec = manifest
+            .find_exec(&econfig.model, econfig.mode.exec_kind(),
+                       econfig.batch)
+            .with_context(|| format!(
+                "no {} executable at batch {} for {} — available: {:?}",
+                econfig.mode.exec_kind(), econfig.batch, econfig.model,
+                manifest.exec_batches(&econfig.model,
+                                      econfig.mode.exec_kind())))?;
+        let decode_exe = rt.load(manifest.path(&exec.path))?;
+
+        // base model (shared linears for bitdelta/lora modes)
+        let base_name = format!("{}-base", econfig.model);
+        let base_entry = manifest.models.get(&base_name)
+            .with_context(|| format!("manifest missing {base_name}"))?;
+        let base = load_model(manifest.path(&base_entry.file), &cfg)?;
+        let base_linears = match econfig.mode {
+            ExecMode::BitDelta | ExecMode::Lora =>
+                Some(BaseLinears::from_model(&rt, &cfg, &base)?),
+            ExecMode::Naive => None,
+        };
+
+        let mut router = Router::new(AdmissionPolicy::default());
+        let mut deltas = DeltaStore::new(cfg.clone(),
+                                         econfig.delta_budget_bytes);
+        let mut model_paths = HashMap::new();
+        let mut lora_paths = HashMap::new();
+        for (tname, t) in &manifest.tenants {
+            if t.config != econfig.model {
+                continue;
+            }
+            router.register_tenant(TenantInfo {
+                name: tname.clone(), rope_scale: t.rope_scale });
+            let dfile = if econfig.distilled { &t.delta }
+                        else { &t.delta_initial };
+            deltas.register(tname.clone(), manifest.path(dfile));
+            model_paths.insert(tname.clone(),
+                               manifest.path(&t.finetune));
+            if let Some(svd) = &t.svd_r16 {
+                lora_paths.insert(tname.clone(),
+                                  manifest.path(&svd.distilled));
+            }
+        }
+
+        let kv_len = cfg.n_layers * econfig.batch * cfg.n_heads
+            * cfg.max_seq_len * cfg.head_dim();
+        let batch = econfig.batch;
+        Ok(Self {
+            cfg, econfig, rt, decode_exe,
+            tok: ByteTokenizer::new(),
+            base_linears,
+            stacked_bitdelta: None,
+            stacked_naive: None,
+            stacked_lora: None,
+            models: HashMap::new(),
+            model_paths,
+            lora_files: HashMap::new(),
+            lora_paths,
+            router,
+            batcher: Batcher::new(batch),
+            deltas,
+            metrics: Metrics::default(),
+            kv_k: vec![0.0; kv_len],
+            kv_v: vec![0.0; kv_len],
+            next_id: 1,
+        })
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.econfig.mode
+    }
+
+    pub fn tenants(&self) -> Vec<String> {
+        self.router.tenant_names().to_vec()
+    }
+
+    /// Submit a request; response arrives on the returned channel.
+    pub fn submit(&mut self, request: Request)
+                  -> Result<std::sync::mpsc::Receiver<Response>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.router.enqueue(QueuedRequest::new(request, id, tx))?;
+        self.metrics.inc("requests", 1);
+        Ok(rx)
+    }
+
+    /// Run decode steps until every queue and slot is empty.
+    pub fn run_until_idle(&mut self, max_steps: usize)
+                          -> Result<Vec<StepReport>> {
+        let mut reports = Vec::new();
+        for _ in 0..max_steps {
+            if self.router.total_queued() == 0
+                && self.batcher.occupancy() == 0 {
+                break;
+            }
+            reports.push(self.step()?);
+        }
+        if self.batcher.occupancy() > 0 {
+            bail!("run_until_idle: work left after {max_steps} steps");
+        }
+        Ok(reports)
+    }
+
+    /// One engine iteration: admit → assemble → execute → scatter.
+    pub fn step(&mut self) -> Result<StepReport> {
+        let t_start = Instant::now();
+        let mut report = StepReport::default();
+
+        // ---- admission: move queued requests into free slots ----------
+        let free = self.batcher.free_slots();
+        if free > 0 {
+            for qreq in self.router.drain(free) {
+                let info = self.router.tenant(&qreq.request.tenant)
+                    .ok_or_else(|| anyhow!("tenant vanished"))?.clone();
+                let prompt = self.tok.encode(&qreq.request.prompt);
+                if prompt.is_empty() {
+                    bail!("empty prompt (request {})", qreq.id);
+                }
+                if prompt.len() + qreq.request.max_new_tokens
+                    > self.cfg.max_seq_len {
+                    bail!("request {} longer than max_seq_len", qreq.id);
+                }
+                let first = prompt[0];
+                let seq = ActiveSeq {
+                    tenant: qreq.request.tenant.clone(),
+                    rope_scale: info.rope_scale,
+                    cache: SeqCache::new(&self.cfg),
+                    prompt,
+                    prompt_pos: 0,
+                    generated: vec![],
+                    next_token: first,
+                    started: qreq.enqueued_at,
+                    first_token_at: None,
+                    req: qreq,
+                };
+                let slot = self.batcher.admit(seq)
+                    .map_err(|_| anyhow!("no free slot after check"))?;
+                self.zero_slot_cache(slot);
+                self.deltas.pin(&self.batcher.slot(slot).unwrap()
+                    .tenant.clone());
+                report.admitted += 1;
+            }
+        }
+
+        let active = self.batcher.active_slots();
+        report.active = active.len();
+        if active.is_empty() {
+            report.total_seconds = t_start.elapsed().as_secs_f64();
+            return Ok(report);
+        }
+
+        // ---- per-tenant argument assembly (only on composition change)
+        let comp = self.batcher.composition_id();
+        report.restacked = self.ensure_stacked(comp)?;
+
+        // ---- per-step tensors -----------------------------------------
+        let b = self.econfig.batch;
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut rope = vec![1.0f32; b];
+        for &i in &active {
+            let s = self.batcher.slot(i).unwrap();
+            tokens[i] = s.next_token;
+            pos[i] = s.cache.pos as i32;
+            rope[i] = s.rope_scale;
+        }
+
+        let kv_shape = [self.cfg.n_layers, b, self.cfg.n_heads,
+                        self.cfg.max_seq_len, self.cfg.head_dim()];
+        let k_buf = self.rt.upload_f32(&self.kv_k, &kv_shape)?;
+        let v_buf = self.rt.upload_f32(&self.kv_v, &kv_shape)?;
+        let pos_buf = self.rt.upload_i32(&pos, &[b])?;
+        let tok_buf = self.rt.upload_i32(&tokens, &[b])?;
+        let rope_buf = self.rt.upload_f32(&rope, &[b])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        match self.econfig.mode {
+            ExecMode::BitDelta => {
+                let bl = self.base_linears.as_ref().unwrap();
+                let st = &self.stacked_bitdelta.as_ref().unwrap().1;
+                args.extend(bl.buffers.iter());
+                args.extend(st.bits.iter());
+                args.push(&st.scales);
+                args.extend(st.extras.iter());
+            }
+            ExecMode::Naive => {
+                let st = &self.stacked_naive.as_ref().unwrap().1;
+                args.extend(st.buffers.iter());
+            }
+            ExecMode::Lora => {
+                let bl = self.base_linears.as_ref().unwrap();
+                let st = &self.stacked_lora.as_ref().unwrap().1;
+                args.extend(bl.buffers.iter());
+                args.extend(st.a.iter());
+                args.extend(st.b.iter());
+                args.extend(st.extras.iter());
+            }
+        }
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&pos_buf);
+        args.push(&tok_buf);
+        args.push(&rope_buf);
+
+        // ---- execute -----------------------------------------------------
+        let t_exec = Instant::now();
+        let lits = self.decode_exe.run_buffers(&args)?;
+        report.exec_seconds = t_exec.elapsed().as_secs_f64();
+        let out = DecodeOut::from_literals(lits, b)?;
+        self.kv_k = out.k.clone();
+        self.kv_v = out.v.clone();
+
+        // ---- scatter results ---------------------------------------------
+        let stop = self.econfig.stop_token;
+        let max_seq = self.cfg.max_seq_len;
+        let mut to_release = Vec::new();
+        for &i in &active {
+            let s = self.batcher.slot_mut(i).unwrap();
+            s.cache.pos += 1;
+            if s.in_prefill() {
+                s.prompt_pos += 1;
+                if s.prompt_pos < s.prompt.len() {
+                    s.next_token = s.prompt[s.prompt_pos];
+                    continue;
+                }
+                // prefill just finished: fall through to sample the
+                // first generated token from this step's logits
+                s.first_token_at = Some(Instant::now());
+            }
+            let t = sample(out.logits_row(i), &s.req.request.sampling,
+                           s.generated.len() as u64);
+            s.generated.push(t);
+            s.next_token = t;
+            if s.first_token_at.is_none() {
+                s.first_token_at = Some(Instant::now());
+            }
+            let stopped = stop.map_or(false, |st| t == st);
+            if stopped || s.done(max_seq) {
+                to_release.push(i);
+            }
+        }
+
+        for i in to_release {
+            let s = self.batcher.release(i).unwrap();
+            self.deltas.unpin(&s.tenant);
+            let now = Instant::now();
+            let latency = now.duration_since(s.started);
+            let ttft = s.first_token_at.unwrap_or(now)
+                .duration_since(s.started);
+            self.metrics.request_latency.observe(latency);
+            self.metrics.ttft.observe(ttft);
+            self.metrics.inc("completed", 1);
+            self.metrics.inc("tokens_generated",
+                             s.generated.len() as u64);
+            report.completed += 1;
+            let resp = Response {
+                id: s.req.id,
+                tenant: s.tenant.clone(),
+                text: self.tok.decode(&s.generated),
+                tokens: s.generated.clone(),
+                latency,
+                ttft,
+                prompt_tokens: s.prompt.len(),
+            };
+            if let Some(tx) = &s.req.respond {
+                let _ = tx.send(resp);
+            }
+        }
+
+        report.total_seconds = t_start.elapsed().as_secs_f64();
+        self.metrics.step_latency
+            .observe(std::time::Duration::from_secs_f64(
+                report.total_seconds));
+        self.metrics.inc("steps", 1);
+        self.metrics.set("batch_occupancy",
+                         report.active as f64 / b as f64);
+        Ok(report)
+    }
+
+    /// Re-assemble the stacked per-tenant arguments if the batch
+    /// composition changed. Returns true if a re-stack happened.
+    fn ensure_stacked(&mut self, comp: u64) -> Result<bool> {
+        let fresh = match self.econfig.mode {
+            ExecMode::BitDelta =>
+                self.stacked_bitdelta.as_ref().map(|(c, _)| *c) != Some(comp),
+            ExecMode::Naive =>
+                self.stacked_naive.as_ref().map(|(c, _)| *c) != Some(comp),
+            ExecMode::Lora =>
+                self.stacked_lora.as_ref().map(|(c, _)| *c) != Some(comp),
+        };
+        if !fresh {
+            return Ok(false);
+        }
+        let slots = self.batcher.active_slots();
+        let tenants: Vec<String> = {
+            let mut order: Vec<String> = Vec::new();
+            // slot-indexed tenant list, padding holes with the first
+            // active tenant (padding slots are masked by bookkeeping)
+            let first = self.batcher.slot(slots[0]).unwrap().tenant.clone();
+            for i in 0..self.econfig.batch {
+                order.push(self.batcher.slot(i)
+                    .map(|s| s.tenant.clone())
+                    .unwrap_or_else(|| first.clone()));
+            }
+            order
+        };
+        match self.econfig.mode {
+            ExecMode::BitDelta => {
+                let mut deltas = Vec::new();
+                for t in &tenants {
+                    deltas.push(self.deltas.fetch(t)?);
+                }
+                let refs: Vec<&crate::store::delta_file::DeltaFile> =
+                    deltas.iter().map(|d| d.as_ref()).collect();
+                let stacked = BitDeltaArgs::assemble(
+                    &self.rt, &self.cfg, &refs, self.econfig.batch)?;
+                self.metrics.inc("delta_restacks", 1);
+                self.metrics.inc("delta_restack_bytes",
+                                 stacked.staged_bytes as u64);
+                self.stacked_bitdelta = Some((comp, stacked));
+            }
+            ExecMode::Naive => {
+                let mut models = Vec::new();
+                for t in &tenants {
+                    models.push(self.fetch_model(t)?);
+                }
+                let refs: Vec<&HashMap<String, RawTensor>> =
+                    models.iter().map(|m| m.as_ref()).collect();
+                let stacked = NaiveArgs::from_models(
+                    &self.rt, &self.cfg, &refs, self.econfig.batch)?;
+                self.metrics.inc("naive_restacks", 1);
+                self.stacked_naive = Some((comp, stacked));
+            }
+            ExecMode::Lora => {
+                let mut files = Vec::new();
+                for t in &tenants {
+                    files.push(self.fetch_lora(t)?);
+                }
+                let refs: Vec<&LoraFile> =
+                    files.iter().map(|f| f.as_ref()).collect();
+                let stacked = LoraArgs::assemble(
+                    &self.rt, &self.cfg, &refs, self.econfig.batch)?;
+                self.metrics.inc("lora_restacks", 1);
+                self.stacked_lora = Some((comp, stacked));
+            }
+        }
+        Ok(true)
+    }
+
+    fn fetch_model(&mut self, tenant: &str)
+                   -> Result<Rc<HashMap<String, RawTensor>>> {
+        if let Some(m) = self.models.get(tenant) {
+            return Ok(m.clone());
+        }
+        let path = self.model_paths.get(tenant)
+            .with_context(|| format!("no model file for {tenant}"))?;
+        let m = Rc::new(load_model(path, &self.cfg)?);
+        self.models.insert(tenant.to_string(), m.clone());
+        Ok(m)
+    }
+
+    fn fetch_lora(&mut self, tenant: &str) -> Result<Rc<LoraFile>> {
+        if let Some(f) = self.lora_files.get(tenant) {
+            return Ok(f.clone());
+        }
+        let path = self.lora_paths.get(tenant)
+            .with_context(|| format!(
+                "no lora/svd adapter for {tenant} (lora mode only serves \
+tenants with svd factors)"))?;
+        let f = Rc::new(LoraFile::load(path, &self.cfg)?);
+        self.lora_files.insert(tenant.to_string(), f.clone());
+        Ok(f)
+    }
+
+    fn zero_slot_cache(&mut self, slot: usize) {
+        let per_seq = self.cfg.n_heads * self.cfg.max_seq_len
+            * self.cfg.head_dim();
+        let b = self.econfig.batch;
+        for layer in 0..self.cfg.n_layers {
+            let off = (layer * b + slot) * per_seq;
+            self.kv_k[off..off + per_seq].fill(0.0);
+            self.kv_v[off..off + per_seq].fill(0.0);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Request/response types of the serving API.
+
+use std::sync::mpsc::Sender;
+use std::time::Duration;
+
+use crate::model::sampling::SamplingParams;
+
+/// A generation request addressed to one tenant (fine-tune identity).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub tenant: String,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+}
+
+/// Completed generation plus serving telemetry.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tenant: String,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// end-to-end latency (enqueue -> completion)
+    pub latency: Duration,
+    /// time to first generated token
+    pub ttft: Duration,
+    pub prompt_tokens: usize,
+}
+
+impl Response {
+    /// Per-token decode latency after the first token — the paper's
+    /// per-user decoding-latency metric (Fig. 6).
+    pub fn decode_latency_per_token(&self) -> Duration {
+        let n = self.tokens.len().saturating_sub(1).max(1) as u32;
+        (self.latency.saturating_sub(self.ttft)) / n
+    }
+}
+
+/// A request inside the coordinator, with its response channel.
+pub struct QueuedRequest {
+    pub request: Request,
+    pub id: u64,
+    pub respond: Option<Sender<Response>>,
+    pub enqueued_at: std::time::Instant,
+}
+
+impl QueuedRequest {
+    pub fn new(request: Request, id: u64, respond: Sender<Response>)
+               -> Self {
+        Self { request, id, respond: Some(respond),
+               enqueued_at: std::time::Instant::now() }
+    }
+
+    /// Channel-less constructor for unit tests.
+    pub fn for_test(request: Request, id: u64) -> Self {
+        Self { request, id, respond: None,
+               enqueued_at: std::time::Instant::now() }
+    }
+}

@@ -1,0 +1,12 @@
+//! Analytical models of serving cost.
+//!
+//! * [`memory`] — exact byte accounting of multi-tenant serving
+//!   (weights + deltas + KV cache + activations) against a device
+//!   capacity. Regenerates **Table 5** (compression factors, on the real
+//!   Llama-2/Mistral dims) and **Figure 5** (memory vs batch, naive OOM).
+//! * [`latency`] — a bandwidth-roofline latency model that predicts the
+//!   decode-latency crossovers of **Figures 4/6** from bytes moved,
+//!   cross-checkable against the measured CPU kernels.
+
+pub mod latency;
+pub mod memory;

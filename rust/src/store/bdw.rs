@@ -1,0 +1,312 @@
+//! BDW (`BDW1`) container: named tensors with an FNV-1a integrity footer.
+//!
+//! Layout (little-endian), mirroring `python/compile/serialize.py`:
+//!
+//! ```text
+//! magic   4s  = "BDW1"
+//! version u32 = 1
+//! count   u32
+//! count × [ name_len u16 | name | dtype u8 | ndim u8 | dims u32×ndim
+//!           | size u64 | payload ]
+//! fnv1a   u64   (over every payload byte, in order)
+//! ```
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"BDW1";
+pub const VERSION: u32 = 1;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+}
+
+impl Dtype {
+    fn from_id(id: u8) -> Result<Self> {
+        Ok(match id {
+            0 => Dtype::F32,
+            1 => Dtype::U8,
+            2 => Dtype::I32,
+            _ => bail!("unknown dtype id {id}"),
+        })
+    }
+
+    fn id(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::U8 => 1,
+            Dtype::I32 => 2,
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+}
+
+/// One stored tensor: raw little-endian payload plus shape/dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RawTensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl RawTensor {
+    pub fn f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: Dtype::F32, shape, bytes }
+    }
+
+    pub fn u8(shape: Vec<usize>, values: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Self { dtype: Dtype::U8, shape, bytes: values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode as f32 (fails on other dtypes).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self.bytes.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != Dtype::U8 {
+            bail!("tensor is {:?}, not U8", self.dtype);
+        }
+        Ok(&self.bytes)
+    }
+
+    pub fn to_tensor(&self) -> Result<crate::tensor::Tensor> {
+        Ok(crate::tensor::Tensor::new(self.shape.clone(), self.as_f32()?))
+    }
+}
+
+/// An ordered named-tensor container.
+#[derive(Debug, Default, Clone)]
+pub struct Bdw {
+    pub names: Vec<String>,
+    pub tensors: HashMap<String, RawTensor>,
+}
+
+impl Bdw {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: RawTensor) {
+        let name = name.into();
+        if !self.tensors.contains_key(&name) {
+            self.names.push(name.clone());
+        }
+        self.tensors.insert(name, t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&RawTensor> {
+        self.tensors.get(name)
+            .with_context(|| format!("tensor {name} not in container \
+(has: {:?}...)", &self.names[..self.names.len().min(4)]))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    /// Total payload bytes (the on-disk weight size, Table 5 accounting).
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.bytes.len()).sum()
+    }
+}
+
+#[inline]
+fn fnv1a(mut state: u64, data: &[u8]) -> u64 {
+    for &b in data {
+        state = (state ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// Write a BDW container.
+pub fn write_bdw(path: impl AsRef<Path>, bdw: &Bdw) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(bdw.names.len() as u32).to_le_bytes());
+    let mut csum = FNV_OFFSET;
+    for name in &bdw.names {
+        let t = &bdw.tensors[name];
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.push(t.dtype.id());
+        buf.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        buf.extend_from_slice(&(t.bytes.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&t.bytes);
+        csum = fnv1a(csum, &t.bytes);
+    }
+    buf.extend_from_slice(&csum.to_le_bytes());
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read and verify a BDW container.
+pub fn read_bdw(path: impl AsRef<Path>) -> Result<Bdw> {
+    let buf = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    parse_bdw(&buf)
+}
+
+pub fn parse_bdw(buf: &[u8]) -> Result<Bdw> {
+    if buf.len() < 20 || &buf[..4] != MAGIC {
+        bail!("not a BDW1 container");
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into()?);
+    if version != VERSION {
+        bail!("unsupported BDW version {version}");
+    }
+    let count = u32::from_le_bytes(buf[8..12].try_into()?) as usize;
+    let mut off = 12usize;
+    let mut out = Bdw::new();
+    let mut csum = FNV_OFFSET;
+
+    let need = |off: usize, n: usize| -> Result<()> {
+        if off + n > buf.len() {
+            bail!("truncated BDW container at offset {off}");
+        }
+        Ok(())
+    };
+
+    for _ in 0..count {
+        need(off, 2)?;
+        let nlen = u16::from_le_bytes(buf[off..off + 2].try_into()?) as usize;
+        off += 2;
+        need(off, nlen)?;
+        let name = std::str::from_utf8(&buf[off..off + nlen])
+            .context("tensor name not utf-8")?.to_string();
+        off += nlen;
+        need(off, 2)?;
+        let dtype = Dtype::from_id(buf[off])?;
+        let ndim = buf[off + 1] as usize;
+        off += 2;
+        need(off, 4 * ndim)?;
+        let mut shape = Vec::with_capacity(ndim);
+        for i in 0..ndim {
+            shape.push(u32::from_le_bytes(
+                buf[off + 4 * i..off + 4 * i + 4].try_into()?) as usize);
+        }
+        off += 4 * ndim;
+        need(off, 8)?;
+        let size = u64::from_le_bytes(buf[off..off + 8].try_into()?) as usize;
+        off += 8;
+        need(off, size)?;
+        let payload = buf[off..off + size].to_vec();
+        off += size;
+        let expect = shape.iter().product::<usize>() * dtype.size();
+        if expect != size {
+            bail!("tensor {name}: shape {shape:?} x {dtype:?} = {expect} \
+bytes but payload is {size}");
+        }
+        csum = fnv1a(csum, &payload);
+        out.insert(name, RawTensor { dtype, shape, bytes: payload });
+    }
+    need(off, 8)?;
+    let want = u64::from_le_bytes(buf[off..off + 8].try_into()?);
+    if csum != want {
+        bail!("BDW checksum mismatch: computed {csum:#x}, stored {want:#x}");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Bdw {
+        let mut b = Bdw::new();
+        b.insert("w", RawTensor::f32(vec![2, 3],
+                                     &[1.0, -2.0, 3.5, 0.0, 1e-9, -7.25]));
+        b.insert("bits", RawTensor::u8(vec![4], vec![0xDE, 0xAD, 0xBE, 0xEF]));
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("bdw_test_rt.bdw");
+        let b = sample();
+        write_bdw(&dir, &b).unwrap();
+        let r = read_bdw(&dir).unwrap();
+        assert_eq!(r.names, b.names);
+        assert_eq!(r.get("w").unwrap(), b.get("w").unwrap());
+        assert_eq!(r.get("bits").unwrap().as_u8().unwrap(),
+                   &[0xDE, 0xAD, 0xBE, 0xEF]);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let b = sample();
+        let dir = std::env::temp_dir().join("bdw_test_corrupt.bdw");
+        write_bdw(&dir, &b).unwrap();
+        let mut buf = std::fs::read(&dir).unwrap();
+        // flip a payload bit
+        let n = buf.len();
+        buf[n - 20] ^= 0x01;
+        assert!(parse_bdw(&buf).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let b = sample();
+        let dir = std::env::temp_dir().join("bdw_test_trunc.bdw");
+        write_bdw(&dir, &b).unwrap();
+        let buf = std::fs::read(&dir).unwrap();
+        assert!(parse_bdw(&buf[..buf.len() - 9]).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(parse_bdw(b"NOTBDW00000000000000").is_err());
+    }
+
+    #[test]
+    fn f32_decode() {
+        let t = RawTensor::f32(vec![3], &[1.0, 2.0, 3.0]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(t.as_u8().is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Delta and LoRA views over BDW containers.
+//!
+//! A **delta file** (`.bdd`, produced by python's `write_delta` or rust's
+//! [`crate::delta::bitdelta::compress`]) holds, per fidelity level `k`:
+//! `scales.{k}` (f32 `[n_linears]`) and `bits.{k}.{linear}` (u8 packed
+//! signs), plus per-tenant full-precision `extra.{name}` tensors.
+//!
+//! A **LoRA file** holds `lora_a.{linear}` (`[r, M]`) / `lora_b.{linear}`
+//! (`[N, r]`) factors plus the same `extra.*` tensors.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::store::bdw::{read_bdw, Bdw, RawTensor};
+
+/// One 1-bit mask level: packed sign matrices + per-matrix scales.
+#[derive(Debug, Clone)]
+pub struct MaskLevel {
+    /// `linear name -> packed u8 [N, M/8]`, row-major, LSB-first columns.
+    pub bits: HashMap<String, Vec<u8>>,
+    /// Scale α per linear, `linear_names()` order.
+    pub scales: Vec<f32>,
+}
+
+/// A parsed BitDelta delta: ≥1 mask levels plus per-tenant extras.
+#[derive(Debug, Clone)]
+pub struct DeltaFile {
+    pub levels: Vec<MaskLevel>,
+    /// Full-precision per-tenant params (embeddings, norms, head).
+    pub extras: HashMap<String, RawTensor>,
+}
+
+impl DeltaFile {
+    pub fn load(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Self> {
+        Self::from_bdw(&read_bdw(path)?, cfg)
+    }
+
+    pub fn from_bdw(bdw: &Bdw, cfg: &ModelConfig) -> Result<Self> {
+        let lin = cfg.linear_names();
+        let mut levels = Vec::new();
+        for level in 0.. {
+            let sname = format!("scales.{level}");
+            if !bdw.contains(&sname) {
+                break;
+            }
+            let scales = bdw.get(&sname)?.as_f32()?;
+            if scales.len() != lin.len() {
+                bail!("scales.{level} has {} entries, want {}",
+                      scales.len(), lin.len());
+            }
+            let mut bits = HashMap::new();
+            for name in &lin {
+                let t = bdw.get(&format!("bits.{level}.{name}"))?;
+                let (n, mp) = cfg.packed_shape(name);
+                if t.shape != vec![n, mp] {
+                    bail!("bits.{level}.{name}: shape {:?}, want [{n},{mp}]",
+                          t.shape);
+                }
+                bits.insert(name.clone(), t.as_u8()?.to_vec());
+            }
+            levels.push(MaskLevel { bits, scales });
+        }
+        if levels.is_empty() {
+            bail!("no mask levels in delta file");
+        }
+        let mut extras = HashMap::new();
+        for name in &bdw.names {
+            if let Some(stripped) = name.strip_prefix("extra.") {
+                extras.insert(stripped.to_string(),
+                              bdw.get(name)?.clone());
+            }
+        }
+        for name in cfg.nonlinear_names() {
+            if !extras.contains_key(&name) {
+                bail!("delta file missing extra.{name}");
+            }
+        }
+        Ok(Self { levels, extras })
+    }
+
+    /// Serialize back to a BDW container (rust-native compressor output).
+    pub fn to_bdw(&self, cfg: &ModelConfig) -> Bdw {
+        let mut bdw = Bdw::new();
+        for (level, m) in self.levels.iter().enumerate() {
+            bdw.insert(format!("scales.{level}"),
+                       RawTensor::f32(vec![m.scales.len()], &m.scales));
+            for name in cfg.linear_names() {
+                let (n, mp) = cfg.packed_shape(&name);
+                bdw.insert(format!("bits.{level}.{name}"),
+                           RawTensor::u8(vec![n, mp],
+                                         m.bits[&name].clone()));
+            }
+        }
+        let mut extra_names: Vec<&String> = self.extras.keys().collect();
+        extra_names.sort();
+        for name in extra_names {
+            bdw.insert(format!("extra.{name}"), self.extras[name].clone());
+        }
+        bdw
+    }
+
+    /// Bytes this delta occupies (packed bits + scales + fp extras) — the
+    /// Table 5 "Δ size" accounting.
+    pub fn delta_bytes(&self) -> usize {
+        let mask_bytes: usize = self.levels.iter().map(|l| {
+            l.bits.values().map(|b| b.len()).sum::<usize>()
+                + l.scales.len() * 4
+        }).sum();
+        let extra_bytes: usize =
+            self.extras.values().map(|t| t.bytes.len()).sum();
+        mask_bytes + extra_bytes
+    }
+}
+
+/// A parsed LoRA / SVD-factor file (kernel ABI: delta = b_up @ a_down).
+#[derive(Debug, Clone)]
+pub struct LoraFile {
+    pub rank: usize,
+    /// `linear -> a_down [r, M]` row-major.
+    pub a: HashMap<String, Vec<f32>>,
+    /// `linear -> b_up [N, r]` row-major.
+    pub b: HashMap<String, Vec<f32>>,
+    pub extras: HashMap<String, RawTensor>,
+}
+
+impl LoraFile {
+    pub fn load(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Self> {
+        let bdw = read_bdw(path)?;
+        let lin = cfg.linear_names();
+        let mut a = HashMap::new();
+        let mut b = HashMap::new();
+        let mut rank = 0usize;
+        for name in &lin {
+            let ta = bdw.get(&format!("lora_a.{name}"))?;
+            let tb = bdw.get(&format!("lora_b.{name}"))?;
+            let (n, m) = cfg.linear_shape(name);
+            if ta.shape.len() != 2 || ta.shape[1] != m {
+                bail!("lora_a.{name}: bad shape {:?}", ta.shape);
+            }
+            if tb.shape.len() != 2 || tb.shape[0] != n
+                || tb.shape[1] != ta.shape[0] {
+                bail!("lora_b.{name}: bad shape {:?}", tb.shape);
+            }
+            rank = ta.shape[0];
+            a.insert(name.clone(), ta.as_f32()?);
+            b.insert(name.clone(), tb.as_f32()?);
+        }
+        let mut extras = HashMap::new();
+        for name in &bdw.names {
+            if let Some(stripped) = name.strip_prefix("extra.") {
+                extras.insert(stripped.to_string(), bdw.get(name)?.clone());
+            }
+        }
+        Ok(Self { rank, a, b, extras })
+    }
+
+    pub fn delta_bytes(&self) -> usize {
+        let fac: usize = self.a.values().chain(self.b.values())
+            .map(|v| v.len() * 4).sum();
+        let extra: usize = self.extras.values().map(|t| t.bytes.len()).sum();
+        fac + extra
+    }
+}
+
+/// Load a full-precision model BDW into `name -> RawTensor`, validating
+/// every canonical parameter is present with the right shape.
+pub fn load_model(path: impl AsRef<Path>, cfg: &ModelConfig)
+                  -> Result<HashMap<String, RawTensor>> {
+    let bdw = read_bdw(path.as_ref())?;
+    let mut out = HashMap::new();
+    for name in cfg.param_names() {
+        let t = bdw.get(&name)
+            .with_context(|| format!("model {:?}", path.as_ref()))?;
+        let want = cfg.param_shape(&name);
+        if t.shape != want {
+            bail!("param {name}: shape {:?}, want {:?}", t.shape, want);
+        }
+        out.insert(name, t.clone());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::packing::pack_signs;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(), vocab_size: 16, d_model: 8, n_layers: 1,
+            n_heads: 2, d_ff: 16, max_seq_len: 16,
+            rope_theta: 1e4, norm_eps: 1e-5,
+        }
+    }
+
+    fn tiny_delta(cfg: &ModelConfig) -> DeltaFile {
+        let mut bits = HashMap::new();
+        let mut scales = Vec::new();
+        for (i, name) in cfg.linear_names().iter().enumerate() {
+            let (n, m) = cfg.linear_shape(name);
+            let vals: Vec<f32> = (0..n * m)
+                .map(|j| if (i + j) % 3 == 0 { -1.0 } else { 1.0 }).collect();
+            bits.insert(name.clone(), pack_signs(&vals, m));
+            scales.push(0.01 * (i + 1) as f32);
+        }
+        let mut extras = HashMap::new();
+        for name in cfg.nonlinear_names() {
+            let shape = cfg.param_shape(&name);
+            let n: usize = shape.iter().product();
+            extras.insert(name,
+                          RawTensor::f32(shape, &vec![0.5f32; n]));
+        }
+        DeltaFile { levels: vec![MaskLevel { bits, scales }], extras }
+    }
+
+    #[test]
+    fn delta_roundtrip_via_bdw() {
+        let cfg = tiny_cfg();
+        let d = tiny_delta(&cfg);
+        let bdw = d.to_bdw(&cfg);
+        let d2 = DeltaFile::from_bdw(&bdw, &cfg).unwrap();
+        assert_eq!(d2.levels.len(), 1);
+        for name in cfg.linear_names() {
+            assert_eq!(d.levels[0].bits[&name], d2.levels[0].bits[&name]);
+        }
+        assert_eq!(d.levels[0].scales, d2.levels[0].scales);
+        assert_eq!(d.delta_bytes(), d2.delta_bytes());
+    }
+
+    #[test]
+    fn missing_extra_rejected() {
+        let cfg = tiny_cfg();
+        let d = tiny_delta(&cfg);
+        let mut bdw = d.to_bdw(&cfg);
+        let pos = bdw.names.iter()
+            .position(|n| n == "extra.tok_embed").unwrap();
+        bdw.names.remove(pos);
+        bdw.tensors.remove("extra.tok_embed");
+        assert!(DeltaFile::from_bdw(&bdw, &cfg).is_err());
+    }
+}

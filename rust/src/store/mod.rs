@@ -1,0 +1,11 @@
+//! Artifact storage: the BDW tensor container and its delta/LoRA
+//! interpretations.
+//!
+//! * [`bdw`] — reader/writer for the `BDW1` container (the python twin is
+//!   `python/compile/serialize.py`; the two must agree bit-for-bit).
+//! * [`delta_file`] — views a BDW container as a BitDelta delta
+//!   (`bits.{level}.{linear}` / `scales.{level}` / `extra.{name}`) or a
+//!   LoRA/SVD factor file (`lora_a.*` / `lora_b.*`).
+
+pub mod bdw;
+pub mod delta_file;

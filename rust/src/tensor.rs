@@ -1,0 +1,223 @@
+//! Minimal dense f32 tensor — the substrate for the rust-native
+//! compressor, the SVD baseline, and the CPU GEMV kernels.
+//!
+//! Deliberately tiny: contiguous row-major storage, shape vector, and the
+//! handful of ops the compression path needs. Model *serving* math runs
+//! inside the AOT HLO executables, not here.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random tensor (xorshift) for tests/benches.
+    pub fn randn(shape: Vec<usize>, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..(n + 1) / 2 {
+            // Box-Muller over two uniform draws
+            let u1 = (next_u64(&mut state) >> 11) as f64 / (1u64 << 53) as f64;
+            let u2 = (next_u64(&mut state) >> 11) as f64 / (1u64 << 53) as f64;
+            let r = (-2.0 * (u1.max(1e-12)).ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            data.push((r * c) as f32);
+            data.push((r * s) as f32);
+        }
+        data.truncate(n);
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.ndim(), 2, "dims2 on {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Element-wise subtraction: `self - other`.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data)
+            .map(|(a, b)| a - b).collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data)
+            .map(|(a, b)| a + b).collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::new(self.shape.clone(),
+                    self.data.iter().map(|a| a * s).collect())
+    }
+
+    /// Mean of |x| — BitDelta's optimal scale (Eq. 4).
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self.data.iter().map(|a| a.abs() as f64).sum();
+        (s / self.data.len() as f64) as f32
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        (self.data.iter().map(|a| (a * a) as f64).sum::<f64>()).sqrt() as f32
+    }
+
+    /// `self @ other` for 2-D tensors (reference-quality triple loop with
+    /// an ikj ordering; hot-path GEMMs live in [`crate::gemm`]).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (n, k) = self.dims2();
+        let (k2, m) = other.dims2();
+        assert_eq!(k, k2, "matmul {:?} x {:?}", self.shape, other.shape);
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &other.data[p * m..(p + 1) * m];
+                let orow = &mut out[i * m..(i + 1) * m];
+                for j in 0..m {
+                    orow[j] += a * row[j];
+                }
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Transpose of a 2-D tensor.
+    pub fn t(&self) -> Tensor {
+        let (n, m) = self.dims2();
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                out[j * n + i] = self.data[i * m + j];
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Max |x| per row (used by the RTN quantizer).
+    pub fn row_abs_max(&self) -> Vec<f32> {
+        let (n, m) = self.dims2();
+        (0..n).map(|i| {
+            self.data[i * m..(i + 1) * m].iter()
+                .fold(0.0f32, |acc, v| acc.max(v.abs()))
+        }).collect()
+    }
+}
+
+#[inline]
+fn next_u64(state: &mut u64) -> u64 {
+    // xorshift64*
+    let mut x = *state;
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    *state = x;
+    x.wrapping_mul(0x2545F4914F6CDD1D)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::randn(vec![4, 4], 1);
+        let mut eye = Tensor::zeros(vec![4, 4]);
+        for i in 0..4 {
+            eye.data_mut()[i * 4 + i] = 1.0;
+        }
+        let b = a.matmul(&eye);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::randn(vec![3, 5], 2);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn mean_abs_simple() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -1.0, 3.0, -3.0]);
+        assert!((t.mean_abs() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randn_roughly_standard() {
+        let t = Tensor::randn(vec![10_000], 7);
+        let mean: f32 = t.data().iter().sum::<f32>() / 10_000.0;
+        let var: f32 = t.data().iter().map(|x| x * x).sum::<f32>() / 10_000.0;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+}

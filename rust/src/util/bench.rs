@@ -1,0 +1,112 @@
+//! Criterion-substitute timing harness for `rust/benches/*`.
+//!
+//! Warmup, fixed sample count, and a one-line report with
+//! mean / p50 / min — enough to read kernel and end-to-end latency
+//! shapes for Figures 4/6.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn p50(&self) -> Duration {
+        let mut v = self.samples.clone();
+        v.sort();
+        v[v.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn report(&self) -> String {
+        format!("{:<44} mean {:>12?}  p50 {:>12?}  min {:>12?}  (n={})",
+                self.name, self.mean(), self.p50(), self.min(),
+                self.samples.len())
+    }
+}
+
+/// Benchmark runner: `iters` timed samples after `warmup` untimed runs.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f` (which should do one unit of work per call).
+    pub fn run<F: FnMut()>(&mut self, name: impl Into<String>, mut f: F)
+                           -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        let m = Measurement { name: name.into(), samples };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Emit a CSV block (series for plots).
+    pub fn csv(&self, header: &str) -> String {
+        let mut out = format!("{header}\n");
+        for m in &self.results {
+            out.push_str(&format!("{},{:.3}\n", m.name,
+                                  m.mean().as_secs_f64() * 1e6));
+        }
+        out
+    }
+}
+
+/// Prevent the optimiser from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new(1, 5);
+        let mut acc = 0u64;
+        b.run("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean() > Duration::ZERO);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut b = Bench::new(0, 2);
+        b.run("a", || {});
+        let csv = b.csv("name,us");
+        assert!(csv.starts_with("name,us\n"));
+        assert!(csv.contains("a,"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Tiny `--flag value` argument parser (clap substitute).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: one subcommand + `--key value` flags +
+/// boolean `--key` switches.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn parse_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // value flag if next token exists and isn't a flag
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(),
+                                         it.next().unwrap());
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --mode bitdelta --batch 4 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("mode"), Some("bitdelta"));
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 4);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("table1");
+        assert_eq!(a.get_or("artifacts", "artifacts"), "artifacts");
+        assert_eq!(a.get_usize("batch", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+}

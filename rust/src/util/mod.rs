@@ -1,0 +1,15 @@
+//! In-tree substitutes for crates unavailable on the offline build image
+//! (`serde_json`, `clap`, `criterion`, `proptest`):
+//!
+//! * [`json`]  — a small, strict JSON parser + typed accessors (manifest
+//!   and eval-set loading).
+//! * [`cli`]   — flag/positional argument parsing for the `repro` binary.
+//! * [`bench`] — a criterion-style timing harness (warmup, N samples,
+//!   mean/p50/min) used by every `rust/benches/*` target.
+//! * [`prop`]  — seeded random-case property-test driver (the proptest
+//!   substitute used across the unit suites).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

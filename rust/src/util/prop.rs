@@ -1,0 +1,100 @@
+//! Seeded random-case property testing (proptest substitute).
+//!
+//! `run_cases(n, |rng| { ... })` drives a closure over `n` independent
+//! deterministic RNG streams; assertion failures report the case seed so
+//! a failure reproduces with `case(seed)`.
+
+/// Deterministic RNG (splitmix64 stream).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + (self.next_u64() as usize) % (hi - lo)
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn f32_pm1(&mut self) -> f32 {
+        (self.next_u64() >> 41) as f32 / (1u64 << 23) as f32 * 2.0 - 1.0
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_pm1()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len())]
+    }
+}
+
+/// Run `n` random cases; panics include the failing seed.
+pub fn run_cases<F: Fn(&mut Rng)>(n: usize, f: F) {
+    for seed in 0..n as u64 {
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e.downcast_ref::<String>().cloned()
+                .or_else(|| e.downcast_ref::<&str>()
+                         .map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.usize_in(3, 9);
+            assert!((3..9).contains(&v));
+            let f = r.f32_pm1();
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "case seed")]
+    fn failure_reports_seed() {
+        run_cases(5, |rng| {
+            assert!(rng.usize_in(0, 10) < 100);
+            if rng.usize_in(0, 3) == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration: the multi-tenant serving engine over real artifacts.
+//! Pins tenant isolation, compression cross-checks, and the concurrent
+//! front-end. Skipped cleanly when artifacts are missing.
+
+use std::path::Path;
+
+use bitdelta::config::{Manifest, ModelConfig};
+use bitdelta::delta::bitdelta::compress;
+use bitdelta::model::sampling::SamplingParams;
+use bitdelta::serving::engine::{Engine, EngineConfig, ExecMode};
+use bitdelta::serving::request::Request;
+use bitdelta::serving::service::ServingService;
+use bitdelta::store::delta_file::{load_model, DeltaFile};
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built");
+    }
+    ok
+}
+
+fn req(tenant: &str, prompt: &str, n: usize) -> Request {
+    Request { tenant: tenant.into(), prompt: prompt.into(),
+              max_new_tokens: n, sampling: SamplingParams::greedy() }
+}
+
+#[test]
+fn engine_serves_and_isolates_tenants() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = 2;
+    let mut engine = Engine::from_artifacts(ec).unwrap();
+
+    // same prompt to two different tenants in ONE batch: outputs must
+    // reflect each tenant's own delta (greedy => deterministic)
+    let prompt = "Q: what color is the sky ?\nA:";
+    let c1 = engine.submit(req("sim-s-chat", prompt, 16)).unwrap();
+    let c2 = engine.submit(req("sim-s-math", prompt, 16)).unwrap();
+    engine.run_until_idle(100_000).unwrap();
+    let r1 = c1.recv().unwrap();
+    let r2 = c2.recv().unwrap();
+    assert!(!r1.tokens.is_empty() && !r2.tokens.is_empty());
+    assert_ne!(r1.tokens, r2.tokens,
+               "different tenants produced identical output: {:?}",
+               r1.text);
+    // the chat tenant actually answers the question
+    assert!(r1.text.contains("blue") || r1.text.contains("sky"),
+            "chat tenant said {:?}", r1.text);
+}
+
+#[test]
+fn greedy_generation_is_deterministic_across_batches() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |batch: usize| -> Vec<i32> {
+        let mut ec = EngineConfig::new("artifacts");
+        ec.batch = batch;
+        let mut engine = Engine::from_artifacts(ec).unwrap();
+        let c = engine.submit(
+            req("sim-s-chat", "Q: where does ada live ?\nA:", 12))
+            .unwrap();
+        engine.run_until_idle(100_000).unwrap();
+        c.recv().unwrap().tokens
+    };
+    // same request alone at batch width 1 and width 2 (padded slots)
+    assert_eq!(run(1), run(2));
+}
+
+#[test]
+fn rust_compressor_matches_python_artifact() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    let cfg: ModelConfig = m.config("sim-s").unwrap().clone();
+    let base = load_model(m.path(&m.models["sim-s-base"].file),
+                          &cfg).unwrap();
+    let fine = load_model(m.path(&m.models["sim-s-chat"].file),
+                          &cfg).unwrap();
+    let ours = compress(&cfg, &base, &fine).unwrap();
+    let t = &m.tenants["sim-s-chat"];
+    let py = DeltaFile::load(m.path(&t.delta_initial), &cfg).unwrap();
+    for name in cfg.linear_names() {
+        assert_eq!(py.levels[0].bits[&name],
+                   ours.delta.levels[0].bits[&name],
+                   "sign masks differ on {name}");
+    }
+    for (a, b) in py.levels[0].scales.iter()
+        .zip(&ours.delta.levels[0].scales) {
+        assert!((a - b).abs() <= 1e-5 * a.abs().max(1e-3),
+                "python {a} vs rust {b}");
+    }
+}
+
+#[test]
+fn service_handles_concurrent_clients() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = 4;
+    let service = ServingService::spawn(ec).unwrap();
+    let mut clients = Vec::new();
+    for i in 0..3 {
+        let h = service.handle();
+        clients.push(std::thread::spawn(move || {
+            let tenant = ["sim-s-chat", "sim-s-math",
+                          "sim-s-rlhf"][i % 3];
+            h.generate(req(tenant, "Q: what does bob eat ?\nA:", 8))
+        }));
+    }
+    for c in clients {
+        let resp = c.join().unwrap().unwrap();
+        assert!(!resp.tokens.is_empty());
+    }
+    let metrics = service.handle().metrics().unwrap();
+    assert!(metrics.contains("bitdelta_completed_total 3"), "{metrics}");
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn unknown_tenant_rejected_via_service() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = 1;
+    let service = ServingService::spawn(ec).unwrap();
+    let err = service.handle()
+        .generate(req("no-such-tenant", "Q:", 4));
+    assert!(err.is_err());
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn naive_and_lora_modes_serve() {
+    if !have_artifacts() {
+        return;
+    }
+    for mode in [ExecMode::Naive, ExecMode::Lora] {
+        let mut ec = EngineConfig::new("artifacts");
+        ec.mode = mode;
+        ec.batch = 2;
+        let mut engine = Engine::from_artifacts(ec).unwrap();
+        let c = engine.submit(
+            req("sim-s-chat", "Q: what color is the snow ?\nA:", 12))
+            .unwrap();
+        engine.run_until_idle(100_000).unwrap();
+        let r = c.recv().unwrap();
+        assert!(!r.tokens.is_empty(), "{mode:?} produced nothing");
+    }
+}
+
+#[test]
+fn rope_extension_tenant_uses_scaled_positions() {
+    if !have_artifacts() {
+        return;
+    }
+    // chat and chat-ext share training data but differ in rope_scale;
+    // greedy outputs on the same prompt should diverge
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = 2;
+    let mut engine = Engine::from_artifacts(ec).unwrap();
+    let prompt = "Q: where does kim live ?\nA:";
+    let c1 = engine.submit(req("sim-s-chat", prompt, 16)).unwrap();
+    let c2 = engine.submit(req("sim-s-chat-ext", prompt, 16)).unwrap();
+    engine.run_until_idle(100_000).unwrap();
+    let r1 = c1.recv().unwrap();
+    let r2 = c2.recv().unwrap();
+    assert_ne!(r1.tokens, r2.tokens);
+}

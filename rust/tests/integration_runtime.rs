@@ -1,0 +1,181 @@
+//! Integration: rust PJRT runtime over the real AOT artifacts.
+//!
+//! Skipped (cleanly) when `artifacts/` hasn't been built — run
+//! `make artifacts` first. These tests pin the python↔rust executable
+//! ABI: positional argument order, output tuple layout, and numerical
+//! agreement between independent execution paths.
+
+use std::path::Path;
+
+use bitdelta::config::Manifest;
+use bitdelta::delta::bitdelta::materialize;
+use bitdelta::model::tokenizer::ByteTokenizer;
+use bitdelta::runtime::client::{literal_f32, Runtime};
+use bitdelta::runtime::variants::{BaseLinears, BitDeltaArgs, DecodeOut,
+                                  DenseArgs};
+use bitdelta::store::delta_file::{load_model, DeltaFile};
+
+fn artifacts() -> Option<Manifest> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Manifest::load("artifacts").unwrap())
+}
+
+#[test]
+fn logits_fwd_runs_and_is_causal() {
+    let Some(m) = artifacts() else { return };
+    let cfg = m.config("sim-s").unwrap().clone();
+    let exec = m.find_exec("sim-s", "logits_fwd", 8).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    let exe = rt.load(m.path(&exec.path)).unwrap();
+    let model = load_model(
+        m.path(&m.models["sim-s-base"].file), &cfg).unwrap();
+    let args = DenseArgs::from_model(&rt, &cfg, &model).unwrap();
+
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode("the sky is");
+    let run = |toks: &[i32]| -> Vec<f32> {
+        let mut rows = vec![0i32; exec.batch * exec.seq];
+        rows[..toks.len()].copy_from_slice(toks);
+        let tbuf = rt.upload_i32(&rows, &[exec.batch, exec.seq]).unwrap();
+        let mut a: Vec<&xla::PjRtBuffer> = args.refs();
+        a.push(&tbuf);
+        let lits = exe.run_buffers(&a).unwrap();
+        literal_f32(&lits[0]).unwrap()
+    };
+
+    let l1 = run(&prompt);
+    assert_eq!(l1.len(), exec.batch * exec.seq * cfg.vocab_size);
+    assert!(l1.iter().all(|v| v.is_finite()));
+
+    // causality: changing the LAST token must not change logits at
+    // earlier positions (row 0)
+    let mut p2 = prompt.clone();
+    let last = p2.len() - 1;
+    p2[last] = (p2[last] + 1) % 256;
+    let l2 = run(&p2);
+    let v = cfg.vocab_size;
+    for pos in 0..last {
+        for j in 0..v {
+            let a = l1[pos * v + j];
+            let b = l2[pos * v + j];
+            assert!((a - b).abs() < 1e-4,
+                    "pos {pos} logit {j}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn decode_bitdelta_matches_materialized_dense() {
+    // The serving path (shared base + packed delta through the Pallas
+    // kernel) must equal the dequantized dense forward — the invariant
+    // that lets the eval harness use the dense path for quality tables.
+    let Some(m) = artifacts() else { return };
+    let cfg = m.config("sim-s").unwrap().clone();
+    let mut rt = Runtime::cpu().unwrap();
+
+    let base = load_model(
+        m.path(&m.models["sim-s-base"].file), &cfg).unwrap();
+    let t = &m.tenants["sim-s-chat"];
+    let delta = DeltaFile::load(m.path(&t.delta), &cfg).unwrap();
+    let dense = materialize(&cfg, &base, &delta).unwrap();
+
+    let b = 1usize;
+    let bd_exec = m.find_exec("sim-s", "decode_bitdelta", b).unwrap();
+    let dn_exec = m.find_exec("sim-s", "decode_dense", b).unwrap();
+    let bd = rt.load(m.path(&bd_exec.path)).unwrap();
+    let dn = rt.load(m.path(&dn_exec.path)).unwrap();
+
+    let base_lin = BaseLinears::from_model(&rt, &cfg, &base).unwrap();
+    let stacked = BitDeltaArgs::assemble(&rt, &cfg, &[&delta], b).unwrap();
+    let dense_args = DenseArgs::from_model(&rt, &cfg, &dense).unwrap();
+
+    let kv_shape = [cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len,
+                    cfg.head_dim()];
+    let kv_len: usize = kv_shape.iter().product();
+    let zeros = vec![0f32; kv_len];
+    let tok = ByteTokenizer::new();
+    let seq = tok.encode("Q: hi\nA:");
+
+    let mut kv1 = (zeros.clone(), zeros.clone());
+    let mut kv2 = (zeros.clone(), zeros.clone());
+    for (t_i, &token) in seq.iter().enumerate() {
+        let pos = rt.upload_i32(&[t_i as i32], &[b]).unwrap();
+        let tk = rt.upload_i32(&[token], &[b]).unwrap();
+        let rope = rt.upload_f32(&[1.0], &[b]).unwrap();
+
+        let k1 = rt.upload_f32(&kv1.0, &kv_shape).unwrap();
+        let v1 = rt.upload_f32(&kv1.1, &kv_shape).unwrap();
+        let mut a1: Vec<&xla::PjRtBuffer> =
+            base_lin.buffers.iter().collect();
+        a1.extend(stacked.bits.iter());
+        a1.push(&stacked.scales);
+        a1.extend(stacked.extras.iter());
+        a1.extend([&k1, &v1, &pos, &tk, &rope]);
+        let o1 = DecodeOut::from_literals(
+            bd.run_buffers(&a1).unwrap(), b).unwrap();
+        kv1 = (o1.k.clone(), o1.v.clone());
+
+        let k2 = rt.upload_f32(&kv2.0, &kv_shape).unwrap();
+        let v2 = rt.upload_f32(&kv2.1, &kv_shape).unwrap();
+        let mut a2: Vec<&xla::PjRtBuffer> = dense_args.refs();
+        a2.extend([&k2, &v2, &pos, &tk, &rope]);
+        let o2 = DecodeOut::from_literals(
+            dn.run_buffers(&a2).unwrap(), b).unwrap();
+        kv2 = (o2.k.clone(), o2.v.clone());
+
+        for (x, y) in o1.logits.iter().zip(&o2.logits) {
+            assert!((x - y).abs() < 2e-2,
+                    "step {t_i}: bitdelta {x} vs dense {y}");
+        }
+    }
+}
+
+#[test]
+fn logits_bitdelta_executable_cross_check() {
+    // The full-sequence Pallas serving path == dense materialized path
+    // through the OTHER executable pair (logits_bitdelta vs logits_fwd).
+    let Some(m) = artifacts() else { return };
+    let cfg = m.config("sim-s").unwrap().clone();
+    let mut rt = Runtime::cpu().unwrap();
+
+    let base = load_model(
+        m.path(&m.models["sim-s-base"].file), &cfg).unwrap();
+    let t = &m.tenants["sim-s-chat"];
+    let delta = DeltaFile::load(m.path(&t.delta), &cfg).unwrap();
+    let dense = materialize(&cfg, &base, &delta).unwrap();
+
+    let bd_exec = m.find_exec("sim-s", "logits_bitdelta", 1).unwrap();
+    let fwd_exec = m.find_exec("sim-s", "logits_fwd", 1).unwrap();
+    let bd = rt.load(m.path(&bd_exec.path)).unwrap();
+    let fwd = rt.load(m.path(&fwd_exec.path)).unwrap();
+
+    let tok = ByteTokenizer::new();
+    let mut toks = vec![0i32; bd_exec.seq];
+    let prompt = tok.encode("Q: what color is the sky ?\nA: the sky is");
+    toks[..prompt.len()].copy_from_slice(&prompt);
+    let tbuf = rt.upload_i32(&toks, &[1, bd_exec.seq]).unwrap();
+
+    let base_lin = BaseLinears::from_model(&rt, &cfg, &base).unwrap();
+    let stacked = BitDeltaArgs::assemble(&rt, &cfg, &[&delta], 1).unwrap();
+    let mut a1: Vec<&xla::PjRtBuffer> = base_lin.buffers.iter().collect();
+    a1.extend(stacked.bits.iter());
+    a1.push(&stacked.scales);
+    a1.extend(stacked.extras.iter());
+    a1.push(&tbuf);
+    let z1 = literal_f32(&bd.run_buffers(&a1).unwrap()[0]).unwrap();
+
+    let dense_args = DenseArgs::from_model(&rt, &cfg, &dense).unwrap();
+    let mut a2: Vec<&xla::PjRtBuffer> = dense_args.refs();
+    a2.push(&tbuf);
+    let z2 = literal_f32(&fwd.run_buffers(&a2).unwrap()[0]).unwrap();
+
+    assert_eq!(z1.len(), z2.len());
+    let valid = prompt.len() * cfg.vocab_size;
+    for i in 0..valid {
+        assert!((z1[i] - z2[i]).abs() < 2e-2,
+                "logit {i}: {} vs {}", z1[i], z2[i]);
+    }
+}

@@ -1,0 +1,315 @@
+//! Randomised property tests (in-tree proptest substitute,
+//! `util::prop::run_cases`) over the invariants the coordinator and the
+//! compression substrate must hold for *every* input, not just the unit
+//! fixtures: packing round-trips, kernel linearity, quantizer optimality,
+//! router/batcher state machines, store integrity.
+
+
+use bitdelta::config::ModelConfig;
+use bitdelta::coordinator::admission::AdmissionPolicy;
+use bitdelta::coordinator::batcher::{ActiveSeq, Batcher};
+use bitdelta::coordinator::router::{Router, TenantInfo};
+use bitdelta::delta::packing::{pack_signs, popcount, unpack_signs};
+use bitdelta::gemm::{batched_binary_gemv, binary_gemv, dense_gemv,
+                     lora_gemv};
+use bitdelta::kvcache::SeqCache;
+use bitdelta::model::sampling::SamplingParams;
+use bitdelta::serving::request::{QueuedRequest, Request};
+use bitdelta::store::bdw::{parse_bdw, write_bdw, Bdw, RawTensor};
+use bitdelta::util::prop::run_cases;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), vocab_size: 16, d_model: 8,
+                  n_layers: 1, n_heads: 2, d_ff: 16, max_seq_len: 8,
+                  rope_theta: 1e4, norm_eps: 1e-5 }
+}
+
+#[test]
+fn packing_roundtrip_preserves_sign_pattern() {
+    run_cases(60, |rng| {
+        let rows = rng.usize_in(1, 6);
+        let m = rng.usize_in(1, 9) * 8;
+        let vals = rng.f32_vec(rows * m);
+        let packed = pack_signs(&vals, m);
+        assert_eq!(packed.len(), rows * m / 8);
+        let signs = unpack_signs(&packed, m);
+        for (v, s) in vals.iter().zip(&signs) {
+            assert_eq!(*s, if *v > 0.0 { 1.0 } else { -1.0 });
+        }
+        // popcount consistency
+        let pos = vals.iter().filter(|v| **v > 0.0).count();
+        assert_eq!(popcount(&packed), pos);
+    });
+}
+
+#[test]
+fn binary_gemv_is_linear_in_scale_and_x() {
+    run_cases(40, |rng| {
+        let n = rng.usize_in(1, 8);
+        let m = rng.usize_in(1, 6) * 8;
+        let vals = rng.f32_vec(n * m);
+        let bits = pack_signs(&vals, m);
+        let x = rng.f32_vec(m);
+        let alpha = 0.5 + rng.f32_pm1().abs();
+
+        let mut y1 = vec![0f32; n];
+        binary_gemv(&bits, n, m, &x, alpha, &mut y1);
+        // scale linearity
+        let mut y2 = vec![0f32; n];
+        binary_gemv(&bits, n, m, &x, 2.0 * alpha, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((2.0 * a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                    "{a} {b}");
+        }
+        // x linearity
+        let x2: Vec<f32> = x.iter().map(|v| 3.0 * v).collect();
+        let mut y3 = vec![0f32; n];
+        binary_gemv(&bits, n, m, &x2, alpha, &mut y3);
+        for (a, b) in y1.iter().zip(&y3) {
+            assert!((3.0 * a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    });
+}
+
+#[test]
+fn binary_gemv_agrees_with_dense_on_sign_matrix() {
+    run_cases(40, |rng| {
+        let n = rng.usize_in(1, 10);
+        let m = rng.usize_in(1, 5) * 8;
+        let vals = rng.f32_vec(n * m);
+        let bits = pack_signs(&vals, m);
+        let dense: Vec<f32> = vals.iter()
+            .map(|v| if *v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let x = rng.f32_vec(m);
+        let mut y1 = vec![0f32; n];
+        binary_gemv(&bits, n, m, &x, 1.0, &mut y1);
+        let mut y2 = vec![0f32; n];
+        dense_gemv(&dense, n, m, &x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn batched_binary_gemv_equals_per_tenant_loop() {
+    run_cases(25, |rng| {
+        let b = rng.usize_in(1, 5);
+        let n = rng.usize_in(1, 6);
+        let m = rng.usize_in(1, 4) * 8;
+        let vals = rng.f32_vec(b * n * m);
+        let bits: Vec<u8> = (0..b).flat_map(|bi| {
+            pack_signs(&vals[bi * n * m..(bi + 1) * n * m], m)
+        }).collect();
+        let xs = rng.f32_vec(b * m);
+        let alphas: Vec<f32> = (0..b).map(|_| rng.f32_pm1().abs() + 0.1)
+            .collect();
+        let mut ys = vec![0f32; b * n];
+        batched_binary_gemv(&bits, n, m, &xs, &alphas, b, &mut ys);
+        for bi in 0..b {
+            let mut y = vec![0f32; n];
+            binary_gemv(&bits[bi * n * m / 8..(bi + 1) * n * m / 8],
+                        n, m, &xs[bi * m..(bi + 1) * m], alphas[bi],
+                        &mut y);
+            assert_eq!(&ys[bi * n..(bi + 1) * n], &y[..]);
+        }
+    });
+}
+
+#[test]
+fn lora_gemv_rank_additivity() {
+    // adapters compose: [A1;A2],[B1 B2] == A1,B1 + A2,B2
+    run_cases(25, |rng| {
+        let n = rng.usize_in(2, 8);
+        let m = rng.usize_in(2, 8);
+        let r1 = rng.usize_in(1, 3);
+        let r2 = rng.usize_in(1, 3);
+        let a1 = rng.f32_vec(r1 * m);
+        let a2 = rng.f32_vec(r2 * m);
+        let b1 = rng.f32_vec(n * r1);
+        let b2 = rng.f32_vec(n * r2);
+        let x = rng.f32_vec(m);
+
+        let mut cat_a = a1.clone();
+        cat_a.extend(&a2);
+        // b rows interleave: [n, r1+r2] row-major
+        let mut cat_b = Vec::with_capacity(n * (r1 + r2));
+        for i in 0..n {
+            cat_b.extend(&b1[i * r1..(i + 1) * r1]);
+            cat_b.extend(&b2[i * r2..(i + 1) * r2]);
+        }
+        let mut y_cat = vec![0f32; n];
+        lora_gemv(&cat_a, &cat_b, r1 + r2, n, m, &x, &mut y_cat);
+        let mut y1 = vec![0f32; n];
+        lora_gemv(&a1, &b1, r1, n, m, &x, &mut y1);
+        let mut y2 = vec![0f32; n];
+        lora_gemv(&a2, &b2, r2, n, m, &x, &mut y2);
+        for i in 0..n {
+            assert!((y_cat[i] - (y1[i] + y2[i])).abs()
+                    < 1e-3 * y_cat[i].abs().max(1.0));
+        }
+    });
+}
+
+#[test]
+fn alpha_mean_abs_is_l2_optimal() {
+    // Paper Eq. 3-4: among all scalars for a FIXED sign matrix,
+    // α = mean|Δ| minimises the L2 error.
+    run_cases(40, |rng| {
+        let k = rng.usize_in(4, 64);
+        let d = rng.f32_vec(k);
+        let alpha: f32 = d.iter().map(|v| v.abs()).sum::<f32>() / k as f32;
+        let err = |a: f32| -> f64 {
+            d.iter().map(|v| {
+                let s = if *v > 0.0 { a } else { -a };
+                ((*v - s) as f64).powi(2)
+            }).sum()
+        };
+        let e0 = err(alpha);
+        for factor in [0.8f32, 0.95, 1.05, 1.25] {
+            assert!(e0 <= err(alpha * factor) + 1e-9,
+                    "alpha {alpha} beaten by x{factor}");
+        }
+    });
+}
+
+#[test]
+fn bdw_roundtrip_arbitrary_tensors() {
+    run_cases(25, |rng| {
+        let mut bdw = Bdw::new();
+        let n_tensors = rng.usize_in(1, 6);
+        for i in 0..n_tensors {
+            let rows = rng.usize_in(1, 5);
+            let cols = rng.usize_in(1, 7);
+            if rng.bool() {
+                let vals = rng.f32_vec(rows * cols);
+                bdw.insert(format!("t{i}"),
+                           RawTensor::f32(vec![rows, cols], &vals));
+            } else {
+                let vals: Vec<u8> = (0..rows * cols)
+                    .map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+                bdw.insert(format!("t{i}"),
+                           RawTensor::u8(vec![rows, cols], vals));
+            }
+        }
+        let path = std::env::temp_dir()
+            .join(format!("prop_bdw_{}.bdw", rng.next_u64()));
+        write_bdw(&path, &bdw).unwrap();
+        let buf = std::fs::read(&path).unwrap();
+        let back = parse_bdw(&buf).unwrap();
+        assert_eq!(back.names, bdw.names);
+        for name in &bdw.names {
+            assert_eq!(back.get(name).unwrap(), bdw.get(name).unwrap());
+        }
+        // any truncation must be detected
+        let cut = rng.usize_in(1, buf.len());
+        assert!(parse_bdw(&buf[..buf.len() - cut]).is_err());
+        std::fs::remove_file(path).ok();
+    });
+}
+
+fn mk_req(tenant: &str, id: u64) -> QueuedRequest {
+    QueuedRequest::for_test(Request {
+        tenant: tenant.into(), prompt: "Q".into(), max_new_tokens: 2,
+        sampling: SamplingParams::greedy(),
+    }, id)
+}
+
+#[test]
+fn router_conservation_and_fairness() {
+    // Invariant: enqueued == drained + still-queued + rejected-none;
+    // drain never exceeds request count; round-robin serves every
+    // tenant with pending work before repeats.
+    run_cases(30, |rng| {
+        let mut r = Router::new(AdmissionPolicy {
+            per_tenant_cap: 1000, total_cap: 10_000 });
+        let tenants = ["a", "b", "c"];
+        for t in tenants {
+            r.register_tenant(TenantInfo { name: t.into(),
+                                           rope_scale: 1.0 });
+        }
+        let mut pushed = 0u64;
+        for i in 0..rng.usize_in(1, 30) {
+            let t = rng.choose(&tenants);
+            r.enqueue(mk_req(t, i as u64)).unwrap();
+            pushed += 1;
+        }
+        let mut drained = 0u64;
+        loop {
+            let take = rng.usize_in(1, 5);
+            let got = r.drain(take);
+            drained += got.len() as u64;
+            if got.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(drained, pushed);
+        assert_eq!(r.total_queued(), 0);
+    });
+}
+
+#[test]
+fn batcher_slots_conserved() {
+    // admitted == released + occupied, always; composition id strictly
+    // increases on every topology change.
+    run_cases(30, |rng| {
+        let cap = rng.usize_in(1, 6);
+        let mut b = Batcher::new(cap);
+        let cfg = tiny_cfg();
+        let mut last_comp = b.composition_id();
+        let mut live: Vec<usize> = Vec::new();
+        for step in 0..rng.usize_in(5, 40) {
+            if rng.bool() && live.len() < cap {
+                let seq = ActiveSeq {
+                    req: mk_req("a", step as u64),
+                    tenant: "a".into(),
+                    rope_scale: 1.0,
+                    cache: SeqCache::new(&cfg),
+                    prompt: vec![1],
+                    prompt_pos: 0,
+                    generated: vec![],
+                    next_token: 1,
+                    started: std::time::Instant::now(),
+                    first_token_at: None,
+                };
+                let slot = match b.admit(seq) {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                assert!(!live.contains(&slot));
+                live.push(slot);
+                assert!(b.composition_id() > last_comp);
+                last_comp = b.composition_id();
+            } else if let Some(pos) = (!live.is_empty())
+                .then(|| rng.usize_in(0, live.len())) {
+                let slot = live.swap_remove(pos);
+                assert!(b.release(slot).is_some());
+                assert!(b.composition_id() > last_comp);
+                last_comp = b.composition_id();
+            }
+            assert_eq!(b.occupancy(), live.len());
+            assert_eq!(b.free_slots(), cap - live.len());
+            assert_eq!(b.admitted - b.completed, live.len() as u64);
+        }
+    });
+}
+
+#[test]
+fn admission_policy_total_ordering() {
+    // if a request is rejected at queue state (t, g), it is also
+    // rejected at any (t' >= t, g' >= g)
+    run_cases(40, |rng| {
+        let p = AdmissionPolicy {
+            per_tenant_cap: rng.usize_in(1, 10),
+            total_cap: rng.usize_in(1, 40),
+        };
+        let t = rng.usize_in(0, 12);
+        let g = rng.usize_in(t, 50);
+        use bitdelta::coordinator::admission::Verdict;
+        if matches!(p.admit(t, g), Verdict::Reject(_)) {
+            assert!(matches!(p.admit(t + 1, g + 1), Verdict::Reject(_)));
+            assert!(matches!(p.admit(t, g + 5), Verdict::Reject(_))
+                    || t >= p.per_tenant_cap);
+        }
+    });
+}
