@@ -1,24 +1,32 @@
 //! Figure 6 — end-to-end decoding latency of the serving engine, ablated
-//! over batch size, in all three modes (naive / BitDelta / S-LoRA).
+//! over batch size, across the registered delta codecs (dense/naive,
+//! BitDelta, precomputed low-rank) plus a **mixed-format** batch.
 //!
 //! Measures steady-state decode-step latency (prefill excluded) by
 //! saturating the batch with long generations and timing `Engine::step`
 //! once every slot is generating. Reports per-step and per-user latency;
 //! the paper's claims: naive scales with B (and OOMs), BitDelta/S-LoRA
 //! share the backbone and win from B≈2, >10x per-user in the B≥16 regime.
+//! The mixed row prices format freedom: tenants on two codecs in one
+//! batch fall back to the stacked-dense executable.
 //!
-//! Note on the lora mode: only tenants with SVD factors are servable
+//! Note on the lora codec: only tenants with SVD factors are servable
 //! there, so the lora sweep serves `sim-s-chat` in every slot.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 use bitdelta::model::sampling::SamplingParams;
-use bitdelta::serving::engine::{Engine, EngineConfig, ExecMode};
+use bitdelta::serving::engine::{Engine, EngineConfig};
 use bitdelta::serving::request::Request;
 
-fn steady_state_step_us(mode: ExecMode, batch: usize, steps: usize)
+fn steady_state_step_us(codec: &str,
+                        overrides: &HashMap<String, String>,
+                        batch: usize, steps: usize)
                         -> Result<Option<(f64, f64)>> {
     let mut ec = EngineConfig::new("artifacts");
-    ec.mode = mode;
+    ec.codec = Some(codec.to_string());
+    ec.codec_overrides = overrides.clone();
     ec.batch = batch;
     ec.stop_token = None;              // run full max_new_tokens
     let mut engine = match Engine::from_artifacts(ec) {
@@ -26,9 +34,15 @@ fn steady_state_step_us(mode: ExecMode, batch: usize, steps: usize)
         Err(_) => return Ok(None),     // batch size not exported
     };
     let tenants = engine.tenants();
+    // tenants[] order is not deterministic (manifest map); the mixed
+    // run must guarantee one lora slot (chat) AND one bitdelta slot
+    let non_chat: Vec<&String> = tenants.iter()
+        .filter(|t| t.as_str() != "sim-s-chat").collect();
     let pick = |i: usize| -> String {
-        if mode == ExecMode::Lora {
+        if codec == "lora" || (!overrides.is_empty() && i == 0) {
             "sim-s-chat".to_string()
+        } else if !overrides.is_empty() && !non_chat.is_empty() {
+            non_chat[(i - 1) % non_chat.len()].clone()
         } else {
             tenants[i % tenants.len()].clone()
         }
@@ -41,9 +55,14 @@ fn steady_state_step_us(mode: ExecMode, batch: usize, steps: usize)
             sampling: SamplingParams::greedy(),
         })?;
     }
-    // ramp until every slot is past prefill
+    // ramp until every slot is past prefill. step() can fail here even
+    // though construction succeeded: the mixed path loads its
+    // decode_naive executable lazily at first re-stack, and that batch
+    // size may not be exported (naive is the mode that OOMs at large B)
     for _ in 0..64 {
-        engine.step()?;
+        if engine.step().is_err() {
+            return Ok(None);
+        }
         if engine.batcher.occupancy() == batch {
             break;
         }
@@ -51,7 +70,10 @@ fn steady_state_step_us(mode: ExecMode, batch: usize, steps: usize)
     let mut exec_s = 0.0;
     let mut total_s = 0.0;
     for _ in 0..steps {
-        let r = engine.step()?;
+        let r = match engine.step() {
+            Ok(r) => r,
+            Err(_) => return Ok(None),
+        };
         exec_s += r.exec_seconds;
         total_s += r.total_seconds;
     }
@@ -67,13 +89,25 @@ fn main() -> Result<()> {
     println!("Figure 6 — end-to-end decode latency (sim-s, steady \
 state, 24 steps/point)");
     println!("{:<10} {:>5} {:>14} {:>14} {:>16}",
-             "mode", "B", "step us", "exec us", "per-user us");
-    let mut csv = String::from("mode,batch,step_us,per_user_us\n");
-    for (mode, name) in [(ExecMode::Naive, "naive"),
-                         (ExecMode::BitDelta, "bitdelta"),
-                         (ExecMode::Lora, "slora")] {
+             "codec", "B", "step us", "exec us", "per-user us");
+    let mut csv = String::from("codec,batch,step_us,per_user_us\n");
+    // mixed: chat rides the low-rank codec, everyone else bitdelta
+    let mixed: HashMap<String, String> =
+        [("sim-s-chat".to_string(), "lora".to_string())].into();
+    let none = HashMap::new();
+    for (codec, overrides, name) in [
+        ("dense", &none, "naive"),
+        ("bitdelta", &none, "bitdelta"),
+        ("lora", &none, "slora"),
+        ("bitdelta", &mixed, "mixed"),
+    ] {
         for b in [1usize, 2, 4, 8] {
-            match steady_state_step_us(mode, b, 24)? {
+            if name == "mixed" && b < 2 {
+                // a single-slot batch is always homogeneous; there is
+                // no mixed composition to measure at B=1
+                continue;
+            }
+            match steady_state_step_us(codec, overrides, b, 24)? {
                 Some((step, exec)) => {
                     println!("{:<10} {:>5} {:>14.1} {:>14.1} {:>16.1}",
                              name, b, step, exec, step / b as f64);

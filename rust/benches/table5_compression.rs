@@ -2,15 +2,20 @@
 //! artifacts plus computed exactly for the paper's real model shapes.
 //!
 //! The paper's storage claim: a 1-bit delta is >10x smaller than the
-//! dense fine-tune, so it loads >10x faster (disk -> memory). We measure
-//! both directions on the artifact files.
+//! dense fine-tune, so it loads >10x faster (disk -> memory). The
+//! measured half iterates the **delta codec registry**: every
+//! registered format is priced (resident bytes, load latency,
+//! compression factor vs the dense fine-tune) for every tenant that has
+//! an artifact in that format — a newly registered codec appears in
+//! this table with zero bench code.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use bitdelta::config::Manifest;
+use bitdelta::delta::codec::{CodecRegistry, LoadCtx, Model};
 use bitdelta::sim::memory::ModelSpec;
-use bitdelta::store::bdw::read_bdw;
-use bitdelta::store::delta_file::DeltaFile;
+use bitdelta::store::delta_file::load_model;
 use bitdelta::util::bench::black_box;
 
 fn main() -> anyhow::Result<()> {
@@ -33,33 +38,48 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    println!("\n=== measured: load latency, dense model vs delta ===");
-    println!("{:<16} {:>12} {:>12} {:>10} {:>10} {:>8}",
-             "tenant", "model B", "delta B", "model ms", "delta ms",
-             "speedup");
+    println!("\n=== measured: per-codec payload bytes + load latency ===");
+    println!("{:<16} {:<10} {:>12} {:>12} {:>10} {:>8}",
+             "tenant", "codec", "dense B", "payload B", "load ms",
+             "factor");
+    let registry = CodecRegistry::builtin();
+    let mut bases: HashMap<String, Model> = HashMap::new();
     let mut tenants: Vec<_> = manifest.tenants.iter().collect();
     tenants.sort_by_key(|(n, _)| n.to_string());
     for (name, t) in tenants {
-        let cfg = manifest.config(&t.config)?;
-        let mpath = manifest.path(&t.finetune);
-        let dpath = manifest.path(&t.delta);
-
-        let reps = 5;
-        let t0 = Instant::now();
-        for _ in 0..reps {
-            black_box(read_bdw(&mpath)?);
+        let cfg = manifest.config(&t.config)?.clone();
+        if !bases.contains_key(&t.config) {
+            let base_name = format!("{}-base", t.config);
+            let base_entry = manifest.models.get(&base_name)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "manifest missing {base_name}"))?;
+            bases.insert(t.config.clone(),
+                         load_model(manifest.path(&base_entry.file),
+                                    &cfg)?);
         }
-        let model_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
-        let t0 = Instant::now();
-        for _ in 0..reps {
-            black_box(DeltaFile::load(&dpath, cfg)?);
-        }
-        let delta_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let base = &bases[&t.config];
+        let dense_bytes = std::fs::metadata(
+            manifest.path(&t.finetune))?.len() as usize;
 
-        let mb = std::fs::metadata(&mpath)?.len();
-        let db = std::fs::metadata(&dpath)?.len();
-        println!("{:<16} {:>12} {:>12} {:>10.2} {:>10.2} {:>7.2}x",
-                 name, mb, db, model_ms, delta_ms, model_ms / delta_ms);
+        for codec in registry.iter() {
+            let Some(path) = codec.artifact_path(&manifest, t, true)
+            else { continue };
+            // the svd codec factorizes at load time (Jacobi per
+            // linear): one reps is plenty, it is the point being priced
+            let reps = if codec.name() == "svd" { 1 } else { 5 };
+            let ctx = LoadCtx { cfg: &cfg, base: Some(base) };
+            let t0 = Instant::now();
+            let mut payload = None;
+            for _ in 0..reps {
+                payload = Some(black_box(codec.load(&path, &ctx)?));
+            }
+            let load_ms =
+                t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            let bytes = payload.unwrap().resident_bytes();
+            println!("{:<16} {:<10} {:>12} {:>12} {:>10.2} {:>7.2}x",
+                     name, codec.name(), dense_bytes, bytes, load_ms,
+                     dense_bytes as f64 / bytes as f64);
+        }
     }
     Ok(())
 }

@@ -74,11 +74,11 @@ impl ModelConfig {
         }
     }
 
-    /// Shape of the packed 1-bit sign matrix for a linear (u8).
+    /// Shape of the packed 1-bit sign matrix for a linear (u8). Rows pad
+    /// to a byte boundary; see [`crate::delta::packing`].
     pub fn packed_shape(&self, name: &str) -> (usize, usize) {
         let (n, m) = self.linear_shape(name);
-        assert_eq!(m % 8, 0);
-        (n, m / 8)
+        (n, crate::delta::packing::packed_row_bytes(m))
     }
 
     /// All weight names in canonical flattening order (the HLO ABI).

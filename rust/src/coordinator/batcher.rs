@@ -4,8 +4,9 @@
 //! Sequences enter a free slot after prefill and leave on completion;
 //! the *composition* (which tenant occupies which slot) determines the
 //! stacked delta arguments, so the batcher exposes a composition id the
-//! engine uses to re-assemble [`crate::runtime::BitDeltaArgs`] only when
-//! it actually changed — the hot-swap fast path.
+//! engine uses to re-assemble [`crate::runtime::StackedArgs`] (via the
+//! slot tenants' delta codecs) only when it actually changed — the
+//! hot-swap fast path.
 
 use std::time::Instant;
 

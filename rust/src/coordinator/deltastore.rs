@@ -1,10 +1,14 @@
-//! Delta residency manager — the "hot-swap" half of BitDelta serving.
+//! Delta residency manager — the "hot-swap" half of BitDelta serving,
+//! generalized over [`crate::delta::codec::DeltaCodec`] payloads.
 //!
-//! Deltas live on disk as `.bdd` files (>10× smaller than the dense
-//! fine-tune, so they load >10× faster — the paper's storage claim).
-//! This store loads them on demand, pins the ones referenced by active
-//! sequences, and LRU-evicts unpinned deltas against a byte budget,
-//! modelling the bounded "GPU cache" the kernel streams deltas from.
+//! Deltas live on disk in whatever format their codec reads (packed
+//! 1-bit `.bdd`, low-rank factor files, or the dense fine-tune itself
+//! for the naive baseline). The store loads them on demand through the
+//! tenant's codec, pins the ones referenced by active sequences, and
+//! LRU-evicts unpinned payloads against a byte budget, modelling the
+//! bounded "GPU cache" the kernel streams deltas from. Bytes are
+//! accounted **per codec** ([`DeltaStoreStats::by_codec`]) so a mixed
+//! fleet can see exactly which format is eating the budget.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -14,7 +18,15 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
-use crate::store::delta_file::DeltaFile;
+use crate::delta::codec::{DeltaCodec, LoadCtx, Model, Payload};
+
+/// Per-codec load/eviction byte accounting.
+#[derive(Debug, Default, Clone)]
+pub struct CodecStats {
+    pub loads: u64,
+    pub evictions: u64,
+    pub bytes_loaded: u64,
+}
 
 /// Load/evict statistics (surfaced in metrics and the serving report).
 #[derive(Debug, Default, Clone)]
@@ -24,20 +36,34 @@ pub struct DeltaStoreStats {
     pub evictions: u64,
     pub load_seconds_total: f64,
     pub bytes_loaded_total: u64,
+    /// Keyed by codec name.
+    pub by_codec: HashMap<String, CodecStats>,
 }
 
 struct Entry {
-    delta: Rc<DeltaFile>,
+    payload: Rc<dyn Payload>,
+    codec_name: &'static str,
     bytes: usize,
     last_used: u64,
     pins: usize,
 }
 
-/// LRU-with-pinning delta cache.
+struct Registration {
+    codec: Rc<dyn DeltaCodec>,
+    path: PathBuf,
+}
+
+/// LRU-with-pinning payload cache.
 pub struct DeltaStore {
     cfg: ModelConfig,
-    paths: HashMap<String, PathBuf>,
+    /// Base model for codecs whose `load` needs it (e.g. `svd`).
+    base: Option<Rc<Model>>,
+    registered: HashMap<String, Registration>,
     resident: HashMap<String, Entry>,
+    /// Pins taken before the payload is resident (the engine pins at
+    /// admission, which may precede the first fetch); applied on load
+    /// so an early pin is never silently dropped.
+    pending_pins: HashMap<String, usize>,
     budget_bytes: usize,
     clock: u64,
     pub stats: DeltaStoreStats,
@@ -45,60 +71,101 @@ pub struct DeltaStore {
 
 impl DeltaStore {
     pub fn new(cfg: ModelConfig, budget_bytes: usize) -> Self {
-        Self { cfg, paths: HashMap::new(), resident: HashMap::new(),
-               budget_bytes, clock: 0, stats: DeltaStoreStats::default() }
+        Self { cfg, base: None, registered: HashMap::new(),
+               resident: HashMap::new(), pending_pins: HashMap::new(),
+               budget_bytes, clock: 0,
+               stats: DeltaStoreStats::default() }
     }
 
-    /// Register a tenant's delta file (not loaded yet).
-    pub fn register(&mut self, tenant: impl Into<String>, path: PathBuf) {
-        self.paths.insert(tenant.into(), path);
+    /// Provide the base model to load-time-compressing codecs.
+    pub fn set_base(&mut self, base: Rc<Model>) {
+        self.base = Some(base);
+    }
+
+    /// Register a tenant's artifact under its codec (not loaded yet).
+    pub fn register(&mut self, tenant: impl Into<String>,
+                    codec: Rc<dyn DeltaCodec>, path: PathBuf) {
+        self.registered.insert(tenant.into(),
+                               Registration { codec, path });
     }
 
     pub fn resident_bytes(&self) -> usize {
         self.resident.values().map(|e| e.bytes).sum()
     }
 
+    /// Resident bytes broken down by codec name.
+    pub fn resident_bytes_by_codec(&self) -> HashMap<&'static str, usize> {
+        let mut out: HashMap<&'static str, usize> = HashMap::new();
+        for e in self.resident.values() {
+            *out.entry(e.codec_name).or_default() += e.bytes;
+        }
+        out
+    }
+
     pub fn is_resident(&self, tenant: &str) -> bool {
         self.resident.contains_key(tenant)
     }
 
-    /// Fetch a tenant's delta, loading (and possibly evicting) as needed.
-    pub fn fetch(&mut self, tenant: &str) -> Result<Rc<DeltaFile>> {
+    /// Fetch a tenant's payload, loading (and possibly evicting) as
+    /// needed.
+    pub fn fetch(&mut self, tenant: &str) -> Result<Rc<dyn Payload>> {
         self.clock += 1;
         if let Some(e) = self.resident.get_mut(tenant) {
             e.last_used = self.clock;
             self.stats.hits += 1;
-            return Ok(e.delta.clone());
+            return Ok(e.payload.clone());
         }
-        let path = self.paths.get(tenant)
-            .with_context(|| format!("tenant {tenant} not registered"))?
-            .clone();
+        let (codec, path) = {
+            let r = self.registered.get(tenant).with_context(
+                || format!("tenant {tenant} has no registered delta \
+artifact (codec lacks one for this tenant?)"))?;
+            (r.codec.clone(), r.path.clone())
+        };
         let t0 = Instant::now();
-        let delta = DeltaFile::load(&path, &self.cfg)
-            .with_context(|| format!("loading delta for {tenant}"))?;
-        let bytes = delta.delta_bytes();
+        let payload = {
+            let ctx = LoadCtx { cfg: &self.cfg,
+                                base: self.base.as_deref() };
+            codec.load(&path, &ctx).with_context(
+                || format!("loading {} payload for {tenant}",
+                           codec.name()))?
+        };
+        let bytes = payload.resident_bytes();
         self.stats.loads += 1;
         self.stats.load_seconds_total += t0.elapsed().as_secs_f64();
         self.stats.bytes_loaded_total += bytes as u64;
+        let per = self.stats.by_codec.entry(codec.name().to_string())
+            .or_default();
+        per.loads += 1;
+        per.bytes_loaded += bytes as u64;
 
         self.make_room(bytes)?;
-        let rc = Rc::new(delta);
+        let pins = self.pending_pins.remove(tenant).unwrap_or(0);
         self.resident.insert(tenant.to_string(), Entry {
-            delta: rc.clone(), bytes, last_used: self.clock, pins: 0,
+            payload: payload.clone(), codec_name: codec.name(),
+            bytes, last_used: self.clock, pins,
         });
-        Ok(rc)
+        Ok(payload)
     }
 
-    /// Pin a resident delta (active in the current batch — not evictable).
+    /// Pin a tenant's payload (active in the current batch — not
+    /// evictable). Pinning before the first fetch is honored: the pin
+    /// is applied when the payload loads.
     pub fn pin(&mut self, tenant: &str) {
         if let Some(e) = self.resident.get_mut(tenant) {
             e.pins += 1;
+        } else {
+            *self.pending_pins.entry(tenant.to_string()).or_default() += 1;
         }
     }
 
     pub fn unpin(&mut self, tenant: &str) {
         if let Some(e) = self.resident.get_mut(tenant) {
             e.pins = e.pins.saturating_sub(1);
+        } else if let Some(p) = self.pending_pins.get_mut(tenant) {
+            *p = p.saturating_sub(1);
+            if *p == 0 {
+                self.pending_pins.remove(tenant);
+            }
         }
     }
 
@@ -115,8 +182,11 @@ impl DeltaStore {
                 .map(|(k, _)| k.clone());
             match victim {
                 Some(k) => {
-                    self.resident.remove(&k);
+                    let e = self.resident.remove(&k).unwrap();
                     self.stats.evictions += 1;
+                    self.stats.by_codec
+                        .entry(e.codec_name.to_string())
+                        .or_default().evictions += 1;
                 }
                 None => bail!("residency budget exhausted and every delta \
 is pinned (budget {} B, need {incoming} B more)", self.budget_bytes),
@@ -129,6 +199,7 @@ is pinned (budget {} B, need {incoming} B more)", self.budget_bytes),
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::delta::codecs::bitdelta::BitDeltaCodec;
     use crate::delta::packing::pack_signs;
     use crate::store::bdw::{write_bdw, RawTensor};
     use crate::store::delta_file::{DeltaFile, MaskLevel};
@@ -166,14 +237,22 @@ mod tests {
             .join(format!("deltastore_test_{n}_{budget}"));
         std::fs::create_dir_all(&dir).unwrap();
         let mut store = DeltaStore::new(cfg.clone(), budget);
+        let codec: Rc<dyn DeltaCodec> = Rc::new(BitDeltaCodec);
         let mut names = Vec::new();
         for i in 0..n {
             let p = dir.join(format!("t{i}.bdd"));
             write_delta(&cfg, &p, i as f32);
-            store.register(format!("t{i}"), p);
+            store.register(format!("t{i}"), codec.clone(), p);
             names.push(format!("t{i}"));
         }
         (store, names)
+    }
+
+    /// Resident bytes of exactly one delta (probe store).
+    fn one_delta_bytes() -> usize {
+        let (mut probe, n) = store_with(1, usize::MAX / 2);
+        probe.fetch(&n[0]).unwrap();
+        probe.resident_bytes()
     }
 
     #[test]
@@ -183,35 +262,29 @@ mod tests {
         s.fetch(&names[0]).unwrap();
         assert_eq!(s.stats.loads, 1);
         assert_eq!(s.stats.hits, 1);
+        // per-codec accounting mirrors the totals
+        let per = &s.stats.by_codec["bitdelta"];
+        assert_eq!(per.loads, 1);
+        assert_eq!(per.bytes_loaded, s.stats.bytes_loaded_total);
     }
 
     #[test]
     fn lru_evicts_oldest() {
         let (mut s, names) = store_with(3, 0);
-        // budget 0 is too small for anything -> use one-delta budget
-        let one = {
-            let (mut probe, n2) = store_with(1, usize::MAX / 2);
-            probe.fetch(&n2[0]).unwrap();
-            probe.resident_bytes()
-        };
-        s.budget_bytes = one * 2 + 8;
+        s.budget_bytes = one_delta_bytes() * 2 + 8;
         s.fetch(&names[0]).unwrap();
         s.fetch(&names[1]).unwrap();
         s.fetch(&names[2]).unwrap();   // evicts t0
         assert!(!s.is_resident(&names[0]));
         assert!(s.is_resident(&names[2]));
         assert_eq!(s.stats.evictions, 1);
+        assert_eq!(s.stats.by_codec["bitdelta"].evictions, 1);
     }
 
     #[test]
     fn pinned_never_evicted() {
         let (mut s, names) = store_with(3, 0);
-        let one = {
-            let (mut probe, n2) = store_with(1, usize::MAX / 2);
-            probe.fetch(&n2[0]).unwrap();
-            probe.resident_bytes()
-        };
-        s.budget_bytes = one * 2 + 8;
+        s.budget_bytes = one_delta_bytes() * 2 + 8;
         s.fetch(&names[0]).unwrap();
         s.pin(&names[0]);
         s.fetch(&names[1]).unwrap();
@@ -221,8 +294,110 @@ mod tests {
     }
 
     #[test]
+    fn all_pinned_under_pressure_errors_not_corrupts() {
+        // Budget for exactly two deltas, both pinned: the third fetch
+        // must fail with the "every delta is pinned" diagnosis, leave
+        // the pinned entries resident, and count the load that couldn't
+        // be placed.
+        let (mut s, names) = store_with(3, 0);
+        let one = one_delta_bytes();
+        s.budget_bytes = one * 2 + 8;
+        s.fetch(&names[0]).unwrap();
+        s.pin(&names[0]);
+        s.fetch(&names[1]).unwrap();
+        s.pin(&names[1]);
+        let err = s.fetch(&names[2]).unwrap_err().to_string();
+        assert!(err.contains("pinned"), "unexpected error: {err}");
+        assert!(s.is_resident(&names[0]) && s.is_resident(&names[1]));
+        assert!(!s.is_resident(&names[2]));
+        assert_eq!(s.stats.evictions, 0);
+        // unpinning frees the LRU victim and the fetch now succeeds
+        s.unpin(&names[0]);
+        s.fetch(&names[2]).unwrap();
+        assert!(!s.is_resident(&names[0]));
+        assert!(s.is_resident(&names[2]));
+        assert_eq!(s.stats.evictions, 1);
+    }
+
+    #[test]
+    fn pin_before_first_fetch_is_honored() {
+        // The engine pins at admission, which can precede the first
+        // fetch — that pin must survive and protect the entry.
+        let (mut s, names) = store_with(2, 0);
+        s.budget_bytes = one_delta_bytes() + 8;
+        s.pin(&names[0]);               // not resident yet
+        s.fetch(&names[0]).unwrap();    // pending pin applied on load
+        // t1 cannot displace the pinned t0
+        assert!(s.fetch(&names[1]).is_err());
+        s.unpin(&names[0]);
+        s.fetch(&names[1]).unwrap();
+        assert!(!s.is_resident(&names[0]));
+        // pin+unpin with no fetch in between leaves no stale state
+        s.pin("ghost");
+        s.unpin("ghost");
+        s.fetch(&names[1]).unwrap();    // hit, nothing odd
+    }
+
+    #[test]
+    fn double_pin_requires_double_unpin() {
+        let (mut s, names) = store_with(2, 0);
+        s.budget_bytes = one_delta_bytes() + 8;
+        s.fetch(&names[0]).unwrap();
+        s.pin(&names[0]);
+        s.pin(&names[0]);
+        s.unpin(&names[0]);
+        // still pinned once -> t1 cannot displace it
+        assert!(s.fetch(&names[1]).is_err());
+        s.unpin(&names[0]);
+        s.fetch(&names[1]).unwrap();
+        assert!(!s.is_resident(&names[0]));
+    }
+
+    #[test]
+    fn unpin_of_absent_tenant_is_noop() {
+        let (mut s, names) = store_with(1, usize::MAX / 2);
+        s.unpin("ghost");
+        s.unpin(&names[0]);             // not resident yet: no-op
+        s.fetch(&names[0]).unwrap();
+        assert_eq!(s.stats.loads, 1);
+    }
+
+    #[test]
+    fn stats_counters_exact_over_mixed_sequence() {
+        // 3 tenants, room for two: a scripted fetch/pin sequence with
+        // every counter asserted exactly.
+        let (mut s, names) = store_with(3, 0);
+        let one = one_delta_bytes();
+        s.budget_bytes = one * 2 + 8;
+
+        s.fetch(&names[0]).unwrap();             // load #1
+        s.fetch(&names[0]).unwrap();             // hit  #1
+        s.fetch(&names[1]).unwrap();             // load #2
+        s.pin(&names[1]);
+        s.fetch(&names[2]).unwrap();             // load #3, evicts t0
+        s.fetch(&names[1]).unwrap();             // hit  #2 (pinned)
+        s.fetch(&names[0]).unwrap();             // load #4, evicts t2
+
+        assert_eq!(s.stats.loads, 4);
+        assert_eq!(s.stats.hits, 2);
+        assert_eq!(s.stats.evictions, 2);
+        assert_eq!(s.stats.bytes_loaded_total, 4 * one as u64);
+        assert_eq!(s.resident_bytes(), 2 * one);
+        let per = &s.stats.by_codec["bitdelta"];
+        assert_eq!((per.loads, per.evictions, per.bytes_loaded),
+                   (4, 2, 4 * one as u64));
+    }
+
+    #[test]
     fn over_budget_delta_rejected() {
         let (mut s, names) = store_with(1, 4);
         assert!(s.fetch(&names[0]).is_err());
+    }
+
+    #[test]
+    fn unregistered_tenant_has_clear_error() {
+        let (mut s, _) = store_with(1, usize::MAX / 2);
+        let e = s.fetch("nobody").unwrap_err().to_string();
+        assert!(e.contains("no registered delta artifact"), "{e}");
     }
 }

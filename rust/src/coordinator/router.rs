@@ -20,6 +20,22 @@ pub struct TenantInfo {
     /// RoPE position-interpolation factor (1.0 = none; the context-
     /// extension tenants use 0.5).
     pub rope_scale: f32,
+    /// Name of the [`crate::delta::codec::DeltaCodec`] this tenant's
+    /// delta payload uses — tenants on different codecs may share one
+    /// decode batch (mixed-format batching).
+    pub codec: String,
+}
+
+impl TenantInfo {
+    /// Convenience constructor defaulting to the paper's own format.
+    pub fn new(name: impl Into<String>, rope_scale: f32) -> Self {
+        Self { name: name.into(), rope_scale, codec: "bitdelta".into() }
+    }
+
+    pub fn with_codec(mut self, codec: impl Into<String>) -> Self {
+        self.codec = codec.into();
+        self
+    }
 }
 
 /// Router state: tenants + queues + round-robin cursor.
@@ -128,9 +144,16 @@ mod tests {
 
     fn router() -> Router {
         let mut r = Router::new(AdmissionPolicy::default());
-        r.register_tenant(TenantInfo { name: "a".into(), rope_scale: 1.0 });
-        r.register_tenant(TenantInfo { name: "b".into(), rope_scale: 1.0 });
+        r.register_tenant(TenantInfo::new("a", 1.0));
+        r.register_tenant(TenantInfo::new("b", 1.0).with_codec("lora"));
         r
+    }
+
+    #[test]
+    fn tenant_codec_is_recorded() {
+        let r = router();
+        assert_eq!(r.tenant("a").unwrap().codec, "bitdelta");
+        assert_eq!(r.tenant("b").unwrap().codec, "lora");
     }
 
     #[test]
@@ -169,7 +192,7 @@ mod tests {
     fn queue_cap_backpressure() {
         let mut r = Router::new(AdmissionPolicy {
             per_tenant_cap: 2, total_cap: 100 });
-        r.register_tenant(TenantInfo { name: "a".into(), rope_scale: 1.0 });
+        r.register_tenant(TenantInfo::new("a", 1.0));
         assert!(r.enqueue(req("a", 1)).is_ok());
         assert!(r.enqueue(req("a", 2)).is_ok());
         assert!(r.enqueue(req("a", 3)).is_err());

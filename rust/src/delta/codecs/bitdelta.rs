@@ -1,0 +1,137 @@
+//! The paper's own format: per-linear packed 1-bit sign masks + one f32
+//! scale (possibly several successive-residual levels), full-precision
+//! extras. Payload type: [`DeltaFile`]. Decodes through
+//! `decode_bitdelta` (shared base linears + stacked masks).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Manifest, ModelConfig, TenantEntry};
+use crate::delta::codec::{downcast, pick, stack_extras, DeltaCodec,
+                          LoadCtx, Model, Payload};
+use crate::gemm::{dense_gemv, try_binary_gemv};
+use crate::runtime::client::Runtime;
+use crate::runtime::variants::StackedArgs;
+use crate::store::delta_file::DeltaFile;
+
+impl Payload for DeltaFile {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.delta_bytes()
+    }
+}
+
+pub struct BitDeltaCodec;
+
+impl DeltaCodec for BitDeltaCodec {
+    fn name(&self) -> &'static str {
+        "bitdelta"
+    }
+
+    fn exec_kind(&self) -> &'static str {
+        "decode_bitdelta"
+    }
+
+    fn needs_base(&self) -> bool {
+        true
+    }
+
+    fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
+                     distilled: bool) -> Option<PathBuf> {
+        let rel = if distilled { &tenant.delta }
+                  else { &tenant.delta_initial };
+        Some(manifest.path(rel))
+    }
+
+    fn load(&self, path: &Path, ctx: &LoadCtx) -> Result<Rc<dyn Payload>> {
+        let d = DeltaFile::load(path, ctx.cfg)
+            .with_context(|| format!("bitdelta codec: {path:?}"))?;
+        Ok(Rc::new(d))
+    }
+
+    /// ABI slice: `bits…(per linear), scales, extras…` — each with a
+    /// leading `[B]` tenant axis. The `decode_bitdelta` ABI carries a
+    /// single mask level, so multi-level deltas (Fig. 3 fidelity files)
+    /// are rejected here with a clear error instead of silently serving
+    /// level 0 while `materialize`/`forward_linear` apply all levels.
+    fn assemble(&self, rt: &Runtime, cfg: &ModelConfig,
+                payloads: &[&dyn Payload], batch: usize)
+                -> Result<StackedArgs> {
+        if payloads.is_empty() || payloads.len() > batch {
+            bail!("need 1..={batch} deltas, got {}", payloads.len());
+        }
+        let deltas: Vec<&DeltaFile> = payloads.iter()
+            .map(|p| downcast::<DeltaFile>(*p, self.name()))
+            .collect::<Result<_>>()?;
+        if let Some(d) = deltas.iter().find(|d| d.levels.len() > 1) {
+            bail!("decode_bitdelta serves exactly one mask level, got a \
+{}-level delta — use materialize_levels for fidelity evals",
+                  d.levels.len());
+        }
+        let mut staged = 0usize;
+        let mut buffers = Vec::new();
+
+        for name in cfg.linear_names() {
+            let (n, mp) = cfg.packed_shape(&name);
+            let mut stacked = Vec::with_capacity(batch * n * mp);
+            for b in 0..batch {
+                stacked.extend_from_slice(
+                    &pick(&deltas, b).levels[0].bits[&name]);
+            }
+            staged += stacked.len();
+            buffers.push(rt.upload_u8(&stacked, &[batch, n, mp])?);
+        }
+
+        let n_lin = cfg.linear_names().len();
+        let mut scales = Vec::with_capacity(batch * n_lin);
+        for b in 0..batch {
+            scales.extend_from_slice(&pick(&deltas, b).levels[0].scales);
+        }
+        staged += scales.len() * 4;
+        buffers.push(rt.upload_f32(&scales, &[batch, n_lin])?);
+
+        let extras: Vec<&Model> = deltas.iter().map(|d| &d.extras)
+            .collect();
+        let (extra_bufs, extra_bytes) =
+            stack_extras(rt, cfg, &extras, batch)?;
+        staged += extra_bytes;
+        buffers.extend(extra_bufs);
+
+        Ok(StackedArgs { buffers, batch, staged_bytes: staged })
+    }
+
+    fn materialize(&self, cfg: &ModelConfig, base: &Model,
+                   payload: &dyn Payload) -> Result<Rc<Model>> {
+        let d = downcast::<DeltaFile>(payload, self.name())?;
+        crate::delta::bitdelta::materialize(cfg, base, d).map(Rc::new)
+    }
+
+    /// `y = W_base@x + Σ_k α_k·Sign_k@x` straight from the packed bytes.
+    fn forward_linear(&self, cfg: &ModelConfig, base: &Model,
+                      payload: &dyn Payload, name: &str, x: &[f32],
+                      y: &mut [f32]) -> Result<()> {
+        let d = downcast::<DeltaFile>(payload, self.name())?;
+        let (n, m) = cfg.linear_shape(name);
+        let wb = base.get(name)
+            .with_context(|| format!("base missing {name}"))?.as_f32()?;
+        dense_gemv(&wb, n, m, x, y);
+        let (i, _) = cfg.linear_names().iter().enumerate()
+            .find(|(_, ln)| ln.as_str() == name)
+            .with_context(|| format!("{name} is not a canonical linear"))?;
+        let mut tmp = vec![0f32; n];
+        for level in &d.levels {
+            let bits = level.bits.get(name)
+                .with_context(|| format!("delta missing bits for {name}"))?;
+            try_binary_gemv(bits, n, m, x, level.scales[i], &mut tmp)?;
+            for (yv, t) in y.iter_mut().zip(&tmp) {
+                *yv += t;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,121 @@
+//! Dense codec (the paper's "naive" baseline): the payload is the full
+//! fine-tuned weight set — no compression at all. Decodes through
+//! `decode_naive`, which stacks every parameter with a leading `[B]`
+//! tenant axis (the memory hog that OOMs in Figs. 5/6; we materialize it
+//! faithfully). Doubles as the **mixed-format fallback**: any codec's
+//! payload can be materialized into this shape, so a batch mixing
+//! bitdelta/lora/svd tenants runs through this codec's stacking.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Manifest, ModelConfig, TenantEntry};
+use crate::delta::codec::{downcast, pick, DeltaCodec, LoadCtx, Model,
+                          Payload};
+use crate::gemm::dense_gemv;
+use crate::runtime::client::Runtime;
+use crate::runtime::variants::StackedArgs;
+use crate::store::delta_file::load_model;
+
+/// Newtype payload over the dense weight map (shared via `Rc` so
+/// `materialize` can hand the same weights back without a copy).
+pub struct DenseWeights(pub Rc<Model>);
+
+impl Payload for DenseWeights {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.0.values().map(|t| t.bytes.len()).sum()
+    }
+}
+
+/// Stack full weight sets into the `decode_naive` ABI (`params…` in
+/// canonical order, each `[B, …]`). Public within the crate: the engine
+/// uses it directly for mixed-format batches after materializing each
+/// slot.
+pub(crate) fn stack_dense_models(rt: &Runtime, cfg: &ModelConfig,
+                                 models: &[&Model], batch: usize)
+                                 -> Result<StackedArgs> {
+    if models.is_empty() || models.len() > batch {
+        bail!("need 1..={batch} weight sets, got {}", models.len());
+    }
+    let mut buffers = Vec::new();
+    let mut staged = 0usize;
+    for name in cfg.param_names() {
+        let shape = cfg.param_shape(&name);
+        let elems: usize = shape.iter().product();
+        let mut stacked = Vec::with_capacity(batch * elems);
+        for b in 0..batch {
+            let t = pick(models, b).get(&name).ok_or_else(
+                || anyhow::anyhow!("weight set missing {name}"))?;
+            stacked.extend_from_slice(&t.as_f32()?);
+        }
+        staged += stacked.len() * 4;
+        let mut full = vec![batch];
+        full.extend(&shape);
+        buffers.push(rt.upload_f32(&stacked, &full)?);
+    }
+    Ok(StackedArgs { buffers, batch, staged_bytes: staged })
+}
+
+pub struct DenseCodec;
+
+impl DeltaCodec for DenseCodec {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn exec_kind(&self) -> &'static str {
+        "decode_naive"
+    }
+
+    fn needs_base(&self) -> bool {
+        false
+    }
+
+    fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
+                     _distilled: bool) -> Option<PathBuf> {
+        Some(manifest.path(&tenant.finetune))
+    }
+
+    fn load(&self, path: &Path, ctx: &LoadCtx) -> Result<Rc<dyn Payload>> {
+        let m = load_model(path, ctx.cfg)
+            .with_context(|| format!("dense codec: {path:?}"))?;
+        Ok(Rc::new(DenseWeights(Rc::new(m))))
+    }
+
+    fn assemble(&self, rt: &Runtime, cfg: &ModelConfig,
+                payloads: &[&dyn Payload], batch: usize)
+                -> Result<StackedArgs> {
+        let models: Vec<&Model> = payloads.iter()
+            .map(|p| downcast::<DenseWeights>(*p, self.name())
+                 .map(|w| w.0.as_ref()))
+            .collect::<Result<_>>()?;
+        stack_dense_models(rt, cfg, &models, batch)
+    }
+
+    /// Identity: the payload already IS the dense weights — the `Rc` is
+    /// shared, not cloned, so a dense tenant in a mixed batch does not
+    /// double its host-memory footprint.
+    fn materialize(&self, _cfg: &ModelConfig, _base: &Model,
+                   payload: &dyn Payload) -> Result<Rc<Model>> {
+        let w = downcast::<DenseWeights>(payload, self.name())?;
+        Ok(w.0.clone())
+    }
+
+    fn forward_linear(&self, cfg: &ModelConfig, _base: &Model,
+                      payload: &dyn Payload, name: &str, x: &[f32],
+                      y: &mut [f32]) -> Result<()> {
+        let w = downcast::<DenseWeights>(payload, self.name())?;
+        let (n, m) = cfg.linear_shape(name);
+        let wf = w.0.get(name)
+            .with_context(|| format!("weights missing {name}"))?
+            .as_f32()?;
+        dense_gemv(&wf, n, m, x, y);
+        Ok(())
+    }
+}

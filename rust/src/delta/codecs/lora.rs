@@ -1,0 +1,163 @@
+//! Low-rank delta codec (the S-LoRA comparator): per-linear factors
+//! `a_down [r, M]` / `b_up [N, r]` with `Δ = b_up @ a_down`, plus
+//! full-precision extras. Payload type: [`LoraFile`]. Decodes through
+//! `decode_lora` (shared base linears + stacked factors).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Manifest, ModelConfig, TenantEntry};
+use crate::delta::codec::{downcast, pick, stack_extras, DeltaCodec,
+                          LoadCtx, Model, Payload};
+use crate::gemm::{dense_gemv, lora_gemv};
+use crate::runtime::client::Runtime;
+use crate::runtime::variants::StackedArgs;
+use crate::store::bdw::RawTensor;
+use crate::store::delta_file::LoraFile;
+use crate::tensor::Tensor;
+
+impl Payload for LoraFile {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.delta_bytes()
+    }
+}
+
+/// `W = base + b_up @ a_down` for every linear; extras replace the base
+/// values. Shared with the `svd` codec (same payload type).
+pub(crate) fn materialize_lora_payload(cfg: &ModelConfig, base: &Model,
+                                       lf: &LoraFile) -> Result<Model> {
+    let mut out: Model = Model::new();
+    for name in cfg.linear_names() {
+        let (n, m) = cfg.linear_shape(&name);
+        let r = lf.rank;
+        let a = Tensor::new(vec![r, m], lf.a[&name].clone());
+        let b = Tensor::new(vec![n, r], lf.b[&name].clone());
+        let delta = b.matmul(&a);
+        let wb = base[&name].as_f32()?;
+        let w: Vec<f32> = wb.iter().zip(delta.data())
+            .map(|(x, d)| x + d).collect();
+        out.insert(name.clone(), RawTensor::f32(vec![n, m], &w));
+    }
+    for name in cfg.nonlinear_names() {
+        let t = lf.extras.get(&name)
+            .with_context(|| format!("lora payload missing extra.{name}"))?;
+        out.insert(name, t.clone());
+    }
+    Ok(out)
+}
+
+/// `y = W_base@x + b_up(a_down x)` — the two-stage low-rank apply.
+pub(crate) fn forward_lora_payload(cfg: &ModelConfig, base: &Model,
+                                   lf: &LoraFile, name: &str, x: &[f32],
+                                   y: &mut [f32]) -> Result<()> {
+    let (n, m) = cfg.linear_shape(name);
+    let wb = base.get(name)
+        .with_context(|| format!("base missing {name}"))?.as_f32()?;
+    dense_gemv(&wb, n, m, x, y);
+    let a = lf.a.get(name)
+        .with_context(|| format!("lora payload missing a.{name}"))?;
+    let b = lf.b.get(name)
+        .with_context(|| format!("lora payload missing b.{name}"))?;
+    let mut tmp = vec![0f32; n];
+    lora_gemv(a, b, lf.rank, n, m, x, &mut tmp);
+    for (yv, t) in y.iter_mut().zip(&tmp) {
+        *yv += t;
+    }
+    Ok(())
+}
+
+/// ABI slice: `a…(per linear), b…(per linear), extras…` — each with a
+/// leading `[B]` tenant axis. Shared with the `svd` codec.
+pub(crate) fn assemble_lora_payloads(rt: &Runtime, cfg: &ModelConfig,
+                                     loras: &[&LoraFile], batch: usize)
+                                     -> Result<StackedArgs> {
+    if loras.is_empty() || loras.len() > batch {
+        bail!("need 1..={batch} adapters, got {}", loras.len());
+    }
+    let rank = loras[0].rank;
+    if loras.iter().any(|l| l.rank != rank) {
+        bail!("mixed ranks in one batch");
+    }
+    let mut staged = 0usize;
+    let (mut a_bufs, mut b_bufs) = (Vec::new(), Vec::new());
+    for name in cfg.linear_names() {
+        let (n, m) = cfg.linear_shape(&name);
+        let mut sa = Vec::with_capacity(batch * rank * m);
+        let mut sb = Vec::with_capacity(batch * n * rank);
+        for bi in 0..batch {
+            sa.extend_from_slice(&pick(loras, bi).a[&name]);
+            sb.extend_from_slice(&pick(loras, bi).b[&name]);
+        }
+        staged += (sa.len() + sb.len()) * 4;
+        a_bufs.push(rt.upload_f32(&sa, &[batch, rank, m])?);
+        b_bufs.push(rt.upload_f32(&sb, &[batch, n, rank])?);
+    }
+    let mut buffers = a_bufs;
+    buffers.extend(b_bufs);
+
+    let extras: Vec<&Model> = loras.iter().map(|l| &l.extras).collect();
+    let (extra_bufs, extra_bytes) = stack_extras(rt, cfg, &extras, batch)?;
+    staged += extra_bytes;
+    buffers.extend(extra_bufs);
+
+    Ok(StackedArgs { buffers, batch, staged_bytes: staged })
+}
+
+pub struct LoraCodec;
+
+impl DeltaCodec for LoraCodec {
+    fn name(&self) -> &'static str {
+        "lora"
+    }
+
+    fn exec_kind(&self) -> &'static str {
+        "decode_lora"
+    }
+
+    fn needs_base(&self) -> bool {
+        true
+    }
+
+    /// Served from the tenant's precomputed SVD-r16 factor files (only
+    /// tenants with factors can ride this codec).
+    fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
+                     distilled: bool) -> Option<PathBuf> {
+        tenant.svd_r16.as_ref().map(|s| {
+            manifest.path(if distilled { &s.distilled } else { &s.initial })
+        })
+    }
+
+    fn load(&self, path: &Path, ctx: &LoadCtx) -> Result<Rc<dyn Payload>> {
+        let f = LoraFile::load(path, ctx.cfg)
+            .with_context(|| format!("lora codec: {path:?}"))?;
+        Ok(Rc::new(f))
+    }
+
+    fn assemble(&self, rt: &Runtime, cfg: &ModelConfig,
+                payloads: &[&dyn Payload], batch: usize)
+                -> Result<StackedArgs> {
+        let loras: Vec<&LoraFile> = payloads.iter()
+            .map(|p| downcast::<LoraFile>(*p, self.name()))
+            .collect::<Result<_>>()?;
+        assemble_lora_payloads(rt, cfg, &loras, batch)
+    }
+
+    fn materialize(&self, cfg: &ModelConfig, base: &Model,
+                   payload: &dyn Payload) -> Result<Rc<Model>> {
+        let lf = downcast::<LoraFile>(payload, self.name())?;
+        materialize_lora_payload(cfg, base, lf).map(Rc::new)
+    }
+
+    fn forward_linear(&self, cfg: &ModelConfig, base: &Model,
+                      payload: &dyn Payload, name: &str, x: &[f32],
+                      y: &mut [f32]) -> Result<()> {
+        let lf = downcast::<LoraFile>(payload, self.name())?;
+        forward_lora_payload(cfg, base, lf, name, x, y)
+    }
+}

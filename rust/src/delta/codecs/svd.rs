@@ -1,0 +1,126 @@
+//! On-the-fly SVD codec: no precomputed artifact — `load` reads the
+//! tenant's dense fine-tune, forms `Δ = W_fine − W_base` per linear, and
+//! truncates it to rank-`r` factors with the in-tree Jacobi SVD
+//! ([`crate::delta::svd`]). The payload is the same [`LoraFile`] the
+//! `lora` codec uses, so assembly/apply/decode all ride the existing
+//! low-rank path (`decode_lora`).
+//!
+//! This is the registry's existence proof that a new delta format costs
+//! one module + one registry line: the codec is ~100 lines of glue over
+//! math the repo already had. Trade-off: load is compute-heavy (a Jacobi
+//! sweep per linear), so payloads are priced at their resident bytes but
+//! cost CPU time on first fetch — the delta store's LRU makes that a
+//! once-per-eviction-cycle cost.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Manifest, ModelConfig, TenantEntry};
+use crate::delta::codec::{downcast, DeltaCodec, LoadCtx, Model, Payload};
+use crate::delta::svd::low_rank_factors;
+use crate::runtime::client::Runtime;
+use crate::runtime::variants::StackedArgs;
+use crate::store::delta_file::{load_model, LoraFile};
+use crate::tensor::Tensor;
+
+use super::lora::{assemble_lora_payloads, forward_lora_payload,
+                  materialize_lora_payload};
+
+pub struct SvdCodec {
+    /// Truncation rank; must not exceed any linear's `min(n, m)` (the
+    /// AOT low-rank ABI is lowered for one fixed rank, so clamping is
+    /// an error, not a fallback).
+    pub rank: usize,
+}
+
+impl Default for SvdCodec {
+    fn default() -> Self {
+        Self { rank: 16 }
+    }
+}
+
+impl DeltaCodec for SvdCodec {
+    fn name(&self) -> &'static str {
+        "svd"
+    }
+
+    fn exec_kind(&self) -> &'static str {
+        "decode_lora"
+    }
+
+    fn needs_base(&self) -> bool {
+        true
+    }
+
+    /// Factorizes the dense fine-tune directly; there is no separate
+    /// initial/distilled artifact.
+    fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
+                     _distilled: bool) -> Option<PathBuf> {
+        Some(manifest.path(&tenant.finetune))
+    }
+
+    fn load(&self, path: &Path, ctx: &LoadCtx) -> Result<Rc<dyn Payload>> {
+        let base = ctx.base.context(
+            "svd codec needs the base model to factorize W_fine − W_base")?;
+        let fine = load_model(path, ctx.cfg)
+            .with_context(|| format!("svd codec: {path:?}"))?;
+        let mut a = HashMap::new();
+        let mut b = HashMap::new();
+        // The decode_lora executable is lowered for one fixed rank, so
+        // silently clamping would produce factors the AOT ABI rejects
+        // with an opaque XLA shape error at decode time — fail here with
+        // the real reason instead.
+        let min_dim = ctx.cfg.linear_names().iter()
+            .map(|n| { let (r, c) = ctx.cfg.linear_shape(n); r.min(c) })
+            .min().unwrap_or(self.rank);
+        if min_dim < self.rank {
+            anyhow::bail!(
+                "svd codec rank {} exceeds the smallest linear dimension \
+{min_dim} of model {}", self.rank, ctx.cfg.name);
+        }
+        let rank = self.rank;
+        for name in ctx.cfg.linear_names() {
+            let (n, m) = ctx.cfg.linear_shape(&name);
+            let wb = base.get(&name)
+                .with_context(|| format!("base missing {name}"))?
+                .as_f32()?;
+            let wf = fine[&name].as_f32()?;
+            let d: Vec<f32> = wf.iter().zip(&wb).map(|(f, x)| f - x)
+                .collect();
+            let (ad, bu) = low_rank_factors(
+                &Tensor::new(vec![n, m], d), rank);
+            a.insert(name.clone(), ad.data().to_vec());
+            b.insert(name.clone(), bu.data().to_vec());
+        }
+        let mut extras = HashMap::new();
+        for name in ctx.cfg.nonlinear_names() {
+            extras.insert(name.clone(), fine[&name].clone());
+        }
+        Ok(Rc::new(LoraFile { rank, a, b, extras }))
+    }
+
+    fn assemble(&self, rt: &Runtime, cfg: &ModelConfig,
+                payloads: &[&dyn Payload], batch: usize)
+                -> Result<StackedArgs> {
+        let loras: Vec<&LoraFile> = payloads.iter()
+            .map(|p| downcast::<LoraFile>(*p, self.name()))
+            .collect::<Result<_>>()?;
+        assemble_lora_payloads(rt, cfg, &loras, batch)
+    }
+
+    fn materialize(&self, cfg: &ModelConfig, base: &Model,
+                   payload: &dyn Payload) -> Result<Rc<Model>> {
+        let lf = downcast::<LoraFile>(payload, self.name())?;
+        materialize_lora_payload(cfg, base, lf).map(Rc::new)
+    }
+
+    fn forward_linear(&self, cfg: &ModelConfig, base: &Model,
+                      payload: &dyn Payload, name: &str, x: &[f32],
+                      y: &mut [f32]) -> Result<()> {
+        let lf = downcast::<LoraFile>(payload, self.name())?;
+        forward_lora_payload(cfg, base, lf, name, x, y)
+    }
+}

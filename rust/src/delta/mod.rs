@@ -1,7 +1,9 @@
-//! The paper's core algorithm, rust-native.
+//! The paper's core algorithm, rust-native — plus the codec layer that
+//! makes delta *formats* pluggable.
 //!
 //! * [`packing`] — 1-bit sign pack/unpack (byte-exact twin of
-//!   `python/compile/kernels/ref.py`).
+//!   `python/compile/kernels/ref.py`), byte-boundary padding for
+//!   arbitrary logical widths.
 //! * [`bitdelta`] — Eq. 1-4 quantization: `Δ̂ = α·Sign(Δ)`, `α = mean|Δ|`
 //!   (scale *distillation* lives in the python build path — it needs
 //!   autodiff — but the quantizer itself is fully functional here and is
@@ -10,8 +12,16 @@
 //!   Table 9).
 //! * [`svd`] — one-sided Jacobi SVD + the low-rank baseline (Table 1,
 //!   Fig. 2).
+//! * [`codec`] — the [`codec::DeltaCodec`] trait + [`codec::CodecRegistry`]:
+//!   one seam for load / byte-accounting / ABI stacking / dense
+//!   materialization / CPU apply, per format.
+//! * [`codecs`] — the four in-tree formats (`bitdelta`, `lora`, `svd`,
+//!   `dense`). New formats go here; see the "adding a new delta codec"
+//!   section in `ROADMAP.md`.
 
 pub mod bitdelta;
+pub mod codec;
+pub mod codecs;
 pub mod extras_quant;
 pub mod iterative;
 pub mod packing;

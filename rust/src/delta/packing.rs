@@ -5,18 +5,34 @@
 //! LSB-first: byte `k` of a row holds columns `8k..8k+8`; bit `j` set
 //! means the value at column `8k+j` is strictly positive (+1); clear
 //! means non-positive (-1). Paper Eq. 2: `Sign(0) = -1`.
+//!
+//! Rows whose logical width `m` is not a multiple of 8 are **padded to a
+//! byte boundary**: the trailing `8·⌈m/8⌉ − m` bits of the last byte of
+//! each row MUST be clear. Every consumer ([`unpack_signs`], the GEMV
+//! kernels in [`crate::gemm::binary`]) honors the logical width and
+//! rejects buffers with set padding bits instead of silently folding
+//! them into the dot product.
+
+/// Packed bytes per row for a logical width of `m` columns.
+#[inline]
+pub fn packed_row_bytes(m: usize) -> usize {
+    (m + 7) / 8
+}
 
 /// Pack the sign pattern of a row-major `[rows, m]` matrix into
-/// `[rows, m/8]` bytes. `m` must be a multiple of 8.
+/// `[rows, ⌈m/8⌉]` bytes. Any `m ≥ 1` is accepted; partial trailing
+/// bytes carry clear padding bits.
 pub fn pack_signs(values: &[f32], m: usize) -> Vec<u8> {
-    assert_eq!(m % 8, 0, "input dim {m} not a multiple of 8");
-    assert_eq!(values.len() % m, 0);
+    assert!(m > 0, "logical width must be positive");
+    assert_eq!(values.len() % m, 0,
+               "value count {} not a multiple of width {m}", values.len());
     let rows = values.len() / m;
-    let mut out = vec![0u8; rows * m / 8];
+    let mb = packed_row_bytes(m);
+    let mut out = vec![0u8; rows * mb];
     for r in 0..rows {
         let row = &values[r * m..(r + 1) * m];
-        let orow = &mut out[r * m / 8..(r + 1) * m / 8];
-        for (k, chunk) in row.chunks_exact(8).enumerate() {
+        let orow = &mut out[r * mb..(r + 1) * mb];
+        for (k, chunk) in row.chunks(8).enumerate() {
             let mut byte = 0u8;
             for (j, &v) in chunk.iter().enumerate() {
                 if v > 0.0 {
@@ -29,17 +45,22 @@ pub fn pack_signs(values: &[f32], m: usize) -> Vec<u8> {
     out
 }
 
-/// Unpack to ±1.0 f32, inverse of [`pack_signs`].
+/// Unpack to ±1.0 f32 at logical width `m`, inverse of [`pack_signs`].
+/// Padding bits are skipped, not emitted.
 pub fn unpack_signs(packed: &[u8], m: usize) -> Vec<f32> {
-    assert_eq!(m % 8, 0);
-    let rows = packed.len() * 8 / m;
+    let mb = packed_row_bytes(m);
+    assert_eq!(packed.len() % mb, 0,
+               "packed length {} not a multiple of the {mb}-byte row \
+stride for width {m}", packed.len());
+    let rows = packed.len() / mb;
     let mut out = Vec::with_capacity(rows * m);
-    for &byte in packed {
-        for j in 0..8 {
-            out.push(if byte >> j & 1 == 1 { 1.0 } else { -1.0 });
+    for r in 0..rows {
+        let brow = &packed[r * mb..(r + 1) * mb];
+        for j in 0..m {
+            let byte = brow[j / 8];
+            out.push(if byte >> (j % 8) & 1 == 1 { 1.0 } else { -1.0 });
         }
     }
-    debug_assert_eq!(out.len(), rows * m);
     out
 }
 
@@ -95,6 +116,37 @@ mod tests {
         let mut vals = [-1.0f32; 8];
         vals[7] = 1.0;
         assert_eq!(pack_signs(&vals, 8), vec![128u8]);
+    }
+
+    #[test]
+    fn non_multiple_of_eight_width_pads() {
+        // width 5: one byte per row, bits 5..8 clear
+        let vals = [1.0f32, -1.0, 1.0, -1.0, 1.0,   // row 0
+                    -1.0, -1.0, -1.0, -1.0, 1.0];   // row 1
+        let packed = pack_signs(&vals, 5);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(packed[0], 0b0001_0101);
+        assert_eq!(packed[1], 0b0001_0000);
+        let signs = unpack_signs(&packed, 5);
+        assert_eq!(signs.len(), 10);
+        for (v, s) in vals.iter().zip(&signs) {
+            assert_eq!(*s, if *v > 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn padded_roundtrip_multi_byte_rows() {
+        // width 11 -> 2 bytes/row, 5 padding bits
+        let mut vals = Vec::new();
+        for i in 0..33 {
+            vals.push(if i % 4 == 0 { -1.0 } else { 1.0 });
+        }
+        let packed = pack_signs(&vals, 11);
+        assert_eq!(packed.len(), 3 * 2);
+        let signs = unpack_signs(&packed, 11);
+        for (v, s) in vals.iter().zip(&signs) {
+            assert_eq!(*s, if *v > 0.0 { 1.0 } else { -1.0 });
+        }
     }
 
     #[test]

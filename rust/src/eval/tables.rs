@@ -11,6 +11,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{Manifest, ModelConfig};
 use crate::delta::bitdelta::{materialize, materialize_levels};
+use crate::delta::codec::{CodecRegistry, LoadCtx};
 use crate::delta::svd::cumulative_explained_variance;
 use crate::eval::harness::Evaluator;
 use crate::eval::tasks::Scores;
@@ -74,32 +75,31 @@ impl TableCtx {
 }
 
 /// Fold LoRA/SVD factors into dense weights: `W = base + b_up @ a_down`.
+/// (Thin wrapper over the lora codec's materialization, kept for
+/// callers holding a bare [`LoraFile`].)
 pub fn materialize_lora(cfg: &ModelConfig, base: &Model, lf: &LoraFile)
                         -> Result<Model> {
-    let mut out: Model = HashMap::new();
-    for name in cfg.linear_names() {
-        let (n, m) = cfg.linear_shape(&name);
-        let r = lf.rank;
-        let a = Tensor::new(vec![r, m], lf.a[&name].clone());
-        let b = Tensor::new(vec![n, r], lf.b[&name].clone());
-        let delta = b.matmul(&a);
-        let wb = base[&name].as_f32()?;
-        let w: Vec<f32> = wb.iter().zip(delta.data())
-            .map(|(x, d)| x + d).collect();
-        out.insert(name.clone(), RawTensor::f32(vec![n, m], &w));
+    crate::delta::codecs::lora::materialize_lora_payload(cfg, base, lf)
+}
+
+/// Human-facing row label for a codec's registry name.
+fn codec_label(name: &str) -> &str {
+    match name {
+        "bitdelta" => "BitDelta",
+        "lora" => "SVD (precomputed, r16)",
+        "svd" => "SVD (load-time Jacobi)",
+        "dense" => "Baseline (fine-tune)",
+        other => other,
     }
-    for name in cfg.nonlinear_names() {
-        let t = lf.extras.get(&name)
-            .with_context(|| format!("lora file missing extra.{name}"))?;
-        out.insert(name, t.clone());
-    }
-    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
-// Table 1: BitDelta vs SVD on the chat tenant
+// Table 1: every registered delta codec vs the fine-tune baseline
 // ---------------------------------------------------------------------------
 
+/// One quality row per (codec, phase) that has an artifact for the
+/// tenant — driven by the [`CodecRegistry`], so a newly registered codec
+/// shows up here (and in the compression bench) with zero table code.
 pub fn table1(ctx: &mut TableCtx, size: &str) -> Result<String> {
     let tenant = format!("{size}-chat");
     let cfg = ctx.cfg_of_tenant(&tenant)?;
@@ -108,37 +108,45 @@ pub fn table1(ctx: &mut TableCtx, size: &str) -> Result<String> {
 
     let mut out = String::new();
     out.push_str(&format!(
-        "Table 1 — BitDelta vs SVD ({tenant})\n{}\n", Scores::header()));
+        "Table 1 — delta codecs vs baseline ({tenant})\n{}\n",
+        Scores::header()));
 
     let s = ctx.score(size, &base)?;
     out.push_str(&format!("{}\n", s.row(&format!("{size}-base"), false)));
 
-    let fine = ctx.model(&tenant)?;
-    let s = ctx.score(size, &fine)?;
-    out.push_str(&format!("{}\n", s.row("Baseline (fine-tune)", true)));
-
-    for (label, rel) in [("BitDelta-Initial", &t.delta_initial),
-                         ("BitDelta", &t.delta)] {
-        let d = ctx.delta(rel, &cfg)?;
-        let m = materialize(&cfg, &base, &d)?;
-        let s = ctx.score(size, &m)?;
-        out.push_str(&format!("{}\n", s.row(label, true)));
+    let registry = CodecRegistry::builtin();
+    for codec in registry.iter() {
+        let mut seen: Vec<std::path::PathBuf> = Vec::new();
+        for (phase, distilled) in [("", true), ("-Initial", false)] {
+            let Some(path) =
+                codec.artifact_path(&ctx.manifest, &t, distilled)
+            else { continue };
+            if seen.contains(&path) {
+                continue;   // e.g. dense: initial == distilled artifact
+            }
+            seen.push(path.clone());
+            let payload = {
+                let lctx = LoadCtx { cfg: &cfg, base: Some(&base) };
+                codec.load(&path, &lctx)?
+            };
+            let m = codec.materialize(&cfg, &base, payload.as_ref())?;
+            let s = ctx.score(size, &m)?;
+            let label = format!("{}{phase}", codec_label(codec.name()));
+            out.push_str(&format!("{}\n", s.row(&label, true)));
+        }
     }
 
-    for (svd, tag) in [(&t.svd_r16, "r16"), (&t.svd_req, "mem-eq")] {
-        if let Some(entry) = svd {
-            for (phase, rel) in [("Initial", &entry.initial),
-                                 ("", &entry.distilled)] {
-                let lf = LoraFile::load(ctx.manifest.path(rel), &cfg)?;
-                let m = materialize_lora(&cfg, &base, &lf)?;
-                let s = ctx.score(size, &m)?;
-                let label = if phase.is_empty() {
-                    format!("SVD ({tag}, r={})", entry.rank)
-                } else {
-                    format!("SVD-Initial ({tag}, r={})", entry.rank)
-                };
-                out.push_str(&format!("{}\n", s.row(&label, true)));
-            }
+    // memory-equivalent SVD comparator (paper Table 1's second SVD
+    // column) — an artifact-only baseline, not a serving codec
+    if let Some(entry) = &t.svd_req {
+        for (phase, rel) in [("", &entry.distilled),
+                             ("-Initial", &entry.initial)] {
+            let lf = LoraFile::load(ctx.manifest.path(rel), &cfg)?;
+            let m = materialize_lora(&cfg, &base, &lf)?;
+            let s = ctx.score(size, &m)?;
+            out.push_str(&format!(
+                "{}\n", s.row(&format!("SVD{phase} (mem-eq, r={})",
+                                       entry.rank), true)));
         }
     }
     Ok(out)

@@ -3,9 +3,18 @@
 //!
 //! Computes `y = α · Sign(Δ) · x` **directly from the packed bytes** —
 //! the sign matrix is never materialised, so the weight stream is
-//! `N·M/8` bytes instead of `4·N·M`: a 32× traffic reduction over the
+//! `N·⌈M/8⌉` bytes instead of `4·N·M`: a 32× traffic reduction over the
 //! f32 backbone (16× in the paper's fp16 terms). That traffic ratio is
 //! the entire latency story of Figures 4 and 6.
+//!
+//! The kernels honor a **logical width** `m`: rows are stored padded to a
+//! byte boundary (see [`crate::delta::packing`]) and the trailing padding
+//! bits must be clear. All shape/padding validation happens up front in
+//! the `try_*` variants, which return a [`KernelShapeError`] — malformed
+//! packed buffers produce a clear error instead of a panic (or a silent
+//! wrong answer) deep in the hot loop. The unsuffixed wrappers keep the
+//! historical panicking signature for callers that have already
+//! validated.
 //!
 //! Identity used to avoid per-bit sign selects:
 //!
@@ -15,9 +24,65 @@
 //!
 //! so the inner loop only accumulates `x_j·bit_j` (a branchless 0/1
 //! multiply the compiler vectorises) and the row finishes with one fused
-//! correction by the precomputed total.
+//! correction by the precomputed total. With clear padding bits and
+//! zero-padded `x`, the identity holds unchanged at any logical width.
 
-/// `y = alpha * Sign(bits) @ x`; `bits` row-major `[n, m/8]`, LSB-first.
+use crate::delta::packing::packed_row_bytes;
+
+/// Shape/padding validation failure for a packed GEMV call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelShapeError(pub String);
+
+impl std::fmt::Display for KernelShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "packed gemv: {}", self.0)
+    }
+}
+
+impl std::error::Error for KernelShapeError {}
+
+fn err(msg: String) -> KernelShapeError {
+    KernelShapeError(msg)
+}
+
+/// Validate a packed `[n, ⌈m/8⌉]` buffer against logical shape `[n, m]`
+/// plus `x`/`y` lengths; rejects set padding bits (malformed buffers).
+fn validate(bits: &[u8], n: usize, m: usize, x: &[f32], y: &[f32])
+            -> Result<usize, KernelShapeError> {
+    if m == 0 {
+        return Err(err("logical width m must be positive".into()));
+    }
+    let mb = packed_row_bytes(m);
+    if bits.len() != n * mb {
+        return Err(err(format!(
+            "bits buffer has {} bytes, want n*ceil(m/8) = {}*{} = {} \
+for logical shape [{n}, {m}]", bits.len(), n, mb, n * mb)));
+    }
+    if x.len() != m {
+        return Err(err(format!("x has {} entries, want m = {m}", x.len())));
+    }
+    if y.len() != n {
+        return Err(err(format!("y has {} entries, want n = {n}", y.len())));
+    }
+    let pad = mb * 8 - m;
+    if pad > 0 {
+        // padding bits live in the high end of each row's last byte and
+        // must be clear, else the 2·Σ_set − total identity is corrupted
+        let mask: u8 = !0u8 << (8 - pad);
+        for r in 0..n {
+            let last = bits[r * mb + mb - 1];
+            if last & mask != 0 {
+                return Err(err(format!(
+                    "malformed packed buffer: row {r} has set padding \
+bits (last byte {last:#04x}, logical width {m})")));
+            }
+        }
+    }
+    Ok(mb)
+}
+
+/// `y = alpha * Sign(bits) @ x`; `bits` row-major `[n, ⌈m/8⌉]`,
+/// LSB-first, clear padding bits. Checked variant — see module docs.
 ///
 /// Four-Russians formulation: per call, build a 16-entry partial-sum
 /// table for every 4-column group of `x` (`lut[g][v] = Σ_{bit j of v}
@@ -27,19 +92,28 @@
 /// over the `n` rows, and the per-row stream is exactly the packed
 /// bytes — the kernel stays memory-bound down to L2-resident sizes
 /// (§Perf before/after: ~4-6x over the bit-extract loop).
-pub fn binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
-                   alpha: f32, y: &mut [f32]) {
-    assert_eq!(m % 8, 0);
-    let mb = m / 8;
-    assert_eq!(bits.len(), n * mb);
-    assert_eq!(x.len(), m);
-    assert_eq!(y.len(), n);
+pub fn try_binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
+                       alpha: f32, y: &mut [f32])
+                       -> Result<(), KernelShapeError> {
+    let mb = validate(bits, n, m, x, y)?;
+
+    // zero-pad x to the byte boundary: padded columns contribute 0 to
+    // every lookup regardless of (clear) bit value
+    let padded;
+    let xp: &[f32] = if m == mb * 8 {
+        x
+    } else {
+        let mut v = x.to_vec();
+        v.resize(mb * 8, 0.0);
+        padded = v;
+        &padded
+    };
 
     // nibble tables: group g covers columns [4g, 4g+4)
-    let groups = m / 4;
+    let groups = mb * 2;
     let mut lut = vec![0f32; groups * 16];
     for g in 0..groups {
-        let xs = &x[g * 4..g * 4 + 4];
+        let xs = &xp[g * 4..g * 4 + 4];
         let t = &mut lut[g * 16..g * 16 + 16];
         for v in 1usize..16 {
             t[v] = t[v & (v - 1)] + xs[v.trailing_zeros() as usize];
@@ -59,47 +133,84 @@ pub fn binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
         }
         y[r] = alpha * (2.0 * (a0 + a1) - total);
     }
+    Ok(())
+}
+
+/// Panicking wrapper over [`try_binary_gemv`] (validates up front; any
+/// failure carries the full shape diagnosis).
+pub fn binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
+                   alpha: f32, y: &mut [f32]) {
+    if let Err(e) = try_binary_gemv(bits, n, m, x, alpha, y) {
+        panic!("{e}");
+    }
 }
 
 /// The pre-optimization bit-extract kernel, kept for the §Perf ablation
-/// and as an independent correctness witness.
-pub fn binary_gemv_bitextract(bits: &[u8], n: usize, m: usize,
-                              x: &[f32], alpha: f32, y: &mut [f32]) {
-    assert_eq!(m % 8, 0);
-    let mb = m / 8;
+/// and as an independent correctness witness. Checked variant.
+pub fn try_binary_gemv_bitextract(bits: &[u8], n: usize, m: usize,
+                                  x: &[f32], alpha: f32, y: &mut [f32])
+                                  -> Result<(), KernelShapeError> {
+    let mb = validate(bits, n, m, x, y)?;
     let total: f32 = x.iter().sum();
     for r in 0..n {
         let brow = &bits[r * mb..(r + 1) * mb];
         let mut acc = 0f32;
         for (k, &byte) in brow.iter().enumerate() {
-            let xs = &x[k * 8..k * 8 + 8];
-            acc += xs[0] * (byte & 1) as f32
-                + xs[1] * (byte >> 1 & 1) as f32
-                + xs[2] * (byte >> 2 & 1) as f32
-                + xs[3] * (byte >> 3 & 1) as f32
-                + xs[4] * (byte >> 4 & 1) as f32
-                + xs[5] * (byte >> 5 & 1) as f32
-                + xs[6] * (byte >> 6 & 1) as f32
-                + xs[7] * (byte >> 7 & 1) as f32;
+            let lo = k * 8;
+            let hi = (lo + 8).min(m);
+            for (j, &xv) in x[lo..hi].iter().enumerate() {
+                acc += xv * (byte >> j & 1) as f32;
+            }
         }
         y[r] = alpha * (2.0 * acc - total);
+    }
+    Ok(())
+}
+
+/// Panicking wrapper over [`try_binary_gemv_bitextract`].
+pub fn binary_gemv_bitextract(bits: &[u8], n: usize, m: usize,
+                              x: &[f32], alpha: f32, y: &mut [f32]) {
+    if let Err(e) = try_binary_gemv_bitextract(bits, n, m, x, alpha, y) {
+        panic!("{e}");
     }
 }
 
 /// Batched per-tenant delta GEMV: `y[b] = alpha[b] * Sign(bits[b]) @ x[b]`
 /// — one packed matrix per tenant, the multi-tenant batching of Eq. 6.
+pub fn try_batched_binary_gemv(bits: &[u8], n: usize, m: usize,
+                               xs: &[f32], alphas: &[f32], batch: usize,
+                               ys: &mut [f32])
+                               -> Result<(), KernelShapeError> {
+    let mb = packed_row_bytes(m);
+    if bits.len() != batch * n * mb {
+        return Err(err(format!(
+            "batched bits buffer has {} bytes, want batch*n*ceil(m/8) \
+= {}", bits.len(), batch * n * mb)));
+    }
+    if alphas.len() != batch {
+        return Err(err(format!("{} alphas for batch {batch}",
+                               alphas.len())));
+    }
+    if xs.len() != batch * m || ys.len() != batch * n {
+        return Err(err(format!(
+            "xs/ys have {}/{} entries, want {}/{}", xs.len(), ys.len(),
+            batch * m, batch * n)));
+    }
+    for b in 0..batch {
+        try_binary_gemv(&bits[b * n * mb..(b + 1) * n * mb], n, m,
+                        &xs[b * m..(b + 1) * m], alphas[b],
+                        &mut ys[b * n..(b + 1) * n])?;
+    }
+    Ok(())
+}
+
+/// Panicking wrapper over [`try_batched_binary_gemv`].
 pub fn batched_binary_gemv(bits: &[u8], n: usize, m: usize,
                            xs: &[f32], alphas: &[f32], batch: usize,
                            ys: &mut [f32]) {
-    let mb = m / 8;
-    assert_eq!(bits.len(), batch * n * mb);
-    assert_eq!(alphas.len(), batch);
-    assert_eq!(xs.len(), batch * m);
-    assert_eq!(ys.len(), batch * n);
-    for b in 0..batch {
-        binary_gemv(&bits[b * n * mb..(b + 1) * n * mb], n, m,
-                    &xs[b * m..(b + 1) * m], alphas[b],
-                    &mut ys[b * n..(b + 1) * n]);
+    if let Err(e) = try_batched_binary_gemv(bits, n, m, xs, alphas, batch,
+                                            ys) {
+        panic!("{e}");
     }
 }
 
@@ -109,7 +220,7 @@ pub fn fused_delta_gemv(w_base: &[f32], bits: &[u8], n: usize, m: usize,
                         xs: &[f32], alphas: &[f32], batch: usize,
                         ys: &mut [f32]) {
     super::dense::batched_dense_gemv(w_base, n, m, xs, batch, ys);
-    let mb = m / 8;
+    let mb = packed_row_bytes(m);
     let mut tmp = vec![0f32; n];
     for b in 0..batch {
         binary_gemv(&bits[b * n * mb..(b + 1) * n * mb], n, m,
@@ -163,6 +274,48 @@ mod tests {
         for (a, b) in y.iter().zip(&want) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn non_multiple_of_eight_width_matches_reference() {
+        for m in [1usize, 3, 5, 7, 9, 13, 27] {
+            let n = 6;
+            let d = Tensor::randn(vec![n, m], 60 + m as u64);
+            let signs: Vec<f32> = d.data().iter()
+                .map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+            let bits = pack_signs(d.data(), m);
+            let x = Tensor::randn(vec![m], 70 + m as u64);
+            let mut y = vec![0f32; n];
+            binary_gemv(&bits, n, m, x.data(), 0.5, &mut y);
+            let want = reference(&signs, n, m, x.data(), 0.5);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "m={m}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_padding_bits_rejected_with_clear_error() {
+        let (n, m) = (2, 5);               // 1 byte/row, 3 padding bits
+        let mut bits = pack_signs(&[1.0f32; 10], m);
+        bits[1] |= 0b1000_0000;            // set a padding bit in row 1
+        let x = [0.5f32; 5];
+        let mut y = [0f32; 2];
+        let e = try_binary_gemv(&bits, n, m, &x, 1.0, &mut y).unwrap_err();
+        assert!(e.to_string().contains("row 1"), "{e}");
+        assert!(e.to_string().contains("padding"), "{e}");
+        let e2 = try_binary_gemv_bitextract(&bits, n, m, &x, 1.0, &mut y)
+            .unwrap_err();
+        assert_eq!(e, e2);
+    }
+
+    #[test]
+    fn wrong_buffer_length_rejected() {
+        let x = [0.0f32; 8];
+        let mut y = [0f32; 2];
+        let e = try_binary_gemv(&[0u8; 3], 2, 8, &x, 1.0, &mut y)
+            .unwrap_err();
+        assert!(e.to_string().contains("3 bytes"), "{e}");
     }
 
     #[test]

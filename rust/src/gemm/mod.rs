@@ -10,13 +10,19 @@
 //! | kernel                | bytes streamed per tenant  |
 //! |-----------------------|----------------------------|
 //! | [`dense`] backbone    | `4·N·M` (f32 weights)      |
-//! | [`binary`] 1-bit delta| `N·M/8` (packed signs)     |
+//! | [`binary`] 1-bit delta| `N·⌈M/8⌉` (packed signs)   |
 //! | [`lora`] rank-r delta | `4·r·(N+M)`                |
+//!
+//! Serving code should not call these directly per format: the
+//! per-format apply path is dispatched through
+//! [`crate::delta::codec::DeltaCodec::forward_linear`], which routes to
+//! the right kernel for whichever delta codec a tenant uses.
 
 pub mod binary;
 pub mod dense;
 pub mod lora;
 
-pub use binary::{batched_binary_gemv, binary_gemv};
+pub use binary::{batched_binary_gemv, binary_gemv, try_batched_binary_gemv,
+                 try_binary_gemv, KernelShapeError};
 pub use dense::{batched_dense_gemv, dense_gemv};
 pub use lora::{batched_lora_gemv, lora_gemv};

@@ -11,10 +11,13 @@
 //!   forward in four serving modes (dense / naive / bitdelta / lora),
 //!   lowered once to HLO text at build time.
 //! * **L3** — this crate: PJRT runtime, weight/delta storage, the
-//!   BitDelta compressor, the multi-tenant serving engine (router,
-//!   continuous batcher, delta hot-swap store, KV-cache manager), the
-//!   memory simulator, the eval harness, and every benchmark that
-//!   regenerates the paper's tables and figures.
+//!   BitDelta compressor, the **delta codec registry**
+//!   ([`delta::codec`]: pluggable formats — `bitdelta`, `lora`, `svd`,
+//!   `dense` — behind one trait, with mixed-format decode batches), the
+//!   multi-tenant serving engine (router, continuous batcher, delta
+//!   hot-swap store, KV-cache manager), the memory simulator, the eval
+//!   harness, and every benchmark that regenerates the paper's tables
+//!   and figures.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `repro` binary and the examples are self-contained.
@@ -54,6 +57,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::{Manifest, ModelConfig};
     pub use crate::delta::bitdelta::{compress, BitDeltaCompressed};
+    pub use crate::delta::codec::{CodecRegistry, DeltaCodec, Payload};
     pub use crate::model::tokenizer::ByteTokenizer;
     pub use crate::serving::engine::{Engine, EngineConfig, ExecMode};
     pub use crate::serving::request::{Request, Response};

@@ -19,10 +19,11 @@ use anyhow::{bail, Context, Result};
 
 use bitdelta::config::{Manifest, ModelConfig};
 use bitdelta::delta::bitdelta::compress;
+use bitdelta::delta::codec::CodecRegistry;
 use bitdelta::delta::iterative::compress_iterative;
 use bitdelta::eval::tables::{self, TableCtx};
 use bitdelta::model::sampling::SamplingParams;
-use bitdelta::serving::engine::{Engine, EngineConfig, ExecMode};
+use bitdelta::serving::engine::{Engine, EngineConfig};
 use bitdelta::serving::request::Request;
 use bitdelta::sim::memory::{self, ModelSpec, ServingMode};
 use bitdelta::store::bdw;
@@ -37,8 +38,10 @@ USAGE: repro [--artifacts DIR] <command> [flags]
 COMMANDS:
   compress     --base F --fine F --out F [--model sim-s] [--levels K]
   inspect      --delta F [--model sim-s]
-  serve        [--mode bitdelta|naive|lora] [--batch N] [--requests N]
-               [--model sim-s]
+  serve        [--codec bitdelta|lora|svd|dense] [--batch N]
+               [--requests N] [--model sim-s]
+               [--tenant-codecs t1=lora,t2=bitdelta]  (mixed batches)
+  codecs       list the registered delta codecs
   table1       BitDelta vs SVD quality (paper Table 1)
   table2       all tenants x sizes (paper Tables 2/3/10)
   table5       compression factors (paper Table 5)
@@ -107,10 +110,21 @@ fn main() -> Result<()> {
         }
         "serve" => serve_demo(
             &artifacts,
-            args.get_or("mode", "bitdelta"),
+            // --codec is the codec-registry name; --mode kept as alias
+            args.get("codec")
+                .unwrap_or_else(|| args.get_or("mode", "bitdelta")),
+            args.get("tenant-codecs"),
             args.get_usize("batch", 4)?,
             args.get_usize("requests", 12)?,
             args.get_or("model", "sim-s"))?,
+        "codecs" => {
+            let registry = CodecRegistry::builtin();
+            println!("registered delta codecs:");
+            for c in registry.iter() {
+                println!("  {:<10} exec={:<16} shared-base={}",
+                         c.name(), c.exec_kind(), c.needs_base());
+            }
+        }
         "table1" => {
             let mut ctx = TableCtx::load(&artifacts)?;
             println!("{}", tables::table1(&mut ctx, "sim-s")?);
@@ -153,7 +167,8 @@ fn main() -> Result<()> {
                 EngineConfig::new(&artifacts))?;
             fire_requests(&mut engine, 6)?;
             engine.run_until_idle(100_000)?;
-            println!("{}", engine.metrics.exposition());
+            println!("{}{}", engine.metrics.exposition(),
+                     engine.codec_accounting());
         }
         other => {
             println!("{USAGE}");
@@ -198,21 +213,33 @@ fn fire_requests(engine: &mut Engine, n: usize)
     Ok(chans)
 }
 
-fn serve_demo(artifacts: &PathBuf, mode: &str, batch: usize,
+fn serve_demo(artifacts: &PathBuf, codec: &str,
+              tenant_codecs: Option<&str>, batch: usize,
               requests: usize, model: &str) -> Result<()> {
-    let mode = match mode {
-        "bitdelta" => ExecMode::BitDelta,
-        "naive" => ExecMode::Naive,
-        "lora" => ExecMode::Lora,
-        other => bail!("unknown mode {other}"),
-    };
+    let registry = CodecRegistry::builtin();
+    let codec = registry.get(codec)?.name();   // validate + canonicalize
     let mut ec = EngineConfig::new(artifacts);
-    ec.mode = mode;
+    ec.codec = Some(codec.to_string());
+    // --tenant-codecs t1=lora,t2=bitdelta pins individual tenants to a
+    // different codec; the engine then serves mixed-format batches
+    if let Some(spec) = tenant_codecs {
+        for pair in spec.split(',').filter(|s| !s.is_empty()) {
+            let (tenant, cname) = pair.split_once('=').with_context(
+                || format!("--tenant-codecs entry {pair:?}: want \
+tenant=codec"))?;
+            let c = registry.get(cname)?;
+            ec.codec_overrides.insert(tenant.to_string(),
+                                      c.name().to_string());
+        }
+    }
     ec.batch = batch;
     ec.model = model.to_string();
     let mut engine = Engine::from_artifacts(ec)?;
-    println!("engine up: mode={mode:?} batch={batch} tenants={:?}",
-             engine.tenants());
+    let assignments: Vec<String> = engine.tenants().iter()
+        .map(|t| format!("{t}={}", engine.tenant_codec(t).unwrap_or("?")))
+        .collect();
+    println!("engine up: codec={codec} batch={batch} \
+tenants={assignments:?}");
     let t0 = std::time::Instant::now();
     let chans = fire_requests(&mut engine, requests)?;
     engine.run_until_idle(1_000_000)?;
@@ -231,7 +258,8 @@ fn serve_demo(artifacts: &PathBuf, mode: &str, batch: usize,
 {:.2}s -> {:.1} tok/s",
              wall.as_secs_f64(),
              total_tokens as f64 / wall.as_secs_f64());
-    println!("\n{}", engine.metrics.exposition());
+    println!("\n{}{}", engine.metrics.exposition(),
+             engine.codec_accounting());
     Ok(())
 }
 
@@ -364,7 +392,8 @@ traffic, {}/{} tenants hit",
                  latencies[latencies.len() * 95 / 100] * 1e3,
                  latencies[latencies.len() - 1] * 1e3);
     }
-    println!("\n{}", engine.metrics.exposition());
+    println!("\n{}{}", engine.metrics.exposition(),
+             engine.codec_accounting());
     Ok(())
 }
 

@@ -5,11 +5,13 @@
 //!   (NEVER serialized protos — xla_extension 0.5.1 rejects jax≥0.5's
 //!   64-bit ids; the text parser reassigns them), literal/buffer helpers,
 //!   and device-resident argument sets.
-//! * [`variants`] — the python↔rust executable ABI: argument assembly for
-//!   every serving mode, in the exact positional order `aot.py` lowered.
+//! * [`variants`] — the python↔rust executable ABI: the dense/base
+//!   argument sets, the generic [`variants::StackedArgs`] per-tenant
+//!   bundle codecs assemble, and decode-output parsing, in the exact
+//!   positional order `aot.py` lowered.
 
 pub mod client;
 pub mod variants;
 
 pub use client::{Executable, Runtime};
-pub use variants::{BitDeltaArgs, DenseArgs, LoraArgs};
+pub use variants::{BaseLinears, DenseArgs, StackedArgs};

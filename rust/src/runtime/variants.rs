@@ -16,14 +16,19 @@
 //! `linear_names()` / `nonlinear_names()` order. Per-tenant args carry a
 //! leading batch axis and are re-stacked only when the batch composition
 //! changes (the delta "hot-swap" path).
+//!
+//! The per-format stacking logic (what used to be `BitDeltaArgs`,
+//! `NaiveArgs`, `LoraArgs`) lives with each codec under
+//! [`crate::delta::codecs`]; every codec's `assemble` returns the same
+//! [`StackedArgs`] — a flat, ABI-ordered buffer list the engine splices
+//! between the (optional) shared base linears and the per-step tensors.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::collections::HashMap;
 
 use crate::config::ModelConfig;
 use crate::runtime::client::Runtime;
 use crate::store::bdw::RawTensor;
-use crate::store::delta_file::{DeltaFile, LoraFile};
 
 /// Device-resident full weight set (dense / base model).
 pub struct DenseArgs {
@@ -48,42 +53,6 @@ impl DenseArgs {
     }
 }
 
-/// Device-resident stacked weights for the naive mode: every parameter
-/// carries a leading `[B]` tenant axis (this is the memory hog the paper's
-/// Figure 5 shows OOMing — we materialise it faithfully).
-pub struct NaiveArgs {
-    pub buffers: Vec<xla::PjRtBuffer>,
-    pub batch: usize,
-}
-
-impl NaiveArgs {
-    pub fn from_models(rt: &Runtime, cfg: &ModelConfig,
-                       models: &[&HashMap<String, RawTensor>],
-                       batch: usize) -> Result<Self> {
-        if models.is_empty() || models.len() > batch {
-            bail!("need 1..={batch} models, got {}", models.len());
-        }
-        let mut buffers = Vec::new();
-        for name in cfg.param_names() {
-            let shape = cfg.param_shape(&name);
-            let elems: usize = shape.iter().product();
-            let mut stacked = Vec::with_capacity(batch * elems);
-            for b in 0..batch {
-                let m = models[b.min(models.len() - 1)];
-                stacked.extend_from_slice(&m[&name].as_f32()?);
-            }
-            let mut full_shape = vec![batch];
-            full_shape.extend(&shape);
-            buffers.push(rt.upload_f32(&stacked, &full_shape)?);
-        }
-        Ok(Self { buffers, batch })
-    }
-
-    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
-        self.buffers.iter().collect()
-    }
-}
-
 /// Device-resident shared base linears (uploaded once per base model).
 pub struct BaseLinears {
     pub buffers: Vec<xla::PjRtBuffer>,
@@ -101,114 +70,22 @@ impl BaseLinears {
     }
 }
 
-/// Stacked per-tenant BitDelta args for one batch composition:
-/// 28 bits buffers + 1 scales + 11 extras. Rebuilt only on composition
-/// change (hot-swap); kept on device between steps.
-pub struct BitDeltaArgs {
-    pub bits: Vec<xla::PjRtBuffer>,
-    pub scales: xla::PjRtBuffer,
-    pub extras: Vec<xla::PjRtBuffer>,
+/// Stacked per-tenant arguments for one batch composition, produced by a
+/// [`crate::delta::codec::DeltaCodec`]. The buffers are already in the
+/// codec's executable ABI order (everything between the shared base
+/// linears — if the codec uses them — and the `k/v/pos/token/rope`
+/// tail). Rebuilt only on composition change (hot-swap); kept on device
+/// between steps.
+pub struct StackedArgs {
+    pub buffers: Vec<xla::PjRtBuffer>,
     pub batch: usize,
     /// Host bytes staged (== per-step upload saved by residency).
     pub staged_bytes: usize,
 }
 
-impl BitDeltaArgs {
-    /// `deltas[b]` is the delta for batch slot `b`; slots past
-    /// `deltas.len()` repeat the last delta (padding slots are masked by
-    /// the engine's bookkeeping, but must hold valid data).
-    pub fn assemble(rt: &Runtime, cfg: &ModelConfig,
-                    deltas: &[&DeltaFile], batch: usize) -> Result<Self> {
-        if deltas.is_empty() || deltas.len() > batch {
-            bail!("need 1..={batch} deltas, got {}", deltas.len());
-        }
-        let pick = |b: usize| deltas[b.min(deltas.len() - 1)];
-        let mut staged = 0usize;
-
-        let mut bits = Vec::new();
-        for name in cfg.linear_names() {
-            let (n, mp) = cfg.packed_shape(&name);
-            let mut stacked = Vec::with_capacity(batch * n * mp);
-            for b in 0..batch {
-                stacked.extend_from_slice(&pick(b).levels[0].bits[&name]);
-            }
-            staged += stacked.len();
-            bits.push(rt.upload_u8(&stacked, &[batch, n, mp])?);
-        }
-
-        let n_lin = cfg.linear_names().len();
-        let mut scales = Vec::with_capacity(batch * n_lin);
-        for b in 0..batch {
-            scales.extend_from_slice(&pick(b).levels[0].scales);
-        }
-        staged += scales.len() * 4;
-        let scales = rt.upload_f32(&scales, &[batch, n_lin])?;
-
-        let mut extras = Vec::new();
-        for name in cfg.nonlinear_names() {
-            let shape = cfg.param_shape(&name);
-            let elems: usize = shape.iter().product();
-            let mut stacked = Vec::with_capacity(batch * elems);
-            for b in 0..batch {
-                stacked.extend_from_slice(&pick(b).extras[&name].as_f32()?);
-            }
-            staged += stacked.len() * 4;
-            let mut full = vec![batch];
-            full.extend(&shape);
-            extras.push(rt.upload_f32(&stacked, &full)?);
-        }
-
-        Ok(Self { bits, scales, extras, batch, staged_bytes: staged })
-    }
-}
-
-/// Stacked per-tenant LoRA/SVD factors (S-LoRA mode).
-pub struct LoraArgs {
-    pub a: Vec<xla::PjRtBuffer>,
-    pub b: Vec<xla::PjRtBuffer>,
-    pub extras: Vec<xla::PjRtBuffer>,
-    pub batch: usize,
-    pub rank: usize,
-}
-
-impl LoraArgs {
-    pub fn assemble(rt: &Runtime, cfg: &ModelConfig,
-                    loras: &[&LoraFile], batch: usize) -> Result<Self> {
-        if loras.is_empty() || loras.len() > batch {
-            bail!("need 1..={batch} adapters, got {}", loras.len());
-        }
-        let rank = loras[0].rank;
-        if loras.iter().any(|l| l.rank != rank) {
-            bail!("mixed ranks in one batch");
-        }
-        let pick = |b: usize| loras[b.min(loras.len() - 1)];
-
-        let (mut a_bufs, mut b_bufs) = (Vec::new(), Vec::new());
-        for name in cfg.linear_names() {
-            let (n, m) = cfg.linear_shape(&name);
-            let mut sa = Vec::with_capacity(batch * rank * m);
-            let mut sb = Vec::with_capacity(batch * n * rank);
-            for bi in 0..batch {
-                sa.extend_from_slice(&pick(bi).a[&name]);
-                sb.extend_from_slice(&pick(bi).b[&name]);
-            }
-            a_bufs.push(rt.upload_f32(&sa, &[batch, rank, m])?);
-            b_bufs.push(rt.upload_f32(&sb, &[batch, n, rank])?);
-        }
-
-        let mut extras = Vec::new();
-        for name in cfg.nonlinear_names() {
-            let shape = cfg.param_shape(&name);
-            let elems: usize = shape.iter().product();
-            let mut stacked = Vec::with_capacity(batch * elems);
-            for bi in 0..batch {
-                stacked.extend_from_slice(&pick(bi).extras[&name].as_f32()?);
-            }
-            let mut full = vec![batch];
-            full.extend(&shape);
-            extras.push(rt.upload_f32(&stacked, &full)?);
-        }
-        Ok(Self { a: a_bufs, b: b_bufs, extras, batch, rank })
+impl StackedArgs {
+    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
+        self.buffers.iter().collect()
     }
 }
 
@@ -226,7 +103,8 @@ impl DecodeOut {
     pub fn from_literals(mut lits: Vec<xla::Literal>, batch: usize)
                          -> Result<Self> {
         if lits.len() != 3 {
-            bail!("decode output: want 3 literals, got {}", lits.len());
+            anyhow::bail!("decode output: want 3 literals, got {}",
+                          lits.len());
         }
         let v = super::client::literal_f32(&lits.pop().unwrap())?;
         let k = super::client::literal_f32(&lits.pop().unwrap())?;

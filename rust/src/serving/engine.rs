@@ -1,13 +1,24 @@
 //! The serving engine: continuous-batching decode loop over the AOT
-//! executables, in three execution modes.
+//! executables, dispatched through the [`DeltaCodec`] registry.
 //!
-//! * [`ExecMode::BitDelta`] — the paper's system: shared base linears
-//!   (device-resident, uploaded once) + per-tenant stacked 1-bit deltas,
-//!   re-assembled **only when the batch composition changes** (hot-swap).
-//! * [`ExecMode::Naive`]    — B full fine-tuned models stacked per slot;
-//!   faithful to the baseline that OOMs in Figs. 5/6.
-//! * [`ExecMode::Lora`]     — per-tenant low-rank adapters (S-LoRA
-//!   comparator).
+//! Every tenant is served under a **delta codec** (`bitdelta`, `lora`,
+//! `svd`, `dense`, …): the codec loads the tenant's payload, accounts
+//! its bytes in the hot-swap store, stacks it into the decode ABI, and
+//! names the executable to run. The engine itself no longer knows any
+//! format — it only distinguishes two batch shapes:
+//!
+//! * **homogeneous batch** — every active tenant uses the same codec:
+//!   run that codec's native executable (`decode_bitdelta`,
+//!   `decode_lora`, `decode_naive`) over `codec.assemble(...)`. This is
+//!   the paper's fast path: shared base linears device-resident,
+//!   per-tenant payloads re-stacked **only when the batch composition
+//!   changes** (hot-swap).
+//! * **mixed-format batch** — tenants on different codecs share one
+//!   decode step: each slot's payload is materialized into dense
+//!   weights (`codec.materialize`, cached per tenant) and the batch
+//!   runs the stacked-dense `decode_naive` executable. Correct for any
+//!   codec combination at the naive path's memory cost — the price of
+//!   format freedom, paid only by mixed compositions.
 //!
 //! Prefill is piggybacked on the batched decode step (Orca-style
 //! continuous batching): a freshly admitted sequence consumes one prompt
@@ -28,17 +39,19 @@ use crate::coordinator::batcher::{ActiveSeq, Batcher};
 use crate::coordinator::deltastore::DeltaStore;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{Router, TenantInfo};
+use crate::delta::codec::{CodecRegistry, DeltaCodec, Model};
+use crate::delta::codecs::dense::stack_dense_models;
 use crate::kvcache::SeqCache;
 use crate::model::sampling::sample;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::runtime::client::{Executable, Runtime};
-use crate::runtime::variants::{BaseLinears, BitDeltaArgs, DecodeOut,
-                               LoraArgs, NaiveArgs};
+use crate::runtime::variants::{BaseLinears, DecodeOut, StackedArgs};
 use crate::serving::request::{QueuedRequest, Request, Response};
-use crate::store::bdw::RawTensor;
-use crate::store::delta_file::{load_model, LoraFile};
+use crate::store::delta_file::load_model;
 
-/// Which decomposed forward the engine runs.
+/// Historical three-way mode switch, kept as a thin compatibility shim:
+/// each variant is just a default codec name. New code should set
+/// [`EngineConfig::codec`] directly.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
     BitDelta,
@@ -47,11 +60,12 @@ pub enum ExecMode {
 }
 
 impl ExecMode {
-    pub fn exec_kind(&self) -> &'static str {
+    /// The registry name this legacy mode maps to.
+    pub fn codec_name(&self) -> &'static str {
         match self {
-            ExecMode::BitDelta => "decode_bitdelta",
-            ExecMode::Naive => "decode_naive",
-            ExecMode::Lora => "decode_lora",
+            ExecMode::BitDelta => "bitdelta",
+            ExecMode::Naive => "dense",
+            ExecMode::Lora => "lora",
         }
     }
 }
@@ -62,7 +76,15 @@ pub struct EngineConfig {
     pub artifacts_dir: PathBuf,
     /// Model size name, e.g. "sim-s".
     pub model: String,
+    /// Legacy mode switch (compatibility shim); ignored when `codec` is
+    /// set.
     pub mode: ExecMode,
+    /// Default delta codec for every tenant (registry name). Overrides
+    /// `mode` when set.
+    pub codec: Option<String>,
+    /// Per-tenant codec overrides (`tenant -> codec name`): tenants on
+    /// different codecs may share a decode batch (mixed-format batch).
+    pub codec_overrides: HashMap<String, String>,
     /// Decode batch width; must match an exported executable.
     pub batch: usize,
     /// Delta residency budget (bytes) for the hot-swap store.
@@ -80,11 +102,19 @@ impl EngineConfig {
             artifacts_dir: artifacts_dir.into(),
             model: "sim-s".into(),
             mode: ExecMode::BitDelta,
+            codec: None,
+            codec_overrides: HashMap::new(),
             batch: 4,
             delta_budget_bytes: 256 << 20,
             stop_token: Some(10),
             distilled: true,
         }
+    }
+
+    /// The effective default codec name (`codec` wins over `mode`).
+    pub fn default_codec_name(&self) -> String {
+        self.codec.clone()
+            .unwrap_or_else(|| self.mode.codec_name().to_string())
     }
 }
 
@@ -99,26 +129,40 @@ pub struct StepReport {
     pub total_seconds: f64,
 }
 
+/// The stacked arguments + executable for one batch composition.
+struct StackedPlan {
+    comp: u64,
+    exec: Rc<Executable>,
+    /// Prepend the shared base linears to the argument list.
+    needs_base: bool,
+    /// Name of the executable kind (metrics label).
+    exec_kind: &'static str,
+    args: StackedArgs,
+}
+
 /// The multi-tenant serving engine (single-threaded; see
 /// [`crate::serving::service`] for the async front-end).
 pub struct Engine {
     pub cfg: ModelConfig,
     econfig: EngineConfig,
+    manifest: Manifest,
     rt: Runtime,
-    decode_exe: Rc<Executable>,
     tok: ByteTokenizer,
 
-    // mode-specific device-resident state
-    base_linears: Option<BaseLinears>,
-    stacked_bitdelta: Option<(u64, BitDeltaArgs)>,
-    stacked_naive: Option<(u64, NaiveArgs)>,
-    stacked_lora: Option<(u64, LoraArgs)>,
+    /// Tenant -> its codec (default codec unless overridden).
+    codec_of: HashMap<String, Rc<dyn DeltaCodec>>,
+    /// Executables by exec kind, loaded lazily (a mixed batch needs
+    /// `decode_naive` even when the default codec is `bitdelta`).
+    execs: HashMap<&'static str, Rc<Executable>>,
 
-    // host-side model/adapter caches
-    models: HashMap<String, Rc<HashMap<String, RawTensor>>>,
-    model_paths: HashMap<String, PathBuf>,
-    lora_files: HashMap<String, Rc<LoraFile>>,
-    lora_paths: HashMap<String, PathBuf>,
+    /// Host copy of the base model (materialize fallback + svd loads).
+    base_model: Rc<Model>,
+    /// Shared base linears, uploaded once, built on first need.
+    base_linears: Option<BaseLinears>,
+    /// Current composition's stacked arguments.
+    stacked: Option<StackedPlan>,
+    /// Dense weights materialized for mixed-format batches, per tenant.
+    materialized: HashMap<String, Rc<Model>>,
 
     pub router: Router,
     pub batcher: Batcher,
@@ -133,70 +177,71 @@ pub struct Engine {
 
 impl Engine {
     /// Build an engine from artifacts: loads the manifest, compiles the
-    /// decode executable, uploads the base weights, registers every
-    /// tenant of the chosen model size.
+    /// default codec's decode executable, loads the base weights,
+    /// registers every tenant of the chosen model size under its codec.
     pub fn from_artifacts(econfig: EngineConfig) -> Result<Self> {
         let manifest = Manifest::load(&econfig.artifacts_dir)?;
         let cfg = manifest.config(&econfig.model)?.clone();
         let mut rt = Runtime::cpu()?;
+        let registry = CodecRegistry::builtin();
+        let default_codec = registry.get(&econfig.default_codec_name())?;
 
+        // fail fast: the default codec's decode executable must exist
+        let kind = default_codec.exec_kind();
         let exec = manifest
-            .find_exec(&econfig.model, econfig.mode.exec_kind(),
-                       econfig.batch)
+            .find_exec(&econfig.model, kind, econfig.batch)
             .with_context(|| format!(
                 "no {} executable at batch {} for {} — available: {:?}",
-                econfig.mode.exec_kind(), econfig.batch, econfig.model,
-                manifest.exec_batches(&econfig.model,
-                                      econfig.mode.exec_kind())))?;
+                kind, econfig.batch, econfig.model,
+                manifest.exec_batches(&econfig.model, kind)))?;
         let decode_exe = rt.load(manifest.path(&exec.path))?;
+        let mut execs: HashMap<&'static str, Rc<Executable>> =
+            HashMap::new();
+        execs.insert(kind, decode_exe);
 
-        // base model (shared linears for bitdelta/lora modes)
+        // base model (shared linears + materialize/svd substrate)
         let base_name = format!("{}-base", econfig.model);
         let base_entry = manifest.models.get(&base_name)
             .with_context(|| format!("manifest missing {base_name}"))?;
-        let base = load_model(manifest.path(&base_entry.file), &cfg)?;
-        let base_linears = match econfig.mode {
-            ExecMode::BitDelta | ExecMode::Lora =>
-                Some(BaseLinears::from_model(&rt, &cfg, &base)?),
-            ExecMode::Naive => None,
-        };
+        let base_model = Rc::new(
+            load_model(manifest.path(&base_entry.file), &cfg)?);
 
         let mut router = Router::new(AdmissionPolicy::default());
         let mut deltas = DeltaStore::new(cfg.clone(),
                                          econfig.delta_budget_bytes);
-        let mut model_paths = HashMap::new();
-        let mut lora_paths = HashMap::new();
+        deltas.set_base(base_model.clone());
+        let mut codec_of: HashMap<String, Rc<dyn DeltaCodec>> =
+            HashMap::new();
         for (tname, t) in &manifest.tenants {
             if t.config != econfig.model {
                 continue;
             }
-            router.register_tenant(TenantInfo {
-                name: tname.clone(), rope_scale: t.rope_scale });
-            let dfile = if econfig.distilled { &t.delta }
-                        else { &t.delta_initial };
-            deltas.register(tname.clone(), manifest.path(dfile));
-            model_paths.insert(tname.clone(),
-                               manifest.path(&t.finetune));
-            if let Some(svd) = &t.svd_r16 {
-                lora_paths.insert(tname.clone(),
-                                  manifest.path(&svd.distilled));
+            let codec = match econfig.codec_overrides.get(tname) {
+                Some(name) => registry.get(name)?,
+                None => default_codec.clone(),
+            };
+            router.register_tenant(
+                TenantInfo::new(tname.clone(), t.rope_scale)
+                    .with_codec(codec.name()));
+            if let Some(path) =
+                codec.artifact_path(&manifest, t, econfig.distilled) {
+                deltas.register(tname.clone(), codec.clone(), path);
             }
+            codec_of.insert(tname.clone(), codec);
         }
 
         let kv_len = cfg.n_layers * econfig.batch * cfg.n_heads
             * cfg.max_seq_len * cfg.head_dim();
         let batch = econfig.batch;
         Ok(Self {
-            cfg, econfig, rt, decode_exe,
+            cfg, econfig, manifest, rt,
             tok: ByteTokenizer::new(),
-            base_linears,
-            stacked_bitdelta: None,
-            stacked_naive: None,
-            stacked_lora: None,
-            models: HashMap::new(),
-            model_paths,
-            lora_files: HashMap::new(),
-            lora_paths,
+            codec_of,
+            execs,
+            base_model,
+            base_linears: None,
+            stacked: None,
+            materialized: HashMap::new(),
             router,
             batcher: Batcher::new(batch),
             deltas,
@@ -207,8 +252,15 @@ impl Engine {
         })
     }
 
+    /// Legacy mode accessor (compatibility shim — reflects the config
+    /// field, not per-tenant overrides).
     pub fn mode(&self) -> ExecMode {
         self.econfig.mode
+    }
+
+    /// The codec name a tenant is served under.
+    pub fn tenant_codec(&self, tenant: &str) -> Option<&'static str> {
+        self.codec_of.get(tenant).map(|c| c.name())
     }
 
     pub fn tenants(&self) -> Vec<String> {
@@ -315,40 +367,29 @@ impl Engine {
         let tok_buf = self.rt.upload_i32(&tokens, &[b])?;
         let rope_buf = self.rt.upload_f32(&rope, &[b])?;
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
-        match self.econfig.mode {
-            ExecMode::BitDelta => {
-                let bl = self.base_linears.as_ref().unwrap();
-                let st = &self.stacked_bitdelta.as_ref().unwrap().1;
-                args.extend(bl.buffers.iter());
-                args.extend(st.bits.iter());
-                args.push(&st.scales);
-                args.extend(st.extras.iter());
-            }
-            ExecMode::Naive => {
-                let st = &self.stacked_naive.as_ref().unwrap().1;
-                args.extend(st.buffers.iter());
-            }
-            ExecMode::Lora => {
-                let bl = self.base_linears.as_ref().unwrap();
-                let st = &self.stacked_lora.as_ref().unwrap().1;
-                args.extend(bl.buffers.iter());
-                args.extend(st.a.iter());
-                args.extend(st.b.iter());
-                args.extend(st.extras.iter());
-            }
-        }
-        args.push(&k_buf);
-        args.push(&v_buf);
-        args.push(&pos_buf);
-        args.push(&tok_buf);
-        args.push(&rope_buf);
-
         // ---- execute -----------------------------------------------------
-        let t_exec = Instant::now();
-        let lits = self.decode_exe.run_buffers(&args)?;
-        report.exec_seconds = t_exec.elapsed().as_secs_f64();
-        let out = DecodeOut::from_literals(lits, b)?;
+        let out = {
+            let plan = self.stacked.as_ref()
+                .ok_or_else(|| anyhow!("no stacked plan after assembly"))?;
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+            if plan.needs_base {
+                let bl = self.base_linears.as_ref().ok_or_else(
+                    || anyhow!("base linears missing for {}",
+                               plan.exec_kind))?;
+                args.extend(bl.buffers.iter());
+            }
+            args.extend(plan.args.buffers.iter());
+            args.push(&k_buf);
+            args.push(&v_buf);
+            args.push(&pos_buf);
+            args.push(&tok_buf);
+            args.push(&rope_buf);
+
+            let t_exec = Instant::now();
+            let lits = plan.exec.run_buffers(&args)?;
+            report.exec_seconds = t_exec.elapsed().as_secs_f64();
+            DecodeOut::from_literals(lits, b)?
+        };
         self.kv_k = out.k.clone();
         self.kv_v = out.v.clone();
 
@@ -422,96 +463,133 @@ impl Engine {
     /// Re-assemble the stacked per-tenant arguments if the batch
     /// composition changed. Returns true if a re-stack happened.
     fn ensure_stacked(&mut self, comp: u64) -> Result<bool> {
-        let fresh = match self.econfig.mode {
-            ExecMode::BitDelta =>
-                self.stacked_bitdelta.as_ref().map(|(c, _)| *c) != Some(comp),
-            ExecMode::Naive =>
-                self.stacked_naive.as_ref().map(|(c, _)| *c) != Some(comp),
-            ExecMode::Lora =>
-                self.stacked_lora.as_ref().map(|(c, _)| *c) != Some(comp),
-        };
-        if !fresh {
+        if self.stacked.as_ref().map(|p| p.comp) == Some(comp) {
             return Ok(false);
         }
         let slots = self.batcher.active_slots();
+        // slot-indexed tenant list, padding holes with the first active
+        // tenant (padding slots are masked by bookkeeping)
         let tenants: Vec<String> = {
-            let mut order: Vec<String> = Vec::new();
-            // slot-indexed tenant list, padding holes with the first
-            // active tenant (padding slots are masked by bookkeeping)
             let first = self.batcher.slot(slots[0]).unwrap().tenant.clone();
-            for i in 0..self.econfig.batch {
-                order.push(self.batcher.slot(i)
+            (0..self.econfig.batch).map(|i| {
+                self.batcher.slot(i)
                     .map(|s| s.tenant.clone())
-                    .unwrap_or_else(|| first.clone()));
-            }
-            order
+                    .unwrap_or_else(|| first.clone())
+            }).collect()
         };
-        match self.econfig.mode {
-            ExecMode::BitDelta => {
-                let mut deltas = Vec::new();
-                for t in &tenants {
-                    deltas.push(self.deltas.fetch(t)?);
-                }
-                let refs: Vec<&crate::store::delta_file::DeltaFile> =
-                    deltas.iter().map(|d| d.as_ref()).collect();
-                let stacked = BitDeltaArgs::assemble(
-                    &self.rt, &self.cfg, &refs, self.econfig.batch)?;
-                self.metrics.inc("delta_restacks", 1);
-                self.metrics.inc("delta_restack_bytes",
-                                 stacked.staged_bytes as u64);
-                self.stacked_bitdelta = Some((comp, stacked));
+        let codecs: Vec<Rc<dyn DeltaCodec>> = tenants.iter().map(|t| {
+            self.codec_of.get(t).cloned()
+                .ok_or_else(|| anyhow!("tenant {t} has no codec"))
+        }).collect::<Result<_>>()?;
+        let homogeneous = codecs.windows(2)
+            .all(|w| w[0].name() == w[1].name());
+
+        let (exec_kind, needs_base, args) = if homogeneous {
+            let codec = codecs[0].clone();
+            let mut payloads = Vec::new();
+            for t in &tenants {
+                payloads.push(self.deltas.fetch(t)?);
             }
-            ExecMode::Naive => {
-                let mut models = Vec::new();
-                for t in &tenants {
-                    models.push(self.fetch_model(t)?);
-                }
-                let refs: Vec<&HashMap<String, RawTensor>> =
-                    models.iter().map(|m| m.as_ref()).collect();
-                let stacked = NaiveArgs::from_models(
-                    &self.rt, &self.cfg, &refs, self.econfig.batch)?;
-                self.metrics.inc("naive_restacks", 1);
-                self.stacked_naive = Some((comp, stacked));
+            let refs: Vec<&dyn crate::delta::codec::Payload> =
+                payloads.iter().map(|p| p.as_ref()).collect();
+            let args = codec.assemble(&self.rt, &self.cfg, &refs,
+                                      self.econfig.batch)?;
+            // homogeneous compositions need no dense fallbacks at all —
+            // release any weights a previous mixed batch materialized
+            self.materialized.clear();
+            (codec.exec_kind(), codec.needs_base(), args)
+        } else {
+            // mixed-format batch: materialize every slot into dense
+            // weights and run the stacked-dense executable
+            let mut models = Vec::new();
+            for (t, c) in tenants.iter().zip(&codecs) {
+                models.push(self.fetch_materialized(t, c.clone())?);
             }
-            ExecMode::Lora => {
-                let mut files = Vec::new();
-                for t in &tenants {
-                    files.push(self.fetch_lora(t)?);
-                }
-                let refs: Vec<&LoraFile> =
-                    files.iter().map(|f| f.as_ref()).collect();
-                let stacked = LoraArgs::assemble(
-                    &self.rt, &self.cfg, &refs, self.econfig.batch)?;
-                self.metrics.inc("lora_restacks", 1);
-                self.stacked_lora = Some((comp, stacked));
-            }
+            let refs: Vec<&Model> =
+                models.iter().map(|m| m.as_ref()).collect();
+            let args = stack_dense_models(&self.rt, &self.cfg, &refs,
+                                          self.econfig.batch)?;
+            drop(refs);
+            drop(models);
+            // bound the dense cache to the tenants actually in this
+            // composition — without this, every tenant that ever rode a
+            // mixed batch would keep a full fine-tune resident (naive-
+            // mode memory, invisible to the delta budget)
+            self.materialized.retain(|t, _| tenants.contains(t));
+            self.metrics.inc("mixed_batches", 1);
+            ("decode_naive", false, args)
+        };
+
+        if needs_base && self.base_linears.is_none() {
+            self.base_linears = Some(BaseLinears::from_model(
+                &self.rt, &self.cfg, &self.base_model)?);
         }
+        let exec = self.exec_for(exec_kind)?;
+        self.metrics.inc("delta_restacks", 1);
+        self.metrics.inc("delta_restack_bytes",
+                         args.staged_bytes as u64);
+        self.metrics.inc(exec_kind, 1);
+        self.stacked = Some(StackedPlan {
+            comp, exec, needs_base, exec_kind, args,
+        });
         Ok(true)
     }
 
-    fn fetch_model(&mut self, tenant: &str)
-                   -> Result<Rc<HashMap<String, RawTensor>>> {
-        if let Some(m) = self.models.get(tenant) {
-            return Ok(m.clone());
+    /// Executable for an exec kind at the engine's batch width (lazy,
+    /// cached).
+    fn exec_for(&mut self, kind: &'static str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.execs.get(kind) {
+            return Ok(e.clone());
         }
-        let path = self.model_paths.get(tenant)
-            .with_context(|| format!("no model file for {tenant}"))?;
-        let m = Rc::new(load_model(path, &self.cfg)?);
-        self.models.insert(tenant.to_string(), m.clone());
-        Ok(m)
+        let entry = self.manifest
+            .find_exec(&self.econfig.model, kind, self.econfig.batch)
+            .with_context(|| format!(
+                "no {} executable at batch {} for {} — available: {:?}",
+                kind, self.econfig.batch, self.econfig.model,
+                self.manifest.exec_batches(&self.econfig.model, kind)))?;
+        let exe = self.rt.load(self.manifest.path(&entry.path))?;
+        self.execs.insert(kind, exe.clone());
+        Ok(exe)
     }
 
-    fn fetch_lora(&mut self, tenant: &str) -> Result<Rc<LoraFile>> {
-        if let Some(f) = self.lora_files.get(tenant) {
-            return Ok(f.clone());
+    /// Per-codec residency/load accounting in Prometheus-ish text,
+    /// appended to the metrics exposition by the CLI (`repro serve`).
+    pub fn codec_accounting(&self) -> String {
+        let mut out = String::new();
+        let mut resident: Vec<_> = self.deltas.resident_bytes_by_codec()
+            .into_iter().collect();
+        resident.sort();
+        for (codec, bytes) in resident {
+            out.push_str(&format!(
+                "bitdelta_delta_resident_bytes{{codec=\"{codec}\"}} \
+{bytes}\n"));
         }
-        let path = self.lora_paths.get(tenant)
-            .with_context(|| format!(
-                "no lora/svd adapter for {tenant} (lora mode only serves \
-tenants with svd factors)"))?;
-        let f = Rc::new(LoraFile::load(path, &self.cfg)?);
-        self.lora_files.insert(tenant.to_string(), f.clone());
-        Ok(f)
+        let mut loaded: Vec<_> = self.deltas.stats.by_codec.iter()
+            .collect();
+        loaded.sort_by_key(|(k, _)| k.to_string());
+        for (codec, cs) in loaded {
+            out.push_str(&format!(
+                "bitdelta_delta_loads_total{{codec=\"{codec}\"}} {}\n\
+                 bitdelta_delta_bytes_loaded_total{{codec=\"{codec}\"}} \
+{}\n\
+                 bitdelta_delta_evictions_total{{codec=\"{codec}\"}} {}\n",
+                cs.loads, cs.bytes_loaded, cs.evictions));
+        }
+        out
+    }
+
+    /// Dense weights for a tenant under its codec (mixed-batch path),
+    /// cached per tenant.
+    fn fetch_materialized(&mut self, tenant: &str,
+                          codec: Rc<dyn DeltaCodec>) -> Result<Rc<Model>> {
+        if let Some(m) = self.materialized.get(tenant) {
+            return Ok(m.clone());
+        }
+        let payload = self.deltas.fetch(tenant)?;
+        let m = codec.materialize(&self.cfg, &self.base_model,
+                                  payload.as_ref())?;
+        self.materialized.insert(tenant.to_string(), m.clone());
+        Ok(m)
     }
 
     fn zero_slot_cache(&mut self, slot: usize) {

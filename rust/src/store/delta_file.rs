@@ -7,6 +7,13 @@
 //!
 //! A **LoRA file** holds `lora_a.{linear}` (`[r, M]`) / `lora_b.{linear}`
 //! (`[N, r]`) factors plus the same `extra.*` tensors.
+//!
+//! Containers written by this crate carry a **format tag** (a tiny
+//! `__format__` tensor holding the codec name) so tooling can dispatch a
+//! payload to its [`crate::delta::codec::DeltaCodec`] without guessing.
+//! Files from the python build path predate the tag; [`detect_format`]
+//! falls back to sniffing the tensor names, so both generations of
+//! artifacts load identically.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -15,6 +22,36 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::store::bdw::{read_bdw, Bdw, RawTensor};
+
+/// Name of the format-tag tensor inside a BDW container.
+pub const FORMAT_TAG: &str = "__format__";
+
+/// Stamp a container with its delta-format name (u8 bytes of the name).
+pub fn tag_format(bdw: &mut Bdw, format: &str) {
+    bdw.insert(FORMAT_TAG.to_string(),
+               RawTensor::u8(vec![format.len()],
+                             format.as_bytes().to_vec()));
+}
+
+/// Read a container's format: the explicit tag when present, else a
+/// name-based sniff (`scales.0` ⇒ bitdelta, `lora_a.*` ⇒ lora,
+/// bare `tok_embed` ⇒ dense). `None` when the shape is unrecognisable.
+pub fn detect_format(bdw: &Bdw) -> Option<String> {
+    if bdw.contains(FORMAT_TAG) {
+        let t = bdw.get(FORMAT_TAG).ok()?;
+        return String::from_utf8(t.bytes.clone()).ok();
+    }
+    if bdw.contains("scales.0") {
+        return Some("bitdelta".into());
+    }
+    if bdw.names.iter().any(|n| n.starts_with("lora_a.")) {
+        return Some("lora".into());
+    }
+    if bdw.contains("tok_embed") {
+        return Some("dense".into());
+    }
+    None
+}
 
 /// One 1-bit mask level: packed sign matrices + per-matrix scales.
 #[derive(Debug, Clone)]
@@ -39,6 +76,12 @@ impl DeltaFile {
     }
 
     pub fn from_bdw(bdw: &Bdw, cfg: &ModelConfig) -> Result<Self> {
+        if let Some(f) = detect_format(bdw) {
+            if f != "bitdelta" {
+                bail!("container is tagged {f:?}, not a bitdelta delta \
+file");
+            }
+        }
         let lin = cfg.linear_names();
         let mut levels = Vec::new();
         for level in 0.. {
@@ -81,9 +124,11 @@ impl DeltaFile {
         Ok(Self { levels, extras })
     }
 
-    /// Serialize back to a BDW container (rust-native compressor output).
+    /// Serialize back to a BDW container (rust-native compressor
+    /// output), stamped with the `bitdelta` format tag.
     pub fn to_bdw(&self, cfg: &ModelConfig) -> Bdw {
         let mut bdw = Bdw::new();
+        tag_format(&mut bdw, "bitdelta");
         for (level, m) in self.levels.iter().enumerate() {
             bdw.insert(format!("scales.{level}"),
                        RawTensor::f32(vec![m.scales.len()], &m.scales));
@@ -129,6 +174,11 @@ pub struct LoraFile {
 impl LoraFile {
     pub fn load(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Self> {
         let bdw = read_bdw(path)?;
+        if let Some(f) = detect_format(&bdw) {
+            if f != "lora" {
+                bail!("container is tagged {f:?}, not a lora factor file");
+            }
+        }
         let lin = cfg.linear_names();
         let mut a = HashMap::new();
         let mut b = HashMap::new();
@@ -228,6 +278,35 @@ mod tests {
         }
         assert_eq!(d.levels[0].scales, d2.levels[0].scales);
         assert_eq!(d.delta_bytes(), d2.delta_bytes());
+    }
+
+    #[test]
+    fn format_tag_written_and_detected() {
+        let cfg = tiny_cfg();
+        let bdw = tiny_delta(&cfg).to_bdw(&cfg);
+        assert_eq!(detect_format(&bdw).as_deref(), Some("bitdelta"));
+    }
+
+    #[test]
+    fn untagged_container_sniffed_by_names() {
+        let cfg = tiny_cfg();
+        let mut bdw = tiny_delta(&cfg).to_bdw(&cfg);
+        // simulate a python-era file: strip the tag
+        let pos = bdw.names.iter().position(|n| n == FORMAT_TAG).unwrap();
+        bdw.names.remove(pos);
+        bdw.tensors.remove(FORMAT_TAG);
+        assert_eq!(detect_format(&bdw).as_deref(), Some("bitdelta"));
+        assert!(DeltaFile::from_bdw(&bdw, &cfg).is_ok());
+    }
+
+    #[test]
+    fn mismatched_tag_rejected_with_clear_error() {
+        let cfg = tiny_cfg();
+        let mut bdw = tiny_delta(&cfg).to_bdw(&cfg);
+        bdw.tensors.insert(FORMAT_TAG.to_string(),
+                           RawTensor::u8(vec![4], b"lora".to_vec()));
+        let e = DeltaFile::from_bdw(&bdw, &cfg).unwrap_err().to_string();
+        assert!(e.contains("lora"), "{e}");
     }
 
     #[test]

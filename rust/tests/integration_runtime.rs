@@ -9,10 +9,10 @@ use std::path::Path;
 
 use bitdelta::config::Manifest;
 use bitdelta::delta::bitdelta::materialize;
+use bitdelta::delta::codec::{CodecRegistry, Payload};
 use bitdelta::model::tokenizer::ByteTokenizer;
 use bitdelta::runtime::client::{literal_f32, Runtime};
-use bitdelta::runtime::variants::{BaseLinears, BitDeltaArgs, DecodeOut,
-                                  DenseArgs};
+use bitdelta::runtime::variants::{BaseLinears, DecodeOut, DenseArgs};
 use bitdelta::store::delta_file::{load_model, DeltaFile};
 
 fn artifacts() -> Option<Manifest> {
@@ -89,7 +89,9 @@ fn decode_bitdelta_matches_materialized_dense() {
     let dn = rt.load(m.path(&dn_exec.path)).unwrap();
 
     let base_lin = BaseLinears::from_model(&rt, &cfg, &base).unwrap();
-    let stacked = BitDeltaArgs::assemble(&rt, &cfg, &[&delta], b).unwrap();
+    let codec = CodecRegistry::builtin().get("bitdelta").unwrap();
+    let stacked = codec
+        .assemble(&rt, &cfg, &[&delta as &dyn Payload], b).unwrap();
     let dense_args = DenseArgs::from_model(&rt, &cfg, &dense).unwrap();
 
     let kv_shape = [cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len,
@@ -110,9 +112,7 @@ fn decode_bitdelta_matches_materialized_dense() {
         let v1 = rt.upload_f32(&kv1.1, &kv_shape).unwrap();
         let mut a1: Vec<&xla::PjRtBuffer> =
             base_lin.buffers.iter().collect();
-        a1.extend(stacked.bits.iter());
-        a1.push(&stacked.scales);
-        a1.extend(stacked.extras.iter());
+        a1.extend(stacked.buffers.iter());
         a1.extend([&k1, &v1, &pos, &tk, &rope]);
         let o1 = DecodeOut::from_literals(
             bd.run_buffers(&a1).unwrap(), b).unwrap();
@@ -159,11 +159,11 @@ fn logits_bitdelta_executable_cross_check() {
     let tbuf = rt.upload_i32(&toks, &[1, bd_exec.seq]).unwrap();
 
     let base_lin = BaseLinears::from_model(&rt, &cfg, &base).unwrap();
-    let stacked = BitDeltaArgs::assemble(&rt, &cfg, &[&delta], 1).unwrap();
+    let codec = CodecRegistry::builtin().get("bitdelta").unwrap();
+    let stacked = codec
+        .assemble(&rt, &cfg, &[&delta as &dyn Payload], 1).unwrap();
     let mut a1: Vec<&xla::PjRtBuffer> = base_lin.buffers.iter().collect();
-    a1.extend(stacked.bits.iter());
-    a1.push(&stacked.scales);
-    a1.extend(stacked.extras.iter());
+    a1.extend(stacked.buffers.iter());
     a1.push(&tbuf);
     let z1 = literal_f32(&bd.run_buffers(&a1).unwrap()[0]).unwrap();
 

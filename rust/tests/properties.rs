@@ -9,9 +9,11 @@ use bitdelta::config::ModelConfig;
 use bitdelta::coordinator::admission::AdmissionPolicy;
 use bitdelta::coordinator::batcher::{ActiveSeq, Batcher};
 use bitdelta::coordinator::router::{Router, TenantInfo};
-use bitdelta::delta::packing::{pack_signs, popcount, unpack_signs};
+use bitdelta::delta::packing::{pack_signs, packed_row_bytes, popcount,
+                               unpack_signs};
+use bitdelta::gemm::binary::binary_gemv_bitextract;
 use bitdelta::gemm::{batched_binary_gemv, binary_gemv, dense_gemv,
-                     lora_gemv};
+                     lora_gemv, try_binary_gemv};
 use bitdelta::kvcache::SeqCache;
 use bitdelta::model::sampling::SamplingParams;
 use bitdelta::serving::request::{QueuedRequest, Request};
@@ -39,6 +41,63 @@ fn packing_roundtrip_preserves_sign_pattern() {
         // popcount consistency
         let pos = vals.iter().filter(|v| **v > 0.0).count();
         assert_eq!(popcount(&packed), pos);
+    });
+}
+
+#[test]
+fn lut_and_bitextract_kernels_agree_at_any_width() {
+    // The two independent binary-GEMV implementations must agree on
+    // every randomized (shape, seed, alpha) — including logical widths
+    // that are NOT multiples of 8, which exercise the byte-boundary
+    // padding introduced by the packing layer.
+    run_cases(80, |rng| {
+        let n = rng.usize_in(1, 12);
+        let m = rng.usize_in(1, 41);           // 1..=40, any remainder mod 8
+        let vals = rng.f32_vec(n * m);
+        let bits = pack_signs(&vals, m);
+        let x = rng.f32_vec(m);
+        let alpha = rng.f32_pm1().abs() + 0.05;
+
+        let mut y_lut = vec![0f32; n];
+        let mut y_ext = vec![0f32; n];
+        binary_gemv(&bits, n, m, &x, alpha, &mut y_lut);
+        binary_gemv_bitextract(&bits, n, m, &x, alpha, &mut y_ext);
+        for (a, b) in y_lut.iter().zip(&y_ext) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                    "n={n} m={m} alpha={alpha}: lut {a} vs bitextract {b}");
+        }
+        // both must also match the dense ±1 reference
+        let signs: Vec<f32> = vals.iter()
+            .map(|v| if *v > 0.0 { alpha } else { -alpha }).collect();
+        let mut want = vec![0f32; n];
+        dense_gemv(&signs, n, m, &x, &mut want);
+        for (a, b) in y_lut.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                    "n={n} m={m}: lut {a} vs dense reference {b}");
+        }
+    });
+}
+
+#[test]
+fn malformed_packed_buffers_rejected_at_any_width() {
+    // Set padding bits must produce a clear error, never a silent wrong
+    // dot product.
+    run_cases(40, |rng| {
+        let n = rng.usize_in(1, 6);
+        let m = rng.usize_in(1, 40);
+        if m % 8 == 0 {
+            return;                            // no padding to corrupt
+        }
+        let vals = rng.f32_vec(n * m);
+        let mut bits = pack_signs(&vals, m);
+        let mb = packed_row_bytes(m);
+        let row = rng.usize_in(0, n);
+        bits[row * mb + mb - 1] |= 1 << 7;     // always a padding bit
+        let x = rng.f32_vec(m);
+        let mut y = vec![0f32; n];
+        let e = try_binary_gemv(&bits, n, m, &x, 1.0, &mut y)
+            .unwrap_err();
+        assert!(e.to_string().contains("padding"), "{e}");
     });
 }
 
@@ -225,8 +284,7 @@ fn router_conservation_and_fairness() {
             per_tenant_cap: 1000, total_cap: 10_000 });
         let tenants = ["a", "b", "c"];
         for t in tenants {
-            r.register_tenant(TenantInfo { name: t.into(),
-                                           rope_scale: 1.0 });
+            r.register_tenant(TenantInfo::new(t, 1.0));
         }
         let mut pushed = 0u64;
         for i in 0..rng.usize_in(1, 30) {
