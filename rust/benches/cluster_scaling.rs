@@ -1,0 +1,147 @@
+//! Cluster scaling — aggregate decode throughput and request latency
+//! vs worker count (1/2/4) × placement policy on a Zipf-skewed trace.
+//!
+//! The claim under test: one engine thread caps the system, and because
+//! a BitDelta tenant is a ~1/16-cost delta on a shared base, adding
+//! workers is nearly free in memory — so aggregate throughput should
+//! scale with worker count, with `delta-aware` placement keeping hot
+//! tenants replicated and queues balanced. The trace is open-loop
+//! (arrival times honored) at a rate high enough to saturate a single
+//! worker, replayed from multiple client threads
+//! (`bitdelta::cluster::replay_trace` — the same harness `repro
+//! loadtest --workers N` uses).
+//!
+//! Emits a human table plus one JSON object per row (the usual bench
+//! JSON, parseable line-by-line).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use bitdelta::cluster::{apply_trace_weights, policy_by_name,
+                        replay_trace, tenant_profiles, Cluster,
+                        ClusterConfig, ReplayReport};
+use bitdelta::coordinator::workload::{generate, stats, TraceConfig,
+                                      TraceEvent};
+use bitdelta::serving::engine::EngineConfig;
+use bitdelta::util::json::Json;
+
+const PROMPT: &str = "Q: what color is the sky ?\nA:";
+
+struct Summary {
+    workers: usize,
+    policy: &'static str,
+    report: ReplayReport,
+}
+
+fn run_combo(workers: usize, policy: &'static str, trace: &[TraceEvent],
+             counts: &[usize], batch: usize)
+             -> Result<Option<Summary>> {
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = batch;
+    let mut profiles = tenant_profiles(&ec)?;
+    apply_trace_weights(&mut profiles, counts);
+    let names: Vec<String> =
+        profiles.iter().map(|t| t.name.clone()).collect();
+    let ccfg = ClusterConfig {
+        policy: policy_by_name(policy)?,
+        delta_budget_bytes: 256 << 20,
+    };
+    let cluster =
+        match Cluster::spawn_engines(&ccfg, &ec, workers, profiles) {
+            Ok(c) => c,
+            // only a missing AOT executable for this batch width is a
+            // benign skip; every other spawn failure is a real bug
+            Err(e) if format!("{e:#}").contains("executable") => {
+                return Ok(None);
+            }
+            Err(e) => return Err(e),
+        };
+    let handle = cluster.handle();
+    let clients = (workers * 2).clamp(2, 8);
+    let report = replay_trace(&handle, trace, &names, &[PROMPT],
+                              clients)?;
+    cluster.shutdown()?;
+    Ok(Some(Summary { workers, policy, report }))
+}
+
+fn json_row(s: &Summary) -> Json {
+    let round1 = |x: f64| (x * 10.0).round() / 10.0;
+    let mut o = BTreeMap::new();
+    o.insert("bench".to_string(),
+             Json::Str("cluster_scaling".to_string()));
+    o.insert("workers".to_string(), Json::Num(s.workers as f64));
+    o.insert("policy".to_string(), Json::Str(s.policy.to_string()));
+    o.insert("served".to_string(),
+             Json::Num(s.report.served() as f64));
+    o.insert("errors".to_string(), Json::Num(s.report.errors as f64));
+    o.insert("tok_per_s".to_string(),
+             Json::Num(round1(s.report.tok_per_s())));
+    o.insert("p50_ms".to_string(),
+             Json::Num(round1(s.report.quantile_ms(0.50))));
+    o.insert("p99_ms".to_string(),
+             Json::Num(round1(s.report.quantile_ms(0.99))));
+    Json::Obj(o)
+}
+
+fn main() -> Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    // Zipf-skewed open-loop trace: 8 ranks at s=0.9, arrival rate high
+    // enough that a single worker saturates and queues
+    let tcfg = TraceConfig {
+        n_tenants: 8,
+        n_requests: 96,
+        rate: 400.0,
+        zipf_s: 0.9,
+        min_tokens: 8,
+        max_tokens: 16,
+        seed: 7,
+    };
+    let trace = generate(&tcfg);
+    let st = stats(&trace, tcfg.n_tenants);
+    println!("cluster_scaling — {} requests, zipf {} over {} ranks, \
+hottest {:.0}% of traffic",
+             st.n, tcfg.zipf_s, tcfg.n_tenants,
+             st.hottest_share * 100.0);
+    println!("{:<8} {:<14} {:>8} {:>10} {:>9} {:>9} {:>7}",
+             "workers", "policy", "served", "tok/s", "p50 ms",
+             "p99 ms", "errors");
+
+    let mut rows: Vec<Summary> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        for policy in ["affinity", "least-loaded", "delta-aware"] {
+            match run_combo(workers, policy, &trace, &st.per_tenant, 4)? {
+                Some(s) => {
+                    println!("{:<8} {:<14} {:>8} {:>10.1} {:>9.1} \
+{:>9.1} {:>7}",
+                             s.workers, s.policy, s.report.served(),
+                             s.report.tok_per_s(),
+                             s.report.quantile_ms(0.50),
+                             s.report.quantile_ms(0.99),
+                             s.report.errors);
+                    rows.push(s);
+                }
+                None => println!("{workers:<8} {policy:<14} (no \
+executable for this batch size)"),
+            }
+        }
+    }
+
+    println!("\n--- JSON ---");
+    for s in &rows {
+        println!("{}", json_row(s));
+    }
+
+    // the scaling claim: 4 delta-aware workers beat 1 worker
+    let thr = |w: usize, p: &str| rows.iter()
+        .find(|s| s.workers == w && s.policy == p)
+        .map(|s| s.report.tok_per_s());
+    if let (Some(t4), Some(t1)) = (thr(4, "delta-aware"),
+                                   thr(1, "delta-aware")) {
+        println!("\ndelta-aware 4-worker vs 1-worker aggregate decode \
+throughput: {t4:.1} vs {t1:.1} tok/s ({:.2}x)", t4 / t1);
+    }
+    Ok(())
+}

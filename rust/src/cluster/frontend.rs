@@ -1,0 +1,704 @@
+//! The cluster: N worker engines behind one `Clone + Send` handle.
+//!
+//! [`Cluster::spawn`] computes an initial tenant placement (fail-fast
+//! if the deltas cannot be packed), then starts one worker thread per
+//! core factory. [`ClusterHandle`] routes each request to one of the
+//! tenant's placed workers via the configured
+//! [`PlacementPolicy`]; any number of client threads may submit
+//! concurrently.
+//!
+//! **Failover**: a worker that dies (engine error or panic) drops its
+//! `alive` flag; in-flight requests on it are answered with errors (the
+//! worker loop fails them before exiting, and a vanished reply channel
+//! surfaces as an error on the caller side — never a hang). The next
+//! routing decision notices the death, re-places the dead worker's
+//! tenants across the survivors with the same policy, and bumps the
+//! failover counters. If the survivors' budgets can no longer hold a
+//! policy-respecting placement, routing degrades to
+//! everything-everywhere — availability over budget.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::metrics::{relabel, rollup};
+use crate::cluster::placement::{
+    LoadView, Placement, PlacementPolicy, TenantProfile, WorkerSpec,
+};
+use crate::cluster::worker::{
+    spawn_worker, CoreFactory, WorkerCore, WorkerHandle,
+};
+use crate::config::Manifest;
+use crate::coordinator::workload::TraceEvent;
+use crate::delta::codec::CodecRegistry;
+use crate::model::sampling::SamplingParams;
+use crate::serving::engine::{Engine, EngineConfig};
+use crate::serving::request::{Request, Response};
+
+/// Cluster construction parameters.
+pub struct ClusterConfig {
+    pub policy: Arc<dyn PlacementPolicy>,
+    /// Per-worker delta residency budget, bytes (each worker's
+    /// [`crate::coordinator::deltastore::DeltaStore`] budget, and the
+    /// bin the delta-aware policy packs against).
+    pub delta_budget_bytes: usize,
+}
+
+/// Routing state behind the handle's mutex (everything the per-request
+/// hot path needs is either here or in lock-free [`WorkerLoad`]
+/// atomics).
+///
+/// [`WorkerLoad`]: crate::cluster::worker::WorkerLoad
+struct RouteState {
+    placement: Placement,
+    dead: Vec<bool>,
+    routed: Vec<u64>,
+    failovers: u64,
+    replaced_tenants: u64,
+}
+
+struct Shared {
+    policy: Arc<dyn PlacementPolicy>,
+    workers: Vec<WorkerHandle>,
+    specs: Vec<WorkerSpec>,
+    profiles: Vec<TenantProfile>,
+    state: Mutex<RouteState>,
+}
+
+/// Live load view over the workers' published atomics.
+struct LiveLoads<'a>(&'a [WorkerHandle]);
+
+impl LoadView for LiveLoads<'_> {
+    fn score(&self, worker: usize) -> usize {
+        self.0.get(worker).map(|h| h.load().score()).unwrap_or(usize::MAX)
+    }
+}
+
+/// The running cluster (owns the worker threads).
+pub struct Cluster {
+    handle: ClusterHandle,
+    joins: Vec<JoinHandle<Result<()>>>,
+}
+
+/// Cloneable, `Send + Sync` front-end to the cluster.
+#[derive(Clone)]
+pub struct ClusterHandle {
+    shared: Arc<Shared>,
+}
+
+impl Cluster {
+    /// Start one worker per factory; tenant placement is computed first
+    /// so an impossible packing fails before any engine loads.
+    pub fn spawn(cfg: &ClusterConfig, profiles: Vec<TenantProfile>,
+                 factories: Vec<CoreFactory>) -> Result<Self> {
+        if factories.is_empty() {
+            bail!("cluster needs at least one worker");
+        }
+        let n = factories.len();
+        let specs: Vec<WorkerSpec> = (0..n).map(|index| WorkerSpec {
+            index,
+            delta_budget_bytes: cfg.delta_budget_bytes,
+        }).collect();
+        let placement = cfg.policy.place(&profiles, &specs)?;
+
+        let mut workers = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for (i, f) in factories.into_iter().enumerate() {
+            let (h, j) = spawn_worker(format!("bitdelta-worker-{i}"), f)?;
+            workers.push(h);
+            joins.push(j);
+        }
+        let shared = Arc::new(Shared {
+            policy: cfg.policy.clone(),
+            workers,
+            specs,
+            profiles,
+            state: Mutex::new(RouteState {
+                placement,
+                dead: vec![false; n],
+                routed: vec![0; n],
+                failovers: 0,
+                replaced_tenants: 0,
+            }),
+        });
+        Ok(Self { handle: ClusterHandle { shared }, joins })
+    }
+
+    /// Engine-backed cluster: every worker runs its own [`Engine`] built
+    /// from `ecfg` with the cluster's per-worker delta budget.
+    pub fn spawn_engines(cfg: &ClusterConfig, ecfg: &EngineConfig,
+                         n_workers: usize,
+                         profiles: Vec<TenantProfile>) -> Result<Self> {
+        let factories: Vec<CoreFactory> = (0..n_workers).map(|_| {
+            let mut wcfg = ecfg.clone();
+            wcfg.delta_budget_bytes = cfg.delta_budget_bytes;
+            let f: CoreFactory = Box::new(move || {
+                Ok(Box::new(Engine::from_artifacts(wcfg)?)
+                   as Box<dyn WorkerCore>)
+            });
+            f
+        }).collect();
+        Self::spawn(cfg, profiles, factories)
+    }
+
+    pub fn handle(&self) -> ClusterHandle {
+        self.handle.clone()
+    }
+
+    /// Drain every worker and join the threads. The first worker error
+    /// (e.g. a death that already triggered failover) is returned.
+    pub fn shutdown(mut self) -> Result<()> {
+        for h in &self.handle.shared.workers {
+            h.shutdown_signal();
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        for j in self.joins.drain(..) {
+            let r = match j.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("worker thread panicked")),
+            };
+            if let Err(e) = r {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl ClusterHandle {
+    /// Submit a request; the response arrives on the returned channel.
+    /// Routing retries across workers when a send hits a dead one, but
+    /// a request already accepted by a worker that then dies comes back
+    /// as an error (no silent cross-worker replay of maybe-executed
+    /// work).
+    pub fn submit(&self, req: Request)
+                  -> Result<mpsc::Receiver<Result<Response>>> {
+        let n = self.shared.workers.len();
+        for _ in 0..=n {
+            let w = self.pick(&req.tenant)?;
+            match self.shared.workers[w].submit(req.clone()) {
+                Ok(rx) => {
+                    let mut st = self.shared.state.lock().unwrap();
+                    st.routed[w] += 1;
+                    return Ok(rx);
+                }
+                Err(_) => self.mark_dead(w),
+            }
+        }
+        bail!("no alive worker accepted the request")
+    }
+
+    /// Submit and block until the response arrives.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        self.submit(req)?
+            .recv().map_err(|_| anyhow!("worker dropped the request"))?
+    }
+
+    /// Tenants the cluster places (sorted at profile construction).
+    pub fn tenants(&self) -> Vec<String> {
+        self.shared.profiles.iter().map(|t| t.name.clone()).collect()
+    }
+
+    /// Snapshot of the current placement.
+    pub fn placement(&self) -> Placement {
+        let mut st = self.shared.state.lock().unwrap();
+        self.reap(&mut st);
+        st.placement.clone()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shared.workers.len()
+    }
+
+    pub fn alive_workers(&self) -> usize {
+        self.shared.workers.iter()
+            .filter(|h| h.load().is_alive()).count()
+    }
+
+    /// Cluster exposition: rollup across workers, cluster routing and
+    /// failover counters, then every worker's own metrics re-labeled
+    /// with `worker="i"`.
+    pub fn metrics(&self) -> String {
+        let mut texts = Vec::new();
+        let mut per_worker = String::new();
+        for (w, h) in self.shared.workers.iter().enumerate() {
+            if let Ok(text) = h.metrics() {
+                per_worker.push_str(&relabel(&text, w));
+                texts.push(text);
+            }
+        }
+        let mut out = rollup(&texts);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.reap(&mut st);
+            let alive = st.dead.iter().filter(|d| !**d).count();
+            out.push_str(&format!(
+                "bitdelta_cluster_workers_alive {alive}\n\
+                 bitdelta_cluster_failovers_total {}\n\
+                 bitdelta_cluster_replaced_tenants_total {}\n",
+                st.failovers, st.replaced_tenants));
+            for (w, r) in st.routed.iter().enumerate() {
+                out.push_str(&format!(
+                    "bitdelta_cluster_routed_total{{worker=\"{w}\"}} \
+{r}\n"));
+            }
+        }
+        out.push_str(&per_worker);
+        out
+    }
+
+    // -- internals --------------------------------------------------------
+
+    /// Choose the worker for one request (reaps dead workers first).
+    fn pick(&self, tenant: &str) -> Result<usize> {
+        let mut st = self.shared.state.lock().unwrap();
+        self.reap(&mut st);
+        let mut cands: Vec<usize> = st.placement.workers_of(tenant)
+            .iter().copied().filter(|&w| !st.dead[w]).collect();
+        if cands.is_empty() {
+            // unknown tenant, or every replica died and re-placement
+            // degraded: every engine registers every tenant, so any
+            // alive worker can still serve it
+            cands = (0..self.shared.workers.len())
+                .filter(|&w| !st.dead[w]).collect();
+        }
+        if cands.is_empty() {
+            bail!("cluster has no alive workers");
+        }
+        Ok(self.shared.policy.route(tenant, &cands,
+                                    &LiveLoads(&self.shared.workers)))
+    }
+
+    fn mark_dead(&self, w: usize) {
+        let mut st = self.shared.state.lock().unwrap();
+        if !st.dead[w] {
+            st.dead[w] = true;
+            st.failovers += 1;
+            self.replace(&mut st);
+        }
+    }
+
+    /// Notice workers whose threads exited since the last call.
+    fn reap(&self, st: &mut RouteState) {
+        let mut newly_dead = false;
+        for (w, h) in self.shared.workers.iter().enumerate() {
+            if !st.dead[w] && !h.load().is_alive() {
+                st.dead[w] = true;
+                st.failovers += 1;
+                newly_dead = true;
+            }
+        }
+        if newly_dead {
+            self.replace(st);
+        }
+    }
+
+    /// Re-place every tenant across the surviving workers.
+    fn replace(&self, st: &mut RouteState) {
+        let alive: Vec<WorkerSpec> = self.shared.specs.iter()
+            .filter(|s| !st.dead[s.index]).cloned().collect();
+        if alive.is_empty() {
+            return;
+        }
+        let moved = self.shared.profiles.iter().filter(|t| {
+            st.placement.workers_of(&t.name).iter()
+                .any(|&w| st.dead[w])
+        }).count() as u64;
+        st.replaced_tenants += moved;
+        st.placement =
+            match self.shared.policy.place(&self.shared.profiles, &alive) {
+                Ok(p) => p,
+                Err(_) => {
+                    // survivors' budgets cannot hold a policy-respecting
+                    // placement — degrade to everything-everywhere
+                    let mut p = Placement::default();
+                    for t in &self.shared.profiles {
+                        for s in &alive {
+                            p.add(&t.name, s.index, t.resident_bytes);
+                        }
+                    }
+                    p
+                }
+            };
+    }
+}
+
+/// Build tenant profiles from the manifest: one per tenant of `ecfg`'s
+/// model, codec resolved like the engine resolves it, `resident_bytes`
+/// estimated from the artifact's on-disk size (the loaded payload is
+/// within a few percent for every in-tree codec), uniform weights.
+/// Sorted by name so placement is deterministic.
+pub fn tenant_profiles(ecfg: &EngineConfig) -> Result<Vec<TenantProfile>> {
+    let manifest = Manifest::load(&ecfg.artifacts_dir)?;
+    let registry = CodecRegistry::builtin();
+    let default_codec = registry.get(&ecfg.default_codec_name())?;
+    let mut names: Vec<&String> = manifest.tenants.keys().collect();
+    names.sort();
+    let mut out = Vec::new();
+    for name in names {
+        let t = &manifest.tenants[name];
+        if t.config != ecfg.model {
+            continue;
+        }
+        let codec = match ecfg.codec_overrides.get(name) {
+            Some(c) => registry.get(c)?,
+            None => default_codec.clone(),
+        };
+        // a tenant with no artifact in its codec truly costs 0 bytes
+        // (nothing will ever be loaded for it) — but an artifact that
+        // exists in the manifest and cannot be sized is an error, or
+        // the delta-aware budget guarantees would silently evaporate
+        let resident_bytes = match codec
+            .artifact_path(&manifest, t, ecfg.distilled) {
+            None => 0,
+            Some(p) => std::fs::metadata(&p).with_context(|| format!(
+                "sizing delta artifact {} for tenant {name}",
+                p.display()))?.len() as usize,
+        };
+        out.push(TenantProfile {
+            name: name.clone(),
+            codec: codec.name().to_string(),
+            resident_bytes,
+            weight: 0.0,
+        });
+    }
+    if out.is_empty() {
+        bail!("no tenants for model {} in the manifest", ecfg.model);
+    }
+    let w = 1.0 / out.len() as f64;
+    for t in &mut out {
+        t.weight = w;
+    }
+    Ok(out)
+}
+
+/// Overwrite profile weights from per-trace-rank request counts:
+/// trace rank `i` maps onto profile `i % len` (the same mapping the
+/// loadtest replay uses), so the delta-aware policy replicates exactly
+/// the tenants the trace actually hammers.
+pub fn apply_trace_weights(profiles: &mut [TenantProfile],
+                           counts: &[usize]) {
+    if profiles.is_empty() {
+        return;
+    }
+    let mut per = vec![0usize; profiles.len()];
+    for (i, &c) in counts.iter().enumerate() {
+        per[i % profiles.len()] += c;
+    }
+    let total: usize = per.iter().sum();
+    if total == 0 {
+        return;
+    }
+    for (t, &c) in profiles.iter_mut().zip(&per) {
+        t.weight = c as f64 / total as f64;
+    }
+}
+
+/// Aggregate result of a multi-threaded trace replay.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// Request latencies in seconds, sorted ascending.
+    pub latencies: Vec<f64>,
+    pub tokens: usize,
+    pub errors: usize,
+    pub wall_seconds: f64,
+}
+
+impl ReplayReport {
+    pub fn served(&self) -> usize {
+        self.latencies.len()
+    }
+
+    /// Aggregate decode throughput over the whole replay.
+    pub fn tok_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let i = ((self.latencies.len() - 1) as f64 * q) as usize;
+        self.latencies[i] * 1e3
+    }
+}
+
+/// Replay a workload trace against the cluster from `clients` threads,
+/// honoring arrival times (open loop): client `c` takes events
+/// `c, c+clients, …`, sleeps until each event's `at`, submits without
+/// blocking, then collects every response. Trace tenant ranks map onto
+/// `names` by `rank % names.len()` — the same fold
+/// [`apply_trace_weights`] uses, so routing sees the skew the placement
+/// was computed for.
+pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
+                    names: &[String], prompts: &[&str], clients: usize)
+                    -> Result<ReplayReport> {
+    let clients = clients.max(1);
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        let names = names.to_vec();
+        let prompts: Vec<String> =
+            prompts.iter().map(|p| p.to_string()).collect();
+        let events: Vec<TraceEvent> =
+            trace.iter().skip(c).step_by(clients).cloned().collect();
+        joins.push(std::thread::spawn(move || {
+            let mut chans = Vec::new();
+            let mut errors = 0usize;
+            for e in &events {
+                let now = t0.elapsed().as_secs_f64();
+                if e.at > now {
+                    std::thread::sleep(
+                        std::time::Duration::from_secs_f64(e.at - now));
+                }
+                let req = Request {
+                    tenant: names[e.tenant % names.len()].clone(),
+                    prompt: prompts[e.prompt_idx % prompts.len()]
+                        .clone(),
+                    max_new_tokens: e.max_new_tokens,
+                    sampling: SamplingParams::greedy(),
+                };
+                match h.submit(req) {
+                    Ok(rx) => chans.push(rx),
+                    Err(_) => errors += 1,
+                }
+            }
+            let mut latencies = Vec::new();
+            let mut tokens = 0usize;
+            for rx in chans {
+                match rx.recv() {
+                    Ok(Ok(r)) => {
+                        latencies.push(r.latency.as_secs_f64());
+                        tokens += r.tokens.len();
+                    }
+                    _ => errors += 1,
+                }
+            }
+            (latencies, tokens, errors)
+        }));
+    }
+    let mut report = ReplayReport {
+        latencies: Vec::new(),
+        tokens: 0,
+        errors: 0,
+        wall_seconds: 0.0,
+    };
+    for j in joins {
+        let (l, t, e) = j.join()
+            .map_err(|_| anyhow!("client thread panicked"))?;
+        report.latencies.extend(l);
+        report.tokens += t;
+        report.errors += e;
+    }
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    report.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    use crate::cluster::placement::policy_by_name;
+    use crate::cluster::testutil::MockCore;
+    use crate::model::sampling::SamplingParams;
+
+    fn req(tenant: &str) -> Request {
+        Request { tenant: tenant.into(), prompt: "Q:".into(),
+                  max_new_tokens: 4, sampling: SamplingParams::greedy() }
+    }
+
+    fn profiles(names: &[&str], bytes: usize) -> Vec<TenantProfile> {
+        let w = 1.0 / names.len() as f64;
+        names.iter().map(|n| TenantProfile {
+            name: n.to_string(), codec: "bitdelta".into(),
+            resident_bytes: bytes, weight: w,
+        }).collect()
+    }
+
+    fn mock_factories(n: usize) -> Vec<CoreFactory> {
+        (0..n).map(|i| {
+            let f: CoreFactory = Box::new(move || {
+                Ok(Box::new(MockCore::new(i)) as Box<dyn WorkerCore>)
+            });
+            f
+        }).collect()
+    }
+
+    #[test]
+    fn cluster_serves_many_client_threads() {
+        let cfg = ClusterConfig {
+            policy: policy_by_name("least-loaded").unwrap(),
+            delta_budget_bytes: 1 << 20,
+        };
+        let cluster = Cluster::spawn(
+            &cfg, profiles(&["a", "b", "c", "d"], 10),
+            mock_factories(2)).unwrap();
+        let handle = cluster.handle();
+        let tenants = handle.tenants();
+
+        let mut joins = Vec::new();
+        for c in 0..3 {
+            let h = handle.clone();
+            let ts = tenants.clone();
+            joins.push(std::thread::spawn(move || {
+                (0..5).map(|i| {
+                    h.generate(req(&ts[(c + i) % ts.len()]))
+                }).collect::<Result<Vec<_>>>()
+            }));
+        }
+        let mut served = 0;
+        for j in joins {
+            served += j.join().unwrap().unwrap().len();
+        }
+        assert_eq!(served, 15);
+
+        let m = handle.metrics();
+        // rollup sums the per-worker counters
+        assert!(m.contains("bitdelta_requests_total 15"), "{m}");
+        assert!(m.contains("bitdelta_cluster_workers_alive 2"), "{m}");
+        // per-worker relabeled series are also present
+        assert!(m.contains("bitdelta_requests_total{worker=\"0\"}"),
+                "{m}");
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn worker_death_fails_inflight_then_replaces_tenants() {
+        let kills: Vec<Arc<AtomicBool>> =
+            (0..2).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        let factories: Vec<CoreFactory> = (0..2).map(|i| {
+            let k = kills[i].clone();
+            let f: CoreFactory = Box::new(move || {
+                Ok(Box::new(MockCore::new(i).with_kill_switch(k))
+                   as Box<dyn WorkerCore>)
+            });
+            f
+        }).collect();
+        let cfg = ClusterConfig {
+            policy: policy_by_name("delta-aware").unwrap(),
+            delta_budget_bytes: 25,
+        };
+        // two 10 B tenants on two workers with budget 25: the packer
+        // spreads them one per worker
+        let cluster = Cluster::spawn(&cfg, profiles(&["a", "b"], 10),
+                                     factories).unwrap();
+        let handle = cluster.handle();
+        let placed = handle.placement();
+        assert_eq!(placed.workers_of("a").len(), 1);
+        assert_eq!(placed.workers_of("b").len(), 1);
+        let w_a = placed.workers_of("a")[0];
+        assert_ne!(w_a, placed.workers_of("b")[0]);
+
+        // kill tenant a's worker: the in-flight request comes back as
+        // an error, not a hang
+        kills[w_a].store(true, Ordering::Relaxed);
+        assert!(handle.generate(req("a")).is_err());
+
+        // routing notices the death and re-places "a" on the survivor
+        let mut ok = None;
+        for _ in 0..200 {
+            match handle.generate(req("a")) {
+                Ok(r) => {
+                    ok = Some(r);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        let r = ok.expect("tenant a never failed over");
+        let survivor = 1 - w_a;
+        assert_eq!(r.text, format!("w{survivor}"));
+        assert_eq!(handle.placement().workers_of("a"), &[survivor][..]);
+        assert_eq!(handle.alive_workers(), 1);
+
+        let m = handle.metrics();
+        assert!(m.contains("bitdelta_cluster_failovers_total 1"), "{m}");
+        assert!(m.contains("bitdelta_cluster_workers_alive 1"), "{m}");
+        // the dead worker's engine failed: shutdown reports it
+        assert!(cluster.shutdown().is_err());
+    }
+
+    #[test]
+    fn all_workers_dead_is_an_error_not_a_hang() {
+        let kill = Arc::new(AtomicBool::new(false));
+        let k = kill.clone();
+        let factories: Vec<CoreFactory> = vec![Box::new(move || {
+            Ok(Box::new(MockCore::new(0).with_kill_switch(k))
+               as Box<dyn WorkerCore>)
+        })];
+        let cfg = ClusterConfig {
+            policy: policy_by_name("affinity").unwrap(),
+            delta_budget_bytes: 1 << 20,
+        };
+        let cluster = Cluster::spawn(&cfg, profiles(&["a"], 10),
+                                     factories).unwrap();
+        let handle = cluster.handle();
+        kill.store(true, Ordering::Relaxed);
+        for _ in 0..50 {
+            if handle.alive_workers() == 0 {
+                break;
+            }
+            let _ = handle.generate(req("a"));
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let err = handle.generate(req("a"));
+        assert!(err.is_err());
+        let _ = cluster.shutdown();
+    }
+
+    #[test]
+    fn spawn_fails_fast_on_impossible_packing() {
+        let cfg = ClusterConfig {
+            policy: policy_by_name("delta-aware").unwrap(),
+            delta_budget_bytes: 5,
+        };
+        assert!(Cluster::spawn(&cfg, profiles(&["a"], 10),
+                               mock_factories(2)).is_err());
+    }
+
+    #[test]
+    fn replay_trace_collects_all_responses() {
+        let cfg = ClusterConfig {
+            policy: policy_by_name("least-loaded").unwrap(),
+            delta_budget_bytes: 1 << 20,
+        };
+        let cluster = Cluster::spawn(&cfg, profiles(&["a", "b"], 10),
+                                     mock_factories(2)).unwrap();
+        let handle = cluster.handle();
+        let trace: Vec<TraceEvent> = (0..10).map(|i| TraceEvent {
+            at: 0.0,
+            tenant: i % 5,          // ranks fold onto the 2 tenants
+            prompt_idx: i,
+            max_new_tokens: 4,
+        }).collect();
+        let names = handle.tenants();
+        let r = replay_trace(&handle, &trace, &names, &["Q:"], 3)
+            .unwrap();
+        assert_eq!(r.served(), 10);
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.tokens, 40);
+        assert!(r.quantile_ms(0.99) >= r.quantile_ms(0.5));
+        assert!(r.tok_per_s() > 0.0);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn trace_weights_fold_onto_profiles() {
+        let mut ps = profiles(&["a", "b", "c"], 10);
+        // ranks 0..5 fold mod 3: a gets ranks 0+3, b 1+4, c 2
+        apply_trace_weights(&mut ps, &[10, 4, 2, 2, 2, 0]);
+        assert!((ps[0].weight - 12.0 / 20.0).abs() < 1e-9);
+        assert!((ps[1].weight - 6.0 / 20.0).abs() < 1e-9);
+        assert!((ps[2].weight - 2.0 / 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,163 @@
+//! Cluster-level metrics: per-worker relabeling and cross-worker rollup
+//! of the Prometheus-style text each engine already exposes.
+//!
+//! Workers produce independent expositions
+//! ([`crate::coordinator::metrics::Metrics::exposition`] plus per-codec
+//! accounting). The cluster publishes both views:
+//!
+//! * **per-worker** — every line re-labeled with `worker="i"` so one
+//!   scrape distinguishes replicas;
+//! * **rollup** — one line per metric across workers: counters
+//!   (`_total`, `_count`, `_bucket`) and additive gauges (queue depths,
+//!   resident bytes) are summed; order statistics (`_p50`, `_p99`,
+//!   `_max`) take the worst worker; `_mean` and ratio gauges
+//!   (`_occupancy`) are averaged over workers (an approximation —
+//!   exact pooling would need per-worker counts at every line).
+
+/// Re-label every metric line with a `worker="i"` label (inserted as the
+/// first label so per-worker series never collide in one scrape).
+pub fn relabel(text: &str, worker: usize) -> String {
+    let mut out = String::with_capacity(text.len() + 64);
+    for line in text.lines() {
+        let Some((name, value)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        match name.find('{') {
+            Some(idx) => out.push_str(&format!(
+                "{}{{worker=\"{worker}\",{} {value}\n",
+                &name[..idx], &name[idx + 1..])),
+            None => out.push_str(&format!(
+                "{name}{{worker=\"{worker}\"}} {value}\n")),
+        }
+    }
+    out
+}
+
+fn metric_base(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+enum Fold {
+    Sum,
+    Max,
+    Mean,
+}
+
+fn fold_of(name: &str) -> Fold {
+    let base = metric_base(name);
+    if base.ends_with("_p50") || base.ends_with("_p99")
+        || base.ends_with("_max") {
+        Fold::Max
+    } else if base.ends_with("_mean") || base.ends_with("_occupancy") {
+        // ratios and means average across workers — summing a 0..1
+        // occupancy over 4 workers would report an impossible 3.0
+        Fold::Mean
+    } else {
+        Fold::Sum
+    }
+}
+
+/// Fold N worker expositions into one cluster-wide exposition. Lines
+/// are keyed by full metric name (labels included); the fold per metric
+/// follows the module docs. Output is sorted by metric name so the
+/// rollup is stable across scrapes.
+pub fn rollup(texts: &[String]) -> String {
+    use std::collections::BTreeMap;
+    let mut acc: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+    for text in texts {
+        for line in text.lines() {
+            let Some((name, value)) = line.rsplit_once(' ') else {
+                continue;
+            };
+            let Ok(v) = value.parse::<f64>() else {
+                continue;
+            };
+            let e = acc.entry(name.to_string()).or_insert((0.0, 0));
+            match fold_of(name) {
+                Fold::Sum | Fold::Mean => e.0 += v,
+                Fold::Max => e.0 = e.0.max(v),
+            }
+            e.1 += 1;
+        }
+    }
+    let mut out = String::new();
+    for (name, (v, n)) in acc {
+        let v = match fold_of(&name) {
+            Fold::Mean => v / n.max(1) as f64,
+            _ => v,
+        };
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relabel_plain_and_labeled_lines() {
+        let text = "bitdelta_requests_total 3\n\
+                    bitdelta_delta_resident_bytes{codec=\"bitdelta\"} 64\n";
+        let r = relabel(text, 2);
+        assert!(r.contains(
+            "bitdelta_requests_total{worker=\"2\"} 3"), "{r}");
+        assert!(r.contains(
+            "bitdelta_delta_resident_bytes{worker=\"2\",\
+codec=\"bitdelta\"} 64"), "{r}");
+    }
+
+    #[test]
+    fn rollup_sums_counters_across_workers() {
+        let a = "bitdelta_requests_total 3\n\
+                 bitdelta_tokens_generated_total 100\n\
+                 bitdelta_queue_depth{tenant=\"t0\"} 2\n".to_string();
+        let b = "bitdelta_requests_total 5\n\
+                 bitdelta_tokens_generated_total 40\n\
+                 bitdelta_queue_depth{tenant=\"t0\"} 1\n".to_string();
+        let r = rollup(&[a, b]);
+        assert!(r.contains("bitdelta_requests_total 8"), "{r}");
+        assert!(r.contains("bitdelta_tokens_generated_total 140"), "{r}");
+        assert!(r.contains("bitdelta_queue_depth{tenant=\"t0\"} 3"),
+                "{r}");
+    }
+
+    #[test]
+    fn rollup_takes_worst_quantile_and_mean_of_means() {
+        let a = "bitdelta_ttft_us_p99 500\nbitdelta_ttft_us_mean 100\n"
+            .to_string();
+        let b = "bitdelta_ttft_us_p99 900\nbitdelta_ttft_us_mean 300\n"
+            .to_string();
+        let r = rollup(&[a, b]);
+        assert!(r.contains("bitdelta_ttft_us_p99 900"), "{r}");
+        assert!(r.contains("bitdelta_ttft_us_mean 200"), "{r}");
+    }
+
+    #[test]
+    fn rollup_averages_occupancy_ratio() {
+        let a = "bitdelta_batch_occupancy 0.75\n".to_string();
+        let b = "bitdelta_batch_occupancy 0.25\n".to_string();
+        let r = rollup(&[a, b]);
+        assert!(r.contains("bitdelta_batch_occupancy 0.5"), "{r}");
+    }
+
+    #[test]
+    fn rollup_sums_histogram_buckets() {
+        let a = "bitdelta_ttft_us_bucket{le=\"100\"} 4\n\
+                 bitdelta_ttft_us_count 6\n".to_string();
+        let b = "bitdelta_ttft_us_bucket{le=\"100\"} 1\n\
+                 bitdelta_ttft_us_count 2\n".to_string();
+        let r = rollup(&[a, b]);
+        assert!(r.contains("bitdelta_ttft_us_bucket{le=\"100\"} 5"),
+                "{r}");
+        assert!(r.contains("bitdelta_ttft_us_count 8"), "{r}");
+    }
+
+    #[test]
+    fn rollup_skips_malformed_lines() {
+        let a = "garbage\nbitdelta_requests_total not-a-number\n\
+                 bitdelta_requests_total 1\n".to_string();
+        let r = rollup(&[a]);
+        assert_eq!(r, "bitdelta_requests_total 1\n");
+    }
+}

@@ -1,0 +1,44 @@
+//! The cluster serving layer — N worker engines, delta-aware tenant
+//! placement, failover.
+//!
+//! BitDelta's economics at scale: the base model is the expensive
+//! artifact and it is **identical on every worker**, so scaling out is
+//! "spawn another engine thread and re-place some ~1/16-cost deltas" —
+//! not "copy another model". This module is that scaling substrate:
+//!
+//! * [`worker`]    — one engine pinned to one OS thread behind a
+//!   command channel; the pump loop shared with the single-engine
+//!   [`crate::serving::service::ServingService`], written against the
+//!   [`worker::WorkerCore`] trait so scheduling and failover are
+//!   testable without artifacts.
+//! * [`placement`] — the [`placement::PlacementPolicy`] trait and the
+//!   three built-ins: `affinity` (stable hashing), `least-loaded`
+//!   (live queue depth), `delta-aware` (bin-pack per-codec
+//!   `resident_bytes` against worker delta budgets, replicate hot
+//!   tenants under skew).
+//! * [`frontend`]  — [`Cluster`] / [`ClusterHandle`]: spawn, route,
+//!   failover (dead workers' tenants re-placed, in-flight requests
+//!   errored, never hung).
+//! * [`metrics`]   — per-worker relabeling + cluster rollup of the
+//!   Prometheus-style expositions.
+//!
+//! Adding a placement policy mirrors adding a codec: implement
+//! [`placement::PlacementPolicy`], add one arm to
+//! [`placement::policy_by_name`].
+
+pub mod frontend;
+pub mod metrics;
+pub mod placement;
+pub mod worker;
+
+#[cfg(test)]
+pub(crate) mod testutil;
+
+pub use frontend::{
+    apply_trace_weights, replay_trace, tenant_profiles, Cluster,
+    ClusterConfig, ClusterHandle, ReplayReport,
+};
+pub use placement::{
+    policy_by_name, Placement, PlacementPolicy, TenantProfile, WorkerSpec,
+};
+pub use worker::{CoreFactory, WorkerCore, WorkerHandle, WorkerLoad};

@@ -1,0 +1,450 @@
+//! Tenant → worker placement policies.
+//!
+//! BitDelta turns multi-tenant packing on its head: the expensive
+//! artifact (the base model) is identical on every worker, so the only
+//! per-worker residency constraint is **delta bytes** — and a 1-bit
+//! delta is ~1/16 the size of a dense fine-tune, which makes replicating
+//! a hot tenant across workers nearly free. A [`PlacementPolicy`]
+//! decides two things:
+//!
+//! * **place** — which workers hold which tenants' deltas (computed at
+//!   cluster start and again after a worker dies);
+//! * **route** — which of a tenant's replicas serves one request (called
+//!   per request, reading live load lock-free).
+//!
+//! Three built-ins: [`AffinityPolicy`] (stable hashing, maximal delta
+//! locality), [`LeastLoadedPolicy`] (every tenant everywhere, route by
+//! live queue depth), and [`DeltaAwarePolicy`] (bin-pack by per-codec
+//! `resident_bytes` against each worker's delta budget, replicating hot
+//! tenants when the traffic skew justifies it). New policies implement
+//! the trait — the same extension recipe as the codec registry.
+
+use std::cmp::Ordering;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// What the placer knows about one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantProfile {
+    pub name: String,
+    /// Registry name of the tenant's delta codec.
+    pub codec: String,
+    /// Host bytes the tenant's delta occupies while resident — the
+    /// packing constraint (per-codec: a 1-bit delta is ~1/16 of dense).
+    pub resident_bytes: usize,
+    /// Expected share of traffic, summing to ~1.0 across tenants.
+    pub weight: f64,
+}
+
+/// Per-worker placement input.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// Stable worker index (survives other workers dying).
+    pub index: usize,
+    /// Delta residency budget of this worker's store, bytes.
+    pub delta_budget_bytes: usize,
+}
+
+/// The result of a placement round: tenant → workers holding its delta.
+#[derive(Debug, Clone, Default)]
+pub struct Placement {
+    of: HashMap<String, Vec<usize>>,
+    bytes: HashMap<usize, usize>,
+}
+
+impl Placement {
+    pub fn add(&mut self, tenant: &str, worker: usize, bytes: usize) {
+        let ws = self.of.entry(tenant.to_string()).or_default();
+        if !ws.contains(&worker) {
+            ws.push(worker);
+            *self.bytes.entry(worker).or_default() += bytes;
+        }
+    }
+
+    /// Workers holding this tenant's delta (empty if unknown).
+    pub fn workers_of(&self, tenant: &str) -> &[usize] {
+        self.of.get(tenant).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn replica_count(&self, tenant: &str) -> usize {
+        self.workers_of(tenant).len()
+    }
+
+    /// Delta bytes placed on one worker.
+    pub fn placed_bytes(&self, worker: usize) -> usize {
+        self.bytes.get(&worker).copied().unwrap_or(0)
+    }
+
+    /// Tenant replica count per worker index (for the memory model).
+    pub fn replicas_per_worker(&self, n_workers: usize) -> Vec<usize> {
+        let mut out = vec![0usize; n_workers];
+        for ws in self.of.values() {
+            for &w in ws {
+                if w < n_workers {
+                    out[w] += 1;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn tenants(&self) -> impl Iterator<Item = &String> {
+        self.of.keys()
+    }
+}
+
+/// Live per-worker load, as routing sees it.
+pub trait LoadView {
+    /// Outstanding work on a worker (queued + batched + in flight).
+    fn score(&self, worker: usize) -> usize;
+}
+
+/// Static load view for tests and offline planning.
+impl LoadView for &[usize] {
+    fn score(&self, worker: usize) -> usize {
+        self.get(worker).copied().unwrap_or(0)
+    }
+}
+
+/// A placement policy: how tenants spread over workers, and which
+/// replica serves a request. `Send + Sync` so one policy instance is
+/// shared by every routing thread.
+pub trait PlacementPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Map every tenant to ≥ 1 worker. `workers` lists the live workers
+    /// and their delta budgets; an error means the tenants cannot be
+    /// placed (e.g. a delta larger than every remaining budget).
+    fn place(&self, tenants: &[TenantProfile], workers: &[WorkerSpec])
+             -> Result<Placement>;
+
+    /// Pick one of `candidates` (non-empty, all alive) for a request.
+    fn route(&self, tenant: &str, candidates: &[usize],
+             loads: &dyn LoadView) -> usize;
+}
+
+/// FNV-1a — a stable tenant hash (must not vary across runs or hosts,
+/// unlike `DefaultHasher`).
+pub fn stable_hash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Look a policy up by CLI name.
+pub fn policy_by_name(name: &str)
+                      -> Result<Arc<dyn PlacementPolicy>> {
+    match name {
+        "affinity" => Ok(Arc::new(AffinityPolicy)),
+        "least-loaded" | "least_loaded" => Ok(Arc::new(LeastLoadedPolicy)),
+        "delta-aware" | "delta_aware" => {
+            Ok(Arc::new(DeltaAwarePolicy::default()))
+        }
+        other => bail!("unknown placement policy {other:?} — available: \
+affinity, least-loaded, delta-aware"),
+    }
+}
+
+fn min_score(candidates: &[usize], loads: &dyn LoadView) -> usize {
+    *candidates.iter()
+        .min_by_key(|&&w| (loads.score(w), w))
+        .expect("route called with no candidates")
+}
+
+// ---------------------------------------------------------------------
+// affinity
+// ---------------------------------------------------------------------
+
+/// Stable tenant→worker hashing: every tenant has exactly one home, so
+/// each worker's delta store sees a disjoint tenant set (maximal
+/// hot-swap locality, zero routing state). Ignores budgets and load —
+/// the classic sticky-session baseline.
+pub struct AffinityPolicy;
+
+impl PlacementPolicy for AffinityPolicy {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn place(&self, tenants: &[TenantProfile], workers: &[WorkerSpec])
+             -> Result<Placement> {
+        if workers.is_empty() {
+            bail!("affinity placement over zero workers");
+        }
+        let mut p = Placement::default();
+        for t in tenants {
+            let slot = stable_hash(&t.name) as usize % workers.len();
+            p.add(&t.name, workers[slot].index, t.resident_bytes);
+        }
+        Ok(p)
+    }
+
+    fn route(&self, tenant: &str, candidates: &[usize],
+             _loads: &dyn LoadView) -> usize {
+        candidates[stable_hash(tenant) as usize % candidates.len()]
+    }
+}
+
+// ---------------------------------------------------------------------
+// least-loaded
+// ---------------------------------------------------------------------
+
+/// Every tenant is servable on every worker (each engine registers the
+/// whole tenant set anyway); requests chase the shortest live queue.
+/// Maximal load balance, minimal delta locality — each worker's store
+/// may end up holding every delta, so this wants generous budgets.
+pub struct LeastLoadedPolicy;
+
+impl PlacementPolicy for LeastLoadedPolicy {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn place(&self, tenants: &[TenantProfile], workers: &[WorkerSpec])
+             -> Result<Placement> {
+        if workers.is_empty() {
+            bail!("least-loaded placement over zero workers");
+        }
+        let mut p = Placement::default();
+        for t in tenants {
+            for w in workers {
+                p.add(&t.name, w.index, t.resident_bytes);
+            }
+        }
+        Ok(p)
+    }
+
+    fn route(&self, _tenant: &str, candidates: &[usize],
+             loads: &dyn LoadView) -> usize {
+        min_score(candidates, loads)
+    }
+}
+
+// ---------------------------------------------------------------------
+// delta-aware
+// ---------------------------------------------------------------------
+
+/// Bin-pack tenants by `resident_bytes` against each worker's delta
+/// budget (first-fit-decreasing onto the emptiest worker), then give
+/// hot tenants extra replicas while budget remains: a tenant with
+/// traffic share `w` on an `N`-worker cluster gets `ceil(w·N)` replicas
+/// (so uniform traffic stays single-homed and a 50%-share tenant on
+/// four workers gets two). Replication is priced in delta bytes, which
+/// is the paper's point — a 1-bit replica is ~1/16 the cost of a dense
+/// one, so skewed traffic can be spread where the naive baseline
+/// could not afford to.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaAwarePolicy;
+
+impl PlacementPolicy for DeltaAwarePolicy {
+    fn name(&self) -> &'static str {
+        "delta-aware"
+    }
+
+    fn place(&self, tenants: &[TenantProfile], workers: &[WorkerSpec])
+             -> Result<Placement> {
+        if workers.is_empty() {
+            bail!("delta-aware placement over zero workers");
+        }
+        // (worker index, remaining budget)
+        let mut remaining: Vec<(usize, usize)> = workers.iter()
+            .map(|w| (w.index, w.delta_budget_bytes)).collect();
+        let mut p = Placement::default();
+
+        // primary copies: largest delta first, onto the emptiest fit
+        let mut order: Vec<&TenantProfile> = tenants.iter().collect();
+        order.sort_by(|a, b| {
+            b.resident_bytes.cmp(&a.resident_bytes)
+                .then_with(|| a.name.cmp(&b.name))
+        });
+        for t in &order {
+            match remaining.iter_mut()
+                .filter(|(_, rem)| *rem >= t.resident_bytes)
+                .max_by_key(|&&mut (i, rem)| (rem, usize::MAX - i)) {
+                Some(slot) => {
+                    slot.1 -= t.resident_bytes;
+                    p.add(&t.name, slot.0, t.resident_bytes);
+                }
+                None => bail!(
+                    "tenant {} ({} B, codec {}) fits no worker's \
+remaining delta budget", t.name, t.resident_bytes, t.codec),
+            }
+        }
+
+        // replicas: hottest first, while the skew wants them and budget
+        // remains (best-effort — running out is not an error)
+        let n = workers.len();
+        let mut hot: Vec<&TenantProfile> = tenants.iter().collect();
+        hot.sort_by(|a, b| {
+            b.weight.partial_cmp(&a.weight).unwrap_or(Ordering::Equal)
+                .then_with(|| a.name.cmp(&b.name))
+        });
+        for t in &hot {
+            let want = ((t.weight * n as f64).ceil() as usize).clamp(1, n);
+            while p.replica_count(&t.name) < want {
+                let holders = p.workers_of(&t.name).to_vec();
+                match remaining.iter_mut()
+                    .filter(|(i, rem)| *rem >= t.resident_bytes
+                            && !holders.contains(i))
+                    .max_by_key(|&&mut (i, rem)| (rem, usize::MAX - i)) {
+                    Some(slot) => {
+                        slot.1 -= t.resident_bytes;
+                        p.add(&t.name, slot.0, t.resident_bytes);
+                    }
+                    None => break,
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    fn route(&self, _tenant: &str, candidates: &[usize],
+             loads: &dyn LoadView) -> usize {
+        min_score(candidates, loads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenant(name: &str, bytes: usize, weight: f64) -> TenantProfile {
+        TenantProfile { name: name.into(), codec: "bitdelta".into(),
+                        resident_bytes: bytes, weight }
+    }
+
+    fn workers(n: usize, budget: usize) -> Vec<WorkerSpec> {
+        (0..n).map(|index| WorkerSpec {
+            index, delta_budget_bytes: budget,
+        }).collect()
+    }
+
+    fn uniform(names: &[&str], bytes: usize) -> Vec<TenantProfile> {
+        let w = 1.0 / names.len() as f64;
+        names.iter().map(|n| tenant(n, bytes, w)).collect()
+    }
+
+    #[test]
+    fn affinity_is_stable_and_single_homed() {
+        let p = AffinityPolicy;
+        let ts = uniform(&["a", "b", "c", "d", "e"], 10);
+        let ws = workers(4, usize::MAX / 2);
+        let p1 = p.place(&ts, &ws).unwrap();
+        let p2 = p.place(&ts, &ws).unwrap();
+        for t in &ts {
+            assert_eq!(p1.replica_count(&t.name), 1);
+            assert_eq!(p1.workers_of(&t.name), p2.workers_of(&t.name));
+        }
+        // routing agrees with placement when all replicas are alive
+        let idle: Vec<usize> = vec![0; 4];
+        for t in &ts {
+            let cands = p1.workers_of(&t.name);
+            assert_eq!(p.route(&t.name, cands, &idle.as_slice()),
+                       cands[0]);
+        }
+    }
+
+    #[test]
+    fn least_loaded_places_everywhere_routes_to_idle() {
+        let p = LeastLoadedPolicy;
+        let ts = uniform(&["a", "b"], 10);
+        let ws = workers(3, usize::MAX / 2);
+        let placed = p.place(&ts, &ws).unwrap();
+        assert_eq!(placed.replica_count("a"), 3);
+        let loads: Vec<usize> = vec![5, 0, 7];
+        assert_eq!(p.route("a", &[0, 1, 2], &loads.as_slice()), 1);
+    }
+
+    #[test]
+    fn delta_aware_respects_budgets() {
+        let p = DeltaAwarePolicy;
+        // 8 tenants of 10 B on 4 workers with room for exactly 2 each
+        let names = ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "t7"];
+        let ts = uniform(&names, 10);
+        let ws = workers(4, 20);
+        let placed = p.place(&ts, &ws).unwrap();
+        for w in 0..4 {
+            assert!(placed.placed_bytes(w) <= 20,
+                    "worker {w} over budget: {}", placed.placed_bytes(w));
+        }
+        for t in &ts {
+            assert_eq!(placed.replica_count(&t.name), 1);
+        }
+        let total: usize = (0..4).map(|w| placed.placed_bytes(w)).sum();
+        assert_eq!(total, 80);
+    }
+
+    #[test]
+    fn delta_aware_rejects_impossible_packing() {
+        let p = DeltaAwarePolicy;
+        let ts = vec![tenant("big", 100, 1.0)];
+        let err = p.place(&ts, &workers(2, 50)).unwrap_err().to_string();
+        assert!(err.contains("big"), "{err}");
+    }
+
+    #[test]
+    fn delta_aware_replicates_hot_tenant_under_skew() {
+        let p = DeltaAwarePolicy;
+        // one tenant takes half the traffic on a 4-worker cluster
+        let mut ts = uniform(&["c0", "c1", "c2", "c3", "c4", "c5", "c6"],
+                             10);
+        for t in &mut ts {
+            t.weight = 0.5 / 7.0;
+        }
+        ts.push(tenant("hot", 10, 0.5));
+        let placed = p.place(&ts, &workers(4, 1000)).unwrap();
+        assert!(placed.replica_count("hot") >= 2,
+                "hot tenant not replicated: {placed:?}");
+        for t in &ts[..7] {
+            assert_eq!(placed.replica_count(&t.name), 1,
+                       "cold tenant {} replicated", t.name);
+        }
+    }
+
+    #[test]
+    fn delta_aware_uniform_traffic_stays_single_homed() {
+        let p = DeltaAwarePolicy;
+        let names = ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "t7"];
+        let ts = uniform(&names, 10);
+        let placed = p.place(&ts, &workers(4, 1_000_000)).unwrap();
+        for t in &ts {
+            assert_eq!(placed.replica_count(&t.name), 1);
+        }
+    }
+
+    #[test]
+    fn delta_aware_replication_is_budget_bounded() {
+        let p = DeltaAwarePolicy;
+        // hot tenant wants 4 replicas but only 2 workers can hold it
+        let mut ts = vec![tenant("hot", 40, 1.0)];
+        ts.push(tenant("cold", 40, 0.0));
+        let mut ws = workers(4, 10);
+        ws[0].delta_budget_bytes = 80;
+        ws[1].delta_budget_bytes = 80;
+        let placed = p.place(&ts, &ws).unwrap();
+        assert_eq!(placed.replica_count("hot"), 2);
+        for w in 0..4 {
+            let budget = if w < 2 { 80 } else { 10 };
+            assert!(placed.placed_bytes(w) <= budget);
+        }
+    }
+
+    #[test]
+    fn policy_by_name_resolves_all_three() {
+        for name in ["affinity", "least-loaded", "delta-aware"] {
+            assert_eq!(policy_by_name(name).unwrap().name(), name);
+        }
+        assert!(policy_by_name("round-robin").is_err());
+    }
+
+    #[test]
+    fn stable_hash_is_stable() {
+        assert_eq!(stable_hash("sim-s-chat"), stable_hash("sim-s-chat"));
+        assert_ne!(stable_hash("a"), stable_hash("b"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Deterministic fake [`WorkerCore`] — lets cluster scheduling,
+//! failover, and metrics rollup be unit-tested without artifacts or a
+//! PJRT runtime.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::worker::WorkerCore;
+use crate::serving::request::{Request, Response};
+
+/// A fake engine: each `step` completes one queued request with a
+/// canned response. A shared kill switch makes `step` fail, modelling a
+/// worker death mid-flight.
+pub struct MockCore {
+    id: usize,
+    queue: VecDeque<(Request, mpsc::Sender<Response>)>,
+    kill: Option<Arc<AtomicBool>>,
+    /// Optional per-step delay, to make load imbalance observable.
+    pub step_delay: Option<Duration>,
+    served: u64,
+    next_id: u64,
+}
+
+impl MockCore {
+    pub fn new(id: usize) -> Self {
+        Self { id, queue: VecDeque::new(), kill: None, step_delay: None,
+               served: 0, next_id: 1 }
+    }
+
+    /// `step` fails as soon as the switch is set.
+    pub fn with_kill_switch(mut self, kill: Arc<AtomicBool>) -> Self {
+        self.kill = Some(kill);
+        self
+    }
+}
+
+impl WorkerCore for MockCore {
+    fn submit(&mut self, req: Request)
+              -> Result<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        self.queue.push_back((req, tx));
+        Ok(rx)
+    }
+
+    fn step(&mut self) -> Result<()> {
+        if let Some(k) = &self.kill {
+            if k.load(Ordering::Relaxed) {
+                bail!("mock worker {} killed", self.id);
+            }
+        }
+        if let Some(d) = self.step_delay {
+            std::thread::sleep(d);
+        }
+        if let Some((req, tx)) = self.queue.pop_front() {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.served += 1;
+            let _ = tx.send(Response {
+                id,
+                tenant: req.tenant,
+                text: format!("w{}", self.id),
+                tokens: vec![0; req.max_new_tokens],
+                latency: Duration::from_micros(10),
+                ttft: Duration::from_micros(5),
+                prompt_tokens: req.prompt.len(),
+            });
+        }
+        Ok(())
+    }
+
+    fn has_work(&self) -> bool {
+        !self.queue.is_empty()
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn occupancy(&self) -> usize {
+        0
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    fn metrics_text(&self) -> String {
+        format!("bitdelta_requests_total {}\n\
+                 bitdelta_completed_total {}\n",
+                self.served, self.served)
+    }
+}

@@ -1,0 +1,351 @@
+//! The worker thread harness — one engine pinned to one OS thread.
+//!
+//! PJRT objects are not `Send`, so every engine lives on its own thread
+//! and is *constructed there* (the [`CoreFactory`] runs on the worker
+//! thread). The pump loop here is shared by the single-engine
+//! [`crate::serving::service::ServingService`] and the multi-worker
+//! [`crate::cluster::Cluster`]: ingest commands (blocking when idle),
+//! advance the engine, deliver finished responses.
+//!
+//! The loop is written against the small [`WorkerCore`] trait rather
+//! than the concrete engine so cluster scheduling and failover can be
+//! unit-tested with deterministic fake cores, no artifacts required.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::serving::engine::Engine;
+use crate::serving::request::{Request, Response};
+
+/// The engine surface the pump loop drives. Implemented by the real
+/// [`Engine`]; tests substitute deterministic fakes. Cores need not be
+/// `Send` — the factory builds them on the worker thread, which is
+/// exactly the constraint PJRT imposes.
+pub trait WorkerCore {
+    /// Accept a request; the response arrives on the returned channel.
+    fn submit(&mut self, req: Request) -> Result<mpsc::Receiver<Response>>;
+    /// One scheduling/decode iteration.
+    fn step(&mut self) -> Result<()>;
+    /// Queued or in-slot work remains.
+    fn has_work(&self) -> bool;
+    /// Requests waiting in the core's queues (not yet in a slot).
+    fn queue_depth(&self) -> usize;
+    /// Occupied batch slots.
+    fn occupancy(&self) -> usize;
+    /// Run until every queue and slot is empty (shutdown drain).
+    fn drain(&mut self) -> Result<()>;
+    /// Prometheus-style metrics exposition for this core.
+    fn metrics_text(&self) -> String;
+}
+
+impl WorkerCore for Engine {
+    fn submit(&mut self, req: Request) -> Result<mpsc::Receiver<Response>> {
+        Engine::submit(self, req)
+    }
+
+    fn step(&mut self) -> Result<()> {
+        Engine::step(self).map(|_| ())
+    }
+
+    fn has_work(&self) -> bool {
+        self.batcher.occupancy() > 0 || self.router.total_queued() > 0
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.router.total_queued()
+    }
+
+    fn occupancy(&self) -> usize {
+        self.batcher.occupancy()
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        self.run_until_idle(1_000_000).map(|_| ())
+    }
+
+    fn metrics_text(&self) -> String {
+        format!("{}{}", self.metrics.exposition(), self.codec_accounting())
+    }
+}
+
+/// Factory invoked **on the worker thread** to build its core.
+pub type CoreFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn WorkerCore>> + Send>;
+
+/// Commands accepted by a worker thread.
+pub enum Command {
+    Submit(Request, mpsc::Sender<Result<Response>>),
+    Metrics(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Live load snapshot a worker publishes every loop iteration — the
+/// signal least-loaded routing reads lock-free. `submitted` is bumped by
+/// the sending side, `ingested` by the worker, so `submitted - ingested`
+/// counts commands still in flight in the channel.
+#[derive(Debug, Default)]
+pub struct WorkerLoad {
+    pub queued: AtomicUsize,
+    pub occupancy: AtomicUsize,
+    pub inflight: AtomicUsize,
+    pub submitted: AtomicUsize,
+    pub ingested: AtomicUsize,
+    pub alive: AtomicBool,
+}
+
+impl WorkerLoad {
+    /// Requests sent to the worker but not yet ingested from its channel.
+    pub fn backlog(&self) -> usize {
+        self.submitted.load(Ordering::Relaxed)
+            .saturating_sub(self.ingested.load(Ordering::Relaxed))
+    }
+
+    /// Routing score: total outstanding work on this worker.
+    pub fn score(&self) -> usize {
+        self.backlog()
+            + self.queued.load(Ordering::Relaxed)
+            + self.occupancy.load(Ordering::Relaxed)
+            + self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+}
+
+/// Cloneable, `Send` handle to one worker thread.
+#[derive(Clone)]
+pub struct WorkerHandle {
+    tx: mpsc::Sender<Command>,
+    load: Arc<WorkerLoad>,
+}
+
+impl WorkerHandle {
+    pub fn load(&self) -> &Arc<WorkerLoad> {
+        &self.load
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: Request)
+                  -> Result<mpsc::Receiver<Result<Response>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Command::Submit(req, tx))
+            .map_err(|_| anyhow!("worker is gone"))?;
+        self.load.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(rx)
+    }
+
+    /// Submit and block until the response arrives.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        self.submit(req)?
+            .recv().map_err(|_| anyhow!("worker dropped the request"))?
+    }
+
+    /// Fetch the worker's metrics exposition text.
+    pub fn metrics(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Command::Metrics(tx))
+            .map_err(|_| anyhow!("worker is gone"))?;
+        rx.recv().map_err(|_| anyhow!("worker dropped the request"))
+    }
+
+    /// Ask the worker to drain and exit (does not wait for it).
+    pub fn shutdown_signal(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// Spawn one worker thread. The factory runs on the new thread; a
+/// construction failure is returned synchronously from this call.
+pub fn spawn_worker(name: String, factory: CoreFactory)
+                    -> Result<(WorkerHandle, JoinHandle<Result<()>>)> {
+    let load = Arc::new(WorkerLoad::default());
+    let (tx, rx) = mpsc::channel::<Command>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let thread_load = load.clone();
+    let join = std::thread::Builder::new()
+        .name(name)
+        .spawn(move || worker_thread(factory, rx, ready_tx, thread_load))?;
+    ready_rx.recv()
+        .map_err(|_| anyhow!("worker thread died during startup"))??;
+    Ok((WorkerHandle { tx, load }, join))
+}
+
+type Pending = Vec<(mpsc::Receiver<Response>,
+                    mpsc::Sender<Result<Response>>)>;
+
+/// Clears the published `alive` flag however the worker exits —
+/// including a panic — so routing stops targeting a dead worker.
+struct AliveGuard(Arc<WorkerLoad>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.alive.store(false, Ordering::Relaxed);
+    }
+}
+
+fn worker_thread(factory: CoreFactory, rx: mpsc::Receiver<Command>,
+                 ready: mpsc::Sender<Result<()>>, load: Arc<WorkerLoad>)
+                 -> Result<()> {
+    let mut core = match factory() {
+        Ok(c) => {
+            load.alive.store(true, Ordering::Relaxed);
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("{e:#}")));
+            return Ok(());
+        }
+    };
+    let _guard = AliveGuard(load.clone());
+    let mut pending: Pending = Vec::new();
+
+    loop {
+        // 1. ingest commands (non-blocking while busy, blocking if idle)
+        let cmd = if core.has_work() {
+            match rx.try_recv() {
+                Ok(c) => Some(c),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+            }
+        } else {
+            publish(&load, core.as_ref(), pending.len());
+            match rx.recv() {
+                Ok(c) => Some(c),
+                Err(_) => return Ok(()),
+            }
+        };
+        match cmd {
+            Some(Command::Submit(req, reply)) => {
+                load.ingested.fetch_add(1, Ordering::Relaxed);
+                match core.submit(req) {
+                    Ok(chan) => pending.push((chan, reply)),
+                    Err(e) => {
+                        let _ = reply.send(Err(anyhow!("{e:#}")));
+                    }
+                }
+            }
+            Some(Command::Metrics(reply)) => {
+                let _ = reply.send(core.metrics_text());
+            }
+            Some(Command::Shutdown) => {
+                let _ = core.drain();
+                deliver_ready(&mut pending);
+                // anything not delivered by a full drain is unservable:
+                // reply with an error rather than dropping the channel
+                for (_, reply) in pending.drain(..) {
+                    let _ = reply.send(Err(anyhow!(
+                        "worker shut down before the request completed")));
+                }
+                publish(&load, core.as_ref(), 0);
+                return Ok(());
+            }
+            None => {}
+        }
+
+        // 2. advance the engine
+        if core.has_work() {
+            if let Err(e) = core.step() {
+                // the worker is dying: fail every in-flight request so
+                // no caller hangs on a channel that will never deliver
+                for (_, reply) in pending.drain(..) {
+                    let _ = reply.send(Err(anyhow!("engine: {e:#}")));
+                }
+                return Err(e);
+            }
+        }
+
+        // 3. deliver finished responses
+        deliver_ready(&mut pending);
+        publish(&load, core.as_ref(), pending.len());
+    }
+}
+
+fn publish(load: &WorkerLoad, core: &dyn WorkerCore, inflight: usize) {
+    load.queued.store(core.queue_depth(), Ordering::Relaxed);
+    load.occupancy.store(core.occupancy(), Ordering::Relaxed);
+    load.inflight.store(inflight, Ordering::Relaxed);
+}
+
+fn deliver_ready(pending: &mut Pending) {
+    let mut i = 0;
+    while i < pending.len() {
+        match pending[i].0.try_recv() {
+            Ok(resp) => {
+                let (_, reply) = pending.remove(i);
+                let _ = reply.send(Ok(resp));
+            }
+            Err(mpsc::TryRecvError::Empty) => i += 1,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                let (_, reply) = pending.remove(i);
+                let _ = reply.send(Err(anyhow!("request dropped")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testutil::MockCore;
+    use crate::model::sampling::SamplingParams;
+
+    fn req(tenant: &str) -> Request {
+        Request { tenant: tenant.into(), prompt: "Q:".into(),
+                  max_new_tokens: 4, sampling: SamplingParams::greedy() }
+    }
+
+    #[test]
+    fn worker_serves_and_shuts_down() {
+        let factory: CoreFactory =
+            Box::new(|| Ok(Box::new(MockCore::new(0)) as Box<dyn WorkerCore>));
+        let (h, join) = spawn_worker("w-test".into(), factory).unwrap();
+        assert!(h.load().is_alive());
+        let r = h.generate(req("a")).unwrap();
+        assert_eq!(r.tenant, "a");
+        h.shutdown_signal();
+        join.join().unwrap().unwrap();
+        assert!(!h.load().is_alive());
+        assert!(h.generate(req("a")).is_err(), "submit after shutdown");
+    }
+
+    #[test]
+    fn factory_error_is_synchronous() {
+        let factory: CoreFactory =
+            Box::new(|| Err(anyhow!("no artifacts here")));
+        let err = spawn_worker("w-bad".into(), factory)
+            .err().expect("spawn must fail").to_string();
+        assert!(err.contains("no artifacts"), "{err}");
+    }
+
+    #[test]
+    fn dying_core_fails_pending_instead_of_hanging() {
+        let kill = Arc::new(AtomicBool::new(false));
+        let k = kill.clone();
+        let factory: CoreFactory = Box::new(move || {
+            Ok(Box::new(MockCore::new(0).with_kill_switch(k))
+               as Box<dyn WorkerCore>)
+        });
+        let (h, join) = spawn_worker("w-dying".into(), factory).unwrap();
+        kill.store(true, Ordering::Relaxed);
+        let r = h.generate(req("a"));
+        assert!(r.is_err(), "request on a dying worker must error");
+        assert!(join.join().unwrap().is_err());
+        assert!(!h.load().is_alive());
+    }
+
+    #[test]
+    fn load_score_counts_backlog() {
+        let l = WorkerLoad::default();
+        l.submitted.store(5, Ordering::Relaxed);
+        l.ingested.store(2, Ordering::Relaxed);
+        l.queued.store(1, Ordering::Relaxed);
+        assert_eq!(l.backlog(), 3);
+        assert_eq!(l.score(), 4);
+    }
+}

@@ -46,6 +46,21 @@ impl Histogram {
         }
     }
 
+    /// Cumulative Prometheus `_bucket{le=...}` lines (the full
+    /// histogram shape, not just summary quantiles).
+    pub fn bucket_exposition(&self, name: &str) -> String {
+        let mut out = String::new();
+        let mut acc = 0u64;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            acc += self.counts[i];
+            out.push_str(&format!(
+                "bitdelta_{name}_us_bucket{{le=\"{b}\"}} {acc}\n"));
+        }
+        out.push_str(&format!(
+            "bitdelta_{name}_us_bucket{{le=\"+Inf\"}} {}\n", self.count));
+        out
+    }
+
     /// Approximate quantile from bucket boundaries.
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
@@ -72,6 +87,10 @@ impl Histogram {
 pub struct Metrics {
     pub counters: BTreeMap<&'static str, u64>,
     pub gauges: BTreeMap<&'static str, f64>,
+    /// Per-tenant gauges, `metric name -> tenant -> value` (the label
+    /// syntax is composed at exposition time, so steady-state updates
+    /// never allocate).
+    pub tenant_gauges: BTreeMap<&'static str, BTreeMap<String, f64>>,
     /// request end-to-end latency
     pub request_latency: Histogram,
     /// time-to-first-token
@@ -89,6 +108,20 @@ impl Metrics {
         self.gauges.insert(name, v);
     }
 
+    /// Set a gauge labeled by tenant, exported as
+    /// `bitdelta_<name>{tenant="<tenant>"}`. Called every engine step,
+    /// so the tenant key is only allocated the first time it is seen.
+    pub fn set_tenant_gauge(&mut self, name: &'static str, tenant: &str,
+                            v: f64) {
+        let per = self.tenant_gauges.entry(name).or_default();
+        match per.get_mut(tenant) {
+            Some(slot) => *slot = v,
+            None => {
+                per.insert(tenant.to_string(), v);
+            }
+        }
+    }
+
     /// Prometheus-ish text dump.
     pub fn exposition(&self) -> String {
         let mut out = String::new();
@@ -97,6 +130,12 @@ impl Metrics {
         }
         for (k, v) in &self.gauges {
             out.push_str(&format!("bitdelta_{k} {v}\n"));
+        }
+        for (name, per) in &self.tenant_gauges {
+            for (tenant, v) in per {
+                out.push_str(&format!(
+                    "bitdelta_{name}{{tenant=\"{tenant}\"}} {v}\n"));
+            }
         }
         for (name, h) in [("request_latency", &self.request_latency),
                           ("ttft", &self.ttft),
@@ -109,6 +148,9 @@ impl Metrics {
                 h.mean_us(), h.quantile_us(0.5), h.quantile_us(0.99),
                 h.count));
         }
+        // the full TTFT shape: first-token latency is the user-facing
+        // SLO, so it gets real buckets, not just summary quantiles
+        out.push_str(&self.ttft.bucket_exposition("ttft"));
         out
     }
 }
@@ -144,5 +186,35 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.mean_us(), 0.0);
         assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn tenant_gauges_are_exported() {
+        let mut m = Metrics::default();
+        m.set_tenant_gauge("queue_depth", "sim-s-chat", 3.0);
+        m.set_tenant_gauge("queue_depth", "sim-s-math", 0.0);
+        let text = m.exposition();
+        assert!(text.contains(
+            "bitdelta_queue_depth{tenant=\"sim-s-chat\"} 3"), "{text}");
+        assert!(text.contains(
+            "bitdelta_queue_depth{tenant=\"sim-s-math\"} 0"), "{text}");
+    }
+
+    #[test]
+    fn ttft_buckets_are_cumulative_and_exported() {
+        let mut m = Metrics::default();
+        for ms in [1u64, 1, 50] {
+            m.ttft.observe(Duration::from_millis(ms));
+        }
+        let text = m.exposition();
+        assert!(text.contains("bitdelta_ttft_us_bucket{le=\"+Inf\"} 3"),
+                "{text}");
+        // cumulative counts never decrease across bucket bounds
+        let counts: Vec<u64> = text.lines()
+            .filter(|l| l.starts_with("bitdelta_ttft_us_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+        assert_eq!(*counts.last().unwrap(), 3);
     }
 }

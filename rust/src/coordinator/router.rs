@@ -105,17 +105,19 @@ impl Router {
     }
 
     /// Pop up to `n` requests, round-robin across tenants starting after
-    /// the last-served tenant (fair draining).
+    /// the last-served tenant (fair draining). Runs every engine step:
+    /// the cursor indexes `order` directly so a pop never allocates.
     pub fn drain(&mut self, n: usize) -> Vec<QueuedRequest> {
         let mut out = Vec::new();
-        if self.order.is_empty() {
+        let len = self.order.len();
+        if len == 0 {
             return out;
         }
         let mut empty_rounds = 0;
-        while out.len() < n && empty_rounds < self.order.len() {
-            let tname = self.order[self.cursor % self.order.len()].clone();
-            self.cursor = (self.cursor + 1) % self.order.len();
-            if let Some(req) = self.queues.get_mut(&tname)
+        while out.len() < n && empty_rounds < len {
+            let idx = self.cursor % len;
+            self.cursor = (self.cursor + 1) % len;
+            if let Some(req) = self.queues.get_mut(&self.order[idx])
                 .and_then(|q| q.pop_front()) {
                 out.push(req);
                 empty_rounds = 0;

@@ -15,9 +15,11 @@
 //!   ([`delta::codec`]: pluggable formats — `bitdelta`, `lora`, `svd`,
 //!   `dense` — behind one trait, with mixed-format decode batches), the
 //!   multi-tenant serving engine (router, continuous batcher, delta
-//!   hot-swap store, KV-cache manager), the memory simulator, the eval
-//!   harness, and every benchmark that regenerates the paper's tables
-//!   and figures.
+//!   hot-swap store, KV-cache manager), the **cluster layer**
+//!   ([`cluster`]: N worker engines behind one handle, with pluggable
+//!   delta-aware tenant placement and failover), the memory simulator,
+//!   the eval harness, and every benchmark that regenerates the paper's
+//!   tables and figures.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `repro` binary and the examples are self-contained.
@@ -38,6 +40,7 @@
 //!
 //! See `examples/` for the serving path.
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod delta;
@@ -55,6 +58,9 @@ pub mod util;
 
 /// Convenient re-exports for downstream users.
 pub mod prelude {
+    pub use crate::cluster::{
+        Cluster, ClusterConfig, ClusterHandle, PlacementPolicy,
+    };
     pub use crate::config::{Manifest, ModelConfig};
     pub use crate::delta::bitdelta::{compress, BitDeltaCompressed};
     pub use crate::delta::codec::{CodecRegistry, DeltaCodec, Payload};

@@ -13,7 +13,7 @@
 //! Everything reads `artifacts/` (`make artifacts` builds it once;
 //! python never runs at serve time). Global flag: `--artifacts <dir>`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -41,6 +41,10 @@ COMMANDS:
   serve        [--codec bitdelta|lora|svd|dense] [--batch N]
                [--requests N] [--model sim-s]
                [--tenant-codecs t1=lora,t2=bitdelta]  (mixed batches)
+  serve-cluster multi-worker serving with tenant placement
+               [--workers N] [--policy affinity|least-loaded|delta-aware]
+               [--codec C] [--batch N] [--requests N] [--budget-mb MB]
+               [--model sim-s]
   codecs       list the registered delta codecs
   table1       BitDelta vs SVD quality (paper Table 1)
   table2       all tenants x sizes (paper Tables 2/3/10)
@@ -52,8 +56,10 @@ COMMANDS:
   fig5         memory vs batch, CSV (paper Figure 5)
   case-study   initial vs distilled generation (paper Table 4)
   metrics-demo engine metrics after a burst
-  loadtest     Poisson/Zipf trace through the engine
+  loadtest     Poisson/Zipf trace through the engine or a cluster
                [--requests N] [--rate R] [--zipf S] [--batch N]
+               [--workers N] [--policy P] [--clients N] [--tenants N]
+               [--budget-mb MB]       (workers > 1 runs the cluster)
   extras-quant INT8-compress a delta's embeddings/head (paper's
                future-work extension) [--tenant sim-s-chat]
 ";
@@ -117,6 +123,16 @@ fn main() -> Result<()> {
             args.get_usize("batch", 4)?,
             args.get_usize("requests", 12)?,
             args.get_or("model", "sim-s"))?,
+        "serve-cluster" => serve_cluster(
+            &artifacts,
+            args.get_usize("workers", 2)?,
+            args.get_or("policy", "delta-aware"),
+            args.get("codec")
+                .unwrap_or_else(|| args.get_or("mode", "bitdelta")),
+            args.get_usize("batch", 4)?,
+            args.get_usize("requests", 16)?,
+            args.get_usize("budget-mb", 256)?,
+            args.get_or("model", "sim-s"))?,
         "codecs" => {
             let registry = CodecRegistry::builtin();
             println!("registered delta codecs:");
@@ -151,14 +167,25 @@ fn main() -> Result<()> {
             println!("{}", tables::fig3(&mut ctx, "sim-s")?);
         }
         "fig5" => println!("{}", fig5()),
-        "loadtest" => loadtest(
-            &artifacts,
-            args.get_usize("requests", 24)?,
-            args.get("rate").map(|r| r.parse()).transpose()?
-                .unwrap_or(20.0),
-            args.get("zipf").map(|z| z.parse()).transpose()?
-                .unwrap_or(0.9),
-            args.get_usize("batch", 4)?)?,
+        "loadtest" => {
+            let requests = args.get_usize("requests", 24)?;
+            let rate = args.get("rate").map(|r| r.parse()).transpose()?
+                .unwrap_or(20.0);
+            let zipf_s = args.get("zipf").map(|z| z.parse()).transpose()?
+                .unwrap_or(0.9);
+            let batch = args.get_usize("batch", 4)?;
+            let workers = args.get_usize("workers", 1)?;
+            if workers <= 1 {
+                loadtest(&artifacts, requests, rate, zipf_s, batch)?
+            } else {
+                loadtest_cluster(
+                    &artifacts, requests, rate, zipf_s, batch, workers,
+                    args.get_or("policy", "delta-aware"),
+                    args.get_usize("clients", 0)?,
+                    args.get_usize("tenants", 0)?,
+                    args.get_usize("budget-mb", 256)?)?
+            }
+        }
         "extras-quant" => extras_quant(
             &artifacts, args.get_or("tenant", "sim-s-chat"))?,
         "case-study" => case_study(&artifacts)?,
@@ -213,7 +240,7 @@ fn fire_requests(engine: &mut Engine, n: usize)
     Ok(chans)
 }
 
-fn serve_demo(artifacts: &PathBuf, codec: &str,
+fn serve_demo(artifacts: &Path, codec: &str,
               tenant_codecs: Option<&str>, batch: usize,
               requests: usize, model: &str) -> Result<()> {
     let registry = CodecRegistry::builtin();
@@ -263,7 +290,172 @@ tenants={assignments:?}");
     Ok(())
 }
 
-fn table5(artifacts: &PathBuf) -> Result<String> {
+/// Multi-worker serving demo: spawn a cluster, fire requests from
+/// several client threads, report per-worker + rollup metrics and the
+/// placement's memory story at the paper's 7B scale.
+#[allow(clippy::too_many_arguments)]
+fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
+                 codec: &str, batch: usize, requests: usize,
+                 budget_mb: usize, model: &str) -> Result<()> {
+    use bitdelta::cluster::{policy_by_name, tenant_profiles, Cluster,
+                            ClusterConfig};
+
+    let registry = CodecRegistry::builtin();
+    let codec = registry.get(codec)?.name();   // validate + canonicalize
+    let mut ec = EngineConfig::new(artifacts);
+    ec.codec = Some(codec.to_string());
+    ec.batch = batch;
+    ec.model = model.to_string();
+    let profiles = tenant_profiles(&ec)?;
+    let ccfg = ClusterConfig {
+        policy: policy_by_name(policy_name)?,
+        delta_budget_bytes: budget_mb << 20,
+    };
+    let cluster = Cluster::spawn_engines(&ccfg, &ec, workers, profiles)?;
+    let handle = cluster.handle();
+    let tenants = handle.tenants();
+    let placed = handle.placement();
+    println!("cluster up: {workers} workers, policy {policy_name}, \
+codec {codec}");
+    for t in &tenants {
+        println!("  {t:<16} -> workers {:?}", placed.workers_of(t));
+    }
+
+    let t0 = std::time::Instant::now();
+    let client_n = workers.clamp(1, 4);
+    let mut joins = Vec::new();
+    for c in 0..client_n {
+        let h = handle.clone();
+        let tenants = tenants.clone();
+        let prompts: Vec<String> = demo_prompts().iter()
+            .map(|p| p.to_string()).collect();
+        let mine: Vec<usize> =
+            (0..requests).filter(|i| i % client_n == c).collect();
+        joins.push(std::thread::spawn(move || {
+            mine.into_iter().map(|i| {
+                h.generate(Request {
+                    tenant: tenants[i % tenants.len()].clone(),
+                    prompt: prompts[i % prompts.len()].clone(),
+                    max_new_tokens: 24,
+                    sampling: SamplingParams::greedy(),
+                })
+            }).collect::<Vec<_>>()
+        }));
+    }
+    let mut total_tokens = 0usize;
+    let mut served = 0usize;
+    for j in joins {
+        let results = j.join()
+            .map_err(|_| anyhow::anyhow!("client thread panicked"))?;
+        for r in results {
+            let resp = r?;
+            served += 1;
+            total_tokens += resp.tokens.len();
+            println!("[{}] {:?} ({} tok, {:.1} ms)",
+                     resp.tenant, resp.text, resp.tokens.len(),
+                     resp.latency.as_secs_f64() * 1e3);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n{served} requests, {total_tokens} tokens in {wall:.2}s \
+-> {:.1} tok/s across {workers} workers",
+             total_tokens as f64 / wall);
+    println!("\n{}", handle.metrics());
+
+    // this placement (replicas included), projected onto the paper's
+    // 7B shapes: N base copies + placed 1-bit deltas vs one dense model
+    // per placed tenant
+    let reps = placed.replicas_per_worker(workers);
+    let spec = ModelSpec::llama2_7b();
+    let bd = memory::cluster_account(&spec, ServingMode::BitDelta, &reps,
+                                     batch, 128, memory::A100_80GB);
+    let nv = memory::cluster_account(&spec, ServingMode::Naive, &reps,
+                                     batch, 128, memory::A100_80GB);
+    let gb = |b: usize| b as f64 / (1024.0 * 1024.0 * 1024.0);
+    println!("cluster memory @ Llama-2-7B scale ({} tenant replicas on \
+{workers} workers):", bd.replicas);
+    println!("  bitdelta: {:>7.1} GB total, every worker fits \
+A100-80GB: {}", gb(bd.total_bytes), bd.fits_all);
+    println!("  naive:    {:>7.1} GB total, every worker fits \
+A100-80GB: {}", gb(nv.total_bytes), nv.fits_all);
+    println!("  cluster-wide memory win: {:.2}x",
+             nv.total_bytes as f64 / bd.total_bytes as f64);
+    cluster.shutdown()?;
+    Ok(())
+}
+
+/// Cluster loadtest: replay a Poisson/Zipf trace from several client
+/// threads, honoring arrival times, against an engine-backed cluster.
+#[allow(clippy::too_many_arguments)]
+fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
+                    zipf_s: f64, batch: usize, workers: usize,
+                    policy: &str, clients: usize, trace_tenants: usize,
+                    budget_mb: usize) -> Result<()> {
+    use bitdelta::cluster::{apply_trace_weights, policy_by_name,
+                            replay_trace, tenant_profiles, Cluster,
+                            ClusterConfig};
+    use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
+
+    let mut ec = EngineConfig::new(artifacts);
+    ec.batch = batch;
+    let mut profiles = tenant_profiles(&ec)?;
+    // trace ranks map onto engine tenants by rank % n — more ranks than
+    // tenants lets a small tenant set carry an 8-way-skewed trace
+    let n_ranks = if trace_tenants == 0 {
+        profiles.len().max(8)
+    } else {
+        trace_tenants
+    };
+    let tcfg = TraceConfig {
+        n_tenants: n_ranks,
+        n_requests: requests,
+        rate,
+        zipf_s,
+        min_tokens: 8,
+        max_tokens: 24,
+        seed: 7,
+    };
+    let trace = generate(&tcfg);
+    let st = stats(&trace, n_ranks);
+    apply_trace_weights(&mut profiles, &st.per_tenant);
+    let names: Vec<String> =
+        profiles.iter().map(|t| t.name.clone()).collect();
+    println!("trace: {} requests over {:.2}s, hottest rank {:.0}% of \
+traffic, {}/{n_ranks} ranks hit, {} engine tenants",
+             st.n, st.duration, st.hottest_share * 100.0, st.tenants_hit,
+             names.len());
+
+    let ccfg = ClusterConfig {
+        policy: policy_by_name(policy)?,
+        delta_budget_bytes: budget_mb << 20,
+    };
+    let cluster = Cluster::spawn_engines(&ccfg, &ec, workers, profiles)?;
+    let handle = cluster.handle();
+    let clients = if clients == 0 {
+        (workers * 2).clamp(2, 8)
+    } else {
+        clients
+    };
+    println!("cluster up: {workers} workers, policy {policy}, \
+{clients} client threads");
+
+    let r = replay_trace(&handle, &trace, &names, &demo_prompts(),
+                         clients)?;
+    println!("served {} requests / {} tokens in {:.2}s -> \
+{:.1} tok/s ({} errors)",
+             r.served(), r.tokens, r.wall_seconds, r.tok_per_s(),
+             r.errors);
+    if r.served() > 0 {
+        println!("latency p50 {:.0} ms, p99 {:.0} ms, max {:.0} ms",
+                 r.quantile_ms(0.5), r.quantile_ms(0.99),
+                 r.quantile_ms(1.0));
+    }
+    println!("\n{}", handle.metrics());
+    cluster.shutdown()?;
+    Ok(())
+}
+
+fn table5(artifacts: &Path) -> Result<String> {
     let mut out = String::new();
     out.push_str("Table 5 — compression factors\n");
     out.push_str(&format!("{:<22} {:>12} {:>12} {:>8}\n",
@@ -320,7 +512,7 @@ bitdelta fits all tested batches\n"));
     out
 }
 
-fn loadtest(artifacts: &PathBuf, requests: usize, rate: f64,
+fn loadtest(artifacts: &Path, requests: usize, rate: f64,
             zipf_s: f64, batch: usize) -> Result<()> {
     use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
 
@@ -397,7 +589,7 @@ traffic, {}/{} tenants hit",
     Ok(())
 }
 
-fn extras_quant(artifacts: &PathBuf, tenant: &str) -> Result<()> {
+fn extras_quant(artifacts: &Path, tenant: &str) -> Result<()> {
     use bitdelta::delta::extras_quant::recompress_delta;
 
     let manifest = Manifest::load(artifacts)?;
@@ -431,7 +623,7 @@ paper defers to future work:");
     Ok(())
 }
 
-fn case_study(artifacts: &PathBuf) -> Result<()> {
+fn case_study(artifacts: &Path) -> Result<()> {
     println!("Table 4 analog — scale distillation and instruction \
 following (sim-s-chat)\n");
     let prompt = "Q: what color is the rose ?\nA:";

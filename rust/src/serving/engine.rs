@@ -336,6 +336,13 @@ impl Engine {
             }
         }
 
+        // per-tenant queue depth after admission (exported as labeled
+        // gauges; the routing signal a cluster front-end also reads)
+        for t in self.router.tenant_names() {
+            let depth = self.router.queued_for(t) as f64;
+            self.metrics.set_tenant_gauge("queue_depth", t, depth);
+        }
+
         let active = self.batcher.active_slots();
         report.active = active.len();
         if active.is_empty() {

@@ -1,9 +1,10 @@
 //! The serving engine: request types, the synchronous engine core, and
-//! the async (tokio) front-end service.
+//! the concurrent front-end service.
 //!
-//! Thread model: PJRT objects are not `Send`, so the whole engine lives
-//! on one dedicated thread; [`service::ServingHandle`] bridges async
-//! callers to it over channels. Python is never involved.
+//! Thread model: PJRT objects are not `Send`, so each engine lives on
+//! one dedicated thread; [`service::ServingHandle`] bridges concurrent
+//! callers to it over channels (the pump loop is shared with the
+//! multi-worker [`crate::cluster`] layer). Python is never involved.
 
 pub mod engine;
 pub mod request;

@@ -8,25 +8,26 @@
 //! the build image has no tokio, so the bridge is std channels —
 //! semantics are identical: submit returns immediately, the response
 //! arrives on a per-request channel).
+//!
+//! The pump loop itself lives in [`crate::cluster::worker`] — this
+//! service is the single-worker special case of the cluster layer, kept
+//! as its own type because "one engine, one handle" is the right API
+//! for examples and small deployments.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
+use crate::cluster::worker::{spawn_worker, CoreFactory, WorkerCore,
+                             WorkerHandle};
 use crate::serving::engine::{Engine, EngineConfig};
 use crate::serving::request::{Request, Response};
-
-enum Command {
-    Submit(Request, mpsc::Sender<Result<Response>>),
-    Metrics(mpsc::Sender<String>),
-    Shutdown,
-}
 
 /// Cloneable, `Send` handle to a running engine thread.
 #[derive(Clone)]
 pub struct ServingHandle {
-    tx: mpsc::Sender<Command>,
+    inner: WorkerHandle,
 }
 
 /// The engine thread + its handle.
@@ -39,14 +40,16 @@ impl ServingService {
     /// Spawn the engine on its own thread; fails fast if engine
     /// construction fails.
     pub fn spawn(config: EngineConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Command>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("bitdelta-engine".into())
-            .spawn(move || engine_thread(config, rx, ready_tx))?;
-        ready_rx.recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Self { handle: ServingHandle { tx }, join: Some(join) })
+        let factory: CoreFactory = Box::new(move || {
+            Ok(Box::new(Engine::from_artifacts(config)?)
+               as Box<dyn WorkerCore>)
+        });
+        let (inner, join) = spawn_worker("bitdelta-engine".into(),
+                                         factory)?;
+        Ok(Self {
+            handle: ServingHandle { inner },
+            join: Some(join),
+        })
     }
 
     pub fn handle(&self) -> ServingHandle {
@@ -55,7 +58,7 @@ impl ServingService {
 
     /// Stop the engine thread (drains in-flight work first).
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.handle.tx.send(Command::Shutdown);
+        self.handle.inner.shutdown_signal();
         if let Some(j) = self.join.take() {
             j.join().map_err(|_| anyhow!("engine thread panicked"))??;
         }
@@ -67,110 +70,16 @@ impl ServingHandle {
     /// Submit a request; returns a channel the response arrives on.
     pub fn submit(&self, req: Request)
                   -> Result<mpsc::Receiver<Result<Response>>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Command::Submit(req, tx))
-            .map_err(|_| anyhow!("engine is gone"))?;
-        Ok(rx)
+        self.inner.submit(req)
     }
 
     /// Submit and block until the response arrives.
     pub fn generate(&self, req: Request) -> Result<Response> {
-        self.submit(req)?
-            .recv().map_err(|_| anyhow!("engine dropped the request"))?
+        self.inner.generate(req)
     }
 
     /// Fetch the metrics exposition text.
     pub fn metrics(&self) -> Result<String> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Command::Metrics(tx))
-            .map_err(|_| anyhow!("engine is gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped the request"))
-    }
-}
-
-type Pending = Vec<(mpsc::Receiver<Response>,
-                    mpsc::Sender<Result<Response>>)>;
-
-fn engine_thread(config: EngineConfig, rx: mpsc::Receiver<Command>,
-                 ready: mpsc::Sender<Result<()>>) -> Result<()> {
-    let mut engine = match Engine::from_artifacts(config) {
-        Ok(e) => {
-            let _ = ready.send(Ok(()));
-            e
-        }
-        Err(e) => {
-            let _ = ready.send(Err(anyhow!("{e:#}")));
-            return Ok(());
-        }
-    };
-
-    let mut pending: Pending = Vec::new();
-
-    loop {
-        // 1. ingest commands (non-blocking while busy, blocking if idle)
-        let busy = engine.batcher.occupancy() > 0
-            || engine.router.total_queued() > 0;
-        let cmd = if busy {
-            match rx.try_recv() {
-                Ok(c) => Some(c),
-                Err(mpsc::TryRecvError::Empty) => None,
-                Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
-            }
-        } else {
-            match rx.recv() {
-                Ok(c) => Some(c),
-                Err(_) => return Ok(()),
-            }
-        };
-        match cmd {
-            Some(Command::Submit(req, reply)) => {
-                match engine.submit(req) {
-                    Ok(chan) => pending.push((chan, reply)),
-                    Err(e) => {
-                        let _ = reply.send(Err(anyhow!("{e:#}")));
-                    }
-                }
-            }
-            Some(Command::Metrics(reply)) => {
-                let _ = reply.send(engine.metrics.exposition());
-            }
-            Some(Command::Shutdown) => {
-                let _ = engine.run_until_idle(1_000_000);
-                deliver_ready(&mut pending);
-                return Ok(());
-            }
-            None => {}
-        }
-
-        // 2. advance the engine
-        if engine.batcher.occupancy() > 0
-            || engine.router.total_queued() > 0 {
-            if let Err(e) = engine.step() {
-                for (_, reply) in pending.drain(..) {
-                    let _ = reply.send(Err(anyhow!("engine: {e:#}")));
-                }
-                return Err(e);
-            }
-        }
-
-        // 3. deliver finished responses
-        deliver_ready(&mut pending);
-    }
-}
-
-fn deliver_ready(pending: &mut Pending) {
-    let mut i = 0;
-    while i < pending.len() {
-        match pending[i].0.try_recv() {
-            Ok(resp) => {
-                let (_, reply) = pending.remove(i);
-                let _ = reply.send(Ok(resp));
-            }
-            Err(mpsc::TryRecvError::Empty) => i += 1,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                let (_, reply) = pending.remove(i);
-                let _ = reply.send(Err(anyhow!("request dropped")));
-            }
-        }
+        self.inner.metrics()
     }
 }

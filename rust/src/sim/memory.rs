@@ -201,6 +201,72 @@ pub fn account(spec: &ModelSpec, mode: ServingMode, batch: usize,
 /// A100-80GB, the paper's device.
 pub const A100_80GB: usize = 80 * 1024 * 1024 * 1024;
 
+/// Cluster-wide accounting for one serving mode: every worker holds
+/// the deltas a placement put on it — and, in the shared-base modes,
+/// its own full-precision copy of the base model. This is the number
+/// the cluster layer's memory win rests on: scaling to N workers costs
+/// N bases **once**, while tenants (and hot-tenant replicas) cost only
+/// delta bytes.
+#[derive(Debug, Clone)]
+pub struct ClusterMemoryPoint {
+    pub n_workers: usize,
+    /// Total tenant replicas across workers (≥ tenant count when hot
+    /// tenants are replicated).
+    pub replicas: usize,
+    pub weight_bytes: usize,
+    pub delta_bytes: usize,
+    pub kv_bytes: usize,
+    pub act_bytes: usize,
+    pub total_bytes: usize,
+    pub per_worker_bytes: Vec<usize>,
+    /// Every worker fits its device capacity.
+    pub fits_all: bool,
+}
+
+/// Account a cluster: `replicas_per_worker[w]` tenant replicas are
+/// placed on worker `w`, each worker decodes `seqs_per_worker`
+/// concurrent sequences of length `seq` on a device with
+/// `per_worker_capacity` bytes. Unlike [`account`], tenant residency
+/// and batch width are decoupled — a worker can hold 32 deltas while
+/// batching 8 sequences.
+pub fn cluster_account(spec: &ModelSpec, mode: ServingMode,
+                       replicas_per_worker: &[usize],
+                       seqs_per_worker: usize, seq: usize,
+                       per_worker_capacity: usize) -> ClusterMemoryPoint {
+    let mut point = ClusterMemoryPoint {
+        n_workers: replicas_per_worker.len(),
+        replicas: replicas_per_worker.iter().sum(),
+        weight_bytes: 0,
+        delta_bytes: 0,
+        kv_bytes: 0,
+        act_bytes: 0,
+        total_bytes: 0,
+        per_worker_bytes: Vec::with_capacity(replicas_per_worker.len()),
+        fits_all: true,
+    };
+    for &k in replicas_per_worker {
+        let (weight, delta) = match mode {
+            // naive: every placed tenant is a full dense model
+            ServingMode::Naive => (spec.dense_bytes() * k, 0),
+            ServingMode::BitDelta => (spec.dense_bytes(),
+                                      spec.delta_bytes() * k),
+            ServingMode::Lora(r) => (spec.dense_bytes(),
+                                     spec.lora_bytes(r) * k),
+        };
+        let kv = spec.kv_bytes(seq) * seqs_per_worker;
+        let act = spec.act_bytes() * seqs_per_worker;
+        let total = weight + delta + kv + act;
+        point.weight_bytes += weight;
+        point.delta_bytes += delta;
+        point.kv_bytes += kv;
+        point.act_bytes += act;
+        point.total_bytes += total;
+        point.per_worker_bytes.push(total);
+        point.fits_all &= total <= per_worker_capacity;
+    }
+    point
+}
+
 /// Figure 5 series: memory vs batch for one mode.
 pub fn figure5_series(spec: &ModelSpec, mode: ServingMode,
                       batches: &[usize], seq: usize, capacity: usize)
@@ -286,6 +352,56 @@ mod tests {
         let bd = spec.delta_bytes() as f64;
         let ratio = lora / bd;
         assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn cluster_bitdelta_serves_tenants_naive_cannot() {
+        // 4 workers × 8 tenants each (32 tenants), batch 8, A100s:
+        // BitDelta fits every worker; dense-per-tenant does not fit any.
+        let spec = ModelSpec::llama2_7b();
+        let placed = [8usize, 8, 8, 8];
+        let bd = cluster_account(&spec, ServingMode::BitDelta, &placed,
+                                 8, 128, A100_80GB);
+        let naive = cluster_account(&spec, ServingMode::Naive, &placed,
+                                    8, 128, A100_80GB);
+        assert!(bd.fits_all, "bitdelta cluster OOMs: {bd:?}");
+        assert!(!naive.fits_all);
+        // the cluster-wide memory win at equal tenant count
+        assert!(naive.total_bytes as f64 / bd.total_bytes as f64 > 3.0,
+                "win {:.2}", naive.total_bytes as f64
+                / bd.total_bytes as f64);
+    }
+
+    #[test]
+    fn cluster_replication_costs_delta_not_base() {
+        // replicating one hot tenant onto every worker adds delta
+        // bytes only — the base copies are already paid for
+        let spec = ModelSpec::llama2_7b();
+        let without = cluster_account(&spec, ServingMode::BitDelta,
+                                      &[8, 8, 8, 8], 8, 128, A100_80GB);
+        let with = cluster_account(&spec, ServingMode::BitDelta,
+                                   &[8, 9, 9, 9], 8, 128, A100_80GB);
+        let added = with.total_bytes - without.total_bytes;
+        assert_eq!(added, 3 * spec.delta_bytes());
+        // one 1-bit replica is >10x cheaper than one dense replica
+        assert!(added / 3 * 10 < spec.dense_bytes(),
+                "replica {} B vs dense {} B", added / 3,
+                spec.dense_bytes());
+        assert_eq!(with.replicas, without.replicas + 3);
+    }
+
+    #[test]
+    fn cluster_point_decouples_tenancy_from_batch() {
+        // 32 resident deltas but only 4 decoding sequences: KV cost
+        // follows the batch, delta cost follows residency
+        let spec = ModelSpec::llama2_7b();
+        let p = cluster_account(&spec, ServingMode::BitDelta, &[32],
+                                4, 128, A100_80GB);
+        assert_eq!(p.delta_bytes, 32 * spec.delta_bytes());
+        assert_eq!(p.kv_bytes, 4 * spec.kv_bytes(128));
+        assert_eq!(p.n_workers, 1);
+        assert_eq!(p.per_worker_bytes.len(), 1);
+        assert_eq!(p.per_worker_bytes[0], p.total_bytes);
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! * [`memory`] — exact byte accounting of multi-tenant serving
 //!   (weights + deltas + KV cache + activations) against a device
 //!   capacity. Regenerates **Table 5** (compression factors, on the real
-//!   Llama-2/Mistral dims) and **Figure 5** (memory vs batch, naive OOM).
+//!   Llama-2/Mistral dims) and **Figure 5** (memory vs batch, naive OOM),
+//!   and extends to clusters (`cluster_account`: N base copies + placed
+//!   deltas, the cluster layer's memory story).
 //! * [`latency`] — a bandwidth-roofline latency model that predicts the
 //!   decode-latency crossovers of **Figures 4/6** from bytes moved,
 //!   cross-checkable against the measured CPU kernels.
