@@ -34,9 +34,9 @@ from . import quant as Q
 from . import svd_baseline as S
 from . import train as T
 from .config import CONFIGS, DistillConfig, ModelConfig, TrainConfig
-from .model import (decode_bitdelta, decode_dense, decode_lora, decode_naive,
-                    forward_logits, logits_bitdelta, nonlinear_names,
-                    prefill)
+from .model import (decode_bitdelta, decode_bitdelta_multi, decode_dense,
+                    decode_lora, decode_naive, forward_logits,
+                    logits_bitdelta, nonlinear_names, prefill)
 from .serialize import read_bdw, write_delta, write_lora, write_model
 
 from jax._src.lib import xla_client as xc
@@ -88,11 +88,19 @@ def kv_specs(cfg: ModelConfig, b: int):
     return spec(shape), spec(shape)
 
 
-def bitdelta_specs(cfg: ModelConfig, b: int):
+def bitdelta_specs(cfg: ModelConfig, b: int, levels: int = 1):
+    """Decode-ABI arg specs. ``levels > 1`` inserts the mask-level axis
+    (`decode_bitdelta_l{L}`): bits [B, L, N, M/8], scales
+    [B, L, n_linears]."""
     base = [spec(cfg.linear_shape(n)) for n in cfg.linear_names()]
-    bits = [spec((b, *cfg.packed_shape(n)), jnp.uint8)
-            for n in cfg.linear_names()]
-    scales = spec((b, len(cfg.linear_names())))
+    if levels > 1:
+        bits = [spec((b, levels, *cfg.packed_shape(n)), jnp.uint8)
+                for n in cfg.linear_names()]
+        scales = spec((b, levels, len(cfg.linear_names())))
+    else:
+        bits = [spec((b, *cfg.packed_shape(n)), jnp.uint8)
+                for n in cfg.linear_names()]
+        scales = spec((b, len(cfg.linear_names())))
     extras = [spec((b, *cfg.param_shape(n))) for n in nonlinear_names(cfg)]
     return base, bits, scales, extras
 
@@ -202,6 +210,35 @@ def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
              spec((b,), jnp.int32), spec((b,), jnp.int32), spec((b,))],
             path(name), f"{cfg.name}.{name}")
         exes[name].update(kind="decode_bitdelta", batch=b)
+
+    # multi-level (Fig. 3 fidelity tier) decode: bits carry a level
+    # axis summed inside the executable; zero-scale levels are no-ops,
+    # so the engine batches mixed tiers by padding to the export's L
+    for lv in (2, 4):
+        for b in decode_batches.get("bitdelta_multi", []):
+            name = f"decode_bitdelta_l{lv}_b{b}"
+            base_s, bits_s, scales_s, extras_s = \
+                bitdelta_specs(cfg, b, levels=lv)
+            k_s, v_s = kv_specs(cfg, b)
+
+            def bdm_fn(*a, _b=b):
+                base = list(a[:nb])
+                bits = list(a[nb:nb + nl])
+                scales = a[nb + nl]
+                extras = list(a[nb + nl + 1: nb + nl + 1 + nx])
+                kc, vc, pos, tok, rs = a[-5:]
+                return decode_bitdelta_multi(cfg, base, bits, scales,
+                                             extras, kc, vc, pos, tok,
+                                             rs)
+
+            exes[name] = export_hlo(
+                bdm_fn,
+                [*base_s, *bits_s, scales_s, *extras_s, k_s, v_s,
+                 spec((b,), jnp.int32), spec((b,), jnp.int32),
+                 spec((b,))],
+                path(name), f"{cfg.name}.{name}")
+            exes[name].update(kind=f"decode_bitdelta_l{lv}", batch=b,
+                              levels=lv)
 
     for b in decode_batches["lora"]:
         name = f"decode_lora_b{b}"
@@ -408,16 +445,22 @@ def main() -> None:
                 }
 
             # ---- iterative multi-mask deltas (Fig. 3 / Table 9) ------------
+            # chat drives the ablation table; math gets fidelity files
+            # too so the serving layer can batch tenants at different
+            # tiers (--tenant-levels mixes {1, 2, 4} in one decode)
             levels = 4 if args.quick else 8
-            masks = bd.iterative_bitdelta(cfg, base, chat, levels)
-            extras = {n: np.asarray(chat[n], np.float32)
-                      for n in nonlinear_names(cfg)}
-            fidelity = {}
-            for k in range(1, levels + 1):
-                fp = f"deltas/{size}-chat.fidelity{k}.bdd"
-                write_delta(os.path.join(out, fp), cfg, masks[:k], extras)
-                fidelity[str(k)] = fp
-            manifest["tenants"][f"{size}-chat"]["fidelity"] = fidelity
+            for ft_name in (f"{size}-chat", f"{size}-math"):
+                ft = tenants[ft_name]["params"]
+                masks = bd.iterative_bitdelta(cfg, base, ft, levels)
+                extras = {n: np.asarray(ft[n], np.float32)
+                          for n in nonlinear_names(cfg)}
+                fidelity = {}
+                for k in range(1, levels + 1):
+                    fp = f"deltas/{ft_name}.fidelity{k}.bdd"
+                    write_delta(os.path.join(out, fp), cfg, masks[:k],
+                                extras)
+                    fidelity[str(k)] = fp
+                manifest["tenants"][ft_name]["fidelity"] = fidelity
 
             # ---- quantized bases (Table 6) ---------------------------------
             hess = None
@@ -460,11 +503,14 @@ def main() -> None:
                 "dense": [1, 8],
                 "naive": [1, 2, 4, 8],
                 "bitdelta": [1, 2, 4, 8, 16],
+                "bitdelta_multi": [1, 2, 4, 8],
                 "lora": [1, 2, 4, 8, 16],
             }
             if args.quick:
                 decode_batches = {"dense": [1], "naive": [1, 2],
-                                  "bitdelta": [1, 2], "lora": [1, 2]}
+                                  "bitdelta": [1, 2],
+                                  "bitdelta_multi": [1, 2],
+                                  "lora": [1, 2]}
             exes = export_executables(
                 cfg, os.path.join(out, "hlo"),
                 full=(size == "sim-s"), lora_rank=16,

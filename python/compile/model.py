@@ -156,6 +156,38 @@ class BitDeltaWeights:
         return self.extras[name]              # [B, ...] per-tenant
 
 
+class BitDeltaMultiWeights:
+    """Fig. 3 fidelity tiers served natively: shared base linears +
+    per-tenant **stacked** 1-bit mask levels, summed per linear.
+
+    ``bits[name]``: u8 [B, L, N, M/8]; ``scales``: f32 [B, L, n_linears]
+    in ``cfg.linear_names()`` order. A level with scale 0 is a no-op —
+    the engine's zero-scale padding convention for batching tenants at
+    different tiers. The L-loop unrolls at trace time (L <= 4), so each
+    level lowers to one more batched binary GEMM over the shared
+    activations.
+    """
+
+    def __init__(self, cfg: ModelConfig, base: Params, bits: Params,
+                 scales, tenant_extras: Params):
+        self.cfg, self.base, self.bits = cfg, base, bits
+        self.scales = scales                  # [B, L, n_linears]
+        self.extras = tenant_extras
+        self.lin_idx = {n: i for i, n in enumerate(cfg.linear_names())}
+
+    def linear(self, name: str, x):           # x [B, M] -> [B, N]
+        y = x @ self.base[name].T             # shared backbone GEMM
+        i = self.lin_idx[name]
+        for lvl in range(self.scales.shape[1]):
+            alpha = self.scales[:, lvl, i]
+            y = y + binary_gemm(self.bits[name][:, lvl], alpha,
+                                x[:, None, :])[:, 0, :]
+        return y
+
+    def tensor(self, name: str):
+        return self.extras[name]              # [B, ...] per-tenant
+
+
 class LoraWeights:
     """Shared base linears + per-tenant low-rank factors (S-LoRA baseline;
     also serves the post-hoc SVD-compression baseline of Table 1)."""
@@ -362,6 +394,19 @@ def decode_bitdelta(cfg, flat_base_linears, flat_bits, scales, flat_extras,
     bits = dict(zip(lin, flat_bits))
     extras = dict(zip(nonlinear_names(cfg), flat_extras))
     weights = BitDeltaWeights(cfg, base, bits, scales, extras)
+    return decode_step(cfg, weights, k_cache, v_cache, pos, token, rope_scale)
+
+
+def decode_bitdelta_multi(cfg, flat_base_linears, flat_bits, scales,
+                          flat_extras, k_cache, v_cache, pos, token,
+                          rope_scale):
+    """Multi-level decode step: bits [B, L, N, M/8], scales
+    [B, L, n_linears] — the `decode_bitdelta_l{L}` ABI."""
+    lin = cfg.linear_names()
+    base = dict(zip(lin, flat_base_linears))
+    bits = dict(zip(lin, flat_bits))
+    extras = dict(zip(nonlinear_names(cfg), flat_extras))
+    weights = BitDeltaMultiWeights(cfg, base, bits, scales, extras)
     return decode_step(cfg, weights, k_cache, v_cache, pos, token, rope_scale)
 
 

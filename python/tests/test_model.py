@@ -113,6 +113,46 @@ class TestDecodeVsForward:
             np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
                                        rtol=1e-3, atol=1e-3)
 
+    def test_bitdelta_multi_zero_scale_padding_matches_single(self, params):
+        """decode_bitdelta_multi with a zero-scale padding level ≡
+        decode_bitdelta on the real level — the engine's convention for
+        batching tenants at different fidelity tiers."""
+        from compile.model import decode_bitdelta_multi
+        cfg = TINY
+        rng = np.random.default_rng(5)
+        fine = {n: jnp.asarray(np.asarray(w) + 0.01 *
+                               rng.standard_normal(w.shape).astype(np.float32))
+                for n, w in params.items()}
+        bits, scales = bd.quantize_deltas(cfg, params, fine)
+        extras = {n: fine[n] for n in nonlinear_names(cfg)}
+
+        b, L = 2, 2
+        shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq_len, cfg.head_dim)
+        kc = jnp.zeros(shape); vc = jnp.zeros(shape)
+        kc2 = jnp.zeros(shape); vc2 = jnp.zeros(shape)
+        rope = jnp.ones((b,), jnp.float32)
+        lin = cfg.linear_names()
+        flat_base = [params[n] for n in lin]
+        flat_bits = [jnp.asarray(np.stack([bits[n]] * b)) for n in lin]
+        # level axis: [real mask, all-zero padding mask]
+        flat_bits_ml = [jnp.stack([x, jnp.zeros_like(x)], axis=1)
+                        for x in flat_bits]
+        sc = jnp.asarray(np.stack([scales] * b))               # [B, n_lin]
+        sc_ml = jnp.stack([sc, jnp.zeros_like(sc)], axis=1)    # [B, L, n_lin]
+        assert sc_ml.shape == (b, L, len(lin))
+        flat_extras = [jnp.asarray(np.stack([np.asarray(extras[n])] * b))
+                       for n in nonlinear_names(cfg)]
+
+        pos = jnp.zeros((b,), jnp.int32)
+        token = jnp.asarray([65, 66], jnp.int32)
+        z1, _, _ = decode_bitdelta(cfg, flat_base, flat_bits, sc,
+                                   flat_extras, kc, vc, pos, token, rope)
+        z2, _, _ = decode_bitdelta_multi(cfg, flat_base, flat_bits_ml,
+                                         sc_ml, flat_extras, kc2, vc2,
+                                         pos, token, rope)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                                   rtol=1e-5, atol=1e-5)
+
     def test_naive_decode_matches_per_tenant_dense(self, params):
         """decode_naive with two different stacked models == two separate
         dense decodes."""

@@ -1,0 +1,97 @@
+//! Level sweep — multi-level (Fig. 3 fidelity tier) apply throughput
+//! vs level count k.
+//!
+//! Two implementations of `y = Σ_l α_l·Sign_l @ x` are priced against
+//! each other at k ∈ {1, 2, 4, 8}:
+//!
+//! * **loop**  — k independent single-level `binary_gemv` calls summed
+//!   (what `forward_linear` did before the fused kernel): every level
+//!   pays the O(4m) nibble-table build and the `Σx` reduction again.
+//! * **fused** — `try_binary_gemv_multi`: one shared preamble, then k
+//!   packed-byte streams. The marginal cost of a level approaches its
+//!   pure byte traffic, so fidelity tiers scale close to linearly.
+//!
+//! Emits a human table plus one JSON object per row (line-parseable,
+//! the usual bench JSON — CI runs this in smoke mode and archives the
+//! rows as a workflow artifact to track the perf trajectory).
+//!
+//! Flags: `--smoke` (or env `LEVEL_SWEEP_SMOKE=1`) = 1 iteration, no
+//! warmup, smaller matrix — a trend sample, not a measurement.
+
+use std::collections::BTreeMap;
+
+use bitdelta::delta::packing::pack_signs;
+use bitdelta::gemm::{binary_gemv, binary_gemv_multi};
+use bitdelta::tensor::Tensor;
+use bitdelta::util::bench::{black_box, Bench};
+use bitdelta::util::json::Json;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("LEVEL_SWEEP_SMOKE").is_ok();
+    let (n, m) = if smoke { (512usize, 512usize) } else { (2048, 2048) };
+    let (warmup, iters) = if smoke { (0, 1) } else { (3, 15) };
+    let max_levels = 8usize;
+
+    println!("=== level sweep: multi-level apply, {n}x{m}{} ===",
+             if smoke { " (smoke)" } else { "" });
+
+    // k independent sign planes with decaying scales (like the
+    // iterative compressor produces)
+    let packed: Vec<Vec<u8>> = (0..max_levels).map(|l| {
+        let d = Tensor::randn(vec![n, m], 100 + l as u64);
+        pack_signs(d.data(), m)
+    }).collect();
+    let alphas: Vec<f32> =
+        (0..max_levels).map(|l| 0.1 / (1 << l) as f32).collect();
+    let x = Tensor::randn(vec![m], 7);
+    let mut y = vec![0f32; n];
+    let mut tmp = vec![0f32; n];
+
+    let mut rows: Vec<Json> = Vec::new();
+    for k in [1usize, 2, 4, 8] {
+        let mut bench = Bench::new(warmup, iters);
+        let levels: Vec<(&[u8], f32)> = packed[..k].iter()
+            .map(|b| b.as_slice())
+            .zip(alphas.iter().copied())
+            .collect();
+
+        let fused = bench.run(format!("fused   k={k}"), || {
+            binary_gemv_multi(&levels, n, m, x.data(), &mut y);
+            black_box(&y);
+        }).mean().as_secs_f64();
+
+        let looped = bench.run(format!("loop    k={k}"), || {
+            y.fill(0.0);
+            for (bits, alpha) in &levels {
+                binary_gemv(bits, n, m, x.data(), *alpha, &mut tmp);
+                for (yv, t) in y.iter_mut().zip(&tmp) {
+                    *yv += t;
+                }
+            }
+            black_box(&y);
+        }).mean().as_secs_f64();
+
+        // packed bytes streamed per fused apply: k mask planes
+        let bytes = k * n * m / 8;
+        let gbps = bytes as f64 / fused.max(1e-12) / 1e9;
+        let round2 = |v: f64| (v * 100.0).round() / 100.0;
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("level_sweep".into()));
+        o.insert("n".into(), Json::Num(n as f64));
+        o.insert("m".into(), Json::Num(m as f64));
+        o.insert("levels".into(), Json::Num(k as f64));
+        o.insert("fused_us".into(), Json::Num(round2(fused * 1e6)));
+        o.insert("loop_us".into(), Json::Num(round2(looped * 1e6)));
+        o.insert("speedup".into(),
+                 Json::Num(round2(looped / fused.max(1e-12))));
+        o.insert("fused_gbps".into(), Json::Num(round2(gbps)));
+        o.insert("smoke".into(), Json::Bool(smoke));
+        rows.push(Json::Obj(o));
+    }
+
+    println!("\n--- JSON ---");
+    for r in &rows {
+        println!("{r}");
+    }
+}

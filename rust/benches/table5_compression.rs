@@ -62,12 +62,13 @@ fn main() -> anyhow::Result<()> {
             manifest.path(&t.finetune))?.len() as usize;
 
         for codec in registry.iter() {
-            let Some(path) = codec.artifact_path(&manifest, t, true)
+            let Some(path) = codec.artifact_path(&manifest, t, true, 1)
             else { continue };
             // the svd codec factorizes at load time (Jacobi per
             // linear): one reps is plenty, it is the point being priced
             let reps = if codec.name() == "svd" { 1 } else { 5 };
-            let ctx = LoadCtx { cfg: &cfg, base: Some(base) };
+            let ctx = LoadCtx { cfg: &cfg, base: Some(base),
+                                levels: 0 };
             let t0 = Instant::now();
             let mut payload = None;
             for _ in 0..reps {

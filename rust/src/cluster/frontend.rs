@@ -271,8 +271,10 @@ impl ClusterHandle {
         if cands.is_empty() {
             bail!("cluster has no alive workers");
         }
+        // a typed RouteError (empty replica set mid-failover) surfaces
+        // as a request error on the caller side, not a routing panic
         Ok(self.shared.policy.route(tenant, &cands,
-                                    &LiveLoads(&self.shared.workers)))
+                                    &LiveLoads(&self.shared.workers))?)
     }
 
     fn mark_dead(&self, w: usize) {
@@ -333,7 +335,11 @@ impl ClusterHandle {
 /// model, codec resolved like the engine resolves it, `resident_bytes`
 /// estimated from the artifact's on-disk size (the loaded payload is
 /// within a few percent for every in-tree codec), uniform weights.
-/// Sorted by name so placement is deterministic.
+/// Tenants with a fidelity tier in `ecfg.tenant_levels` are sized
+/// exactly from the config shapes (`DeltaFile::delta_bytes_for`) — the
+/// delta-aware packer sees the level-scaled residency the worker's
+/// store will charge after truncating to the tier, with no artifact
+/// I/O. Sorted by name so placement is deterministic.
 pub fn tenant_profiles(ecfg: &EngineConfig) -> Result<Vec<TenantProfile>> {
     let manifest = Manifest::load(&ecfg.artifacts_dir)?;
     let registry = CodecRegistry::builtin();
@@ -350,13 +356,28 @@ pub fn tenant_profiles(ecfg: &EngineConfig) -> Result<Vec<TenantProfile>> {
             Some(c) => registry.get(c)?,
             None => default_codec.clone(),
         };
+        let levels = ecfg.tenant_levels.get(name.as_str()).copied()
+            .unwrap_or(1);
         // a tenant with no artifact in its codec truly costs 0 bytes
         // (nothing will ever be loaded for it) — but an artifact that
         // exists in the manifest and cannot be sized is an error, or
         // the delta-aware budget guarantees would silently evaporate
         let resident_bytes = match codec
-            .artifact_path(&manifest, t, ecfg.distilled) {
+            .artifact_path(&manifest, t, ecfg.distilled, levels) {
+            None if levels > 1 => bail!(
+                "tenant {name}: no {levels}-level artifact under codec \
+{:?} — cannot place a fidelity tier it cannot serve", codec.name()),
             None => 0,
+            Some(_) if levels > 1 => {
+                // level-scaled: the fidelity artifact carries more
+                // levels than the tier serves, so its file size
+                // over-counts; the truncated payload's residency is
+                // exactly derivable from the config shapes — no
+                // artifact I/O at cluster spawn
+                let cfg = manifest.config(&ecfg.model)?;
+                crate::store::delta_file::DeltaFile::delta_bytes_for(
+                    cfg, levels)
+            }
             Some(p) => std::fs::metadata(&p).with_context(|| format!(
                 "sizing delta artifact {} for tenant {name}",
                 p.display()))?.len() as usize,
@@ -366,6 +387,7 @@ pub fn tenant_profiles(ecfg: &EngineConfig) -> Result<Vec<TenantProfile>> {
             codec: codec.name().to_string(),
             resident_bytes,
             weight: 0.0,
+            levels,
         });
     }
     if out.is_empty() {
@@ -521,7 +543,7 @@ mod tests {
         let w = 1.0 / names.len() as f64;
         names.iter().map(|n| TenantProfile {
             name: n.to_string(), codec: "bitdelta".into(),
-            resident_bytes: bytes, weight: w,
+            resident_bytes: bytes, weight: w, levels: 1,
         }).collect()
     }
 

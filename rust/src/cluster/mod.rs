@@ -39,6 +39,7 @@ pub use frontend::{
     ClusterConfig, ClusterHandle, ReplayReport,
 };
 pub use placement::{
-    policy_by_name, Placement, PlacementPolicy, TenantProfile, WorkerSpec,
+    policy_by_name, Placement, PlacementPolicy, RouteError, TenantProfile,
+    WorkerSpec,
 };
 pub use worker::{CoreFactory, WorkerCore, WorkerHandle, WorkerLoad};

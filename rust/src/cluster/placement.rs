@@ -32,10 +32,15 @@ pub struct TenantProfile {
     /// Registry name of the tenant's delta codec.
     pub codec: String,
     /// Host bytes the tenant's delta occupies while resident — the
-    /// packing constraint (per-codec: a 1-bit delta is ~1/16 of dense).
+    /// packing constraint (per-codec: a 1-bit delta is ~1/16 of dense,
+    /// and a `levels`-tier bitdelta tenant costs `levels` mask planes).
     pub resident_bytes: usize,
     /// Expected share of traffic, summing to ~1.0 across tenants.
     pub weight: f64,
+    /// Fidelity tier (mask level count) the tenant is served at; scales
+    /// `resident_bytes`, making fidelity-vs-packing a placement
+    /// tradeoff.
+    pub levels: usize,
 }
 
 /// Per-worker placement input.
@@ -108,6 +113,28 @@ impl LoadView for &[usize] {
     }
 }
 
+/// Typed routing failure. Reachable in production: a failover
+/// re-placement race can momentarily leave a tenant's replica set
+/// empty, and the frontend must surface that as a request error — never
+/// a panic in the worker-routing path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// The tenant has no live replica to route to.
+    NoCandidates { tenant: String },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::NoCandidates { tenant } => write!(
+                f, "no routable worker for tenant {tenant:?} (empty \
+replica set — mid-failover re-placement?)"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
 /// A placement policy: how tenants spread over workers, and which
 /// replica serves a request. `Send + Sync` so one policy instance is
 /// shared by every routing thread.
@@ -120,9 +147,11 @@ pub trait PlacementPolicy: Send + Sync {
     fn place(&self, tenants: &[TenantProfile], workers: &[WorkerSpec])
              -> Result<Placement>;
 
-    /// Pick one of `candidates` (non-empty, all alive) for a request.
+    /// Pick one of `candidates` (all alive) for a request. An empty
+    /// candidate set is a [`RouteError`], not a panic — it is reachable
+    /// during failover re-placement races.
     fn route(&self, tenant: &str, candidates: &[usize],
-             loads: &dyn LoadView) -> usize;
+             loads: &dyn LoadView) -> Result<usize, RouteError>;
 }
 
 /// FNV-1a — a stable tenant hash (must not vary across runs or hosts,
@@ -150,10 +179,14 @@ affinity, least-loaded, delta-aware"),
     }
 }
 
-fn min_score(candidates: &[usize], loads: &dyn LoadView) -> usize {
-    *candidates.iter()
+fn min_score(tenant: &str, candidates: &[usize], loads: &dyn LoadView)
+             -> Result<usize, RouteError> {
+    candidates.iter()
         .min_by_key(|&&w| (loads.score(w), w))
-        .expect("route called with no candidates")
+        .copied()
+        .ok_or_else(|| RouteError::NoCandidates {
+            tenant: tenant.to_string(),
+        })
 }
 
 // ---------------------------------------------------------------------
@@ -185,8 +218,13 @@ impl PlacementPolicy for AffinityPolicy {
     }
 
     fn route(&self, tenant: &str, candidates: &[usize],
-             _loads: &dyn LoadView) -> usize {
-        candidates[stable_hash(tenant) as usize % candidates.len()]
+             _loads: &dyn LoadView) -> Result<usize, RouteError> {
+        if candidates.is_empty() {
+            return Err(RouteError::NoCandidates {
+                tenant: tenant.to_string(),
+            });
+        }
+        Ok(candidates[stable_hash(tenant) as usize % candidates.len()])
     }
 }
 
@@ -219,9 +257,9 @@ impl PlacementPolicy for LeastLoadedPolicy {
         Ok(p)
     }
 
-    fn route(&self, _tenant: &str, candidates: &[usize],
-             loads: &dyn LoadView) -> usize {
-        min_score(candidates, loads)
+    fn route(&self, tenant: &str, candidates: &[usize],
+             loads: &dyn LoadView) -> Result<usize, RouteError> {
+        min_score(tenant, candidates, loads)
     }
 }
 
@@ -303,9 +341,9 @@ remaining delta budget", t.name, t.resident_bytes, t.codec),
         Ok(p)
     }
 
-    fn route(&self, _tenant: &str, candidates: &[usize],
-             loads: &dyn LoadView) -> usize {
-        min_score(candidates, loads)
+    fn route(&self, tenant: &str, candidates: &[usize],
+             loads: &dyn LoadView) -> Result<usize, RouteError> {
+        min_score(tenant, candidates, loads)
     }
 }
 
@@ -315,7 +353,7 @@ mod tests {
 
     fn tenant(name: &str, bytes: usize, weight: f64) -> TenantProfile {
         TenantProfile { name: name.into(), codec: "bitdelta".into(),
-                        resident_bytes: bytes, weight }
+                        resident_bytes: bytes, weight, levels: 1 }
     }
 
     fn workers(n: usize, budget: usize) -> Vec<WorkerSpec> {
@@ -344,7 +382,7 @@ mod tests {
         let idle: Vec<usize> = vec![0; 4];
         for t in &ts {
             let cands = p1.workers_of(&t.name);
-            assert_eq!(p.route(&t.name, cands, &idle.as_slice()),
+            assert_eq!(p.route(&t.name, cands, &idle.as_slice()).unwrap(),
                        cands[0]);
         }
     }
@@ -357,7 +395,24 @@ mod tests {
         let placed = p.place(&ts, &ws).unwrap();
         assert_eq!(placed.replica_count("a"), 3);
         let loads: Vec<usize> = vec![5, 0, 7];
-        assert_eq!(p.route("a", &[0, 1, 2], &loads.as_slice()), 1);
+        assert_eq!(p.route("a", &[0, 1, 2], &loads.as_slice()).unwrap(),
+                   1);
+    }
+
+    #[test]
+    fn route_with_no_candidates_is_a_typed_error_not_a_panic() {
+        // reachable during failover re-placement races: every policy
+        // must return RouteError, never crash the routing path
+        let loads: Vec<usize> = vec![];
+        for policy in ["affinity", "least-loaded", "delta-aware"] {
+            let p = policy_by_name(policy).unwrap();
+            let e = p.route("ghost", &[], &loads.as_slice())
+                .expect_err(policy);
+            assert_eq!(e, RouteError::NoCandidates {
+                tenant: "ghost".into(),
+            });
+            assert!(e.to_string().contains("ghost"), "{e}");
+        }
     }
 
     #[test]
@@ -431,6 +486,27 @@ mod tests {
         for w in 0..4 {
             let budget = if w < 2 { 80 } else { 10 };
             assert!(placed.placed_bytes(w) <= budget);
+        }
+    }
+
+    #[test]
+    fn fidelity_tiers_price_into_the_packing() {
+        // A tier-4 tenant carries 4 mask planes, so its level-scaled
+        // resident_bytes take 4x the bin space of a tier-1 tenant over
+        // the same matrices — fidelity-vs-packing as a real tradeoff.
+        let p = DeltaAwarePolicy;
+        let mut deep = tenant("deep", 40, 0.25);
+        deep.levels = 4;
+        let ts = vec![deep, tenant("a", 10, 0.25),
+                      tenant("b", 10, 0.25), tenant("c", 10, 0.25)];
+        let placed = p.place(&ts, &workers(2, 40)).unwrap();
+        // deep fills one worker's budget alone; the tier-1 tenants all
+        // pack onto the other
+        let w_deep = placed.workers_of("deep")[0];
+        assert_eq!(placed.placed_bytes(w_deep), 40);
+        for t in ["a", "b", "c"] {
+            assert_ne!(placed.workers_of(t), &[w_deep][..],
+                       "{t} landed on the full worker");
         }
     }
 

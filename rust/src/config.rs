@@ -183,6 +183,9 @@ pub struct ExecutableEntry {
     pub batch: usize,
     pub seq: usize,
     pub rank: usize,
+    /// Mask levels a `decode_bitdelta_l{L}` export sums (1 for the
+    /// single-level ABI and for every non-bitdelta kind).
+    pub levels: usize,
 }
 
 fn model_config_from_json(j: &Json) -> Result<ModelConfig> {
@@ -263,6 +266,8 @@ artifacts` first"))?;
                     .transpose()?.unwrap_or(0),
                 rank: v.get("rank").map(|b| b.as_usize())
                     .transpose()?.unwrap_or(0),
+                levels: v.get("levels").map(|b| b.as_usize())
+                    .transpose()?.unwrap_or(1),
             });
         }
         let mut quantized_bases = HashMap::new();

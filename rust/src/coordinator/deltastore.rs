@@ -51,6 +51,9 @@ struct Entry {
 struct Registration {
     codec: Rc<dyn DeltaCodec>,
     path: PathBuf,
+    /// Fidelity tier: mask levels to load (0 = every level in the
+    /// artifact). Only multi-level codecs honor it.
+    levels: usize,
 }
 
 /// LRU-with-pinning payload cache.
@@ -83,10 +86,14 @@ impl DeltaStore {
     }
 
     /// Register a tenant's artifact under its codec (not loaded yet).
+    /// `levels` is the tenant's fidelity tier (0 = every level the
+    /// artifact carries) — it scales what the payload's
+    /// `resident_bytes` charge against the budget.
     pub fn register(&mut self, tenant: impl Into<String>,
-                    codec: Rc<dyn DeltaCodec>, path: PathBuf) {
+                    codec: Rc<dyn DeltaCodec>, path: PathBuf,
+                    levels: usize) {
         self.registered.insert(tenant.into(),
-                               Registration { codec, path });
+                               Registration { codec, path, levels });
     }
 
     pub fn resident_bytes(&self) -> usize {
@@ -115,16 +122,17 @@ impl DeltaStore {
             self.stats.hits += 1;
             return Ok(e.payload.clone());
         }
-        let (codec, path) = {
+        let (codec, path, levels) = {
             let r = self.registered.get(tenant).with_context(
                 || format!("tenant {tenant} has no registered delta \
 artifact (codec lacks one for this tenant?)"))?;
-            (r.codec.clone(), r.path.clone())
+            (r.codec.clone(), r.path.clone(), r.levels)
         };
         let t0 = Instant::now();
         let payload = {
             let ctx = LoadCtx { cfg: &self.cfg,
-                                base: self.base.as_deref() };
+                                base: self.base.as_deref(),
+                                levels };
             codec.load(&path, &ctx).with_context(
                 || format!("loading {} payload for {tenant}",
                            codec.name()))?
@@ -242,7 +250,7 @@ mod tests {
         for i in 0..n {
             let p = dir.join(format!("t{i}.bdd"));
             write_delta(&cfg, &p, i as f32);
-            store.register(format!("t{i}"), codec.clone(), p);
+            store.register(format!("t{i}"), codec.clone(), p, 0);
             names.push(format!("t{i}"));
         }
         (store, names)
@@ -386,6 +394,45 @@ mod tests {
         let per = &s.stats.by_codec["bitdelta"];
         assert_eq!((per.loads, per.evictions, per.bytes_loaded),
                    (4, 2, 4 * one as u64));
+    }
+
+    #[test]
+    fn fidelity_tier_scales_resident_bytes() {
+        // one 3-level artifact registered at tiers 1 and 3: the tier-1
+        // payload must charge fewer bytes against the budget, and the
+        // gap must be exactly the two dropped mask levels.
+        use crate::tensor::Tensor;
+
+        let cfg = tiny_cfg();
+        let model = |seed: u64| -> HashMap<String, RawTensor> {
+            cfg.param_names().into_iter().enumerate().map(|(i, n)| {
+                let shape = cfg.param_shape(&n);
+                let t = Tensor::randn(shape.clone(), seed + i as u64);
+                (n, RawTensor::f32(shape, t.data()))
+            }).collect()
+        };
+        let base = model(31);
+        let fine = model(32);
+        let d = crate::delta::iterative::compress_iterative(
+            &cfg, &base, &fine, 3).unwrap();
+        let dir = std::env::temp_dir().join("deltastore_test_levels");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("multi.bdd");
+        write_bdw(&p, &d.to_bdw(&cfg)).unwrap();
+
+        let codec: Rc<dyn DeltaCodec> = Rc::new(BitDeltaCodec);
+        let mut s = DeltaStore::new(cfg.clone(), usize::MAX / 2);
+        s.register("tier1", codec.clone(), p.clone(), 1);
+        s.register("tier3", codec.clone(), p, 3);
+        let b1 = s.fetch("tier1").unwrap().resident_bytes();
+        let b3 = s.fetch("tier3").unwrap().resident_bytes();
+        assert!(b1 < b3, "tier1 {b1} !< tier3 {b3}");
+        let per_level: usize = cfg.linear_names().iter().map(|n| {
+            let (rows, mp) = cfg.packed_shape(n);
+            rows * mp
+        }).sum::<usize>() + cfg.linear_names().len() * 4;
+        assert_eq!(b3 - b1, 2 * per_level);
+        assert_eq!(s.resident_bytes(), b1 + b3);
     }
 
     #[test]

@@ -24,16 +24,26 @@ pub struct TenantInfo {
     /// delta payload uses — tenants on different codecs may share one
     /// decode batch (mixed-format batching).
     pub codec: String,
+    /// Fidelity tier: how many 1-bit mask levels the tenant is served
+    /// with (Fig. 3). Tier 1 is the standard single-mask delta; higher
+    /// tiers trade delta residency for reconstruction fidelity.
+    pub levels: usize,
 }
 
 impl TenantInfo {
     /// Convenience constructor defaulting to the paper's own format.
     pub fn new(name: impl Into<String>, rope_scale: f32) -> Self {
-        Self { name: name.into(), rope_scale, codec: "bitdelta".into() }
+        Self { name: name.into(), rope_scale, codec: "bitdelta".into(),
+               levels: 1 }
     }
 
     pub fn with_codec(mut self, codec: impl Into<String>) -> Self {
         self.codec = codec.into();
+        self
+    }
+
+    pub fn with_levels(mut self, levels: usize) -> Self {
+        self.levels = levels;
         self
     }
 }

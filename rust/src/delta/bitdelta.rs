@@ -74,11 +74,17 @@ pub fn compress(cfg: &ModelConfig,
 }
 
 impl BitDeltaCompressed {
-    /// Install externally-distilled scales (level 0).
-    pub fn with_scales(mut self, scales: Vec<f32>) -> Self {
-        assert_eq!(scales.len(), self.delta.levels[0].scales.len());
+    /// Install externally-distilled scales (level 0). A malformed
+    /// distilled-scales artifact (wrong vector length) is an error the
+    /// codec load path can surface, not a process abort.
+    pub fn with_scales(mut self, scales: Vec<f32>) -> Result<Self> {
+        let want = self.delta.levels[0].scales.len();
+        if scales.len() != want {
+            bail!("distilled scales have {} entries, want {want} \
+(one per linear)", scales.len());
+        }
         self.delta.levels[0].scales = scales;
-        self
+        Ok(self)
     }
 
     /// Dense-model compression factor for this config (Table 5).
@@ -231,6 +237,20 @@ mod tests {
         let c = compress(&cfg, &base, &fine).unwrap();
         assert_eq!(c.delta.extras["tok_embed"], fine["tok_embed"]);
         assert_eq!(c.delta.extras["lm_head"], fine["lm_head"]);
+    }
+
+    #[test]
+    fn with_scales_rejects_length_mismatch() {
+        let cfg = tiny_cfg();
+        let base = model(&cfg, 6);
+        let fine = perturbed(&base, 0.02, 23);
+        let c = compress(&cfg, &base, &fine).unwrap();
+        let want = cfg.linear_names().len();
+        let e = c.clone().with_scales(vec![0.1; want + 1])
+            .unwrap_err().to_string();
+        assert!(e.contains("one per linear"), "{e}");
+        let ok = c.with_scales(vec![0.1; want]).unwrap();
+        assert_eq!(ok.delta.levels[0].scales, vec![0.1; want]);
     }
 
     #[test]

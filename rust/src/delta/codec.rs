@@ -75,6 +75,10 @@ pub fn downcast<T: Payload>(payload: &dyn Payload, codec: &str)
 pub struct LoadCtx<'a> {
     pub cfg: &'a ModelConfig,
     pub base: Option<&'a Model>,
+    /// Fidelity tier: how many mask levels of the artifact to serve
+    /// (`0` = every level it carries). Only multi-level codecs
+    /// (`bitdelta`) honor it; for the rest any value `<= 1` is valid.
+    pub levels: usize,
 }
 
 /// One delta representation: storage + ABI + kernels behind a single
@@ -86,14 +90,29 @@ pub trait DeltaCodec {
     /// AOT executable kind a homogeneous batch decodes through.
     fn exec_kind(&self) -> &'static str;
 
+    /// Executable kind a batch needs when this codec serves a payload
+    /// at fidelity tier `levels`, or `None` when the codec has no
+    /// export covering that tier. Single-tier codecs (the default)
+    /// only cover `levels <= 1`; multi-level codecs override this with
+    /// their tier table so construction-time validation stays
+    /// codec-agnostic.
+    fn exec_kind_for_levels(&self, levels: usize)
+                            -> Option<&'static str> {
+        (levels <= 1).then_some(self.exec_kind())
+    }
+
     /// Whether that executable takes the shared base linears as its
     /// leading arguments (false for formats that carry full weights).
     fn needs_base(&self) -> bool;
 
     /// Locate this tenant's artifact, or `None` if the tenant has no
-    /// artifact in this format.
+    /// artifact in this format. `levels` is the requested fidelity tier
+    /// (`<= 1` = the standard single-tier artifact); codecs without
+    /// multi-level artifacts return `None` for `levels > 1` so the
+    /// caller can fail with a diagnosable error instead of silently
+    /// serving the wrong tier.
     fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
-                     distilled: bool) -> Option<PathBuf>;
+                     distilled: bool, levels: usize) -> Option<PathBuf>;
 
     /// Parse an artifact into a payload.
     fn load(&self, path: &Path, ctx: &LoadCtx) -> Result<Rc<dyn Payload>>;

@@ -1,7 +1,20 @@
 //! The paper's own format: per-linear packed 1-bit sign masks + one f32
-//! scale (possibly several successive-residual levels), full-precision
-//! extras. Payload type: [`DeltaFile`]. Decodes through
-//! `decode_bitdelta` (shared base linears + stacked masks).
+//! scale per mask, possibly several successive-residual **levels**
+//! (Fig. 3 / Table 9 fidelity tiers), full-precision extras. Payload
+//! type: [`DeltaFile`]. Single-level batches decode through
+//! `decode_bitdelta` (shared base linears + stacked masks); multi-level
+//! batches through `decode_bitdelta_l{L}`, whose bits/scales carry a
+//! level axis summed inside the executable.
+//!
+//! **Fidelity tiers.** A tenant served at tier `k` loads the first `k`
+//! levels of its fidelity artifact ([`LoadCtx::levels`]), so
+//! `resident_bytes` — the delta store's budget unit and the placement
+//! bin-packing weight — scales with the tier. Tenants at different
+//! tiers may share one decode batch: [`BitDeltaCodec::assemble`] pads
+//! every slot to the batch-max level count with **zero-scale no-op
+//! levels** (an all-zero mask contributes `0·Sign @ x = 0`), keeping
+//! the batch homogeneous while each tenant's output stays bit-identical
+//! to being served alone at its own tier.
 
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -11,7 +24,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Manifest, ModelConfig, TenantEntry};
 use crate::delta::codec::{downcast, pick, stack_extras, DeltaCodec,
                           LoadCtx, Model, Payload};
-use crate::gemm::{dense_gemv, try_binary_gemv};
+use crate::gemm::{dense_gemv, try_binary_gemv_multi};
 use crate::runtime::client::Runtime;
 use crate::runtime::variants::StackedArgs;
 use crate::store::delta_file::DeltaFile;
@@ -26,6 +39,20 @@ impl Payload for DeltaFile {
     }
 }
 
+/// Level counts with an AOT decode executable, ascending, paired with
+/// the executable kind. A batch whose max level count is not an exact
+/// tier is padded up to the next one (zero-scale levels are free).
+pub const LEVEL_TIERS: [(usize, &str); 3] = [
+    (1, "decode_bitdelta"),
+    (2, "decode_bitdelta_l2"),
+    (4, "decode_bitdelta_l4"),
+];
+
+/// Smallest exported tier that fits `levels` stacked masks.
+pub fn exec_tier_for(levels: usize) -> Option<(usize, &'static str)> {
+    LEVEL_TIERS.iter().copied().find(|(l, _)| *l >= levels)
+}
+
 pub struct BitDeltaCodec;
 
 impl DeltaCodec for BitDeltaCodec {
@@ -37,28 +64,59 @@ impl DeltaCodec for BitDeltaCodec {
         "decode_bitdelta"
     }
 
+    /// Tier table: `decode_bitdelta` at 1 level, `decode_bitdelta_l{L}`
+    /// above (rounded up to the smallest exported tier).
+    fn exec_kind_for_levels(&self, levels: usize)
+                            -> Option<&'static str> {
+        exec_tier_for(levels).map(|(_, kind)| kind)
+    }
+
     fn needs_base(&self) -> bool {
         true
     }
 
+    /// Tier `<= 1`: the standard delta (distilled or initial). Tier
+    /// `k > 1`: the tenant's Fig. 3 fidelity artifact with the fewest
+    /// levels `>= k` (load truncates down to exactly `k`); `None` when
+    /// no fidelity artifact reaches the tier.
     fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
-                     distilled: bool) -> Option<PathBuf> {
-        let rel = if distilled { &tenant.delta }
-                  else { &tenant.delta_initial };
-        Some(manifest.path(rel))
+                     distilled: bool, levels: usize) -> Option<PathBuf> {
+        if levels <= 1 {
+            let rel = if distilled { &tenant.delta }
+                      else { &tenant.delta_initial };
+            return Some(manifest.path(rel));
+        }
+        let mut ks: Vec<usize> = tenant.fidelity.keys()
+            .filter_map(|k| k.parse().ok())
+            .filter(|&k| k >= levels)
+            .collect();
+        ks.sort_unstable();
+        ks.first()
+            .map(|k| manifest.path(&tenant.fidelity[&k.to_string()]))
     }
 
     fn load(&self, path: &Path, ctx: &LoadCtx) -> Result<Rc<dyn Payload>> {
-        let d = DeltaFile::load(path, ctx.cfg)
+        let mut d = DeltaFile::load(path, ctx.cfg)
             .with_context(|| format!("bitdelta codec: {path:?}"))?;
+        if ctx.levels > 0 {
+            if ctx.levels > d.levels.len() {
+                bail!("bitdelta codec: {path:?} carries {} mask \
+level(s), fidelity tier {} requested", d.levels.len(), ctx.levels);
+            }
+            // serve exactly the requested tier: resident_bytes (store
+            // budget, placement weight) and every downstream consumer
+            // see only the retained levels
+            d.levels.truncate(ctx.levels);
+        }
         Ok(Rc::new(d))
     }
 
     /// ABI slice: `bits…(per linear), scales, extras…` — each with a
-    /// leading `[B]` tenant axis. The `decode_bitdelta` ABI carries a
-    /// single mask level, so multi-level deltas (Fig. 3 fidelity files)
-    /// are rejected here with a clear error instead of silently serving
-    /// level 0 while `materialize`/`forward_linear` apply all levels.
+    /// leading `[B]` tenant axis. When any payload carries more than one
+    /// mask level the batch is raised to the smallest exported level
+    /// tier (`decode_bitdelta_l{L}`): bits become `[B, L, N, ⌈M/8⌉]`,
+    /// scales `[B, L, n_linears]`, and slots with fewer levels are
+    /// padded with zero-scale no-op levels.
     fn assemble(&self, rt: &Runtime, cfg: &ModelConfig,
                 payloads: &[&dyn Payload], batch: usize)
                 -> Result<StackedArgs> {
@@ -68,32 +126,59 @@ impl DeltaCodec for BitDeltaCodec {
         let deltas: Vec<&DeltaFile> = payloads.iter()
             .map(|p| downcast::<DeltaFile>(*p, self.name()))
             .collect::<Result<_>>()?;
-        if let Some(d) = deltas.iter().find(|d| d.levels.len() > 1) {
-            bail!("decode_bitdelta serves exactly one mask level, got a \
-{}-level delta — use materialize_levels for fidelity evals",
-                  d.levels.len());
-        }
+        let lmax = deltas.iter().map(|d| d.levels.len()).max().unwrap();
+        let Some((lexec, exec_kind)) = exec_tier_for(lmax) else {
+            let deepest = LEVEL_TIERS[LEVEL_TIERS.len() - 1].0;
+            bail!("a {lmax}-level delta exceeds the deepest exported \
+decode tier ({deepest}) — serve it at a fidelity tier <= {deepest}");
+        };
+
         let mut staged = 0usize;
         let mut buffers = Vec::new();
 
         for name in cfg.linear_names() {
             let (n, mp) = cfg.packed_shape(&name);
-            let mut stacked = Vec::with_capacity(batch * n * mp);
+            let mut stacked = Vec::with_capacity(batch * lexec * n * mp);
             for b in 0..batch {
-                stacked.extend_from_slice(
-                    &pick(&deltas, b).levels[0].bits[&name]);
+                let d = pick(&deltas, b);
+                for l in 0..lexec {
+                    match d.levels.get(l) {
+                        Some(level) => stacked.extend_from_slice(
+                            &level.bits[&name]),
+                        // zero-scale padding level: mask bytes are
+                        // arbitrary as long as padding bits are clear —
+                        // all-zero keeps the buffer valid everywhere
+                        None => stacked.resize(stacked.len() + n * mp, 0),
+                    }
+                }
             }
             staged += stacked.len();
-            buffers.push(rt.upload_u8(&stacked, &[batch, n, mp])?);
+            let shape: Vec<usize> = if lexec == 1 {
+                vec![batch, n, mp]
+            } else {
+                vec![batch, lexec, n, mp]
+            };
+            buffers.push(rt.upload_u8(&stacked, &shape)?);
         }
 
         let n_lin = cfg.linear_names().len();
-        let mut scales = Vec::with_capacity(batch * n_lin);
+        let mut scales = Vec::with_capacity(batch * lexec * n_lin);
         for b in 0..batch {
-            scales.extend_from_slice(&pick(&deltas, b).levels[0].scales);
+            let d = pick(&deltas, b);
+            for l in 0..lexec {
+                match d.levels.get(l) {
+                    Some(level) => scales.extend_from_slice(&level.scales),
+                    None => scales.resize(scales.len() + n_lin, 0.0),
+                }
+            }
         }
         staged += scales.len() * 4;
-        buffers.push(rt.upload_f32(&scales, &[batch, n_lin])?);
+        let sshape: Vec<usize> = if lexec == 1 {
+            vec![batch, n_lin]
+        } else {
+            vec![batch, lexec, n_lin]
+        };
+        buffers.push(rt.upload_f32(&scales, &sshape)?);
 
         let extras: Vec<&Model> = deltas.iter().map(|d| &d.extras)
             .collect();
@@ -102,16 +187,24 @@ impl DeltaCodec for BitDeltaCodec {
         staged += extra_bytes;
         buffers.extend(extra_bufs);
 
-        Ok(StackedArgs { buffers, batch, staged_bytes: staged })
+        Ok(StackedArgs {
+            buffers, batch, staged_bytes: staged,
+            exec_kind: if lexec == 1 { None } else { Some(exec_kind) },
+        })
     }
 
     fn materialize(&self, cfg: &ModelConfig, base: &Model,
                    payload: &dyn Payload) -> Result<Rc<Model>> {
         let d = downcast::<DeltaFile>(payload, self.name())?;
-        crate::delta::bitdelta::materialize(cfg, base, d).map(Rc::new)
+        crate::delta::bitdelta::materialize_levels(cfg, base, d,
+                                                   d.levels.len())
+            .map(Rc::new)
     }
 
-    /// `y = W_base@x + Σ_k α_k·Sign_k@x` straight from the packed bytes.
+    /// `y = W_base@x + Σ_k α_k·Sign_k@x` straight from the packed
+    /// bytes, all levels through the fused multi-level kernel (the
+    /// shared `Σx` term and nibble tables are computed once, not per
+    /// level).
     fn forward_linear(&self, cfg: &ModelConfig, base: &Model,
                       payload: &dyn Payload, name: &str, x: &[f32],
                       y: &mut [f32]) -> Result<()> {
@@ -123,15 +216,32 @@ impl DeltaCodec for BitDeltaCodec {
         let (i, _) = cfg.linear_names().iter().enumerate()
             .find(|(_, ln)| ln.as_str() == name)
             .with_context(|| format!("{name} is not a canonical linear"))?;
-        let mut tmp = vec![0f32; n];
+        let mut levels: Vec<(&[u8], f32)> =
+            Vec::with_capacity(d.levels.len());
         for level in &d.levels {
             let bits = level.bits.get(name)
                 .with_context(|| format!("delta missing bits for {name}"))?;
-            try_binary_gemv(bits, n, m, x, level.scales[i], &mut tmp)?;
-            for (yv, t) in y.iter_mut().zip(&tmp) {
-                *yv += t;
-            }
+            levels.push((bits.as_slice(), level.scales[i]));
+        }
+        let mut tmp = vec![0f32; n];
+        try_binary_gemv_multi(&levels, n, m, x, &mut tmp)?;
+        for (yv, t) in y.iter_mut().zip(&tmp) {
+            *yv += t;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_tier_rounds_up_to_exported_levels() {
+        assert_eq!(exec_tier_for(1), Some((1, "decode_bitdelta")));
+        assert_eq!(exec_tier_for(2), Some((2, "decode_bitdelta_l2")));
+        assert_eq!(exec_tier_for(3), Some((4, "decode_bitdelta_l4")));
+        assert_eq!(exec_tier_for(4), Some((4, "decode_bitdelta_l4")));
+        assert_eq!(exec_tier_for(5), None);
     }
 }

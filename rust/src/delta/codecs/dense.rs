@@ -59,7 +59,8 @@ pub(crate) fn stack_dense_models(rt: &Runtime, cfg: &ModelConfig,
         full.extend(&shape);
         buffers.push(rt.upload_f32(&stacked, &full)?);
     }
-    Ok(StackedArgs { buffers, batch, staged_bytes: staged })
+    Ok(StackedArgs { buffers, batch, staged_bytes: staged,
+                     exec_kind: None })
 }
 
 pub struct DenseCodec;
@@ -78,7 +79,10 @@ impl DeltaCodec for DenseCodec {
     }
 
     fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
-                     _distilled: bool) -> Option<PathBuf> {
+                     _distilled: bool, levels: usize) -> Option<PathBuf> {
+        if levels > 1 {
+            return None;    // dense weights have no fidelity tiers
+        }
         Some(manifest.path(&tenant.finetune))
     }
 

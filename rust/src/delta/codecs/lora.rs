@@ -106,7 +106,8 @@ pub(crate) fn assemble_lora_payloads(rt: &Runtime, cfg: &ModelConfig,
     staged += extra_bytes;
     buffers.extend(extra_bufs);
 
-    Ok(StackedArgs { buffers, batch, staged_bytes: staged })
+    Ok(StackedArgs { buffers, batch, staged_bytes: staged,
+                     exec_kind: None })
 }
 
 pub struct LoraCodec;
@@ -127,7 +128,10 @@ impl DeltaCodec for LoraCodec {
     /// Served from the tenant's precomputed SVD-r16 factor files (only
     /// tenants with factors can ride this codec).
     fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
-                     distilled: bool) -> Option<PathBuf> {
+                     distilled: bool, levels: usize) -> Option<PathBuf> {
+        if levels > 1 {
+            return None;    // low-rank factors have no fidelity tiers
+        }
         tenant.svd_r16.as_ref().map(|s| {
             manifest.path(if distilled { &s.distilled } else { &s.initial })
         })

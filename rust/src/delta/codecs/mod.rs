@@ -108,6 +108,74 @@ mod tests {
         }
     }
 
+    /// The same invariant at fidelity tiers k > 1: a multi-level
+    /// bitdelta payload's fused `forward_linear` must equal a dense
+    /// GEMV over `materialize_levels` of the same k levels — the
+    /// guarantee that serving a tier and evaluating it see one model.
+    #[test]
+    fn forward_linear_matches_materialized_dense_multi_level() {
+        let cfg = tiny_cfg();
+        let base = model(&cfg, 900);
+        let fine = model(&cfg, 901);
+        let registry = CodecRegistry::builtin();
+        let codec = registry.get("bitdelta").unwrap();
+        for k in [2usize, 3, 4] {
+            let payload: Rc<dyn Payload> = Rc::new(
+                crate::delta::iterative::compress_iterative(
+                    &cfg, &base, &fine, k).unwrap());
+            let mat = codec.materialize(&cfg, &base, payload.as_ref())
+                .unwrap();
+            for name in cfg.linear_names() {
+                let (n, m) = cfg.linear_shape(&name);
+                let x = Tensor::randn(vec![m], 40 + (k * n) as u64);
+                let mut y = vec![0f32; n];
+                codec.forward_linear(&cfg, &base, payload.as_ref(),
+                                     &name, x.data(), &mut y).unwrap();
+                let mut want = vec![0f32; n];
+                dense_gemv(&mat[&name].as_f32().unwrap(), n, m,
+                           x.data(), &mut want);
+                for (a, b) in y.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-2,
+                            "k={k} {name}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    /// Property: per-matrix reconstruction error of the materialized
+    /// model is non-increasing in the number of served levels k —
+    /// every extra mask can only move `W_base + Δ̂` closer to the
+    /// fine-tune (the monotonicity behind Fig. 3).
+    #[test]
+    fn reconstruction_error_non_increasing_in_levels() {
+        use crate::delta::bitdelta::materialize_levels;
+        use crate::util::prop::run_cases;
+
+        let cfg = tiny_cfg();
+        run_cases(6, |rng| {
+            let seed = rng.usize_in(1, 10_000) as u64;
+            let base = model(&cfg, seed);
+            let fine = model(&cfg, seed + 77);
+            let k_max = 5;
+            let d = crate::delta::iterative::compress_iterative(
+                &cfg, &base, &fine, k_max).unwrap();
+            for name in cfg.linear_names() {
+                let wf = fine[&name].as_f32().unwrap();
+                let mut prev = f64::INFINITY;
+                for k in 1..=k_max {
+                    let mat = materialize_levels(&cfg, &base, &d, k)
+                        .unwrap();
+                    let wm = mat[&name].as_f32().unwrap();
+                    let err: f64 = wf.iter().zip(&wm)
+                        .map(|(f, m)| ((f - m) as f64).powi(2)).sum();
+                    assert!(err <= prev + 1e-9,
+                            "{name}: err grew at k={k}: {err} > {prev}");
+                    prev = err;
+                }
+            }
+        });
+    }
+
     /// Materialize carries the tenant's extras for every codec.
     #[test]
     fn materialize_carries_extras_for_every_codec() {

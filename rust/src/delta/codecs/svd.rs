@@ -58,7 +58,10 @@ impl DeltaCodec for SvdCodec {
     /// Factorizes the dense fine-tune directly; there is no separate
     /// initial/distilled artifact.
     fn artifact_path(&self, manifest: &Manifest, tenant: &TenantEntry,
-                     _distilled: bool) -> Option<PathBuf> {
+                     _distilled: bool, levels: usize) -> Option<PathBuf> {
+        if levels > 1 {
+            return None;    // load-time factors have no fidelity tiers
+        }
         Some(manifest.path(&tenant.finetune))
     }
 

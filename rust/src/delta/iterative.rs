@@ -21,7 +21,9 @@ pub fn compress_iterative(cfg: &ModelConfig,
                           base: &HashMap<String, RawTensor>,
                           fine: &HashMap<String, RawTensor>,
                           levels: usize) -> Result<DeltaFile> {
-    assert!(levels >= 1);
+    if levels == 0 {
+        anyhow::bail!("iterative compression needs >= 1 mask level");
+    }
     let lin = cfg.linear_names();
 
     // residual deltas, updated level by level
@@ -137,6 +139,15 @@ mod tests {
                 assert!(w[1] < w[0], "scales not decaying: {s:?}");
             }
         }
+    }
+
+    #[test]
+    fn zero_levels_is_an_error_not_a_panic() {
+        let cfg = tiny_cfg();
+        let (base, fine) = pair(&cfg);
+        let e = compress_iterative(&cfg, &base, &fine, 0)
+            .unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
     }
 
     #[test]

@@ -119,14 +119,15 @@ pub fn table1(ctx: &mut TableCtx, size: &str) -> Result<String> {
         let mut seen: Vec<std::path::PathBuf> = Vec::new();
         for (phase, distilled) in [("", true), ("-Initial", false)] {
             let Some(path) =
-                codec.artifact_path(&ctx.manifest, &t, distilled)
+                codec.artifact_path(&ctx.manifest, &t, distilled, 1)
             else { continue };
             if seen.contains(&path) {
                 continue;   // e.g. dense: initial == distilled artifact
             }
             seen.push(path.clone());
             let payload = {
-                let lctx = LoadCtx { cfg: &cfg, base: Some(&base) };
+                let lctx = LoadCtx { cfg: &cfg, base: Some(&base),
+                                     levels: 0 };
                 codec.load(&path, &lctx)?
             };
             let m = codec.materialize(&cfg, &base, payload.as_ref())?;
@@ -278,18 +279,46 @@ pub fn table7(ctx: &mut TableCtx, size: &str) -> Result<String> {
 // Figure 3 / Table 9: fidelity ablation
 // ---------------------------------------------------------------------------
 
+/// Relative reconstruction error of a k-level materialization over
+/// **all** linears: `‖Δ − Δ̂_k‖_F / ‖Δ‖_F` with both norms taken across
+/// the whole set of delta matrices (the scalar the Fig. 3 x-axis walks
+/// down). Takes the already-materialized model so the caller pays the
+/// reconstruction once per level.
+fn recon_rel_err(cfg: &ModelConfig, base: &Model, fine: &Model,
+                 mat: &Model) -> Result<f64> {
+    let mut err2 = 0f64;
+    let mut norm2 = 0f64;
+    for name in cfg.linear_names() {
+        let wb = base[&name].as_f32()?;
+        let wf = fine[&name].as_f32()?;
+        let wm = mat[&name].as_f32()?;
+        for ((b, f), m) in wb.iter().zip(&wf).zip(&wm) {
+            err2 += ((f - m) as f64).powi(2);
+            norm2 += ((f - b) as f64).powi(2);
+        }
+    }
+    Ok((err2 / norm2.max(1e-30)).sqrt())
+}
+
+/// Fig. 3 / Table 9 reproduction: eval quality **and** relative
+/// reconstruction error vs the number of served mask levels k — the
+/// table `repro fig3` / `repro table-fig3` emits. The same k-level
+/// reconstruction the serving path computes (assemble/forward_linear
+/// sum the identical levels), so this closes the fidelity-tier loop.
 pub fn fig3(ctx: &mut TableCtx, size: &str) -> Result<String> {
     let tenant = format!("{size}-chat");
     let cfg = ctx.cfg_of_tenant(&tenant)?;
     let t = ctx.manifest.tenants[&tenant].clone();
     let base = ctx.model(&format!("{size}-base"))?;
+    let fine = ctx.model(&tenant)?;
 
     let mut out = String::new();
     out.push_str(&format!(
-        "Figure 3 / Table 9 — fidelity of Δ ({tenant})\n{}\n",
-        Scores::header()));
+        "Figure 3 / Table 9 — fidelity of Δ ({tenant})\n{}  {}\n",
+        Scores::header(), "recon_rel_err"));
     let s = ctx.score(size, &base)?;
-    out.push_str(&format!("{}\n", s.row("base (0 bits)", false)));
+    out.push_str(&format!("{}  {:>13.5}\n",
+                          s.row("base (0 bits)", false), 1.0));
 
     let mut levels: Vec<usize> = t.fidelity.keys()
         .map(|k| k.parse().unwrap()).collect();
@@ -300,13 +329,15 @@ pub fn fig3(ctx: &mut TableCtx, size: &str) -> Result<String> {
         for k in &levels {
             let m = materialize_levels(&cfg, &base, &d, *k)?;
             let s = ctx.score(size, &m)?;
+            let e = recon_rel_err(&cfg, &base, &fine, &m)?;
             out.push_str(&format!(
-                "{}\n", s.row(&format!("{k} bit(s)"), false)));
+                "{}  {:>13.5}\n", s.row(&format!("{k} bit(s)"), false),
+                e));
         }
     }
-    let fine = ctx.model(&tenant)?;
     let s = ctx.score(size, &fine)?;
-    out.push_str(&format!("{}\n", s.row("fine-tune (full)", true)));
+    out.push_str(&format!("{}  {:>13.5}\n",
+                          s.row("fine-tune (full)", true), 0.0));
     Ok(out)
 }
 

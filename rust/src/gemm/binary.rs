@@ -145,6 +145,87 @@ pub fn binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
     }
 }
 
+/// Fused multi-level packed GEMV (Fig. 3 fidelity tiers on the serving
+/// path): `y = Σ_l alpha_l · Sign(bits_l) @ x` over `levels` stacked
+/// `(packed bits, scale)` pairs sharing one logical shape `[n, m]`.
+///
+/// The win over calling [`try_binary_gemv`] per level is that the two
+/// O(m) per-call preambles — the `Σx` total behind the
+/// `2·Σ_set − total` identity and the 16-entry nibble partial-sum
+/// tables — are built **once** and shared by every level, so level `l ≥
+/// 2` costs only its packed-byte stream. Per row,
+///
+/// ```text
+/// y[r] = 2·Σ_l alpha_l·S_l(r) − (Σ_l alpha_l)·Σ_j x_j
+/// ```
+///
+/// with `S_l(r)` the set-bit partial sum of level `l`'s row `r`.
+///
+/// A level with `alpha == 0` contributes exactly `0.0` to both sums, so
+/// the engine's **zero-scale padding convention** (padding a tenant to
+/// the batch-max level count with zero-scale no-op levels) leaves the
+/// output bit-identical to serving the tenant at its own level count.
+pub fn try_binary_gemv_multi(levels: &[(&[u8], f32)], n: usize, m: usize,
+                             x: &[f32], y: &mut [f32])
+                             -> Result<(), KernelShapeError> {
+    if levels.is_empty() {
+        return Err(err("multi-level gemv needs >= 1 level".into()));
+    }
+    let mut mb = 0usize;
+    for (bits, _) in levels {
+        mb = validate(bits, n, m, x, y)?;
+    }
+
+    // shared preamble: zero-padded x, nibble tables, Σx (built once,
+    // reused by every level — the point of the fusion)
+    let padded;
+    let xp: &[f32] = if m == mb * 8 {
+        x
+    } else {
+        let mut v = x.to_vec();
+        v.resize(mb * 8, 0.0);
+        padded = v;
+        &padded
+    };
+    let groups = mb * 2;
+    let mut lut = vec![0f32; groups * 16];
+    for g in 0..groups {
+        let xs = &xp[g * 4..g * 4 + 4];
+        let t = &mut lut[g * 16..g * 16 + 16];
+        for v in 1usize..16 {
+            t[v] = t[v & (v - 1)] + xs[v.trailing_zeros() as usize];
+        }
+    }
+    let total: f32 = x.iter().sum();
+    let alpha_total: f32 = levels.iter().map(|(_, a)| a).sum::<f32>()
+        * total;
+
+    for r in 0..n {
+        let mut acc = 0f32;
+        for (bits, alpha) in levels {
+            let brow = &bits[r * mb..(r + 1) * mb];
+            let (mut a0, mut a1) = (0f32, 0f32);
+            for (k, &byte) in brow.iter().enumerate() {
+                let lo = (byte & 0xF) as usize;
+                let hi = (byte >> 4) as usize;
+                a0 += lut[(2 * k) * 16 + lo];
+                a1 += lut[(2 * k + 1) * 16 + hi];
+            }
+            acc += alpha * (a0 + a1);
+        }
+        y[r] = 2.0 * acc - alpha_total;
+    }
+    Ok(())
+}
+
+/// Panicking wrapper over [`try_binary_gemv_multi`].
+pub fn binary_gemv_multi(levels: &[(&[u8], f32)], n: usize, m: usize,
+                         x: &[f32], y: &mut [f32]) {
+    if let Err(e) = try_binary_gemv_multi(levels, n, m, x, y) {
+        panic!("{e}");
+    }
+}
+
 /// The pre-optimization bit-extract kernel, kept for the §Perf ablation
 /// and as an independent correctness witness. Checked variant.
 pub fn try_binary_gemv_bitextract(bits: &[u8], n: usize, m: usize,
@@ -342,6 +423,72 @@ mod tests {
         for v in y {
             assert!((v + total).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn multi_level_matches_per_level_loop() {
+        // fused kernel == k independent single-level calls summed
+        for (n, m) in [(9usize, 48usize), (6, 13), (4, 32)] {
+            let k = 3;
+            let d = Tensor::randn(vec![k, n, m], 90 + m as u64);
+            let alphas = [0.31f32, 0.11, 0.04];
+            let packed: Vec<Vec<u8>> = (0..k).map(|l| {
+                pack_signs(&d.data()[l * n * m..(l + 1) * n * m], m)
+            }).collect();
+            let levels: Vec<(&[u8], f32)> = packed.iter()
+                .map(|b| b.as_slice()).zip(alphas).collect();
+            let x = Tensor::randn(vec![m], 91 + m as u64);
+            let mut fused = vec![0f32; n];
+            binary_gemv_multi(&levels, n, m, x.data(), &mut fused);
+
+            let mut want = vec![0f32; n];
+            let mut tmp = vec![0f32; n];
+            for (bits, alpha) in &levels {
+                binary_gemv(bits, n, m, x.data(), *alpha, &mut tmp);
+                for (w, t) in want.iter_mut().zip(&tmp) {
+                    *w += t;
+                }
+            }
+            for (a, b) in fused.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "[{n}x{m}] {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_scale_padding_levels_are_bit_identical_noops() {
+        // The engine pads a tenant to the batch-max level count with
+        // zero-scale levels; the padded output must be *bit-identical*
+        // to the tenant served alone at its own level count — the
+        // mixed-fidelity batching guarantee.
+        let (n, m) = (7, 29);
+        let d = Tensor::randn(vec![2, n, m], 77);
+        let b0 = pack_signs(&d.data()[..n * m], m);
+        let b1 = pack_signs(&d.data()[n * m..], m);
+        let pad = vec![0u8; n * packed_row_bytes(m)];
+        let x = Tensor::randn(vec![m], 78);
+
+        let own: Vec<(&[u8], f32)> = vec![(&b0, 0.2), (&b1, 0.05)];
+        let padded: Vec<(&[u8], f32)> =
+            vec![(&b0, 0.2), (&b1, 0.05), (&pad, 0.0), (&pad, 0.0)];
+        let mut y_own = vec![0f32; n];
+        let mut y_pad = vec![0f32; n];
+        binary_gemv_multi(&own, n, m, x.data(), &mut y_own);
+        binary_gemv_multi(&padded, n, m, x.data(), &mut y_pad);
+        for (a, b) in y_own.iter().zip(&y_pad) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn multi_level_rejects_empty_and_malformed() {
+        let x = [0.0f32; 8];
+        let mut y = [0f32; 2];
+        assert!(try_binary_gemv_multi(&[], 2, 8, &x, &mut y).is_err());
+        let good = vec![0u8; 2];
+        let bad = vec![0u8; 3];
+        let levels: Vec<(&[u8], f32)> = vec![(&good, 1.0), (&bad, 1.0)];
+        assert!(try_binary_gemv_multi(&levels, 2, 8, &x, &mut y).is_err());
     }
 
     #[test]

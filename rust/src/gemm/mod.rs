@@ -22,7 +22,8 @@ pub mod binary;
 pub mod dense;
 pub mod lora;
 
-pub use binary::{batched_binary_gemv, binary_gemv, try_batched_binary_gemv,
-                 try_binary_gemv, KernelShapeError};
+pub use binary::{batched_binary_gemv, binary_gemv, binary_gemv_multi,
+                 try_batched_binary_gemv, try_binary_gemv,
+                 try_binary_gemv_multi, KernelShapeError};
 pub use dense::{batched_dense_gemv, dense_gemv};
 pub use lora::{batched_lora_gemv, lora_gemv};

@@ -37,14 +37,19 @@ USAGE: repro [--artifacts DIR] <command> [flags]
 
 COMMANDS:
   compress     --base F --fine F --out F [--model sim-s] [--levels K]
+               (K >= 1 successive 1-bit masks; K > 1 = Fig. 3 tiers)
   inspect      --delta F [--model sim-s]
   serve        [--codec bitdelta|lora|svd|dense] [--batch N]
                [--requests N] [--model sim-s]
                [--tenant-codecs t1=lora,t2=bitdelta]  (mixed batches)
+               [--tenant-levels t1=2,t2=4]  (per-tenant fidelity tiers:
+               serve the first K mask levels of a multi-level delta;
+               tiers mix freely in one batch via zero-scale padding)
   serve-cluster multi-worker serving with tenant placement
                [--workers N] [--policy affinity|least-loaded|delta-aware]
                [--codec C] [--batch N] [--requests N] [--budget-mb MB]
-               [--model sim-s]
+               [--model sim-s] [--tenant-levels t1=2,...]
+               (tiered tenants pay level-scaled delta bytes in placement)
   codecs       list the registered delta codecs
   table1       BitDelta vs SVD quality (paper Table 1)
   table2       all tenants x sizes (paper Tables 2/3/10)
@@ -52,14 +57,16 @@ COMMANDS:
   table6       quantized bases (paper Tables 6/8)
   table7       LoRA fine-tune (paper Table 7)
   fig2         delta CEV series, CSV (paper Figure 2)
-  fig3         fidelity-of-delta ablation (paper Figure 3 / Table 9)
+  fig3         fidelity-of-delta ablation: eval quality + reconstruction
+               error vs k (paper Figure 3 / Table 9; alias: table-fig3)
   fig5         memory vs batch, CSV (paper Figure 5)
   case-study   initial vs distilled generation (paper Table 4)
   metrics-demo engine metrics after a burst
   loadtest     Poisson/Zipf trace through the engine or a cluster
                [--requests N] [--rate R] [--zipf S] [--batch N]
                [--workers N] [--policy P] [--clients N] [--tenants N]
-               [--budget-mb MB]       (workers > 1 runs the cluster)
+               [--budget-mb MB] [--tenant-levels t1=2,...]
+               (workers > 1 runs the cluster)
   extras-quant INT8-compress a delta's embeddings/head (paper's
                future-work extension) [--tenant sim-s-chat]
 ";
@@ -84,6 +91,10 @@ fn main() -> Result<()> {
                 args.get("fine").context("--fine required")?, &cfg)?;
             let out = args.get("out").context("--out required")?;
             let levels = args.get_usize("levels", 1)?;
+            if levels == 0 {
+                bail!("usage: --levels must be >= 1 (a delta needs at \
+least one 1-bit mask; --levels K > 1 stacks K successive masks)");
+            }
             let delta = if levels == 1 {
                 let c = compress(&cfg, &base, &fine)?;
                 println!("compression factor: {:.2}x",
@@ -120,6 +131,7 @@ fn main() -> Result<()> {
             args.get("codec")
                 .unwrap_or_else(|| args.get_or("mode", "bitdelta")),
             args.get("tenant-codecs"),
+            parse_tenant_levels(args.get("tenant-levels"))?,
             args.get_usize("batch", 4)?,
             args.get_usize("requests", 12)?,
             args.get_or("model", "sim-s"))?,
@@ -129,6 +141,7 @@ fn main() -> Result<()> {
             args.get_or("policy", "delta-aware"),
             args.get("codec")
                 .unwrap_or_else(|| args.get_or("mode", "bitdelta")),
+            parse_tenant_levels(args.get("tenant-levels"))?,
             args.get_usize("batch", 4)?,
             args.get_usize("requests", 16)?,
             args.get_usize("budget-mb", 256)?,
@@ -162,7 +175,9 @@ fn main() -> Result<()> {
             let mut ctx = TableCtx::load(&artifacts)?;
             println!("{}", tables::fig2(&mut ctx, "sim-s")?);
         }
-        "fig3" => {
+        // table-fig3 = alias: the Fig. 3 reproduction table (quality +
+        // reconstruction error vs served level count)
+        "fig3" | "table-fig3" => {
             let mut ctx = TableCtx::load(&artifacts)?;
             println!("{}", tables::fig3(&mut ctx, "sim-s")?);
         }
@@ -175,15 +190,19 @@ fn main() -> Result<()> {
                 .unwrap_or(0.9);
             let batch = args.get_usize("batch", 4)?;
             let workers = args.get_usize("workers", 1)?;
+            let tenant_levels =
+                parse_tenant_levels(args.get("tenant-levels"))?;
             if workers <= 1 {
-                loadtest(&artifacts, requests, rate, zipf_s, batch)?
+                loadtest(&artifacts, requests, rate, zipf_s, batch,
+                         tenant_levels)?
             } else {
                 loadtest_cluster(
                     &artifacts, requests, rate, zipf_s, batch, workers,
                     args.get_or("policy", "delta-aware"),
                     args.get_usize("clients", 0)?,
                     args.get_usize("tenants", 0)?,
-                    args.get_usize("budget-mb", 256)?)?
+                    args.get_usize("budget-mb", 256)?,
+                    tenant_levels)?
             }
         }
         "extras-quant" => extras_quant(
@@ -203,6 +222,27 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Parse `--tenant-levels t1=2,t2=4` into tenant → fidelity tier.
+fn parse_tenant_levels(spec: Option<&str>)
+                       -> Result<std::collections::HashMap<String, usize>> {
+    let mut out = std::collections::HashMap::new();
+    let Some(spec) = spec else { return Ok(out) };
+    for pair in spec.split(',').filter(|s| !s.is_empty()) {
+        let (tenant, k) = pair.split_once('=').with_context(
+            || format!("--tenant-levels entry {pair:?}: want \
+tenant=levels"))?;
+        let k: usize = k.parse().with_context(
+            || format!("--tenant-levels entry {pair:?}: levels must be \
+a positive integer"))?;
+        if k == 0 {
+            bail!("--tenant-levels entry {pair:?}: a fidelity tier \
+needs >= 1 mask level");
+        }
+        out.insert(tenant.to_string(), k);
+    }
+    Ok(out)
 }
 
 fn config_by_name(name: &str) -> Result<ModelConfig> {
@@ -241,8 +281,9 @@ fn fire_requests(engine: &mut Engine, n: usize)
 }
 
 fn serve_demo(artifacts: &Path, codec: &str,
-              tenant_codecs: Option<&str>, batch: usize,
-              requests: usize, model: &str) -> Result<()> {
+              tenant_codecs: Option<&str>,
+              tenant_levels: std::collections::HashMap<String, usize>,
+              batch: usize, requests: usize, model: &str) -> Result<()> {
     let registry = CodecRegistry::builtin();
     let codec = registry.get(codec)?.name();   // validate + canonicalize
     let mut ec = EngineConfig::new(artifacts);
@@ -259,11 +300,18 @@ tenant=codec"))?;
                                       c.name().to_string());
         }
     }
+    // --tenant-levels t1=2,t2=4 serves individual tenants at higher
+    // Fig. 3 fidelity tiers; mixed tiers batch via zero-scale padding
+    ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     ec.model = model.to_string();
     let mut engine = Engine::from_artifacts(ec)?;
     let assignments: Vec<String> = engine.tenants().iter()
-        .map(|t| format!("{t}={}", engine.tenant_codec(t).unwrap_or("?")))
+        .map(|t| {
+            let lv = engine.tenant_fidelity(t);
+            let lv = if lv > 1 { format!("@l{lv}") } else { String::new() };
+            format!("{t}={}{lv}", engine.tenant_codec(t).unwrap_or("?"))
+        })
         .collect();
     println!("engine up: codec={codec} batch={batch} \
 tenants={assignments:?}");
@@ -295,7 +343,9 @@ tenants={assignments:?}");
 /// placement's memory story at the paper's 7B scale.
 #[allow(clippy::too_many_arguments)]
 fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
-                 codec: &str, batch: usize, requests: usize,
+                 codec: &str,
+                 tenant_levels: std::collections::HashMap<String, usize>,
+                 batch: usize, requests: usize,
                  budget_mb: usize, model: &str) -> Result<()> {
     use bitdelta::cluster::{policy_by_name, tenant_profiles, Cluster,
                             ClusterConfig};
@@ -304,9 +354,12 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
     let codec = registry.get(codec)?.name();   // validate + canonicalize
     let mut ec = EngineConfig::new(artifacts);
     ec.codec = Some(codec.to_string());
+    ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     ec.model = model.to_string();
     let profiles = tenant_profiles(&ec)?;
+    let level_of: std::collections::HashMap<String, usize> = profiles
+        .iter().map(|p| (p.name.clone(), p.levels)).collect();
     let ccfg = ClusterConfig {
         policy: policy_by_name(policy_name)?,
         delta_budget_bytes: budget_mb << 20,
@@ -318,7 +371,11 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
     println!("cluster up: {workers} workers, policy {policy_name}, \
 codec {codec}");
     for t in &tenants {
-        println!("  {t:<16} -> workers {:?}", placed.workers_of(t));
+        let lv = level_of.get(t).copied().unwrap_or(1);
+        let tier = if lv > 1 { format!(" (tier l{lv})") }
+                   else { String::new() };
+        println!("  {t:<16} -> workers {:?}{tier}",
+                 placed.workers_of(t));
     }
 
     let t0 = std::time::Instant::now();
@@ -362,13 +419,23 @@ codec {codec}");
              total_tokens as f64 / wall);
     println!("\n{}", handle.metrics());
 
-    // this placement (replicas included), projected onto the paper's
-    // 7B shapes: N base copies + placed 1-bit deltas vs one dense model
-    // per placed tenant
+    // this placement (replicas included, each at its fidelity tier),
+    // projected onto the paper's 7B shapes: N base copies + placed
+    // k-level deltas vs one dense model per placed tenant
     let reps = placed.replicas_per_worker(workers);
+    let mut levels_per_worker: Vec<Vec<usize>> = vec![vec![]; workers];
+    for t in placed.tenants() {
+        for &w in placed.workers_of(t) {
+            if w < workers {
+                levels_per_worker[w]
+                    .push(level_of.get(t).copied().unwrap_or(1));
+            }
+        }
+    }
     let spec = ModelSpec::llama2_7b();
-    let bd = memory::cluster_account(&spec, ServingMode::BitDelta, &reps,
-                                     batch, 128, memory::A100_80GB);
+    let bd = memory::cluster_account_levels(&spec, &levels_per_worker,
+                                            batch, 128,
+                                            memory::A100_80GB);
     let nv = memory::cluster_account(&spec, ServingMode::Naive, &reps,
                                      batch, 128, memory::A100_80GB);
     let gb = |b: usize| b as f64 / (1024.0 * 1024.0 * 1024.0);
@@ -390,13 +457,17 @@ A100-80GB: {}", gb(nv.total_bytes), nv.fits_all);
 fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
                     zipf_s: f64, batch: usize, workers: usize,
                     policy: &str, clients: usize, trace_tenants: usize,
-                    budget_mb: usize) -> Result<()> {
+                    budget_mb: usize,
+                    tenant_levels: std::collections::HashMap<String,
+                                                             usize>)
+                    -> Result<()> {
     use bitdelta::cluster::{apply_trace_weights, policy_by_name,
                             replay_trace, tenant_profiles, Cluster,
                             ClusterConfig};
     use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
 
     let mut ec = EngineConfig::new(artifacts);
+    ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     let mut profiles = tenant_profiles(&ec)?;
     // trace ranks map onto engine tenants by rank % n — more ranks than
@@ -513,10 +584,13 @@ bitdelta fits all tested batches\n"));
 }
 
 fn loadtest(artifacts: &Path, requests: usize, rate: f64,
-            zipf_s: f64, batch: usize) -> Result<()> {
+            zipf_s: f64, batch: usize,
+            tenant_levels: std::collections::HashMap<String, usize>)
+            -> Result<()> {
     use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
 
     let mut ec = EngineConfig::new(artifacts);
+    ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     let mut engine = Engine::from_artifacts(ec)?;
     let tenants = engine.tenants();

@@ -9,6 +9,11 @@
 //! * `decode_naive`    : `[stacked params…, k, v, pos, token, rope_scale]`
 //! * `decode_bitdelta` : `[base linears…(28), bits…(28), scales,
 //!                        extras…(11), k, v, pos, token, rope_scale]`
+//! * `decode_bitdelta_l{L}` : same order, but each `bits` buffer is
+//!                        `[B, L, N, ⌈M/8⌉]` and `scales` is
+//!                        `[B, L, n_linears]` — `L` stacked mask levels
+//!                        summed inside the executable (Fig. 3 fidelity
+//!                        tiers; zero-scale levels are no-ops)
 //! * `decode_lora`     : `[base linears…(28), a…(28), b…(28),
 //!                        extras…(11), k, v, pos, token, rope_scale]`
 //!
@@ -81,6 +86,13 @@ pub struct StackedArgs {
     pub batch: usize,
     /// Host bytes staged (== per-step upload saved by residency).
     pub staged_bytes: usize,
+    /// Executable kind this stacking targets when it differs from the
+    /// codec's default (`None` = use [`DeltaCodec::exec_kind`]). The
+    /// bitdelta codec sets it for multi-level batches, whose level-axis
+    /// ABI needs the matching `decode_bitdelta_l{L}` export.
+    ///
+    /// [`DeltaCodec::exec_kind`]: crate::delta::codec::DeltaCodec::exec_kind
+    pub exec_kind: Option<&'static str>,
 }
 
 impl StackedArgs {

@@ -20,6 +20,13 @@
 //!   codec combination at the naive path's memory cost — the price of
 //!   format freedom, paid only by mixed compositions.
 //!
+//! Within the `bitdelta` codec, tenants may additionally sit at
+//! different **fidelity tiers** ([`EngineConfig::tenant_levels`],
+//! Fig. 3): a tier-k tenant's payload carries k mask levels, and the
+//! codec's `assemble` keeps a mixed-tier batch homogeneous by padding
+//! to the batch-max tier with zero-scale no-op levels (the executable
+//! kind is then `decode_bitdelta_l{L}`).
+//!
 //! Prefill is piggybacked on the batched decode step (Orca-style
 //! continuous batching): a freshly admitted sequence consumes one prompt
 //! token per step through the same executable, so prefill and decode
@@ -85,6 +92,13 @@ pub struct EngineConfig {
     /// Per-tenant codec overrides (`tenant -> codec name`): tenants on
     /// different codecs may share a decode batch (mixed-format batch).
     pub codec_overrides: HashMap<String, String>,
+    /// Per-tenant fidelity tiers (`tenant -> mask level count`, Fig. 3):
+    /// a tenant at tier `k` serves the first `k` levels of its
+    /// multi-level delta, paying `k` mask planes of residency for a
+    /// fidelity step up. Tenants at different tiers share decode
+    /// batches (padded with zero-scale no-op levels). Absent tenants
+    /// serve tier 1 (the standard single-mask delta).
+    pub tenant_levels: HashMap<String, usize>,
     /// Decode batch width; must match an exported executable.
     pub batch: usize,
     /// Delta residency budget (bytes) for the hot-swap store.
@@ -104,6 +118,7 @@ impl EngineConfig {
             mode: ExecMode::BitDelta,
             codec: None,
             codec_overrides: HashMap::new(),
+            tenant_levels: HashMap::new(),
             batch: 4,
             delta_budget_bytes: 256 << 20,
             stop_token: Some(10),
@@ -220,14 +235,55 @@ impl Engine {
                 Some(name) => registry.get(name)?,
                 None => default_codec.clone(),
             };
+            let levels = econfig.tenant_levels.get(tname).copied()
+                .unwrap_or(1);
+            if levels == 0 {
+                bail!("tenant {tname}: fidelity tier must be >= 1 \
+mask level (0 given)");
+            }
             router.register_tenant(
                 TenantInfo::new(tname.clone(), t.rope_scale)
-                    .with_codec(codec.name()));
-            if let Some(path) =
-                codec.artifact_path(&manifest, t, econfig.distilled) {
-                deltas.register(tname.clone(), codec.clone(), path);
+                    .with_codec(codec.name())
+                    .with_levels(levels));
+            match codec.artifact_path(&manifest, t, econfig.distilled,
+                                      levels) {
+                Some(path) => deltas.register(tname.clone(),
+                                              codec.clone(), path,
+                                              levels),
+                None if levels > 1 => bail!(
+                    "tenant {tname}: no {levels}-level artifact under \
+codec {:?} — fidelity tiers need a bitdelta tenant with a Fig. 3 \
+fidelity file of >= {levels} levels", codec.name()),
+                None => {}
             }
             codec_of.insert(tname.clone(), codec);
+        }
+        // a --tenant-levels key naming no served tenant would otherwise
+        // be silently ignored — the operator believes a fidelity tier
+        // is live that never is; same for a tier whose decode
+        // executable was not exported at this batch width, which would
+        // only surface mid-serving on the first batch containing the
+        // tenant
+        for (tname, &lv) in &econfig.tenant_levels {
+            let Some(codec) = codec_of.get(tname) else {
+                bail!("--tenant-levels names unknown tenant {tname:?} \
+— tenants of model {}: {:?}", econfig.model,
+                      router.tenant_names());
+            };
+            if lv <= 1 {
+                continue;
+            }
+            let Some(kind) = codec.exec_kind_for_levels(lv) else {
+                bail!("tenant {tname}: codec {:?} has no decode export \
+covering fidelity tier {lv}", codec.name());
+            };
+            if manifest.find_exec(&econfig.model, kind,
+                                  econfig.batch).is_none() {
+                bail!("tenant {tname} at fidelity tier {lv} needs a \
+{kind} executable at batch {} — available batches: {:?}",
+                      econfig.batch,
+                      manifest.exec_batches(&econfig.model, kind));
+            }
         }
 
         let kv_len = cfg.n_layers * econfig.batch * cfg.n_heads
@@ -261,6 +317,11 @@ impl Engine {
     /// The codec name a tenant is served under.
     pub fn tenant_codec(&self, tenant: &str) -> Option<&'static str> {
         self.codec_of.get(tenant).map(|c| c.name())
+    }
+
+    /// The fidelity tier (mask level count) a tenant is served at.
+    pub fn tenant_fidelity(&self, tenant: &str) -> usize {
+        self.router.tenant(tenant).map(|t| t.levels).unwrap_or(1)
     }
 
     pub fn tenants(&self) -> Vec<String> {
@@ -504,7 +565,10 @@ impl Engine {
             // homogeneous compositions need no dense fallbacks at all —
             // release any weights a previous mixed batch materialized
             self.materialized.clear();
-            (codec.exec_kind(), codec.needs_base(), args)
+            // a codec may retarget the batch (e.g. bitdelta raising a
+            // mixed-fidelity batch to the decode_bitdelta_l{L} tier)
+            let kind = args.exec_kind.unwrap_or_else(|| codec.exec_kind());
+            (kind, codec.needs_base(), args)
         } else {
             // mixed-format batch: materialize every slot into dense
             // weights and run the stacked-dense executable

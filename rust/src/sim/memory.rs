@@ -91,9 +91,16 @@ impl ModelSpec {
     /// BitDelta delta bytes: 1 bit per linear weight + 1 fp scale per
     /// matrix + full-precision extras (Table 5 "Δ Size").
     pub fn delta_bytes(&self) -> usize {
+        self.delta_bytes_levels(1)
+    }
+
+    /// Delta bytes at fidelity tier `k` (Fig. 3): `k` stacked 1-bit
+    /// masks + `k` scale sets over the linears, one shared set of
+    /// full-precision extras. Tier 1 is [`Self::delta_bytes`].
+    pub fn delta_bytes_levels(&self, k: usize) -> usize {
         let mats_per_layer = if self.gated_mlp { 7 } else { 6 };
-        self.linear_params() / 8
-            + self.n_layers * mats_per_layer * self.w_bytes
+        k * (self.linear_params() / 8
+             + self.n_layers * mats_per_layer * self.w_bytes)
             + self.extra_params() * self.w_bytes
     }
 
@@ -233,26 +240,61 @@ pub fn cluster_account(spec: &ModelSpec, mode: ServingMode,
                        replicas_per_worker: &[usize],
                        seqs_per_worker: usize, seq: usize,
                        per_worker_capacity: usize) -> ClusterMemoryPoint {
-    let mut point = ClusterMemoryPoint {
-        n_workers: replicas_per_worker.len(),
-        replicas: replicas_per_worker.iter().sum(),
-        weight_bytes: 0,
-        delta_bytes: 0,
-        kv_bytes: 0,
-        act_bytes: 0,
-        total_bytes: 0,
-        per_worker_bytes: Vec::with_capacity(replicas_per_worker.len()),
-        fits_all: true,
-    };
-    for &k in replicas_per_worker {
-        let (weight, delta) = match mode {
+    let replicas = replicas_per_worker.iter().sum();
+    let per_worker: Vec<(usize, usize)> = replicas_per_worker.iter()
+        .map(|&k| match mode {
             // naive: every placed tenant is a full dense model
             ServingMode::Naive => (spec.dense_bytes() * k, 0),
             ServingMode::BitDelta => (spec.dense_bytes(),
                                       spec.delta_bytes() * k),
             ServingMode::Lora(r) => (spec.dense_bytes(),
                                      spec.lora_bytes(r) * k),
-        };
+        }).collect();
+    accumulate_cluster(spec, &per_worker, replicas, seqs_per_worker,
+                       seq, per_worker_capacity)
+}
+
+/// Account a BitDelta cluster whose replicas sit at per-tenant
+/// **fidelity tiers**: `levels_per_worker[w]` lists the mask level
+/// count of every replica placed on worker `w` (one entry per replica).
+/// Each extra level costs one more packed mask plane + scale set, so a
+/// worker trading fidelity for packing shows up directly in its delta
+/// bytes — the cluster-level face of the Fig. 3 tradeoff.
+pub fn cluster_account_levels(spec: &ModelSpec,
+                              levels_per_worker: &[Vec<usize>],
+                              seqs_per_worker: usize, seq: usize,
+                              per_worker_capacity: usize)
+                              -> ClusterMemoryPoint {
+    let replicas = levels_per_worker.iter().map(|l| l.len()).sum();
+    let per_worker: Vec<(usize, usize)> = levels_per_worker.iter()
+        .map(|levels| {
+            let delta = levels.iter()
+                .map(|&k| spec.delta_bytes_levels(k.max(1))).sum();
+            (spec.dense_bytes(), delta)
+        }).collect();
+    accumulate_cluster(spec, &per_worker, replicas, seqs_per_worker,
+                       seq, per_worker_capacity)
+}
+
+/// Shared accounting core: fold per-worker `(weight, delta)` byte pairs
+/// plus the batch-driven KV/activation terms into a
+/// [`ClusterMemoryPoint`].
+fn accumulate_cluster(spec: &ModelSpec, per_worker: &[(usize, usize)],
+                      replicas: usize, seqs_per_worker: usize,
+                      seq: usize, per_worker_capacity: usize)
+                      -> ClusterMemoryPoint {
+    let mut point = ClusterMemoryPoint {
+        n_workers: per_worker.len(),
+        replicas,
+        weight_bytes: 0,
+        delta_bytes: 0,
+        kv_bytes: 0,
+        act_bytes: 0,
+        total_bytes: 0,
+        per_worker_bytes: Vec::with_capacity(per_worker.len()),
+        fits_all: true,
+    };
+    for &(weight, delta) in per_worker {
         let kv = spec.kv_bytes(seq) * seqs_per_worker;
         let act = spec.act_bytes() * seqs_per_worker;
         let total = weight + delta + kv + act;
@@ -402,6 +444,47 @@ mod tests {
         assert_eq!(p.n_workers, 1);
         assert_eq!(p.per_worker_bytes.len(), 1);
         assert_eq!(p.per_worker_bytes[0], p.total_bytes);
+    }
+
+    #[test]
+    fn delta_bytes_levels_tier1_is_the_table5_size() {
+        let spec = ModelSpec::llama2_7b();
+        assert_eq!(spec.delta_bytes_levels(1), spec.delta_bytes());
+        // masks/scales scale with k, the shared extras do not
+        let per_level = spec.delta_bytes_levels(2)
+            - spec.delta_bytes_levels(1);
+        assert_eq!(spec.delta_bytes_levels(4),
+                   spec.delta_bytes() + 3 * per_level);
+        // even 4 mask planes stay far below one dense replica
+        assert!(spec.delta_bytes_levels(4) * 3 < spec.dense_bytes());
+    }
+
+    #[test]
+    fn cluster_levels_account_matches_uniform_tier1() {
+        let spec = ModelSpec::llama2_7b();
+        let uniform = cluster_account(&spec, ServingMode::BitDelta,
+                                      &[3, 2], 4, 128, A100_80GB);
+        let tiered = cluster_account_levels(
+            &spec, &[vec![1, 1, 1], vec![1, 1]], 4, 128, A100_80GB);
+        assert_eq!(tiered.total_bytes, uniform.total_bytes);
+        assert_eq!(tiered.replicas, uniform.replicas);
+        assert_eq!(tiered.per_worker_bytes, uniform.per_worker_bytes);
+    }
+
+    #[test]
+    fn cluster_levels_price_fidelity_per_replica() {
+        // raising one replica from tier 1 to tier 4 adds exactly three
+        // mask planes of delta bytes on its worker, nothing else
+        let spec = ModelSpec::llama2_7b();
+        let lo = cluster_account_levels(&spec, &[vec![1, 1]], 4, 128,
+                                        A100_80GB);
+        let hi = cluster_account_levels(&spec, &[vec![1, 4]], 4, 128,
+                                        A100_80GB);
+        let per_level = spec.delta_bytes_levels(2)
+            - spec.delta_bytes_levels(1);
+        assert_eq!(hi.total_bytes - lo.total_bytes, 3 * per_level);
+        assert_eq!(hi.weight_bytes, lo.weight_bytes);
+        assert_eq!(hi.kv_bytes, lo.kv_bytes);
     }
 
     #[test]

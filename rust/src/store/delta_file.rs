@@ -158,6 +158,22 @@ file");
             self.extras.values().map(|t| t.bytes.len()).sum();
         mask_bytes + extra_bytes
     }
+
+    /// What [`Self::delta_bytes`] returns for a `levels`-level delta
+    /// over `cfg`'s shapes with f32 extras — computable without
+    /// touching the artifact, so placement can size a fidelity tier
+    /// with zero startup I/O.
+    pub fn delta_bytes_for(cfg: &ModelConfig, levels: usize) -> usize {
+        let mask: usize = cfg.linear_names().iter().map(|n| {
+            let (rows, mp) = cfg.packed_shape(n);
+            rows * mp
+        }).sum();
+        let scales = cfg.linear_names().len() * 4;
+        let extras: usize = cfg.nonlinear_names().iter()
+            .map(|n| cfg.param_shape(n).iter().product::<usize>() * 4)
+            .sum();
+        levels.max(1) * (mask + scales) + extras
+    }
 }
 
 /// A parsed LoRA / SVD-factor file (kernel ABI: delta = b_up @ a_down).
@@ -278,6 +294,18 @@ mod tests {
         }
         assert_eq!(d.levels[0].scales, d2.levels[0].scales);
         assert_eq!(d.delta_bytes(), d2.delta_bytes());
+    }
+
+    #[test]
+    fn delta_bytes_for_matches_loaded_accounting() {
+        let cfg = tiny_cfg();
+        let d = tiny_delta(&cfg);
+        assert_eq!(DeltaFile::delta_bytes_for(&cfg, 1), d.delta_bytes());
+        // each extra level adds exactly one mask plane + scale set
+        let per_level = DeltaFile::delta_bytes_for(&cfg, 2)
+            - DeltaFile::delta_bytes_for(&cfg, 1);
+        assert_eq!(DeltaFile::delta_bytes_for(&cfg, 4),
+                   d.delta_bytes() + 3 * per_level);
     }
 
     #[test]

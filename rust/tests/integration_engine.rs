@@ -71,6 +71,84 @@ fn greedy_generation_is_deterministic_across_batches() {
 }
 
 #[test]
+fn mixed_fidelity_batch_matches_each_tenant_served_alone() {
+    // The fidelity-tier batching guarantee: tenants at levels {1, 2, 4}
+    // sharing one decode batch (zero-scale padding to the batch-max
+    // tier) produce per-tenant outputs identical to each tenant served
+    // alone at its own tier.
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    if m.find_exec("sim-s", "decode_bitdelta_l2", 4).is_none()
+        || m.find_exec("sim-s", "decode_bitdelta_l4", 4).is_none() {
+        eprintln!("skipping: no decode_bitdelta_l{{2,4}}_b4 executables \
+(rebuild artifacts)");
+        return;
+    }
+    let has_fid = |t: &str, k: usize| m.tenants.get(t)
+        .map_or(false, |e| e.fidelity.contains_key(&k.to_string()));
+    if !has_fid("sim-s-chat", 4) || !has_fid("sim-s-math", 2) {
+        eprintln!("skipping: fidelity artifacts missing \
+(rebuild artifacts)");
+        return;
+    }
+
+    // a typo'd tenant in --tenant-levels is a construction error, not
+    // a silently-ignored fidelity upgrade
+    let mut bad = EngineConfig::new("artifacts");
+    bad.tenant_levels.insert("sim-s-chta".into(), 4);
+    let e = Engine::from_artifacts(bad).unwrap_err().to_string();
+    assert!(e.contains("unknown tenant"), "{e}");
+
+    let tiers = [("sim-s-chat", 4usize), ("sim-s-math", 2),
+                 ("sim-s-rlhf", 1)];
+    let prompt = "Q: what color is the sky ?\nA:";
+    let config = || {
+        let mut ec = EngineConfig::new("artifacts");
+        ec.batch = 4;
+        for (t, k) in tiers {
+            ec.tenant_levels.insert(t.to_string(), k);
+        }
+        ec
+    };
+
+    // each tenant alone at its own tier
+    let mut alone = Vec::new();
+    for (t, k) in tiers {
+        let mut engine = Engine::from_artifacts(config()).unwrap();
+        assert_eq!(engine.tenant_fidelity(t), k);
+        let c = engine.submit(req(t, prompt, 12)).unwrap();
+        engine.run_until_idle(100_000).unwrap();
+        alone.push(c.recv().unwrap().tokens);
+    }
+
+    // all three tiers in ONE batch
+    let mut engine = Engine::from_artifacts(config()).unwrap();
+    let chans: Vec<_> = tiers.iter()
+        .map(|(t, _)| engine.submit(req(t, prompt, 12)).unwrap())
+        .collect();
+    engine.run_until_idle(100_000).unwrap();
+    for ((c, (t, k)), want) in chans.into_iter().zip(tiers).zip(&alone) {
+        let got = c.recv().unwrap().tokens;
+        assert_eq!(&got, want,
+                   "{t} at tier {k}: mixed-batch output diverged");
+    }
+
+    // higher tiers actually change the served model: chat at tier 4
+    // vs tier 1 must decode differently on at least one prompt
+    let mut ec1 = EngineConfig::new("artifacts");
+    ec1.batch = 4;
+    let mut engine = Engine::from_artifacts(ec1).unwrap();
+    let c = engine.submit(req("sim-s-chat", prompt, 12)).unwrap();
+    engine.run_until_idle(100_000).unwrap();
+    let tier1 = c.recv().unwrap().tokens;
+    // (not asserted unequal — a saturated tier can legitimately agree —
+    // but both paths must serve successfully)
+    assert!(!tier1.is_empty() && !alone[0].is_empty());
+}
+
+#[test]
 fn rust_compressor_matches_python_artifact() {
     if !have_artifacts() {
         return;
