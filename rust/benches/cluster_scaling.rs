@@ -20,8 +20,8 @@ use anyhow::Result;
 use bitdelta::cluster::{apply_trace_weights, policy_by_name,
                         replay_trace, tenant_profiles, Cluster,
                         ClusterConfig, ReplayReport};
-use bitdelta::coordinator::workload::{generate, stats, TraceConfig,
-                                      TraceEvent};
+use bitdelta::coordinator::workload::{generate, stats, ArrivalPattern,
+                                      TraceConfig, TraceEvent};
 use bitdelta::serving::engine::EngineConfig;
 use bitdelta::util::json::Json;
 
@@ -45,6 +45,7 @@ fn run_combo(workers: usize, policy: &'static str, trace: &[TraceEvent],
     let ccfg = ClusterConfig {
         policy: policy_by_name(policy)?,
         delta_budget_bytes: 256 << 20,
+        admission: None,
     };
     let cluster =
         match Cluster::spawn_engines(&ccfg, &ec, workers, profiles) {
@@ -98,6 +99,7 @@ fn main() -> Result<()> {
         min_tokens: 8,
         max_tokens: 16,
         seed: 7,
+        pattern: ArrivalPattern::Steady,
     };
     let trace = generate(&tcfg);
     let st = stats(&trace, tcfg.n_tenants);

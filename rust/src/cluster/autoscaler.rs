@@ -1,0 +1,369 @@
+//! Autoscaling: track load with worker count.
+//!
+//! BitDelta makes elasticity unusually cheap — a new worker costs one
+//! base-model copy (identical everywhere, so nothing tenant-specific
+//! moves) plus the ~1/16-cost deltas re-placed onto it
+//! ([`crate::sim::memory::scale_up_cost`] prices this). This module
+//! supplies the control loop that spends that cheapness only when the
+//! load asks for it:
+//!
+//! * [`ScalingModel`] — the pure decision core: watches outstanding
+//!   work per active worker (the same [`WorkerLoad`] score routing
+//!   reads), requires **sustained** pressure before scaling up (a
+//!   `up_ticks`-long streak above the high watermark — transient
+//!   spikes don't spawn engines), sustained idleness before scaling
+//!   down, honors `min..max` bounds, and holds a cooldown after every
+//!   event so the signal can settle. Deterministic and synchronous, so
+//!   every policy decision is unit-testable without threads.
+//! * [`Autoscaler`] — the driver thread: samples a [`ClusterHandle`]
+//!   every `interval`, feeds the model, and acts on its decisions —
+//!   scale-up through [`ClusterHandle::spawn_worker`], scale-down by
+//!   **gracefully draining** the least-loaded worker
+//!   ([`ClusterHandle::retire_worker`]: zero in-flight errors, unlike
+//!   failover).
+//!
+//! [`WorkerLoad`]: crate::cluster::worker::WorkerLoad
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cluster::frontend::ClusterHandle;
+
+/// Autoscaler tuning. `Default` suits the in-repo loadtests: scale up
+/// after ~3 consecutive pressured samples, scale down only after a
+/// clearly longer idle streak (draining an engine is cheap, but
+/// re-spawning one is not).
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Outstanding work per active worker above which a sample counts
+    /// as scale-up pressure.
+    pub high_watermark: f64,
+    /// Outstanding work per active worker below which a sample counts
+    /// as scale-down slack.
+    pub low_watermark: f64,
+    /// Consecutive pressured samples required before scaling up —
+    /// the "sustained, not transient" filter.
+    pub up_ticks: usize,
+    /// Consecutive slack samples required before scaling down.
+    pub down_ticks: usize,
+    /// Samples to ignore after any scale event, letting queues and the
+    /// re-placement settle before the next decision.
+    pub cooldown_ticks: usize,
+    /// Sampling period of the driver thread.
+    pub interval: Duration,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        Self {
+            min_workers: 1,
+            max_workers: 4,
+            high_watermark: 4.0,
+            low_watermark: 0.5,
+            up_ticks: 3,
+            down_ticks: 8,
+            cooldown_ticks: 3,
+            interval: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One autoscaling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Spawn one worker.
+    Up,
+    /// Gracefully drain and retire one worker.
+    Down,
+}
+
+/// The pure hysteresis core: feed it `(active workers, outstanding
+/// work)` samples, get decisions. Owns no threads and reads no clocks —
+/// a tick is whatever cadence the caller samples at.
+#[derive(Debug)]
+pub struct ScalingModel {
+    cfg: AutoscalerConfig,
+    up_streak: usize,
+    down_streak: usize,
+    cooldown: usize,
+}
+
+impl ScalingModel {
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        Self { cfg, up_streak: 0, down_streak: 0, cooldown: 0 }
+    }
+
+    pub fn config(&self) -> &AutoscalerConfig {
+        &self.cfg
+    }
+
+    /// Feed one load sample; returns what the cluster should do now.
+    /// `active` is the routable worker count, `outstanding` the total
+    /// queued + batched + in-flight work across them.
+    pub fn observe(&mut self, active: usize, outstanding: usize)
+                   -> ScaleDecision {
+        if self.cooldown > 0 {
+            // the previous event is still settling: don't let stale
+            // pressure double-fire, and don't accrue streaks either
+            self.cooldown -= 1;
+            self.up_streak = 0;
+            self.down_streak = 0;
+            return ScaleDecision::Hold;
+        }
+        let per_worker = outstanding as f64 / active.max(1) as f64;
+        if per_worker > self.cfg.high_watermark {
+            self.up_streak += 1;
+            self.down_streak = 0;
+        } else if per_worker < self.cfg.low_watermark {
+            self.down_streak += 1;
+            self.up_streak = 0;
+        } else {
+            self.up_streak = 0;
+            self.down_streak = 0;
+        }
+        if self.up_streak >= self.cfg.up_ticks
+            && active < self.cfg.max_workers {
+            self.up_streak = 0;
+            self.cooldown = self.cfg.cooldown_ticks;
+            return ScaleDecision::Up;
+        }
+        if self.down_streak >= self.cfg.down_ticks
+            && active > self.cfg.min_workers {
+            self.down_streak = 0;
+            self.cooldown = self.cfg.cooldown_ticks;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// The background control loop: a [`ScalingModel`] sampling one
+/// [`ClusterHandle`]. Spawn with [`Autoscaler::spawn`], stop with
+/// [`Autoscaler::stop`] (joins the thread; any in-progress drain
+/// completes first).
+pub struct Autoscaler {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Autoscaler {
+    pub fn spawn(handle: ClusterHandle, cfg: AutoscalerConfig) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let interval = cfg.interval;
+        let min_workers = cfg.min_workers;
+        let mut model = ScalingModel::new(cfg);
+        let join = std::thread::Builder::new()
+            .name("bitdelta-autoscaler".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    let active = handle.active_workers();
+                    let outstanding = handle.outstanding();
+                    match model.observe(active, outstanding) {
+                        ScaleDecision::Up => {
+                            // a failed spawn (fixed cluster, engine
+                            // error) must not kill the control loop;
+                            // the next samples will simply retry
+                            let _ = handle.spawn_worker();
+                        }
+                        ScaleDecision::Down => {
+                            if let Some(w) = handle.least_loaded_active()
+                            {
+                                // blocks for the graceful drain; the
+                                // cooldown absorbs the pause. The floor
+                                // is re-checked under the cluster lock:
+                                // a worker death since the sample must
+                                // not let this drain dip below min
+                                let _ = handle.retire_worker_floor(
+                                    w, min_workers);
+                            }
+                        }
+                        ScaleDecision::Hold => {}
+                    }
+                    std::thread::sleep(interval);
+                }
+            })
+            .expect("spawn autoscaler thread");
+        Self { stop, join: Some(join) }
+    }
+
+    /// Stop sampling and join the control thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::cluster::frontend::{
+        Cluster, ClusterConfig, ClusterTicket,
+    };
+    use crate::cluster::placement::policy_by_name;
+    use crate::cluster::testutil::{elastic_mock, profiles, req};
+
+    fn model(min: usize, max: usize, up: usize, down: usize)
+             -> ScalingModel {
+        ScalingModel::new(AutoscalerConfig {
+            min_workers: min,
+            max_workers: max,
+            high_watermark: 4.0,
+            low_watermark: 0.5,
+            up_ticks: up,
+            down_ticks: down,
+            cooldown_ticks: 0,
+            interval: Duration::from_millis(1),
+        })
+    }
+
+    #[test]
+    fn sustained_pressure_scales_up_transient_spike_does_not() {
+        let mut m = model(1, 4, 3, 3);
+        // a one-tick spike resets: no scale-up
+        assert_eq!(m.observe(1, 100), ScaleDecision::Hold);
+        assert_eq!(m.observe(1, 0), ScaleDecision::Hold);
+        // three consecutive pressured ticks fire exactly once
+        assert_eq!(m.observe(1, 100), ScaleDecision::Hold);
+        assert_eq!(m.observe(1, 100), ScaleDecision::Hold);
+        assert_eq!(m.observe(1, 100), ScaleDecision::Up);
+        // the streak reset: the next tick starts over
+        assert_eq!(m.observe(2, 100), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn max_bound_blocks_scale_up() {
+        let mut m = model(1, 2, 2, 2);
+        assert_eq!(m.observe(2, 100), ScaleDecision::Hold);
+        // pressure is sustained but the cluster is at max
+        assert_eq!(m.observe(2, 100), ScaleDecision::Hold);
+        assert_eq!(m.observe(2, 100), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn idle_scales_down_only_to_min() {
+        let mut m = model(2, 4, 2, 2);
+        assert_eq!(m.observe(3, 0), ScaleDecision::Hold);
+        assert_eq!(m.observe(3, 0), ScaleDecision::Down);
+        // at min: idleness no longer retires workers
+        assert_eq!(m.observe(2, 0), ScaleDecision::Hold);
+        assert_eq!(m.observe(2, 0), ScaleDecision::Hold);
+        assert_eq!(m.observe(2, 0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn cooldown_gates_back_to_back_events() {
+        let mut m = ScalingModel::new(AutoscalerConfig {
+            min_workers: 1,
+            max_workers: 8,
+            high_watermark: 4.0,
+            low_watermark: 0.5,
+            up_ticks: 1,
+            down_ticks: 1,
+            cooldown_ticks: 2,
+            interval: Duration::from_millis(1),
+        });
+        assert_eq!(m.observe(1, 100), ScaleDecision::Up);
+        // two cooldown ticks: pressure is ignored, streaks reset
+        assert_eq!(m.observe(2, 100), ScaleDecision::Hold);
+        assert_eq!(m.observe(2, 100), ScaleDecision::Hold);
+        // cooled down: the next pressured tick may fire again
+        assert_eq!(m.observe(2, 100), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn middle_band_resets_both_streaks() {
+        let mut m = model(1, 4, 2, 2);
+        assert_eq!(m.observe(1, 100), ScaleDecision::Hold); // up 1
+        // per-worker load inside [low, high]: neither streak survives
+        assert_eq!(m.observe(1, 2), ScaleDecision::Hold);
+        assert_eq!(m.observe(1, 100), ScaleDecision::Hold); // up 1 again
+        assert_eq!(m.observe(1, 100), ScaleDecision::Up);
+    }
+
+    // -- end-to-end against a mock cluster ----------------------------
+
+    #[test]
+    fn autoscaler_grows_under_burst_and_drains_back_down() {
+        let ccfg = ClusterConfig {
+            policy: policy_by_name("least-loaded").unwrap(),
+            delta_budget_bytes: 1 << 20,
+            admission: None,
+        };
+        let cluster = Cluster::spawn_elastic(
+            &ccfg, profiles(&["a", "b"], 10), 1,
+            elastic_mock(Duration::from_millis(2))).unwrap();
+        let handle = cluster.handle();
+        let scaler = Autoscaler::spawn(handle.clone(), AutoscalerConfig {
+            min_workers: 1,
+            max_workers: 3,
+            high_watermark: 3.0,
+            low_watermark: 0.5,
+            up_ticks: 2,
+            down_ticks: 3,
+            cooldown_ticks: 1,
+            interval: Duration::from_millis(5),
+        });
+
+        // burst: pile up far more work than one 2ms/step worker clears
+        let tickets: Vec<ClusterTicket> = (0..120)
+            .map(|i| handle.submit(req(["a", "b"][i % 2])).unwrap())
+            .collect();
+
+        // the sustained backlog must grow the cluster
+        let mut grew = false;
+        for _ in 0..400 {
+            if handle.active_workers() >= 2 {
+                grew = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(grew, "autoscaler never scaled up under sustained load");
+
+        // every burst request completes (scale events never shed or
+        // lose accepted work)
+        for t in tickets {
+            t.recv().expect("request lost during scale events");
+        }
+
+        // idle: the autoscaler must drain back down to min
+        let mut shrank = false;
+        for _ in 0..400 {
+            if handle.active_workers() == 1 {
+                shrank = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(shrank, "autoscaler never drained back down when idle");
+
+        scaler.stop();
+        let m = handle.metrics();
+        assert!(m.contains(
+            "bitdelta_cluster_scale_events_total{direction=\"up\"}"),
+                "{m}");
+        assert!(m.contains("bitdelta_cluster_failovers_total 0"), "{m}");
+        // serving still works at min scale
+        handle.generate(req("a")).unwrap();
+        cluster.shutdown().unwrap();
+    }
+}

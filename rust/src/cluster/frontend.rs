@@ -1,4 +1,5 @@
-//! The cluster: N worker engines behind one `Clone + Send` handle.
+//! The cluster: an **elastic** set of worker engines behind one
+//! `Clone + Send` handle.
 //!
 //! [`Cluster::spawn`] computes an initial tenant placement (fail-fast
 //! if the deltas cannot be packed), then starts one worker thread per
@@ -6,6 +7,24 @@
 //! tenant's placed workers via the configured
 //! [`PlacementPolicy`]; any number of client threads may submit
 //! concurrently.
+//!
+//! **Admission**: when [`ClusterConfig::admission`] is set, every
+//! request passes the cluster-level [`AdmissionGate`] before routing —
+//! a global in-flight budget with per-tenant fairness. Overload sheds
+//! as typed [`AdmissionError`] rejections (the caller's HTTP
+//! 429-equivalent) instead of growing queues without bound; the permit
+//! rides inside the returned [`ClusterTicket`] and frees its slot when
+//! the ticket is dropped.
+//!
+//! **Elasticity**: a cluster spawned through [`Cluster::spawn_elastic`]
+//! (or [`Cluster::spawn_engines`]) can grow and shrink at runtime —
+//! [`ClusterHandle::spawn_worker`] adds a worker and re-places tenants
+//! onto it; [`ClusterHandle::retire_worker`] removes one via **graceful
+//! drain**: routing stops, the worker's tenants move to the survivors,
+//! in-flight sequences run to completion (no KV-cache loss, unlike
+//! failover), and only then is the thread joined. The
+//! [`crate::cluster::autoscaler`] drives both from the live load
+//! signals workers already publish.
 //!
 //! **Failover**: a worker that dies (engine error or panic) drops its
 //! `alive` flag; in-flight requests on it are answered with errors (the
@@ -17,8 +36,10 @@
 //! policy-respecting placement, routing degrades to
 //! everything-everywhere — availability over budget.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -30,11 +51,22 @@ use crate::cluster::worker::{
     spawn_worker, CoreFactory, WorkerCore, WorkerHandle,
 };
 use crate::config::Manifest;
+use crate::coordinator::admission::{
+    AdmissionError, AdmissionGate, AdmissionPermit, AdmissionPolicy,
+};
+use crate::coordinator::metrics::Histogram;
 use crate::coordinator::workload::TraceEvent;
 use crate::delta::codec::CodecRegistry;
 use crate::model::sampling::SamplingParams;
 use crate::serving::engine::{Engine, EngineConfig};
 use crate::serving::request::{Request, Response};
+
+/// Factory-of-factories for elastic clusters: called with a fresh
+/// worker id whenever the cluster scales up, it returns the
+/// [`CoreFactory`] that will build that worker's core *on* the new
+/// thread (the PJRT constraint, same as at initial spawn).
+pub type WorkerFactoryFn =
+    Box<dyn Fn(usize) -> CoreFactory + Send + Sync>;
 
 /// Cluster construction parameters.
 pub struct ClusterConfig {
@@ -43,42 +75,100 @@ pub struct ClusterConfig {
     /// [`crate::coordinator::deltastore::DeltaStore`] budget, and the
     /// bin the delta-aware policy packs against).
     pub delta_budget_bytes: usize,
+    /// Cluster-front-door admission control; `None` accepts everything
+    /// (per-worker queue caps still apply downstream).
+    pub admission: Option<AdmissionPolicy>,
 }
 
-/// Routing state behind the handle's mutex (everything the per-request
-/// hot path needs is either here or in lock-free [`WorkerLoad`]
-/// atomics).
+/// Lifecycle of one worker slot. Slots are append-only so worker
+/// indices stay stable across scale events (placements, metrics labels
+/// and routing state all key on the index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Routable and serving.
+    Active,
+    /// Graceful drain in progress: no longer routable, finishing its
+    /// in-flight work before the thread is joined.
+    Draining,
+    /// Cleanly drained and joined by a scale-down. Not a failure.
+    Retired,
+    /// Died (engine error or panic); its in-flight requests were
+    /// errored and its tenants failed over.
+    Dead,
+}
+
+/// One worker's slot in the cluster table.
+struct Slot {
+    handle: WorkerHandle,
+    join: Option<JoinHandle<Result<()>>>,
+    state: WorkerState,
+    spec: WorkerSpec,
+    routed: u64,
+}
+
+impl Slot {
+    /// Routable: Active *and* its thread still running — the one
+    /// predicate routing, load sampling, and the metrics counts all
+    /// share. (An Active slot whose thread has exited is dead but not
+    /// yet reaped.)
+    fn routable(&self) -> bool {
+        self.state == WorkerState::Active
+            && self.handle.load().is_alive()
+    }
+}
+
+/// Routing + lifecycle state behind the handle's mutex (everything the
+/// per-request hot path needs is either here or in lock-free
+/// [`WorkerLoad`] atomics).
 ///
 /// [`WorkerLoad`]: crate::cluster::worker::WorkerLoad
-struct RouteState {
+struct ClusterState {
+    slots: Vec<Slot>,
     placement: Placement,
-    dead: Vec<bool>,
-    routed: Vec<u64>,
     failovers: u64,
     replaced_tenants: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+    /// Graceful-drain durations (scale-down only; failover is not a
+    /// drain).
+    drain: Histogram,
+}
+
+impl ClusterState {
+    fn active_count(&self) -> usize {
+        self.slots.iter()
+            .filter(|s| s.state == WorkerState::Active).count()
+    }
 }
 
 struct Shared {
     policy: Arc<dyn PlacementPolicy>,
-    workers: Vec<WorkerHandle>,
-    specs: Vec<WorkerSpec>,
+    delta_budget_bytes: usize,
     profiles: Vec<TenantProfile>,
-    state: Mutex<RouteState>,
+    /// Present only for elastic clusters; fixed clusters cannot grow.
+    factory_fn: Option<WorkerFactoryFn>,
+    admission: Option<AdmissionGate>,
+    /// Monotonic id for naming newly spawned workers (never reused,
+    /// unlike slot indices which are stable but also never reused).
+    next_worker_id: AtomicUsize,
+    state: Mutex<ClusterState>,
 }
 
-/// Live load view over the workers' published atomics.
-struct LiveLoads<'a>(&'a [WorkerHandle]);
+/// Live load view over the slots' published atomics.
+struct SlotLoads<'a>(&'a [Slot]);
 
-impl LoadView for LiveLoads<'_> {
+impl LoadView for SlotLoads<'_> {
     fn score(&self, worker: usize) -> usize {
-        self.0.get(worker).map(|h| h.load().score()).unwrap_or(usize::MAX)
+        self.0.get(worker).map(|s| s.handle.load().score())
+            .unwrap_or(usize::MAX)
     }
 }
 
-/// The running cluster (owns the worker threads).
+/// The running cluster. Worker threads are owned by the shared state so
+/// scale events can join them individually; [`Cluster::shutdown`]
+/// drains and joins whatever is still running.
 pub struct Cluster {
     handle: ClusterHandle,
-    joins: Vec<JoinHandle<Result<()>>>,
 }
 
 /// Cloneable, `Send + Sync` front-end to the cluster.
@@ -87,11 +177,60 @@ pub struct ClusterHandle {
     shared: Arc<Shared>,
 }
 
+/// One submitted request: the response channel plus (when cluster
+/// admission is on) the in-flight permit, released when the ticket is
+/// dropped — normally right after [`ClusterTicket::recv`] returns.
+pub struct ClusterTicket {
+    rx: mpsc::Receiver<Result<Response>>,
+    _permit: Option<AdmissionPermit>,
+}
+
+impl ClusterTicket {
+    /// Block until the response arrives (consumes the ticket, releasing
+    /// the admission slot).
+    pub fn recv(self) -> Result<Response> {
+        self.rx.recv()
+            .map_err(|_| anyhow!("worker dropped the request"))?
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight.
+    /// A vanished worker (dropped reply channel) surfaces as an error,
+    /// same as [`ClusterTicket::recv`] — never as a permanent `None`.
+    pub fn try_recv(&self) -> Option<Result<Response>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("worker dropped the request")))
+            }
+        }
+    }
+}
+
 impl Cluster {
     /// Start one worker per factory; tenant placement is computed first
-    /// so an impossible packing fails before any engine loads.
+    /// so an impossible packing fails before any engine loads. A
+    /// fixed-factory cluster cannot scale up (no way to mint new
+    /// cores); use [`Cluster::spawn_elastic`] for that.
     pub fn spawn(cfg: &ClusterConfig, profiles: Vec<TenantProfile>,
                  factories: Vec<CoreFactory>) -> Result<Self> {
+        Self::spawn_inner(cfg, profiles, factories, None)
+    }
+
+    /// Start an elastic cluster: `initial` workers now, and the
+    /// factory-of-factories kept for [`ClusterHandle::spawn_worker`] to
+    /// mint more at runtime.
+    pub fn spawn_elastic(cfg: &ClusterConfig,
+                         profiles: Vec<TenantProfile>, initial: usize,
+                         make: WorkerFactoryFn) -> Result<Self> {
+        let factories: Vec<CoreFactory> =
+            (0..initial).map(|i| make(i)).collect();
+        Self::spawn_inner(cfg, profiles, factories, Some(make))
+    }
+
+    fn spawn_inner(cfg: &ClusterConfig, profiles: Vec<TenantProfile>,
+                   factories: Vec<CoreFactory>,
+                   factory_fn: Option<WorkerFactoryFn>) -> Result<Self> {
         if factories.is_empty() {
             bail!("cluster needs at least one worker");
         }
@@ -102,58 +241,83 @@ impl Cluster {
         }).collect();
         let placement = cfg.policy.place(&profiles, &specs)?;
 
-        let mut workers = Vec::with_capacity(n);
-        let mut joins = Vec::with_capacity(n);
+        let mut slots = Vec::with_capacity(n);
         for (i, f) in factories.into_iter().enumerate() {
-            let (h, j) = spawn_worker(format!("bitdelta-worker-{i}"), f)?;
-            workers.push(h);
-            joins.push(j);
+            let (handle, join) =
+                spawn_worker(format!("bitdelta-worker-{i}"), f)?;
+            slots.push(Slot {
+                handle,
+                join: Some(join),
+                state: WorkerState::Active,
+                spec: specs[i].clone(),
+                routed: 0,
+            });
         }
         let shared = Arc::new(Shared {
             policy: cfg.policy.clone(),
-            workers,
-            specs,
+            delta_budget_bytes: cfg.delta_budget_bytes,
             profiles,
-            state: Mutex::new(RouteState {
+            factory_fn,
+            admission: cfg.admission.map(AdmissionGate::new),
+            next_worker_id: AtomicUsize::new(n),
+            state: Mutex::new(ClusterState {
+                slots,
                 placement,
-                dead: vec![false; n],
-                routed: vec![0; n],
                 failovers: 0,
                 replaced_tenants: 0,
+                scale_ups: 0,
+                scale_downs: 0,
+                drain: Histogram::default(),
             }),
         });
-        Ok(Self { handle: ClusterHandle { shared }, joins })
+        Ok(Self { handle: ClusterHandle { shared } })
     }
 
     /// Engine-backed cluster: every worker runs its own [`Engine`] built
-    /// from `ecfg` with the cluster's per-worker delta budget.
+    /// from `ecfg` with the cluster's per-worker delta budget. Elastic:
+    /// the autoscaler can mint additional engine workers from the same
+    /// config.
     pub fn spawn_engines(cfg: &ClusterConfig, ecfg: &EngineConfig,
                          n_workers: usize,
                          profiles: Vec<TenantProfile>) -> Result<Self> {
-        let factories: Vec<CoreFactory> = (0..n_workers).map(|_| {
-            let mut wcfg = ecfg.clone();
-            wcfg.delta_budget_bytes = cfg.delta_budget_bytes;
+        let mut wcfg = ecfg.clone();
+        wcfg.delta_budget_bytes = cfg.delta_budget_bytes;
+        let make: WorkerFactoryFn = Box::new(move |_id| {
+            let wcfg = wcfg.clone();
             let f: CoreFactory = Box::new(move || {
                 Ok(Box::new(Engine::from_artifacts(wcfg)?)
                    as Box<dyn WorkerCore>)
             });
             f
-        }).collect();
-        Self::spawn(cfg, profiles, factories)
+        });
+        Self::spawn_elastic(cfg, profiles, n_workers, make)
     }
 
     pub fn handle(&self) -> ClusterHandle {
         self.handle.clone()
     }
 
-    /// Drain every worker and join the threads. The first worker error
-    /// (e.g. a death that already triggered failover) is returned.
-    pub fn shutdown(mut self) -> Result<()> {
-        for h in &self.handle.shared.workers {
-            h.shutdown_signal();
-        }
+    /// Drain every remaining worker and join the threads. The first
+    /// worker error (e.g. a death that already triggered failover) is
+    /// returned; cleanly retired workers were already joined by their
+    /// scale-down and don't participate.
+    pub fn shutdown(self) -> Result<()> {
+        let joins: Vec<JoinHandle<Result<()>>> = {
+            let mut st = self.handle.shared.state.lock().unwrap();
+            let mut joins = Vec::new();
+            for slot in st.slots.iter_mut() {
+                if matches!(slot.state, WorkerState::Active
+                            | WorkerState::Draining) {
+                    slot.handle.shutdown_signal();
+                }
+                if let Some(j) = slot.join.take() {
+                    joins.push(j);
+                }
+            }
+            joins
+        };
         let mut first_err: Option<anyhow::Error> = None;
-        for j in self.joins.drain(..) {
+        for j in joins {
             let r = match j.join() {
                 Ok(r) => r,
                 Err(_) => Err(anyhow!("worker thread panicked")),
@@ -172,32 +336,48 @@ impl Cluster {
 }
 
 impl ClusterHandle {
-    /// Submit a request; the response arrives on the returned channel.
-    /// Routing retries across workers when a send hits a dead one, but
-    /// a request already accepted by a worker that then dies comes back
-    /// as an error (no silent cross-worker replay of maybe-executed
-    /// work).
-    pub fn submit(&self, req: Request)
-                  -> Result<mpsc::Receiver<Result<Response>>> {
-        let n = self.shared.workers.len();
-        for _ in 0..=n {
-            let w = self.pick(&req.tenant)?;
-            match self.shared.workers[w].submit(req.clone()) {
+    /// Submit a request; the response arrives through the returned
+    /// ticket. The request first passes cluster admission (if
+    /// configured) — a rejection is a typed [`AdmissionError`]
+    /// downcastable from the returned error. Routing retries across
+    /// workers when a send hits a dead one, but a request already
+    /// accepted by a worker that then dies comes back as an error (no
+    /// silent cross-worker replay of maybe-executed work).
+    pub fn submit(&self, req: Request) -> Result<ClusterTicket> {
+        let permit = match &self.shared.admission {
+            Some(gate) => {
+                Some(gate.try_admit(&req.tenant)
+                         .map_err(anyhow::Error::new)?)
+            }
+            None => None,
+        };
+        // terminates: pick_locked only returns routable (Active +
+        // alive) workers, and every failed send flips its worker to
+        // Dead under the same lock — so each iteration either returns
+        // or strictly shrinks the active set, until pick_locked
+        // reports "no alive workers"
+        loop {
+            let mut st = self.shared.state.lock().unwrap();
+            self.reap(&mut st);
+            let w = self.pick_locked(&st, &req.tenant)?;
+            // the channel send happens under the state lock so a
+            // graceful drain (which marks the slot Draining under the
+            // same lock, *then* signals shutdown) can never interleave:
+            // every routed request is ordered before the drain command
+            // and completes — the zero-error guarantee of scale-down
+            match st.slots[w].handle.submit(req.clone()) {
                 Ok(rx) => {
-                    let mut st = self.shared.state.lock().unwrap();
-                    st.routed[w] += 1;
-                    return Ok(rx);
+                    st.slots[w].routed += 1;
+                    return Ok(ClusterTicket { rx, _permit: permit });
                 }
-                Err(_) => self.mark_dead(w),
+                Err(_) => self.mark_dead_locked(&mut st, w),
             }
         }
-        bail!("no alive worker accepted the request")
     }
 
     /// Submit and block until the response arrives.
     pub fn generate(&self, req: Request) -> Result<Response> {
-        self.submit(req)?
-            .recv().map_err(|_| anyhow!("worker dropped the request"))?
+        self.submit(req)?.recv()
     }
 
     /// Tenants the cluster places (sorted at profile construction).
@@ -212,24 +392,169 @@ impl ClusterHandle {
         st.placement.clone()
     }
 
+    /// Total worker slots ever created (including retired and dead
+    /// ones — slot indices are stable and never reused).
     pub fn n_workers(&self) -> usize {
-        self.shared.workers.len()
+        self.shared.state.lock().unwrap().slots.len()
     }
 
+    /// Workers currently routable (Active and alive).
+    pub fn active_workers(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter().filter(|s| s.routable()).count()
+    }
+
+    /// Alias of [`Self::active_workers`] kept for the failover-era API.
     pub fn alive_workers(&self) -> usize {
-        self.shared.workers.iter()
-            .filter(|h| h.load().is_alive()).count()
+        self.active_workers()
     }
 
-    /// Cluster exposition: rollup across workers, cluster routing and
-    /// failover counters, then every worker's own metrics re-labeled
-    /// with `worker="i"`.
+    /// Total outstanding work across active workers (queued + batched +
+    /// in flight + channel backlog) — the autoscaler's pressure signal.
+    /// A dead-but-unreaped worker is excluded: its published load
+    /// freezes at whatever it was when the thread exited, and counting
+    /// that phantom score would hold the pressure signal above the
+    /// watermark forever.
+    pub fn outstanding(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter()
+            .filter(|s| s.routable())
+            .map(|s| s.handle.load().score())
+            .sum()
+    }
+
+    /// Lifetime scale event counts: `(scale-ups, graceful drains)`.
+    pub fn scale_events(&self) -> (u64, u64) {
+        let st = self.shared.state.lock().unwrap();
+        (st.scale_ups, st.scale_downs)
+    }
+
+    /// The active worker with the least outstanding work — the natural
+    /// scale-down victim (shortest drain).
+    pub fn least_loaded_active(&self) -> Option<usize> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter().enumerate()
+            .filter(|(_, s)| s.routable())
+            .min_by_key(|(w, s)| (s.handle.load().score(), *w))
+            .map(|(w, _)| w)
+    }
+
+    /// Scale up: mint a new worker from the elastic factory, then
+    /// re-place tenants across the enlarged active set. Blocks while
+    /// the new worker's core builds (an engine load), without holding
+    /// the routing lock. Returns the new worker's slot index.
+    pub fn spawn_worker(&self) -> Result<usize> {
+        let make = self.shared.factory_fn.as_ref().ok_or_else(|| {
+            anyhow!("cluster was spawned with fixed factories — only \
+Cluster::spawn_elastic / spawn_engines clusters can scale up")
+        })?;
+        let id = self.shared.next_worker_id
+            .fetch_add(1, Ordering::Relaxed);
+        let factory = make(id);
+        let (handle, join) =
+            spawn_worker(format!("bitdelta-worker-{id}"), factory)?;
+        let mut st = self.shared.state.lock().unwrap();
+        let index = st.slots.len();
+        st.slots.push(Slot {
+            handle,
+            join: Some(join),
+            state: WorkerState::Active,
+            spec: WorkerSpec {
+                index,
+                delta_budget_bytes: self.shared.delta_budget_bytes,
+            },
+            routed: 0,
+        });
+        st.scale_ups += 1;
+        self.replace(&mut st);
+        Ok(index)
+    }
+
+    /// Scale down worker `w` via graceful drain: stop routing to it,
+    /// re-place its tenants across the remaining active workers, let
+    /// every request it already accepted run to completion, then join
+    /// the thread. Zero in-flight requests are lost (unlike failover,
+    /// which errors them). Blocks for the drain; returns its duration.
+    pub fn retire_worker(&self, w: usize) -> Result<Duration> {
+        self.retire_worker_floor(w, 1)
+    }
+
+    /// [`Self::retire_worker`] with a floor: refuses to drain below
+    /// `min_active` remaining active workers. The floor is checked
+    /// under the routing lock, so a worker death between a scale-down
+    /// decision and this call cannot sneak the cluster under the bound
+    /// (the autoscaler passes its `min_workers` here).
+    pub fn retire_worker_floor(&self, w: usize, min_active: usize)
+                               -> Result<Duration> {
+        let (handle, join) = {
+            let mut st = self.shared.state.lock().unwrap();
+            self.reap(&mut st);
+            if st.active_count() <= min_active.max(1) {
+                bail!("cannot retire worker {w}: only {} active, \
+floor is {}", st.active_count(), min_active.max(1));
+            }
+            let slot = st.slots.get_mut(w)
+                .ok_or_else(|| anyhow!("no worker slot {w}"))?;
+            if slot.state != WorkerState::Active {
+                bail!("worker {w} is {:?}, not Active", slot.state);
+            }
+            // take the join handle before flipping state, so a
+            // concurrent shutdown can't leave the slot Draining with
+            // nobody to join it
+            let join = slot.join.take()
+                .ok_or_else(|| anyhow!("worker {w} already joining"))?;
+            slot.state = WorkerState::Draining;
+            let handle = slot.handle.clone();
+            // tenants leave the draining worker immediately: new
+            // requests route to the survivors while the drain runs
+            self.replace(&mut st);
+            (handle, join)
+        };
+        let t0 = Instant::now();
+        handle.shutdown_signal();
+        let result = join.join();
+        let drain = t0.elapsed();
+        let mut st = self.shared.state.lock().unwrap();
+        match result {
+            Ok(Ok(())) => {
+                st.slots[w].state = WorkerState::Retired;
+                st.scale_downs += 1;
+                st.drain.observe(drain);
+                Ok(drain)
+            }
+            Ok(Err(e)) => {
+                // the worker died mid-drain: its pending requests were
+                // errored by the pump loop — count it as a failover,
+                // not a clean scale-down
+                st.slots[w].state = WorkerState::Dead;
+                st.failovers += 1;
+                Err(e.context(format!("worker {w} died during drain")))
+            }
+            Err(_) => {
+                st.slots[w].state = WorkerState::Dead;
+                st.failovers += 1;
+                bail!("worker {w} panicked during drain")
+            }
+        }
+    }
+
+    /// Cluster exposition: rollup across workers, cluster routing /
+    /// failover / scale / admission series, then every live worker's
+    /// own metrics re-labeled with `worker="i"`.
     pub fn metrics(&self) -> String {
+        // scrape outside the lock: worker metrics round-trip a channel
+        let handles: Vec<(usize, WorkerHandle)> = {
+            let st = self.shared.state.lock().unwrap();
+            st.slots.iter().enumerate()
+                .filter(|(_, s)| s.routable())
+                .map(|(w, s)| (w, s.handle.clone()))
+                .collect()
+        };
         let mut texts = Vec::new();
         let mut per_worker = String::new();
-        for (w, h) in self.shared.workers.iter().enumerate() {
+        for (w, h) in &handles {
             if let Ok(text) = h.metrics() {
-                per_worker.push_str(&relabel(&text, w));
+                per_worker.push_str(&relabel(&text, *w));
                 texts.push(text);
             }
         }
@@ -237,17 +562,41 @@ impl ClusterHandle {
         {
             let mut st = self.shared.state.lock().unwrap();
             self.reap(&mut st);
-            let alive = st.dead.iter().filter(|d| !**d).count();
+            let active = st.slots.iter()
+                .filter(|s| s.routable()).count();
+            let draining = st.slots.iter()
+                .filter(|s| s.state == WorkerState::Draining).count();
             out.push_str(&format!(
-                "bitdelta_cluster_workers_alive {alive}\n\
+                "bitdelta_cluster_workers_alive {active}\n\
+                 bitdelta_cluster_workers_draining {draining}\n\
                  bitdelta_cluster_failovers_total {}\n\
-                 bitdelta_cluster_replaced_tenants_total {}\n",
-                st.failovers, st.replaced_tenants));
-            for (w, r) in st.routed.iter().enumerate() {
+                 bitdelta_cluster_replaced_tenants_total {}\n\
+                 bitdelta_cluster_scale_events_total\
+{{direction=\"up\"}} {}\n\
+                 bitdelta_cluster_scale_events_total\
+{{direction=\"down\"}} {}\n",
+                st.failovers, st.replaced_tenants, st.scale_ups,
+                st.scale_downs));
+            out.push_str(&st.drain.bucket_exposition("cluster_drain"));
+            out.push_str(&format!(
+                "bitdelta_cluster_drain_us_count {}\n\
+                 bitdelta_cluster_drain_us_sum {}\n",
+                st.drain.count, st.drain.sum_us));
+            for (w, slot) in st.slots.iter().enumerate() {
                 out.push_str(&format!(
                     "bitdelta_cluster_routed_total{{worker=\"{w}\"}} \
-{r}\n"));
+{}\n", slot.routed));
             }
+        }
+        if let Some(gate) = &self.shared.admission {
+            let (tenant, global) = gate.rejected();
+            out.push_str(&format!(
+                "bitdelta_cluster_admission_inflight {}\n\
+                 bitdelta_cluster_admission_rejected_total\
+{{reason=\"per_tenant\"}} {tenant}\n\
+                 bitdelta_cluster_admission_rejected_total\
+{{reason=\"global\"}} {global}\n",
+                gate.in_flight()));
         }
         out.push_str(&per_worker);
         out
@@ -255,18 +604,20 @@ impl ClusterHandle {
 
     // -- internals --------------------------------------------------------
 
-    /// Choose the worker for one request (reaps dead workers first).
-    fn pick(&self, tenant: &str) -> Result<usize> {
-        let mut st = self.shared.state.lock().unwrap();
-        self.reap(&mut st);
+    /// Choose the worker for one request among routable slots.
+    fn pick_locked(&self, st: &ClusterState, tenant: &str)
+                   -> Result<usize> {
+        let routable = |w: usize| {
+            st.slots.get(w).map(|s| s.routable()).unwrap_or(false)
+        };
         let mut cands: Vec<usize> = st.placement.workers_of(tenant)
-            .iter().copied().filter(|&w| !st.dead[w]).collect();
+            .iter().copied().filter(|&w| routable(w)).collect();
         if cands.is_empty() {
             // unknown tenant, or every replica died and re-placement
             // degraded: every engine registers every tenant, so any
-            // alive worker can still serve it
-            cands = (0..self.shared.workers.len())
-                .filter(|&w| !st.dead[w]).collect();
+            // active worker can still serve it
+            cands = (0..st.slots.len()).filter(|&w| routable(w))
+                .collect();
         }
         if cands.is_empty() {
             bail!("cluster has no alive workers");
@@ -274,54 +625,62 @@ impl ClusterHandle {
         // a typed RouteError (empty replica set mid-failover) surfaces
         // as a request error on the caller side, not a routing panic
         Ok(self.shared.policy.route(tenant, &cands,
-                                    &LiveLoads(&self.shared.workers))?)
+                                    &SlotLoads(&st.slots))?)
     }
 
-    fn mark_dead(&self, w: usize) {
-        let mut st = self.shared.state.lock().unwrap();
-        if !st.dead[w] {
-            st.dead[w] = true;
+    fn mark_dead_locked(&self, st: &mut ClusterState, w: usize) {
+        if st.slots[w].state == WorkerState::Active {
+            st.slots[w].state = WorkerState::Dead;
             st.failovers += 1;
-            self.replace(&mut st);
-        }
-    }
-
-    /// Notice workers whose threads exited since the last call.
-    fn reap(&self, st: &mut RouteState) {
-        let mut newly_dead = false;
-        for (w, h) in self.shared.workers.iter().enumerate() {
-            if !st.dead[w] && !h.load().is_alive() {
-                st.dead[w] = true;
-                st.failovers += 1;
-                newly_dead = true;
-            }
-        }
-        if newly_dead {
             self.replace(st);
         }
     }
 
-    /// Re-place every tenant across the surviving workers.
-    fn replace(&self, st: &mut RouteState) {
-        let alive: Vec<WorkerSpec> = self.shared.specs.iter()
-            .filter(|s| !st.dead[s.index]).cloned().collect();
-        if alive.is_empty() {
+    /// Notice active workers whose threads exited since the last call.
+    /// Draining workers are excluded: their `alive` flag also clears on
+    /// a *clean* drain exit, and their lifecycle belongs to the
+    /// `retire_worker` call that is joining them.
+    fn reap(&self, st: &mut ClusterState) {
+        let mut newly_dead = 0u64;
+        for slot in st.slots.iter_mut() {
+            if slot.state == WorkerState::Active
+                && !slot.handle.load().is_alive() {
+                slot.state = WorkerState::Dead;
+                newly_dead += 1;
+            }
+        }
+        if newly_dead > 0 {
+            st.failovers += newly_dead;
+            self.replace(st);
+        }
+    }
+
+    /// Re-place every tenant across the active workers.
+    fn replace(&self, st: &mut ClusterState) {
+        let active: Vec<WorkerSpec> = st.slots.iter()
+            .filter(|s| s.state == WorkerState::Active)
+            .map(|s| s.spec.clone()).collect();
+        if active.is_empty() {
             return;
         }
         let moved = self.shared.profiles.iter().filter(|t| {
-            st.placement.workers_of(&t.name).iter()
-                .any(|&w| st.dead[w])
+            st.placement.workers_of(&t.name).iter().any(|&w| {
+                st.slots.get(w)
+                    .map_or(true, |s| s.state != WorkerState::Active)
+            })
         }).count() as u64;
         st.replaced_tenants += moved;
         st.placement =
-            match self.shared.policy.place(&self.shared.profiles, &alive) {
+            match self.shared.policy.place(&self.shared.profiles,
+                                           &active) {
                 Ok(p) => p,
                 Err(_) => {
-                    // survivors' budgets cannot hold a policy-respecting
-                    // placement — degrade to everything-everywhere
+                    // the active workers' budgets cannot hold a
+                    // policy-respecting placement — degrade to
+                    // everything-everywhere: availability over budget
                     let mut p = Placement::default();
                     for t in &self.shared.profiles {
-                        for s in &alive {
+                        for s in &active {
                             p.add(&t.name, s.index, t.resident_bytes);
                         }
                     }
@@ -428,7 +787,12 @@ pub struct ReplayReport {
     /// Request latencies in seconds, sorted ascending.
     pub latencies: Vec<f64>,
     pub tokens: usize,
+    /// Real request failures (dead worker, dropped channel, …).
     pub errors: usize,
+    /// Load shed by cluster admission control (typed rejections) —
+    /// counted apart from `errors` because shedding is the intended
+    /// overload behavior, not a failure.
+    pub rejected: usize,
     pub wall_seconds: f64,
 }
 
@@ -457,7 +821,8 @@ impl ReplayReport {
 /// blocking, then collects every response. Trace tenant ranks map onto
 /// `names` by `rank % names.len()` — the same fold
 /// [`apply_trace_weights`] uses, so routing sees the skew the placement
-/// was computed for.
+/// was computed for. Admission rejections are tallied separately from
+/// request errors.
 pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
                     names: &[String], prompts: &[&str], clients: usize)
                     -> Result<ReplayReport> {
@@ -472,14 +837,35 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
         let events: Vec<TraceEvent> =
             trace.iter().skip(c).step_by(clients).cloned().collect();
         joins.push(std::thread::spawn(move || {
-            let mut chans = Vec::new();
+            let mut tickets: Vec<ClusterTicket> = Vec::new();
+            let mut latencies = Vec::new();
+            let mut tokens = 0usize;
             let mut errors = 0usize;
+            let mut rejected = 0usize;
             for e in &events {
                 let now = t0.elapsed().as_secs_f64();
                 if e.at > now {
                     std::thread::sleep(
                         std::time::Duration::from_secs_f64(e.at - now));
                 }
+                // collect whatever finished during the wait *before*
+                // submitting, so its admission permit frees up first:
+                // the gate caps live in-flight work, not cumulative
+                // submissions — harvesting after the submit would hold
+                // completed requests' permits one event too long and
+                // count spurious rejections on an idle cluster
+                tickets.retain(|t| match t.try_recv() {
+                    None => true,
+                    Some(Ok(r)) => {
+                        latencies.push(r.latency.as_secs_f64());
+                        tokens += r.tokens.len();
+                        false
+                    }
+                    Some(Err(_)) => {
+                        errors += 1;
+                        false
+                    }
+                });
                 let req = Request {
                     tenant: names[e.tenant % names.len()].clone(),
                     prompt: prompts[e.prompt_idx % prompts.len()]
@@ -488,36 +874,38 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
                     sampling: SamplingParams::greedy(),
                 };
                 match h.submit(req) {
-                    Ok(rx) => chans.push(rx),
+                    Ok(t) => tickets.push(t),
+                    Err(e) if e.downcast_ref::<AdmissionError>()
+                        .is_some() => rejected += 1,
                     Err(_) => errors += 1,
                 }
             }
-            let mut latencies = Vec::new();
-            let mut tokens = 0usize;
-            for rx in chans {
-                match rx.recv() {
-                    Ok(Ok(r)) => {
+            for t in tickets {
+                match t.recv() {
+                    Ok(r) => {
                         latencies.push(r.latency.as_secs_f64());
                         tokens += r.tokens.len();
                     }
-                    _ => errors += 1,
+                    Err(_) => errors += 1,
                 }
             }
-            (latencies, tokens, errors)
+            (latencies, tokens, errors, rejected)
         }));
     }
     let mut report = ReplayReport {
         latencies: Vec::new(),
         tokens: 0,
         errors: 0,
+        rejected: 0,
         wall_seconds: 0.0,
     };
     for j in joins {
-        let (l, t, e) = j.join()
+        let (l, t, e, rj) = j.join()
             .map_err(|_| anyhow!("client thread panicked"))?;
         report.latencies.extend(l);
         report.tokens += t;
         report.errors += e;
+        report.rejected += rj;
     }
     report.wall_seconds = t0.elapsed().as_secs_f64();
     report.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -531,21 +919,8 @@ mod tests {
     use std::time::Duration;
 
     use crate::cluster::placement::policy_by_name;
-    use crate::cluster::testutil::MockCore;
-    use crate::model::sampling::SamplingParams;
-
-    fn req(tenant: &str) -> Request {
-        Request { tenant: tenant.into(), prompt: "Q:".into(),
-                  max_new_tokens: 4, sampling: SamplingParams::greedy() }
-    }
-
-    fn profiles(names: &[&str], bytes: usize) -> Vec<TenantProfile> {
-        let w = 1.0 / names.len() as f64;
-        names.iter().map(|n| TenantProfile {
-            name: n.to_string(), codec: "bitdelta".into(),
-            resident_bytes: bytes, weight: w, levels: 1,
-        }).collect()
-    }
+    use crate::cluster::testutil::{elastic_mock, profiles, req,
+                                   MockCore};
 
     fn mock_factories(n: usize) -> Vec<CoreFactory> {
         (0..n).map(|i| {
@@ -556,14 +931,18 @@ mod tests {
         }).collect()
     }
 
+    fn cfg(policy: &str) -> ClusterConfig {
+        ClusterConfig {
+            policy: policy_by_name(policy).unwrap(),
+            delta_budget_bytes: 1 << 20,
+            admission: None,
+        }
+    }
+
     #[test]
     fn cluster_serves_many_client_threads() {
-        let cfg = ClusterConfig {
-            policy: policy_by_name("least-loaded").unwrap(),
-            delta_budget_bytes: 1 << 20,
-        };
         let cluster = Cluster::spawn(
-            &cfg, profiles(&["a", "b", "c", "d"], 10),
+            &cfg("least-loaded"), profiles(&["a", "b", "c", "d"], 10),
             mock_factories(2)).unwrap();
         let handle = cluster.handle();
         let tenants = handle.tenants();
@@ -609,6 +988,7 @@ mod tests {
         let cfg = ClusterConfig {
             policy: policy_by_name("delta-aware").unwrap(),
             delta_budget_bytes: 25,
+            admission: None,
         };
         // two 10 B tenants on two workers with budget 25: the packer
         // spreads them one per worker
@@ -658,11 +1038,8 @@ mod tests {
             Ok(Box::new(MockCore::new(0).with_kill_switch(k))
                as Box<dyn WorkerCore>)
         })];
-        let cfg = ClusterConfig {
-            policy: policy_by_name("affinity").unwrap(),
-            delta_budget_bytes: 1 << 20,
-        };
-        let cluster = Cluster::spawn(&cfg, profiles(&["a"], 10),
+        let cluster = Cluster::spawn(&cfg("affinity"),
+                                     profiles(&["a"], 10),
                                      factories).unwrap();
         let handle = cluster.handle();
         kill.store(true, Ordering::Relaxed);
@@ -683,6 +1060,7 @@ mod tests {
         let cfg = ClusterConfig {
             policy: policy_by_name("delta-aware").unwrap(),
             delta_budget_bytes: 5,
+            admission: None,
         };
         assert!(Cluster::spawn(&cfg, profiles(&["a"], 10),
                                mock_factories(2)).is_err());
@@ -690,11 +1068,8 @@ mod tests {
 
     #[test]
     fn replay_trace_collects_all_responses() {
-        let cfg = ClusterConfig {
-            policy: policy_by_name("least-loaded").unwrap(),
-            delta_budget_bytes: 1 << 20,
-        };
-        let cluster = Cluster::spawn(&cfg, profiles(&["a", "b"], 10),
+        let cluster = Cluster::spawn(&cfg("least-loaded"),
+                                     profiles(&["a", "b"], 10),
                                      mock_factories(2)).unwrap();
         let handle = cluster.handle();
         let trace: Vec<TraceEvent> = (0..10).map(|i| TraceEvent {
@@ -708,6 +1083,7 @@ mod tests {
             .unwrap();
         assert_eq!(r.served(), 10);
         assert_eq!(r.errors, 0);
+        assert_eq!(r.rejected, 0);
         assert_eq!(r.tokens, 40);
         assert!(r.quantile_ms(0.99) >= r.quantile_ms(0.5));
         assert!(r.tok_per_s() > 0.0);
@@ -722,5 +1098,147 @@ mod tests {
         assert!((ps[0].weight - 12.0 / 20.0).abs() < 1e-9);
         assert!((ps[1].weight - 6.0 / 20.0).abs() < 1e-9);
         assert!((ps[2].weight - 2.0 / 20.0).abs() < 1e-9);
+    }
+
+    // -- elasticity ---------------------------------------------------
+
+    #[test]
+    fn spawn_worker_grows_an_elastic_cluster() {
+        let cluster = Cluster::spawn_elastic(
+            &cfg("least-loaded"), profiles(&["a", "b"], 10), 1,
+            elastic_mock(Duration::ZERO)).unwrap();
+        let handle = cluster.handle();
+        assert_eq!(handle.active_workers(), 1);
+        let w1 = handle.spawn_worker().unwrap();
+        assert_eq!(w1, 1);
+        assert_eq!(handle.active_workers(), 2);
+        // least-loaded places every tenant on every active worker
+        assert_eq!(handle.placement().workers_of("a").len(), 2);
+        // the new worker actually serves
+        for _ in 0..6 {
+            handle.generate(req("a")).unwrap();
+        }
+        let m = handle.metrics();
+        assert!(m.contains(
+            "bitdelta_cluster_scale_events_total{direction=\"up\"} 1"),
+                "{m}");
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn fixed_cluster_cannot_scale_up() {
+        let cluster = Cluster::spawn(&cfg("affinity"),
+                                     profiles(&["a"], 10),
+                                     mock_factories(1)).unwrap();
+        let err = cluster.handle().spawn_worker()
+            .unwrap_err().to_string();
+        assert!(err.contains("fixed factories"), "{err}");
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn graceful_drain_completes_inflight_with_zero_errors() {
+        let cluster = Cluster::spawn_elastic(
+            &cfg("least-loaded"), profiles(&["a", "b"], 10), 2,
+            elastic_mock(Duration::from_millis(1))).unwrap();
+        let handle = cluster.handle();
+        assert_eq!(handle.active_workers(), 2);
+
+        // pile up work so the drained worker has accepted requests
+        // still queued when the retire lands
+        let tickets: Vec<ClusterTicket> = (0..24)
+            .map(|i| handle.submit(req(["a", "b"][i % 2])).unwrap())
+            .collect();
+        let drain = handle.retire_worker(1).unwrap();
+
+        // zero request errors: drain, not failover
+        let mut texts = Vec::new();
+        for t in tickets {
+            texts.push(t.recv().expect("drain lost a request").text);
+        }
+        assert_eq!(texts.len(), 24);
+        assert_eq!(handle.active_workers(), 1);
+        // the drained worker really did serve some of the work
+        assert!(texts.iter().any(|t| t == "w1"), "{texts:?}");
+
+        // tenants re-placed onto the survivor only
+        assert_eq!(handle.placement().workers_of("a"), &[0][..]);
+        assert_eq!(handle.placement().workers_of("b"), &[0][..]);
+
+        // new requests still served (by the survivor)
+        assert_eq!(handle.generate(req("a")).unwrap().text, "w0");
+
+        let m = handle.metrics();
+        assert!(m.contains(
+            "bitdelta_cluster_scale_events_total{direction=\"down\"} 1"),
+                "{m}");
+        assert!(m.contains("bitdelta_cluster_drain_us_count 1"), "{m}");
+        assert!(m.contains("bitdelta_cluster_failovers_total 0"), "{m}");
+        assert!(drain >= Duration::ZERO);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn cannot_retire_the_last_active_worker() {
+        let cluster = Cluster::spawn_elastic(
+            &cfg("affinity"), profiles(&["a"], 10), 1,
+            elastic_mock(Duration::ZERO)).unwrap();
+        let handle = cluster.handle();
+        let err = handle.retire_worker(0).unwrap_err().to_string();
+        assert!(err.contains("only 1 active"), "{err}");
+        // still serving
+        handle.generate(req("a")).unwrap();
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn retire_twice_is_an_error_and_slots_stay_stable() {
+        let cluster = Cluster::spawn_elastic(
+            &cfg("least-loaded"), profiles(&["a"], 10), 3,
+            elastic_mock(Duration::ZERO)).unwrap();
+        let handle = cluster.handle();
+        handle.retire_worker(1).unwrap();
+        assert!(handle.retire_worker(1).is_err());
+        // slot indices survive the retire: worker 2 is still worker 2
+        assert_eq!(handle.n_workers(), 3);
+        assert_eq!(handle.active_workers(), 2);
+        let placed = handle.placement();
+        assert!(placed.workers_of("a").contains(&0));
+        assert!(placed.workers_of("a").contains(&2));
+        cluster.shutdown().unwrap();
+    }
+
+    // -- cluster admission --------------------------------------------
+
+    #[test]
+    fn admission_sheds_load_with_typed_rejections() {
+        let mut config = cfg("least-loaded");
+        config.admission = Some(AdmissionPolicy {
+            per_tenant_cap: 2, total_cap: 2,
+        });
+        let cluster = Cluster::spawn_elastic(
+            &config, profiles(&["a"], 10), 1,
+            elastic_mock(Duration::from_millis(5))).unwrap();
+        let handle = cluster.handle();
+
+        let t1 = handle.submit(req("a")).unwrap();
+        let t2 = handle.submit(req("a")).unwrap();
+        // budget exhausted: typed rejection, not a queue-grow
+        let err = handle.submit(req("a")).unwrap_err();
+        let ae = err.downcast_ref::<AdmissionError>()
+            .expect("admission rejection must stay typed");
+        assert_eq!(ae.tenant, "a");
+
+        let m = handle.metrics();
+        assert!(m.contains("bitdelta_cluster_admission_inflight 2"),
+                "{m}");
+        assert!(m.contains(
+            "bitdelta_cluster_admission_rejected_total"), "{m}");
+
+        // completing a request frees its slot
+        t1.recv().unwrap();
+        t2.recv().unwrap();
+        handle.submit(req("a")).unwrap().recv().unwrap();
+        cluster.shutdown().unwrap();
     }
 }

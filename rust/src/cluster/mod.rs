@@ -1,31 +1,43 @@
-//! The cluster serving layer — N worker engines, delta-aware tenant
-//! placement, failover.
+//! The cluster serving layer — an elastic set of worker engines,
+//! delta-aware tenant placement, failover, autoscaling, and
+//! cluster-level admission control.
 //!
 //! BitDelta's economics at scale: the base model is the expensive
 //! artifact and it is **identical on every worker**, so scaling out is
 //! "spawn another engine thread and re-place some ~1/16-cost deltas" —
 //! not "copy another model". This module is that scaling substrate:
 //!
-//! * [`worker`]    — one engine pinned to one OS thread behind a
+//! * [`worker`]     — one engine pinned to one OS thread behind a
 //!   command channel; the pump loop shared with the single-engine
 //!   [`crate::serving::service::ServingService`], written against the
 //!   [`worker::WorkerCore`] trait so scheduling and failover are
 //!   testable without artifacts.
-//! * [`placement`] — the [`placement::PlacementPolicy`] trait and the
+//! * [`placement`]  — the [`placement::PlacementPolicy`] trait and the
 //!   three built-ins: `affinity` (stable hashing), `least-loaded`
 //!   (live queue depth), `delta-aware` (bin-pack per-codec
 //!   `resident_bytes` against worker delta budgets, replicate hot
 //!   tenants under skew).
-//! * [`frontend`]  — [`Cluster`] / [`ClusterHandle`]: spawn, route,
+//! * [`frontend`]   — [`Cluster`] / [`ClusterHandle`]: spawn, route,
 //!   failover (dead workers' tenants re-placed, in-flight requests
-//!   errored, never hung).
-//! * [`metrics`]   — per-worker relabeling + cluster rollup of the
-//!   Prometheus-style expositions.
+//!   errored, never hung), **elastic scale events**
+//!   ([`ClusterHandle::spawn_worker`] /
+//!   [`ClusterHandle::retire_worker`] — the latter a graceful drain
+//!   that completes in-flight work with zero errors), and the
+//!   cluster-front-door admission gate (global in-flight budget,
+//!   per-tenant fairness, typed rejections).
+//! * [`autoscaler`] — the control loop that drives those scale events
+//!   from the live load signals workers publish: sustained-pressure
+//!   scale-up, sustained-idle scale-down, `min..max` bounds,
+//!   cooldown hysteresis.
+//! * [`metrics`]    — per-worker relabeling + cluster rollup of the
+//!   Prometheus-style expositions (scale events, drain durations and
+//!   admission rejections ride in the cluster section).
 //!
 //! Adding a placement policy mirrors adding a codec: implement
 //! [`placement::PlacementPolicy`], add one arm to
 //! [`placement::policy_by_name`].
 
+pub mod autoscaler;
 pub mod frontend;
 pub mod metrics;
 pub mod placement;
@@ -34,9 +46,13 @@ pub mod worker;
 #[cfg(test)]
 pub(crate) mod testutil;
 
+pub use autoscaler::{
+    Autoscaler, AutoscalerConfig, ScaleDecision, ScalingModel,
+};
 pub use frontend::{
     apply_trace_weights, replay_trace, tenant_profiles, Cluster,
-    ClusterConfig, ClusterHandle, ReplayReport,
+    ClusterConfig, ClusterHandle, ClusterTicket, ReplayReport,
+    WorkerFactoryFn, WorkerState,
 };
 pub use placement::{
     policy_by_name, Placement, PlacementPolicy, RouteError, TenantProfile,

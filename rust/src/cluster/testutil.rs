@@ -9,8 +9,38 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::worker::WorkerCore;
+use crate::cluster::frontend::WorkerFactoryFn;
+use crate::cluster::placement::TenantProfile;
+use crate::cluster::worker::{CoreFactory, WorkerCore};
+use crate::model::sampling::SamplingParams;
 use crate::serving::request::{Request, Response};
+
+/// A canned greedy request for `tenant`.
+pub fn req(tenant: &str) -> Request {
+    Request { tenant: tenant.into(), prompt: "Q:".into(),
+              max_new_tokens: 4, sampling: SamplingParams::greedy() }
+}
+
+/// Uniform-weight tenant profiles, `bytes` resident each.
+pub fn profiles(names: &[&str], bytes: usize) -> Vec<TenantProfile> {
+    let w = 1.0 / names.len() as f64;
+    names.iter().map(|n| TenantProfile {
+        name: n.to_string(), codec: "bitdelta".into(),
+        resident_bytes: bytes, weight: w, levels: 1,
+    }).collect()
+}
+
+/// Elastic worker factory minting [`MockCore`]s with a per-step delay
+/// (zero = as fast as the pump loop spins).
+pub fn elastic_mock(step_delay: Duration) -> WorkerFactoryFn {
+    Box::new(move |id| {
+        let f: CoreFactory = Box::new(move || {
+            Ok(Box::new(MockCore::new(id).with_step_delay(step_delay))
+               as Box<dyn WorkerCore>)
+        });
+        f
+    })
+}
 
 /// A fake engine: each `step` completes one queued request with a
 /// canned response. A shared kill switch makes `step` fail, modelling a
@@ -34,6 +64,14 @@ impl MockCore {
     /// `step` fails as soon as the switch is set.
     pub fn with_kill_switch(mut self, kill: Arc<AtomicBool>) -> Self {
         self.kill = Some(kill);
+        self
+    }
+
+    /// Sleep this long per `step` — makes queues (and therefore load
+    /// imbalance, drain windows, and admission backpressure)
+    /// observable in tests.
+    pub fn with_step_delay(mut self, delay: Duration) -> Self {
+        self.step_delay = (!delay.is_zero()).then_some(delay);
         self
     }
 }

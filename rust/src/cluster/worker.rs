@@ -37,6 +37,12 @@ pub trait WorkerCore {
     /// Occupied batch slots.
     fn occupancy(&self) -> usize;
     /// Run until every queue and slot is empty (shutdown drain).
+    ///
+    /// **Contract**: a clean return means every request this core ever
+    /// accepted has produced its response — nothing queued, nothing in
+    /// a slot. Graceful scale-down leans on this: the cluster's
+    /// `retire_worker` promises zero in-flight errors, which holds iff
+    /// `drain` completes accepted work instead of dropping it.
     fn drain(&mut self) -> Result<()>;
     /// Prometheus-style metrics exposition for this core.
     fn metrics_text(&self) -> String;

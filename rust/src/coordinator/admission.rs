@@ -3,6 +3,25 @@
 //! A serving system that accepts unboundedly simply moves the OOM from
 //! the GPU to the host. Caps are enforced at enqueue time; callers see a
 //! typed rejection they can surface as HTTP 429-equivalent.
+//!
+//! Two layers use the same policy machinery:
+//!
+//! * **per worker** — the engine's router consults
+//!   [`AdmissionPolicy::admit`] against its own queue depths before
+//!   enqueueing;
+//! * **cluster front door** — [`AdmissionGate`] wraps the same policy in
+//!   a thread-safe live-count tracker so the
+//!   [`crate::cluster::ClusterHandle`] can cap *global* in-flight work
+//!   (with per-tenant fairness) before a request is ever routed.
+//!   Admission hands out an RAII [`AdmissionPermit`]; dropping the
+//!   permit (when the response has been delivered or the caller gave
+//!   up) releases the slot. Rejections are typed ([`AdmissionError`])
+//!   so load generators can count shed load separately from real
+//!   failures.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Queue caps. `Default` is sized for the example workloads.
 #[derive(Debug, Clone, Copy)]
@@ -26,15 +45,156 @@ pub enum Verdict {
     Reject(&'static str),
 }
 
+/// Rejection reason for a breached per-tenant cap. Carried in
+/// [`AdmissionError::reason`] and its `Display`; the metrics
+/// exposition uses its own stable label vocabulary
+/// (`reason="per_tenant"` / `reason="global"`), not these strings.
+pub const REASON_TENANT: &str = "per-tenant queue full";
+/// Rejection reason for a breached global cap (see [`REASON_TENANT`]
+/// for how reasons relate to the metrics labels).
+pub const REASON_GLOBAL: &str = "global queue full";
+
 impl AdmissionPolicy {
     pub fn admit(&self, tenant_queued: usize, total_queued: usize)
                  -> Verdict {
         if tenant_queued >= self.per_tenant_cap {
-            Verdict::Reject("per-tenant queue full")
+            Verdict::Reject(REASON_TENANT)
         } else if total_queued >= self.total_cap {
-            Verdict::Reject("global queue full")
+            Verdict::Reject(REASON_GLOBAL)
         } else {
             Verdict::Admit
+        }
+    }
+
+    /// A cluster-front-door policy from one `--admission-budget` number:
+    /// `total` caps global in-flight work; the per-tenant cap is set to
+    /// twice the fair share (`2·total/n_tenants`, floor 1) so a hot
+    /// tenant can burst past uniform but can never starve the rest of
+    /// the budget.
+    pub fn for_budget(total: usize, n_tenants: usize) -> Self {
+        let fair2 = (2 * total).div_ceil(n_tenants.max(1));
+        Self {
+            per_tenant_cap: fair2.clamp(1, total.max(1)),
+            total_cap: total.max(1),
+        }
+    }
+}
+
+/// Typed admission rejection — the cluster front door's HTTP
+/// 429-equivalent. Carried through `anyhow` so callers can
+/// `downcast_ref::<AdmissionError>()` to distinguish shed load from
+/// real request failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdmissionError {
+    pub tenant: String,
+    /// One of [`REASON_TENANT`] / [`REASON_GLOBAL`].
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request for tenant {:?} rejected: {}",
+               self.tenant, self.reason)
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+#[derive(Default)]
+struct GateCounts {
+    total: usize,
+    per_tenant: HashMap<String, usize>,
+}
+
+struct GateInner {
+    counts: Mutex<GateCounts>,
+    rejected_tenant: AtomicU64,
+    rejected_global: AtomicU64,
+}
+
+/// Thread-safe admission gate: an [`AdmissionPolicy`] applied to *live*
+/// in-flight counts instead of queue snapshots. `try_admit` either
+/// reserves a slot (returning the RAII [`AdmissionPermit`] that frees
+/// it on drop) or returns the typed rejection. Check-and-increment is
+/// atomic under one lock, so concurrent submitters can never
+/// collectively overshoot the caps.
+pub struct AdmissionGate {
+    policy: AdmissionPolicy,
+    inner: Arc<GateInner>,
+}
+
+impl AdmissionGate {
+    pub fn new(policy: AdmissionPolicy) -> Self {
+        Self {
+            policy,
+            inner: Arc::new(GateInner {
+                counts: Mutex::new(GateCounts::default()),
+                rejected_tenant: AtomicU64::new(0),
+                rejected_global: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn policy(&self) -> &AdmissionPolicy {
+        &self.policy
+    }
+
+    /// Reserve one in-flight slot for `tenant`, or reject.
+    pub fn try_admit(&self, tenant: &str)
+                     -> Result<AdmissionPermit, AdmissionError> {
+        let mut c = self.inner.counts.lock().unwrap();
+        let tenant_now = c.per_tenant.get(tenant).copied().unwrap_or(0);
+        match self.policy.admit(tenant_now, c.total) {
+            Verdict::Admit => {
+                c.total += 1;
+                *c.per_tenant.entry(tenant.to_string()).or_default() += 1;
+                Ok(AdmissionPermit {
+                    inner: self.inner.clone(),
+                    tenant: tenant.to_string(),
+                })
+            }
+            Verdict::Reject(reason) => {
+                if reason == REASON_TENANT {
+                    self.inner.rejected_tenant
+                        .fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.inner.rejected_global
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                Err(AdmissionError { tenant: tenant.to_string(), reason })
+            }
+        }
+    }
+
+    /// Live in-flight count across all tenants.
+    pub fn in_flight(&self) -> usize {
+        self.inner.counts.lock().unwrap().total
+    }
+
+    /// `(per-tenant-cap, global-cap)` rejection counts so far.
+    pub fn rejected(&self) -> (u64, u64) {
+        (self.inner.rejected_tenant.load(Ordering::Relaxed),
+         self.inner.rejected_global.load(Ordering::Relaxed))
+    }
+}
+
+/// RAII reservation handed out by [`AdmissionGate::try_admit`]. Holding
+/// it keeps one in-flight slot charged to the tenant; dropping it
+/// releases the slot.
+pub struct AdmissionPermit {
+    inner: Arc<GateInner>,
+    tenant: String,
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        let mut c = self.inner.counts.lock().unwrap();
+        c.total = c.total.saturating_sub(1);
+        if let Some(n) = c.per_tenant.get_mut(&self.tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                c.per_tenant.remove(&self.tenant);
+            }
         }
     }
 }
@@ -55,5 +215,81 @@ mod tests {
         let p = AdmissionPolicy { per_tenant_cap: 2, total_cap: 4 };
         assert!(matches!(p.admit(2, 2), Verdict::Reject(_)));
         assert!(matches!(p.admit(0, 4), Verdict::Reject(_)));
+    }
+
+    #[test]
+    fn budget_policy_fair_share() {
+        let p = AdmissionPolicy::for_budget(64, 8);
+        assert_eq!(p.total_cap, 64);
+        assert_eq!(p.per_tenant_cap, 16);   // 2 * 64 / 8
+        // few tenants: per-tenant cap never exceeds the global budget
+        let p = AdmissionPolicy::for_budget(4, 1);
+        assert_eq!(p.per_tenant_cap, 4);
+        // degenerate budgets stay usable
+        let p = AdmissionPolicy::for_budget(0, 0);
+        assert!(p.total_cap >= 1 && p.per_tenant_cap >= 1);
+    }
+
+    #[test]
+    fn gate_caps_live_in_flight_and_releases_on_drop() {
+        let g = AdmissionGate::new(
+            AdmissionPolicy { per_tenant_cap: 2, total_cap: 3 });
+        let a1 = g.try_admit("a").unwrap();
+        let _a2 = g.try_admit("a").unwrap();
+        // per-tenant cap hit
+        let e = g.try_admit("a").unwrap_err();
+        assert_eq!(e.reason, REASON_TENANT);
+        assert_eq!(e.tenant, "a");
+        // other tenants still fit under the global cap
+        let _b1 = g.try_admit("b").unwrap();
+        assert_eq!(g.in_flight(), 3);
+        let e = g.try_admit("c").unwrap_err();
+        assert_eq!(e.reason, REASON_GLOBAL);
+        // releasing a permit frees exactly one slot
+        drop(a1);
+        assert_eq!(g.in_flight(), 2);
+        let _c1 = g.try_admit("c").unwrap();
+        assert_eq!(g.rejected(), (1, 1));
+    }
+
+    #[test]
+    fn admission_error_downcasts_through_anyhow() {
+        let g = AdmissionGate::new(
+            AdmissionPolicy { per_tenant_cap: 1, total_cap: 1 });
+        let _p = g.try_admit("t").unwrap();
+        let err: anyhow::Error = g.try_admit("t").unwrap_err().into();
+        let ae = err.downcast_ref::<AdmissionError>()
+            .expect("typed rejection survives anyhow");
+        assert_eq!(ae.reason, REASON_TENANT);
+        assert!(err.to_string().contains("rejected"), "{err}");
+    }
+
+    #[test]
+    fn gate_is_safe_across_threads() {
+        let g = std::sync::Arc::new(AdmissionGate::new(
+            AdmissionPolicy { per_tenant_cap: 64, total_cap: 10 }));
+        // permits are parked in shared storage for the whole run, so no
+        // slot is ever released: exactly total_cap admissions can
+        // succeed across all threads, however they interleave
+        let held = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let g = g.clone();
+            let held = held.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    if let Ok(p) = g.try_admit("t") {
+                        held.lock().unwrap().push(p);
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(held.lock().unwrap().len(), 10);
+        assert_eq!(g.in_flight(), 10);
+        held.lock().unwrap().clear();
+        assert_eq!(g.in_flight(), 0);
     }
 }

@@ -11,7 +11,10 @@
 //! * [`deltastore`]  — delta residency manager: loads `.bdd` files,
 //!   LRU-evicts against a memory budget (the "hot-swap" half of the
 //!   paper's storage story).
-//! * [`admission`]   — queue caps + backpressure policy.
+//! * [`admission`]   — queue caps + backpressure policy, reused at two
+//!   levels: per-worker enqueue caps, and the cluster front door's
+//!   thread-safe [`admission::AdmissionGate`] (global in-flight budget
+//!   with typed rejections).
 //! * [`metrics`]     — counters/latency histograms, text exposition.
 
 pub mod admission;

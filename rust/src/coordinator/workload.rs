@@ -19,12 +19,29 @@ pub struct TraceEvent {
     pub max_new_tokens: usize,
 }
 
+/// Shape of the arrival process over time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Constant-rate Poisson arrivals (the classic open-loop trace).
+    Steady,
+    /// Square-wave Poisson: the rate alternates between the base
+    /// `rate` and `rate * high_mult` every `half_period` seconds —
+    /// the autoscaler's natural adversary (sustained bursts it must
+    /// absorb, quiet valleys it must drain back down in). The rate at
+    /// each arrival is the phase the *previous* arrival landed in (a
+    /// standard piecewise approximation — exact at every point except
+    /// the instant a phase flips, which is far finer than any
+    /// control-loop tick).
+    Burst { half_period: f64, high_mult: f64 },
+}
+
 /// Trace generation parameters.
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
     pub n_tenants: usize,
     pub n_requests: usize,
-    /// Mean arrival rate, requests/second (Poisson process).
+    /// Mean arrival rate, requests/second (Poisson process). Under
+    /// [`ArrivalPattern::Burst`] this is the *valley* rate.
     pub rate: f64,
     /// Zipf exponent for tenant popularity (0 = uniform; ~1 = heavy
     /// skew — a few hot fine-tunes, a long cold tail).
@@ -32,12 +49,14 @@ pub struct TraceConfig {
     pub min_tokens: usize,
     pub max_tokens: usize,
     pub seed: u64,
+    pub pattern: ArrivalPattern,
 }
 
 impl Default for TraceConfig {
     fn default() -> Self {
         Self { n_tenants: 4, n_requests: 32, rate: 50.0, zipf_s: 0.9,
-               min_tokens: 8, max_tokens: 24, seed: 0 }
+               min_tokens: 8, max_tokens: 24, seed: 0,
+               pattern: ArrivalPattern::Steady }
     }
 }
 
@@ -72,6 +91,21 @@ impl Zipf {
     }
 }
 
+/// Instantaneous arrival rate at time `t` under a pattern.
+pub fn rate_at(cfg: &TraceConfig, t: f64) -> f64 {
+    match cfg.pattern {
+        ArrivalPattern::Steady => cfg.rate,
+        ArrivalPattern::Burst { half_period, high_mult } => {
+            let phase = (t / half_period.max(1e-9)) as u64;
+            if phase % 2 == 1 {
+                cfg.rate * high_mult
+            } else {
+                cfg.rate
+            }
+        }
+    }
+}
+
 /// Generate a reproducible trace.
 pub fn generate(cfg: &TraceConfig) -> Vec<TraceEvent> {
     let mut rng = Rng::new(cfg.seed);
@@ -79,9 +113,9 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceEvent> {
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(cfg.n_requests);
     for _ in 0..cfg.n_requests {
-        // exponential inter-arrival
+        // exponential inter-arrival at the current phase's rate
         let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
-        t += -(1.0 - u).ln() / cfg.rate;
+        t += -(1.0 - u).ln() / rate_at(cfg, t);
         let tu = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
         let tenant = zipf.sample(tu);
         let span = cfg.max_tokens - cfg.min_tokens + 1;
@@ -180,6 +214,54 @@ mod tests {
         let z = Zipf::new(7, 0.8);
         let total: f64 = (0..7).map(|k| z.pmf(k)).sum();
         assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn burst_pattern_alternates_rates() {
+        let cfg = TraceConfig {
+            rate: 10.0,
+            pattern: ArrivalPattern::Burst {
+                half_period: 1.0, high_mult: 5.0,
+            },
+            ..Default::default()
+        };
+        assert_eq!(rate_at(&cfg, 0.2), 10.0);   // valley
+        assert_eq!(rate_at(&cfg, 1.5), 50.0);   // burst
+        assert_eq!(rate_at(&cfg, 2.9), 10.0);   // valley again
+    }
+
+    #[test]
+    fn burst_trace_is_denser_in_burst_phases() {
+        let cfg = TraceConfig {
+            n_requests: 4000,
+            rate: 50.0,
+            pattern: ArrivalPattern::Burst {
+                half_period: 1.0, high_mult: 8.0,
+            },
+            ..Default::default()
+        };
+        let ev = generate(&cfg);
+        for w in ev.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        // count arrivals landing in burst vs valley half-periods
+        let (mut burst, mut valley) = (0usize, 0usize);
+        for e in &ev {
+            if (e.at as u64) % 2 == 1 {
+                burst += 1;
+            } else {
+                valley += 1;
+            }
+        }
+        assert!(burst > valley * 3,
+                "burst {burst} vs valley {valley}: square wave lost");
+        // same config, same seed -> identical trace (determinism holds
+        // for the time-varying pattern too)
+        let ev2 = generate(&cfg);
+        assert_eq!(ev.len(), ev2.len());
+        for (a, b) in ev.iter().zip(&ev2) {
+            assert!((a.at - b.at).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -57,8 +57,16 @@ pub type Model = HashMap<String, RawTensor>;
 /// owning codec via [`downcast`].
 pub trait Payload: Any {
     fn as_any(&self) -> &dyn Any;
-    /// Host bytes this payload occupies while resident — the unit of the
-    /// delta store's byte budget and of per-codec accounting.
+    /// Host bytes this payload occupies while resident.
+    ///
+    /// **Contract**: this is the single currency the rest of the stack
+    /// budgets in — the delta store's eviction budget, the per-codec
+    /// accounting in the metrics exposition, and the delta-aware
+    /// placement weight all charge exactly this number. It must
+    /// reflect what is actually held in memory *after* load-time
+    /// transforms: a multi-level `bitdelta` payload truncated to a
+    /// fidelity tier reports the truncated (level-scaled) size, not
+    /// the artifact's on-disk size.
     fn resident_bytes(&self) -> usize;
 }
 
@@ -121,6 +129,15 @@ pub trait DeltaCodec {
     /// `payloads.len()` repeat the last payload — padding slots are
     /// masked by engine bookkeeping but must hold valid data) into the
     /// executable's positional ABI.
+    ///
+    /// Multi-level codecs that raise a mixed-tier batch to one
+    /// homogeneous level count must pad the shallower slots with the
+    /// **zero-scale padding convention**: an all-zero mask plane with
+    /// scale `0.0` contributes exactly nothing to the decomposed
+    /// forward, so every tenant's output stays bit-identical to being
+    /// served alone at its own tier (pinned by the codec tests). A
+    /// codec that retargets a different executable for the raised tier
+    /// reports it in [`StackedArgs::exec_kind`].
     fn assemble(&self, rt: &Runtime, cfg: &ModelConfig,
                 payloads: &[&dyn Payload], batch: usize)
                 -> Result<StackedArgs>;

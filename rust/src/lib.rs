@@ -16,10 +16,11 @@
 //!   `dense` — behind one trait, with mixed-format decode batches), the
 //!   multi-tenant serving engine (router, continuous batcher, delta
 //!   hot-swap store, KV-cache manager), the **cluster layer**
-//!   ([`cluster`]: N worker engines behind one handle, with pluggable
-//!   delta-aware tenant placement and failover), the memory simulator,
-//!   the eval harness, and every benchmark that regenerates the paper's
-//!   tables and figures.
+//!   ([`cluster`]: an elastic set of worker engines behind one handle,
+//!   with pluggable delta-aware tenant placement, failover,
+//!   queue-pressure autoscaling with graceful drain, and front-door
+//!   admission control), the memory simulator, the eval harness, and
+//!   every benchmark that regenerates the paper's tables and figures.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `repro` binary and the examples are self-contained.
@@ -38,7 +39,8 @@
 //! println!("compression factor: {:.1}x", delta.compression_factor(&cfg));
 //! ```
 //!
-//! See `examples/` for the serving path.
+//! See `examples/` for the serving path, the repo-level `README.md`
+//! for the CLI tour, and `docs/ARCHITECTURE.md` for the layer map.
 
 pub mod cluster;
 pub mod config;

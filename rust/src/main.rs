@@ -49,6 +49,8 @@ COMMANDS:
                [--workers N] [--policy affinity|least-loaded|delta-aware]
                [--codec C] [--batch N] [--requests N] [--budget-mb MB]
                [--model sim-s] [--tenant-levels t1=2,...]
+               [--admission-budget N]  (global in-flight cap at the
+               cluster front door; 0 disables; default 256)
                (tiered tenants pay level-scaled delta bytes in placement)
   codecs       list the registered delta codecs
   table1       BitDelta vs SVD quality (paper Table 1)
@@ -66,7 +68,14 @@ COMMANDS:
                [--requests N] [--rate R] [--zipf S] [--batch N]
                [--workers N] [--policy P] [--clients N] [--tenants N]
                [--budget-mb MB] [--tenant-levels t1=2,...]
-               (workers > 1 runs the cluster)
+               [--trace steady|burst] [--burst-period S] [--burst-mult M]
+               (burst = square-wave Poisson: rate alternates R and R*M
+               every S seconds — the autoscaler's natural adversary)
+               [--autoscale MIN..MAX] (elastic worker count: scale up
+               under sustained queue pressure, graceful-drain down when
+               idle) [--admission-budget N] (cluster front-door
+               in-flight cap; 0 disables; default 256)
+               (workers > 1 or --autoscale runs the cluster)
   extras-quant INT8-compress a delta's embeddings/head (paper's
                future-work extension) [--tenant sim-s-chat]
 ";
@@ -145,6 +154,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
             args.get_usize("batch", 4)?,
             args.get_usize("requests", 16)?,
             args.get_usize("budget-mb", 256)?,
+            args.get_usize("admission-budget", 256)?,
             args.get_or("model", "sim-s"))?,
         "codecs" => {
             let registry = CodecRegistry::builtin();
@@ -192,9 +202,16 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
             let workers = args.get_usize("workers", 1)?;
             let tenant_levels =
                 parse_tenant_levels(args.get("tenant-levels"))?;
-            if workers <= 1 {
+            let autoscale = parse_autoscale(args.get("autoscale"))?;
+            let pattern = parse_trace_pattern(
+                args.get_or("trace", "steady"),
+                args.get("burst-period").map(|v| v.parse())
+                    .transpose()?.unwrap_or(1.0),
+                args.get("burst-mult").map(|v| v.parse())
+                    .transpose()?.unwrap_or(6.0))?;
+            if workers <= 1 && autoscale.is_none() {
                 loadtest(&artifacts, requests, rate, zipf_s, batch,
-                         tenant_levels)?
+                         tenant_levels, pattern)?
             } else {
                 loadtest_cluster(
                     &artifacts, requests, rate, zipf_s, batch, workers,
@@ -202,7 +219,8 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
                     args.get_usize("clients", 0)?,
                     args.get_usize("tenants", 0)?,
                     args.get_usize("budget-mb", 256)?,
-                    tenant_levels)?
+                    args.get_usize("admission-budget", 256)?,
+                    autoscale, pattern, tenant_levels)?
             }
         }
         "extras-quant" => extras_quant(
@@ -243,6 +261,43 @@ needs >= 1 mask level");
         out.insert(tenant.to_string(), k);
     }
     Ok(out)
+}
+
+/// Parse `--autoscale 2..6` into `(min, max)` worker bounds.
+fn parse_autoscale(spec: Option<&str>)
+                   -> Result<Option<(usize, usize)>> {
+    let Some(spec) = spec else { return Ok(None) };
+    let (lo, hi) = spec.split_once("..").with_context(
+        || format!("--autoscale {spec:?}: want MIN..MAX, e.g. 2..6"))?;
+    let lo: usize = lo.trim().parse().with_context(
+        || format!("--autoscale {spec:?}: MIN must be an integer"))?;
+    let hi: usize = hi.trim().parse().with_context(
+        || format!("--autoscale {spec:?}: MAX must be an integer"))?;
+    if lo == 0 || hi < lo {
+        bail!("--autoscale {spec:?}: need 1 <= MIN <= MAX");
+    }
+    Ok(Some((lo, hi)))
+}
+
+/// Parse `--trace steady|burst` (+ burst shape flags) into a pattern.
+fn parse_trace_pattern(name: &str, period: f64, mult: f64)
+                       -> Result<bitdelta::coordinator::workload::
+                                 ArrivalPattern> {
+    use bitdelta::coordinator::workload::ArrivalPattern;
+    match name {
+        "steady" => Ok(ArrivalPattern::Steady),
+        "burst" => {
+            if period <= 0.0 || mult < 1.0 {
+                bail!("--trace burst: need --burst-period > 0 and \
+--burst-mult >= 1");
+            }
+            Ok(ArrivalPattern::Burst {
+                half_period: period, high_mult: mult,
+            })
+        }
+        other => bail!("unknown --trace {other:?} — available: \
+steady, burst"),
+    }
 }
 
 fn config_by_name(name: &str) -> Result<ModelConfig> {
@@ -346,9 +401,11 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
                  codec: &str,
                  tenant_levels: std::collections::HashMap<String, usize>,
                  batch: usize, requests: usize,
-                 budget_mb: usize, model: &str) -> Result<()> {
+                 budget_mb: usize, admission_budget: usize,
+                 model: &str) -> Result<()> {
     use bitdelta::cluster::{policy_by_name, tenant_profiles, Cluster,
                             ClusterConfig};
+    use bitdelta::coordinator::admission::AdmissionPolicy;
 
     let registry = CodecRegistry::builtin();
     let codec = registry.get(codec)?.name();   // validate + canonicalize
@@ -363,6 +420,10 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
     let ccfg = ClusterConfig {
         policy: policy_by_name(policy_name)?,
         delta_budget_bytes: budget_mb << 20,
+        admission: (admission_budget > 0).then(|| {
+            AdmissionPolicy::for_budget(admission_budget,
+                                        profiles.len())
+        }),
     };
     let cluster = Cluster::spawn_engines(&ccfg, &ec, workers, profiles)?;
     let handle = cluster.handle();
@@ -451,19 +512,28 @@ A100-80GB: {}", gb(nv.total_bytes), nv.fits_all);
     Ok(())
 }
 
-/// Cluster loadtest: replay a Poisson/Zipf trace from several client
-/// threads, honoring arrival times, against an engine-backed cluster.
+/// Cluster loadtest: replay a Poisson/Zipf trace (optionally a
+/// square-wave burst) from several client threads, honoring arrival
+/// times, against an engine-backed cluster — optionally elastic
+/// (`--autoscale MIN..MAX`) and admission-controlled
+/// (`--admission-budget N`).
 #[allow(clippy::too_many_arguments)]
 fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
                     zipf_s: f64, batch: usize, workers: usize,
                     policy: &str, clients: usize, trace_tenants: usize,
-                    budget_mb: usize,
+                    budget_mb: usize, admission_budget: usize,
+                    autoscale: Option<(usize, usize)>,
+                    pattern: bitdelta::coordinator::workload::
+                        ArrivalPattern,
                     tenant_levels: std::collections::HashMap<String,
                                                              usize>)
                     -> Result<()> {
+    use std::time::{Duration, Instant};
+
     use bitdelta::cluster::{apply_trace_weights, policy_by_name,
-                            replay_trace, tenant_profiles, Cluster,
-                            ClusterConfig};
+                            replay_trace, tenant_profiles, Autoscaler,
+                            AutoscalerConfig, Cluster, ClusterConfig};
+    use bitdelta::coordinator::admission::AdmissionPolicy;
     use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
 
     let mut ec = EngineConfig::new(artifacts);
@@ -485,41 +555,103 @@ fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
         min_tokens: 8,
         max_tokens: 24,
         seed: 7,
+        pattern,
     };
     let trace = generate(&tcfg);
     let st = stats(&trace, n_ranks);
     apply_trace_weights(&mut profiles, &st.per_tenant);
     let names: Vec<String> =
         profiles.iter().map(|t| t.name.clone()).collect();
-    println!("trace: {} requests over {:.2}s, hottest rank {:.0}% of \
-traffic, {}/{n_ranks} ranks hit, {} engine tenants",
-             st.n, st.duration, st.hottest_share * 100.0, st.tenants_hit,
-             names.len());
+    let tenant_levels_list: Vec<usize> =
+        profiles.iter().map(|p| p.levels).collect();
+    println!("trace: {} requests over {:.2}s ({:?}), hottest rank \
+{:.0}% of traffic, {}/{n_ranks} ranks hit, {} engine tenants",
+             st.n, st.duration, pattern, st.hottest_share * 100.0,
+             st.tenants_hit, names.len());
 
+    let (min_w, max_w) = autoscale.unwrap_or((workers, workers));
+    let initial = workers.clamp(min_w, max_w);
     let ccfg = ClusterConfig {
         policy: policy_by_name(policy)?,
         delta_budget_bytes: budget_mb << 20,
+        admission: (admission_budget > 0).then(|| {
+            AdmissionPolicy::for_budget(admission_budget,
+                                        profiles.len())
+        }),
     };
-    let cluster = Cluster::spawn_engines(&ccfg, &ec, workers, profiles)?;
+    let cluster = Cluster::spawn_engines(&ccfg, &ec, initial, profiles)?;
     let handle = cluster.handle();
+    let scaler = autoscale.map(|(lo, hi)| {
+        Autoscaler::spawn(handle.clone(), AutoscalerConfig {
+            min_workers: lo,
+            max_workers: hi,
+            // pressured when outstanding work exceeds ~2 full batches
+            // per worker; slack well under one batch
+            high_watermark: (2 * batch.max(1)) as f64,
+            low_watermark: 0.5,
+            up_ticks: 3,
+            down_ticks: 8,
+            cooldown_ticks: 3,
+            interval: Duration::from_millis(30),
+        })
+    });
     let clients = if clients == 0 {
-        (workers * 2).clamp(2, 8)
+        (initial * 2).clamp(2, 8)
     } else {
         clients
     };
-    println!("cluster up: {workers} workers, policy {policy}, \
-{clients} client threads");
+    match autoscale {
+        Some((lo, hi)) => println!(
+            "cluster up: {initial} workers (elastic {lo}..{hi}), \
+policy {policy}, {clients} client threads"),
+        None => println!("cluster up: {initial} workers, policy \
+{policy}, {clients} client threads"),
+    }
 
     let r = replay_trace(&handle, &trace, &names, &demo_prompts(),
                          clients)?;
+
+    // let the autoscaler drain back down before the final report so
+    // the scale-down half of the story is visible in one run
+    if let Some(s) = scaler {
+        let t0 = Instant::now();
+        while handle.active_workers() > min_w
+            && t0.elapsed() < Duration::from_secs(20) {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        s.stop();
+    }
+
     println!("served {} requests / {} tokens in {:.2}s -> \
-{:.1} tok/s ({} errors)",
+{:.1} tok/s ({} errors, {} admission-rejected)",
              r.served(), r.tokens, r.wall_seconds, r.tok_per_s(),
-             r.errors);
+             r.errors, r.rejected);
     if r.served() > 0 {
         println!("latency p50 {:.0} ms, p99 {:.0} ms, max {:.0} ms",
                  r.quantile_ms(0.5), r.quantile_ms(0.99),
                  r.quantile_ms(1.0));
+    }
+    if autoscale.is_some() {
+        let (ups, downs) = handle.scale_events();
+        println!("autoscale: peak {} worker slots, {} scale-up(s), \
+{} graceful drain(s), {} active at end",
+                 handle.n_workers(), ups, downs,
+                 handle.active_workers());
+        // the elasticity price at the paper's 7B scale: each scale-up
+        // pays one base copy; the deltas it hosts ride along ~free.
+        // Priced at the ceiling — the new worker hosting every tenant
+        // replica — since bin-packing policies may re-place only a
+        // subset onto it.
+        let spec = ModelSpec::llama2_7b();
+        let cost = memory::scale_up_cost(&spec, &tenant_levels_list,
+                                         batch, 128);
+        let gb = |b: usize| b as f64 / (1024.0 * 1024.0 * 1024.0);
+        println!("scale-up marginal cost @ {} (ceiling: new worker \
+hosts all {} tenant replicas): {:.2} GB base + {:.2} GB deltas + \
+{:.2} GB kv/act = {:.2} GB",
+                 spec.name, tenant_levels_list.len(),
+                 gb(cost.base_bytes), gb(cost.delta_bytes),
+                 gb(cost.kv_act_bytes), gb(cost.total_bytes));
     }
     println!("\n{}", handle.metrics());
     cluster.shutdown()?;
@@ -585,7 +717,8 @@ bitdelta fits all tested batches\n"));
 
 fn loadtest(artifacts: &Path, requests: usize, rate: f64,
             zipf_s: f64, batch: usize,
-            tenant_levels: std::collections::HashMap<String, usize>)
+            tenant_levels: std::collections::HashMap<String, usize>,
+            pattern: bitdelta::coordinator::workload::ArrivalPattern)
             -> Result<()> {
     use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
 
@@ -602,6 +735,7 @@ fn loadtest(artifacts: &Path, requests: usize, rate: f64,
         min_tokens: 8,
         max_tokens: 24,
         seed: 7,
+        pattern,
     };
     let trace = generate(&tcfg);
     let st = stats(&trace, tenants.len());

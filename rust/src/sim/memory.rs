@@ -309,6 +309,45 @@ fn accumulate_cluster(spec: &ModelSpec, per_worker: &[(usize, usize)],
     point
 }
 
+/// Marginal memory price of one elastic scale-up, itemized. The
+/// autoscaler's economics in one struct: the new worker pays a full
+/// base-model copy (`base_bytes` — identical everywhere, nothing
+/// tenant-specific moves) plus the 1-bit deltas re-placed onto it
+/// (`delta_bytes`, ~1/16 of dense each) plus KV-cache/activations for
+/// the sequences it will decode. For any realistic tenant count the
+/// base copy dominates — which is exactly why BitDelta makes elastic
+/// capacity cheap: tenants (and their replicas) ride along nearly
+/// free once the base is paid for.
+#[derive(Debug, Clone)]
+pub struct ScaleUpCost {
+    pub base_bytes: usize,
+    pub delta_bytes: usize,
+    pub kv_act_bytes: usize,
+    pub total_bytes: usize,
+}
+
+/// Price scaling a BitDelta cluster from N to N+1 workers:
+/// `replica_levels` lists the fidelity tier of every delta replica the
+/// new worker will host (one entry per replica, tier ≥ 1), and the
+/// worker decodes `seqs` concurrent sequences of length `seq`.
+/// Consistent with [`cluster_account_levels`]: the returned total is
+/// exactly that accounting's delta between the N- and (N+1)-worker
+/// clusters.
+pub fn scale_up_cost(spec: &ModelSpec, replica_levels: &[usize],
+                     seqs: usize, seq: usize) -> ScaleUpCost {
+    let base_bytes = spec.dense_bytes();
+    let delta_bytes = replica_levels.iter()
+        .map(|&k| spec.delta_bytes_levels(k.max(1))).sum();
+    let kv_act_bytes =
+        (spec.kv_bytes(seq) + spec.act_bytes()) * seqs;
+    ScaleUpCost {
+        base_bytes,
+        delta_bytes,
+        kv_act_bytes,
+        total_bytes: base_bytes + delta_bytes + kv_act_bytes,
+    }
+}
+
 /// Figure 5 series: memory vs batch for one mode.
 pub fn figure5_series(spec: &ModelSpec, mode: ServingMode,
                       batches: &[usize], seq: usize, capacity: usize)
@@ -485,6 +524,45 @@ mod tests {
         assert_eq!(hi.total_bytes - lo.total_bytes, 3 * per_level);
         assert_eq!(hi.weight_bytes, lo.weight_bytes);
         assert_eq!(hi.kv_bytes, lo.kv_bytes);
+    }
+
+    #[test]
+    fn scale_up_cost_is_the_cluster_account_delta() {
+        // pricing one more worker == the cluster accounting difference
+        // between the N-worker and (N+1)-worker clusters
+        let spec = ModelSpec::llama2_7b();
+        let new_worker = vec![1usize, 2, 4];
+        let before = cluster_account_levels(
+            &spec, &[vec![1, 1]], 8, 128, A100_80GB);
+        let after = cluster_account_levels(
+            &spec, &[vec![1, 1], new_worker.clone()], 8, 128,
+            A100_80GB);
+        let cost = scale_up_cost(&spec, &new_worker, 8, 128);
+        assert_eq!(cost.total_bytes,
+                   after.total_bytes - before.total_bytes);
+        assert_eq!(cost.base_bytes, spec.dense_bytes());
+    }
+
+    #[test]
+    fn scale_up_cost_base_copy_dominates_deltas() {
+        // the elasticity price is the base copy: 8 tier-1 delta
+        // replicas on the new worker together cost less than the one
+        // base — where the naive baseline would pay 8 more dense
+        // models for the same worker
+        let spec = ModelSpec::llama2_7b();
+        let cost = scale_up_cost(&spec, &[1; 8], 8, 128);
+        assert!(cost.delta_bytes < cost.base_bytes,
+                "deltas {} vs base {}", cost.delta_bytes,
+                cost.base_bytes);
+        let naive_worker = 8 * spec.dense_bytes();
+        assert!(cost.total_bytes * 3 < naive_worker,
+                "elastic worker {} vs naive {}", cost.total_bytes,
+                naive_worker);
+        // zero-tenant scale-up still pays the base + kv/act
+        let empty = scale_up_cost(&spec, &[], 8, 128);
+        assert_eq!(empty.delta_bytes, 0);
+        assert_eq!(empty.total_bytes,
+                   empty.base_bytes + empty.kv_act_bytes);
     }
 
     #[test]
