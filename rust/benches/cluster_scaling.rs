@@ -12,7 +12,13 @@
 //! loadtest --workers N` uses).
 //!
 //! Emits a human table plus one JSON object per row (the usual bench
-//! JSON, parseable line-by-line).
+//! JSON, parseable line-by-line), and archives the run to
+//! `BENCH_cluster_scaling.json` (shared snapshot schema) for the
+//! `scripts/compare_bench.py` baseline gate — with an empty row set
+//! when artifacts are missing, so CI always has the artifact.
+//!
+//! Flags: `--smoke` (or env `CLUSTER_SCALING_SMOKE=1`) = 32 requests,
+//! workers {1, 2} — a trend sample for CI, not a measurement.
 
 use std::collections::BTreeMap;
 
@@ -23,6 +29,7 @@ use bitdelta::cluster::{apply_trace_weights, policy_by_name,
 use bitdelta::coordinator::workload::{generate, stats, ArrivalPattern,
                                       TraceConfig, TraceEvent};
 use bitdelta::serving::engine::EngineConfig;
+use bitdelta::util::bench::write_snapshot;
 use bitdelta::util::json::Json;
 
 const PROMPT: &str = "Q: what color is the sky ?\nA:";
@@ -30,11 +37,12 @@ const PROMPT: &str = "Q: what color is the sky ?\nA:";
 struct Summary {
     workers: usize,
     policy: &'static str,
+    smoke: bool,
     report: ReplayReport,
 }
 
 fn run_combo(workers: usize, policy: &'static str, trace: &[TraceEvent],
-             counts: &[usize], batch: usize)
+             counts: &[usize], batch: usize, smoke: bool)
              -> Result<Option<Summary>> {
     let mut ec = EngineConfig::new("artifacts");
     ec.batch = batch;
@@ -62,7 +70,7 @@ fn run_combo(workers: usize, policy: &'static str, trace: &[TraceEvent],
     let report = replay_trace(&handle, trace, &names, &[PROMPT],
                               clients)?;
     cluster.shutdown()?;
-    Ok(Some(Summary { workers, policy, report }))
+    Ok(Some(Summary { workers, policy, smoke, report }))
 }
 
 fn json_row(s: &Summary) -> Json {
@@ -81,19 +89,31 @@ fn json_row(s: &Summary) -> Json {
              Json::Num(round1(s.report.quantile_ms(0.50))));
     o.insert("p99_ms".to_string(),
              Json::Num(round1(s.report.quantile_ms(0.99))));
+    o.insert("threads".to_string(),
+             Json::Num(s.report.kernel_threads as f64));
+    o.insert("dispatch".to_string(),
+             Json::Str(s.report.dispatch_tier.to_string()));
+    o.insert("smoke".to_string(), Json::Bool(s.smoke));
     Json::Obj(o)
 }
 
 fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CLUSTER_SCALING_SMOKE").is_ok();
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("artifacts missing — run `make artifacts` first");
+        // still write the snapshot so the CI artifact set is stable
+        match write_snapshot("cluster_scaling", smoke, Vec::new()) {
+            Ok(p) => println!("wrote {} (empty)", p.display()),
+            Err(e) => eprintln!("snapshot write failed: {e}"),
+        }
         return Ok(());
     }
     // Zipf-skewed open-loop trace: 8 ranks at s=0.9, arrival rate high
     // enough that a single worker saturates and queues
     let tcfg = TraceConfig {
         n_tenants: 8,
-        n_requests: 96,
+        n_requests: if smoke { 32 } else { 96 },
         rate: 400.0,
         zipf_s: 0.9,
         min_tokens: 8,
@@ -112,9 +132,11 @@ hottest {:.0}% of traffic",
              "p99 ms", "errors");
 
     let mut rows: Vec<Summary> = Vec::new();
-    for workers in [1usize, 2, 4] {
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    for &workers in worker_counts {
         for policy in ["affinity", "least-loaded", "delta-aware"] {
-            match run_combo(workers, policy, &trace, &st.per_tenant, 4)? {
+            match run_combo(workers, policy, &trace, &st.per_tenant, 4,
+                            smoke)? {
                 Some(s) => {
                     println!("{:<8} {:<14} {:>8} {:>10.1} {:>9.1} \
 {:>9.1} {:>7}",
@@ -132,18 +154,24 @@ executable for this batch size)"),
     }
 
     println!("\n--- JSON ---");
-    for s in &rows {
-        println!("{}", json_row(s));
+    let json_rows: Vec<Json> = rows.iter().map(json_row).collect();
+    for r in &json_rows {
+        println!("{r}");
+    }
+    match write_snapshot("cluster_scaling", smoke, json_rows) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nsnapshot write failed: {e}"),
     }
 
-    // the scaling claim: 4 delta-aware workers beat 1 worker
+    // the scaling claim: the widest delta-aware config beats 1 worker
+    let wmax = *worker_counts.last().unwrap();
     let thr = |w: usize, p: &str| rows.iter()
         .find(|s| s.workers == w && s.policy == p)
         .map(|s| s.report.tok_per_s());
-    if let (Some(t4), Some(t1)) = (thr(4, "delta-aware"),
+    if let (Some(tw), Some(t1)) = (thr(wmax, "delta-aware"),
                                    thr(1, "delta-aware")) {
-        println!("\ndelta-aware 4-worker vs 1-worker aggregate decode \
-throughput: {t4:.1} vs {t1:.1} tok/s ({:.2}x)", t4 / t1);
+        println!("\ndelta-aware {wmax}-worker vs 1-worker aggregate \
+decode throughput: {tw:.1} vs {t1:.1} tok/s ({:.2}x)", tw / t1);
     }
     Ok(())
 }

@@ -7,22 +7,69 @@
 //!              we shrink one notch to keep single-core runtime sane —
 //!              the byte ratios that set the curve shapes are
 //!              size-independent).
+//! Engine panel: the packed-GEMV kernel engine swept over dispatch
+//!              tier (scalar Four-Russians vs the detected SIMD tier)
+//!              × worker-pool width {1, 2, 4} — the perf-trajectory
+//!              panel behind the `simd_vs_scalar_1t_speedup` and
+//!              `scaling_{2,4}t_speedup` summary metrics.
 //!
 //! Expected shape (paper §4.3): backbone ~flat in B (streamed once);
 //! BitDelta/S-LoRA delta terms scale with B but are ~16-32x cheaper per
 //! tenant; the naive per-tenant dense path scales with B at full weight
 //! cost.
+//!
+//! Every measurement is also emitted as a JSON row (after
+//! `--- JSON ---`) and the whole run is archived to `BENCH_fig4.json`
+//! via [`bitdelta::util::bench::write_snapshot`] for the CI perf gate.
+//!
+//! Flags: `--smoke` (or env `FIG4_SMOKE=1`) = tiny sizes, 2
+//! iterations — a trend sample for CI, not a measurement.
 
+use std::collections::BTreeMap;
+
+use bitdelta::gemm::dispatch::{self, Tier};
 use bitdelta::gemm::{batched_binary_gemv, batched_dense_gemv,
-                     batched_lora_gemv, dense_gemv};
+                     batched_lora_gemv, dense_gemv, try_binary_gemv};
 use bitdelta::gemm::dense::per_tenant_dense_gemv;
 use bitdelta::tensor::Tensor;
-use bitdelta::util::bench::{black_box, Bench};
+use bitdelta::util::bench::{black_box, write_snapshot, Bench,
+                            Measurement};
+use bitdelta::util::json::Json;
+
+fn round2(v: f64) -> f64 {
+    (v * 100.0).round() / 100.0
+}
+
+/// One measurement as a snapshot row, stamped with the kernel config
+/// that was active while it ran.
+fn row(m: &Measurement, smoke: bool) -> Json {
+    let us = |d: std::time::Duration| round2(d.as_secs_f64() * 1e6);
+    let mut o = BTreeMap::new();
+    o.insert("series".to_string(), Json::Str(m.name.clone()));
+    o.insert("mean_us".to_string(), Json::Num(us(m.mean())));
+    o.insert("p50_us".to_string(), Json::Num(us(m.quantile(0.5))));
+    o.insert("p99_us".to_string(), Json::Num(us(m.quantile(0.99))));
+    o.insert("threads".to_string(),
+             Json::Num(dispatch::pool_threads() as f64));
+    o.insert("dispatch".to_string(),
+             Json::Str(dispatch::active_tier().name().to_string()));
+    o.insert("smoke".to_string(), Json::Bool(smoke));
+    Json::Obj(o)
+}
 
 fn main() {
-    println!("=== Figure 4 (left): latency vs hidden size, B=1 ===");
-    let mut bench = Bench::new(3, 15);
-    for n in [512usize, 1024, 2048, 4096] {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("FIG4_SMOKE").is_ok();
+    let sizes: &[usize] = if smoke { &[512] } else { &[512, 1024, 2048, 4096] };
+    let batches: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8, 16, 32] };
+    let nb = if smoke { 512usize } else { 2048 };
+    let (warmup, iters) = if smoke { (0, 2) } else { (3, 15) };
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("=== Figure 4 (left): latency vs hidden size, B=1{} ===",
+             if smoke { " (smoke)" } else { "" });
+    let mut bench = Bench::new(warmup, iters);
+    for &n in sizes {
         let m = n;
         let w = Tensor::randn(vec![n, m], 1);
         let bits = vec![0xA5u8; n * m / 8];
@@ -31,34 +78,39 @@ fn main() {
         let x = Tensor::randn(vec![m], 4);
         let mut y = vec![0f32; n];
 
-        bench.run(format!("backbone/dense n={n}"), || {
+        let mm = bench.run(format!("backbone/dense n={n}"), || {
             dense_gemv(w.data(), n, m, x.data(), &mut y);
             black_box(&y);
-        });
-        bench.run(format!("delta/bitdelta n={n}"), || {
+        }).clone();
+        rows.push(row(&mm, smoke));
+        let mm = bench.run(format!("delta/bitdelta n={n}"), || {
             batched_binary_gemv(&bits, n, m, x.data(), &[0.01], 1,
                                 &mut y);
             black_box(&y);
-        });
+        }).clone();
+        rows.push(row(&mm, smoke));
         // §Perf ablation: the pre-optimization bit-extract kernel
-        bench.run(format!("delta/bitdelta-bitextract n={n}"), || {
+        let mm = bench.run(format!("delta/bitdelta-bitextract n={n}"),
+                           || {
             bitdelta::gemm::binary::binary_gemv_bitextract(
                 &bits, n, m, x.data(), 0.01, &mut y);
             black_box(&y);
-        });
-        bench.run(format!("delta/slora-r128 n={n}"), || {
+        }).clone();
+        rows.push(row(&mm, smoke));
+        let mm = bench.run(format!("delta/slora-r128 n={n}"), || {
             batched_lora_gemv(a.data(), bu.data(), 128, n, m, x.data(),
                               1, &mut y);
             black_box(&y);
-        });
+        }).clone();
+        rows.push(row(&mm, smoke));
     }
 
-    println!("\n=== Figure 4 (right): latency vs batch, N=M=2048 ===");
-    let n = 2048usize;
+    println!("\n=== Figure 4 (right): latency vs batch, N=M={nb} ===");
+    let n = nb;
     let m = n;
     let w = Tensor::randn(vec![n, m], 5);
-    let mut bench2 = Bench::new(2, 10);
-    for b in [1usize, 2, 4, 8, 16, 32] {
+    let mut bench2 = Bench::new(warmup.min(2), iters.min(10));
+    for &b in batches {
         let bits = vec![0x5Au8; b * n * m / 8];
         let alphas = vec![0.01f32; b];
         let a = Tensor::randn(vec![b, 128, m], 6);
@@ -67,28 +119,106 @@ fn main() {
         let ws = Tensor::randn(vec![b, n, m], 9);
         let mut ys = vec![0f32; b * n];
 
-        bench2.run(format!("backbone b={b}"), || {
+        let mm = bench2.run(format!("backbone b={b}"), || {
             batched_dense_gemv(w.data(), n, m, xs.data(), b, &mut ys);
             black_box(&ys);
-        });
-        bench2.run(format!("bitdelta-deltas b={b}"), || {
+        }).clone();
+        rows.push(row(&mm, smoke));
+        let mm = bench2.run(format!("bitdelta-deltas b={b}"), || {
             batched_binary_gemv(&bits, n, m, xs.data(), &alphas, b,
                                 &mut ys);
             black_box(&ys);
-        });
-        bench2.run(format!("slora-deltas b={b}"), || {
+        }).clone();
+        rows.push(row(&mm, smoke));
+        let mm = bench2.run(format!("slora-deltas b={b}"), || {
             batched_lora_gemv(a.data(), bu.data(), 128, n, m, xs.data(),
                               b, &mut ys);
             black_box(&ys);
-        });
-        bench2.run(format!("naive-per-tenant b={b}"), || {
-            per_tenant_dense_gemv(ws.data(), n, m, xs.data(), b, &mut ys);
+        }).clone();
+        rows.push(row(&mm, smoke));
+        let mm = bench2.run(format!("naive-per-tenant b={b}"), || {
+            per_tenant_dense_gemv(ws.data(), n, m, xs.data(), b,
+                                  &mut ys);
             black_box(&ys);
-        });
+        }).clone();
+        rows.push(row(&mm, smoke));
+    }
+
+    // ----------------------------------------------------------------
+    // Kernel engine: dispatch tier × worker-pool width, N=M fixed.
+    // Scalar @ 1 thread is the pre-engine baseline; the detected SIMD
+    // tier at 1/2/4 threads is the trajectory CI tracks.
+    // ----------------------------------------------------------------
+    println!("\n=== kernel engine: tier x threads, N=M={nb} ===");
+    let bits = vec![0xC3u8; nb * nb / 8];
+    let x = Tensor::randn(vec![nb], 10);
+    let mut y = vec![0f32; nb];
+    let prev_forced = dispatch::forced_tier();
+    let prev_threads = dispatch::pool_threads();
+    let det = dispatch::detected_tier();
+    let tiers: Vec<Tier> = if det == Tier::Scalar {
+        vec![Tier::Scalar]
+    } else {
+        vec![Tier::Scalar, det]
+    };
+    let mut bench3 = Bench::new(warmup, iters);
+    let mut engine_us: BTreeMap<(&'static str, usize), f64> =
+        BTreeMap::new();
+    for &tier in &tiers {
+        dispatch::force_tier(Some(tier));
+        for threads in [1usize, 2, 4] {
+            dispatch::set_pool_threads(threads);
+            let mm = bench3.run(
+                format!("engine/{} t={threads}", tier.name()), || {
+                    try_binary_gemv(&bits, nb, nb, x.data(), 0.01,
+                                    &mut y).unwrap();
+                    black_box(&y);
+                }).clone();
+            engine_us.insert((tier.name(), threads),
+                             mm.mean().as_secs_f64() * 1e6);
+            rows.push(row(&mm, smoke));
+        }
+    }
+    dispatch::force_tier(prev_forced);
+    dispatch::set_pool_threads(prev_threads);
+
+    // Summary metrics the CI baseline gate watches.
+    let at = |t: &'static str, th: usize| {
+        engine_us.get(&(t, th)).copied()
+    };
+    let fast = tiers.last().map_or("scalar", |t| t.name());
+    if let (Some(s1), Some(f1), Some(f2), Some(f4)) =
+        (at("scalar", 1), at(fast, 1), at(fast, 2), at(fast, 4))
+    {
+        println!("\n{fast} vs scalar @1 thread: {:.2}x; {fast} \
+thread scaling 1->2: {:.2}x, 1->4: {:.2}x",
+                 s1 / f1, f1 / f2, f1 / f4);
+        let mut o = BTreeMap::new();
+        o.insert("series".to_string(),
+                 Json::Str("engine/summary".to_string()));
+        o.insert("fast_tier".to_string(), Json::Str(fast.to_string()));
+        o.insert("simd_vs_scalar_1t_speedup".to_string(),
+                 Json::Num(round2(s1 / f1)));
+        o.insert("scaling_2t_speedup".to_string(),
+                 Json::Num(round2(f1 / f2)));
+        o.insert("scaling_4t_speedup".to_string(),
+                 Json::Num(round2(f1 / f4)));
+        o.insert("smoke".to_string(), Json::Bool(smoke));
+        rows.push(Json::Obj(o));
     }
 
     // machine-readable series for the figure
     println!("\n--- CSV ---");
     println!("{}", bench.csv("series,us"));
     println!("{}", bench2.csv("series,us"));
+    println!("{}", bench3.csv("series,us"));
+
+    println!("--- JSON ---");
+    for r in &rows {
+        println!("{r}");
+    }
+    match write_snapshot("fig4", smoke, rows) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nsnapshot write failed: {e}"),
+    }
 }

@@ -13,7 +13,9 @@
 //!
 //! Emits a human table plus one JSON object per row (line-parseable,
 //! the usual bench JSON — CI runs this in smoke mode and archives the
-//! rows as a workflow artifact to track the perf trajectory).
+//! rows as a workflow artifact to track the perf trajectory). The run
+//! is also archived to `BENCH_level_sweep.json` (shared snapshot
+//! schema) for the `scripts/compare_bench.py` baseline gate.
 //!
 //! Flags: `--smoke` (or env `LEVEL_SWEEP_SMOKE=1`) = 1 iteration, no
 //! warmup, smaller matrix — a trend sample, not a measurement.
@@ -21,9 +23,10 @@
 use std::collections::BTreeMap;
 
 use bitdelta::delta::packing::pack_signs;
+use bitdelta::gemm::dispatch;
 use bitdelta::gemm::{binary_gemv, binary_gemv_multi};
 use bitdelta::tensor::Tensor;
-use bitdelta::util::bench::{black_box, Bench};
+use bitdelta::util::bench::{black_box, write_snapshot, Bench};
 use bitdelta::util::json::Json;
 
 fn main() {
@@ -56,10 +59,11 @@ fn main() {
             .zip(alphas.iter().copied())
             .collect();
 
-        let fused = bench.run(format!("fused   k={k}"), || {
+        let fused_m = bench.run(format!("fused   k={k}"), || {
             binary_gemv_multi(&levels, n, m, x.data(), &mut y);
             black_box(&y);
-        }).mean().as_secs_f64();
+        }).clone();
+        let fused = fused_m.mean().as_secs_f64();
 
         let looped = bench.run(format!("loop    k={k}"), || {
             y.fill(0.0);
@@ -82,10 +86,20 @@ fn main() {
         o.insert("m".into(), Json::Num(m as f64));
         o.insert("levels".into(), Json::Num(k as f64));
         o.insert("fused_us".into(), Json::Num(round2(fused * 1e6)));
+        o.insert("fused_p50_us".into(),
+                 Json::Num(round2(
+                     fused_m.quantile(0.5).as_secs_f64() * 1e6)));
+        o.insert("fused_p99_us".into(),
+                 Json::Num(round2(
+                     fused_m.quantile(0.99).as_secs_f64() * 1e6)));
         o.insert("loop_us".into(), Json::Num(round2(looped * 1e6)));
         o.insert("speedup".into(),
                  Json::Num(round2(looped / fused.max(1e-12))));
         o.insert("fused_gbps".into(), Json::Num(round2(gbps)));
+        o.insert("threads".into(),
+                 Json::Num(dispatch::pool_threads() as f64));
+        o.insert("dispatch".into(),
+                 Json::Str(dispatch::active_tier().name().into()));
         o.insert("smoke".into(), Json::Bool(smoke));
         rows.push(Json::Obj(o));
     }
@@ -93,5 +107,9 @@ fn main() {
     println!("\n--- JSON ---");
     for r in &rows {
         println!("{r}");
+    }
+    match write_snapshot("level_sweep", smoke, rows) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nsnapshot write failed: {e}"),
     }
 }

@@ -794,6 +794,11 @@ pub struct ReplayReport {
     /// overload behavior, not a failure.
     pub rejected: usize,
     pub wall_seconds: f64,
+    /// Kernel worker-pool width the engines ran with, so a replay
+    /// number can never be quoted without its thread config.
+    pub kernel_threads: usize,
+    /// Active kernel dispatch tier (`"scalar"`, `"avx2"`, `"neon"`).
+    pub dispatch_tier: &'static str,
 }
 
 impl ReplayReport {
@@ -898,6 +903,8 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
         errors: 0,
         rejected: 0,
         wall_seconds: 0.0,
+        kernel_threads: crate::gemm::dispatch::pool_threads(),
+        dispatch_tier: crate::gemm::dispatch::active_tier().name(),
     };
     for j in joins {
         let (l, t, e, rj) = j.join()

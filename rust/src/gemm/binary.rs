@@ -22,12 +22,24 @@
 //! Σ_j s_j·x_j  =  Σ_set x_j − Σ_clear x_j  =  2·Σ_set x_j − Σ_all x_j
 //! ```
 //!
-//! so the inner loop only accumulates `x_j·bit_j` (a branchless 0/1
-//! multiply the compiler vectorises) and the row finishes with one fused
-//! correction by the precomputed total. With clear padding bits and
-//! zero-padded `x`, the identity holds unchanged at any logical width.
+//! so the inner primitive is "sum the activations under a packed row's
+//! set bits" ([`RowKernel::set_sum`]) and the row finishes with one
+//! fused correction by the precomputed total. With clear padding bits
+//! and zero-padded `x`, the identity holds unchanged at any logical
+//! width.
+//!
+//! **Kernel engine.** The set-sum primitive is implemented per dispatch
+//! tier — the Four-Russians nibble-LUT walk (scalar fallback +
+//! bit-exactness reference), an AVX2 mask-expand loop, and a NEON
+//! mask-expand loop — selected once per call by
+//! [`crate::gemm::dispatch::active_tier`] (runtime feature detection,
+//! forcible via `BITDELTA_KERNEL` for tests). Rows are tiled over the
+//! shared worker pool with [`dispatch::run_rows`]; each row's
+//! arithmetic is independent, so outputs are bit-identical at every
+//! pool width.
 
 use crate::delta::packing::packed_row_bytes;
+use crate::gemm::dispatch::{self, Tier};
 
 /// Shape/padding validation failure for a packed GEMV call.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -81,35 +93,30 @@ bits (last byte {last:#04x}, logical width {m})")));
     Ok(mb)
 }
 
-/// `y = alpha * Sign(bits) @ x`; `bits` row-major `[n, ⌈m/8⌉]`,
-/// LSB-first, clear padding bits. Checked variant — see module docs.
-///
-/// Four-Russians formulation: per call, build a 16-entry partial-sum
-/// table for every 4-column group of `x` (`lut[g][v] = Σ_{bit j of v}
-/// x[4g+j]`, built incrementally in 15 adds/group); each weight byte
-/// then costs two table lookups + two adds instead of eight
-/// bit-extract/convert/multiply chains. The O(4m) table build amortises
-/// over the `n` rows, and the per-row stream is exactly the packed
-/// bytes — the kernel stays memory-bound down to L2-resident sizes
-/// (§Perf before/after: ~4-6x over the bit-extract loop).
-pub fn try_binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
-                       alpha: f32, y: &mut [f32])
-                       -> Result<(), KernelShapeError> {
-    let mb = validate(bits, n, m, x, y)?;
+/// Does the active dispatch tier have a compiled SIMD variant on this
+/// target? (A forced tier the target cannot even compile for is
+/// handled upstream: [`dispatch::active_tier`] never returns it.)
+fn simd_compiled(tier: Tier) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        tier == Tier::Avx2
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        tier == Tier::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = tier;
+        false
+    }
+}
 
-    // zero-pad x to the byte boundary: padded columns contribute 0 to
-    // every lookup regardless of (clear) bit value
-    let padded;
-    let xp: &[f32] = if m == mb * 8 {
-        x
-    } else {
-        let mut v = x.to_vec();
-        v.resize(mb * 8, 0.0);
-        padded = v;
-        &padded
-    };
-
-    // nibble tables: group g covers columns [4g, 4g+4)
+/// 16-entry Four-Russians partial-sum tables, one per 4-column nibble
+/// group of the zero-padded activations: `lut[g*16+v] = Σ_{bit j of v}
+/// xp[4g+j]`, built incrementally in 15 adds per group. Shared by the
+/// single- and multi-level scalar kernels.
+fn build_lut(xp: &[f32], mb: usize) -> Vec<f32> {
     let groups = mb * 2;
     let mut lut = vec![0f32; groups * 16];
     for g in 0..groups {
@@ -119,20 +126,209 @@ pub fn try_binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
             t[v] = t[v & (v - 1)] + xs[v.trailing_zeros() as usize];
         }
     }
-    let total: f32 = x.iter().sum();
+    lut
+}
 
-    for r in 0..n {
-        let brow = &bits[r * mb..(r + 1) * mb];
-        // two accumulators hide the add latency
-        let (mut a0, mut a1) = (0f32, 0f32);
-        for (k, &byte) in brow.iter().enumerate() {
-            let lo = (byte & 0xF) as usize;
-            let hi = (byte >> 4) as usize;
-            a0 += lut[(2 * k) * 16 + lo];
-            a1 += lut[(2 * k + 1) * 16 + hi];
-        }
-        y[r] = alpha * (2.0 * (a0 + a1) - total);
+/// Shared per-call preamble of every packed kernel: the dispatch tier,
+/// the activations zero-padded to the byte boundary (padded columns
+/// contribute 0 under any clear bit pattern), the `Σx` total behind
+/// the `2·Σ_set − total` identity, and — on the scalar tier only —
+/// the nibble tables (SIMD tiers mask-expand `xp` directly and skip
+/// the O(4m) table build).
+struct Prep {
+    tier: Tier,
+    xp: Vec<f32>,
+    lut: Vec<f32>,
+    total: f32,
+}
+
+impl Prep {
+    fn new(x: &[f32], mb: usize) -> Self {
+        let tier = dispatch::active_tier();
+        let mut xp = x.to_vec();
+        xp.resize(mb * 8, 0.0);
+        let lut = if simd_compiled(tier) {
+            Vec::new()
+        } else {
+            build_lut(&xp, mb)
+        };
+        let total: f32 = x.iter().sum();
+        Prep { tier, xp, lut, total }
     }
+
+    fn kernel(&self) -> RowKernel<'_> {
+        match self.tier {
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx2 => RowKernel::Avx2 { xp: &self.xp },
+            #[cfg(target_arch = "aarch64")]
+            Tier::Neon => RowKernel::Neon { xp: &self.xp },
+            _ => RowKernel::Scalar { lut: &self.lut },
+        }
+    }
+}
+
+/// One row's `Σ_set x` under the active dispatch tier. `Copy`, so the
+/// row-tiling closures capture it by value and stay `Fn + Sync`.
+#[derive(Clone, Copy)]
+enum RowKernel<'a> {
+    Scalar { lut: &'a [f32] },
+    #[cfg(target_arch = "x86_64")]
+    Avx2 { xp: &'a [f32] },
+    #[cfg(target_arch = "aarch64")]
+    Neon { xp: &'a [f32] },
+}
+
+impl RowKernel<'_> {
+    #[inline]
+    fn set_sum(&self, brow: &[u8]) -> f32 {
+        match *self {
+            RowKernel::Scalar { lut } => scalar_set_sum(brow, lut),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: this variant is only built when AVX2 was
+            // runtime-detected (Prep::kernel gates on active_tier),
+            // and Prep zero-pads xp to 8 floats per packed byte.
+            RowKernel::Avx2 { xp } => unsafe { avx2::set_sum(brow, xp) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: as above, with NEON runtime-detected.
+            RowKernel::Neon { xp } => unsafe { neon::set_sum(brow, xp) },
+        }
+    }
+}
+
+/// Four-Russians walk: each weight byte costs two table lookups + two
+/// adds instead of eight bit-extract/convert/multiply chains; two
+/// accumulators hide the add latency.
+#[inline]
+fn scalar_set_sum(brow: &[u8], lut: &[f32]) -> f32 {
+    let (mut a0, mut a1) = (0f32, 0f32);
+    for (k, &byte) in brow.iter().enumerate() {
+        let lo = (byte & 0xF) as usize;
+        let hi = (byte >> 4) as usize;
+        a0 += lut[(2 * k) * 16 + lo];
+        a1 += lut[(2 * k + 1) * 16 + hi];
+    }
+    a0 + a1
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 mask-expand row kernel: one packed byte selects 8 f32
+    //! lanes at once (`cmpeq` against per-lane bit masks builds a
+    //! select mask; `andps` zeroes unselected activations).
+
+    use std::arch::x86_64::*;
+
+    /// `Σ_{set bits} xp` for one packed row.
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available on the running CPU, and `xp` must hold
+    /// at least `bits.len() * 8` floats (zero-padded activations).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn set_sum(bits: &[u8], xp: &[f32]) -> f32 {
+        unsafe {
+            let bitsel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut k = 0usize;
+            // 2-byte unroll on independent accumulators
+            while k + 2 <= bits.len() {
+                let m0 = _mm256_cmpeq_epi32(
+                    _mm256_and_si256(_mm256_set1_epi32(bits[k] as i32),
+                                     bitsel),
+                    bitsel);
+                let m1 = _mm256_cmpeq_epi32(
+                    _mm256_and_si256(_mm256_set1_epi32(bits[k + 1] as i32),
+                                     bitsel),
+                    bitsel);
+                let x0 = _mm256_loadu_ps(xp.as_ptr().add(k * 8));
+                let x1 = _mm256_loadu_ps(xp.as_ptr().add(k * 8 + 8));
+                acc0 = _mm256_add_ps(
+                    acc0, _mm256_and_ps(_mm256_castsi256_ps(m0), x0));
+                acc1 = _mm256_add_ps(
+                    acc1, _mm256_and_ps(_mm256_castsi256_ps(m1), x1));
+                k += 2;
+            }
+            if k < bits.len() {
+                let m0 = _mm256_cmpeq_epi32(
+                    _mm256_and_si256(_mm256_set1_epi32(bits[k] as i32),
+                                     bitsel),
+                    bitsel);
+                let x0 = _mm256_loadu_ps(xp.as_ptr().add(k * 8));
+                acc0 = _mm256_add_ps(
+                    acc0, _mm256_and_ps(_mm256_castsi256_ps(m0), x0));
+            }
+            let mut t = [0f32; 8];
+            _mm256_storeu_ps(t.as_mut_ptr(),
+                             _mm256_add_ps(acc0, acc1));
+            ((t[0] + t[4]) + (t[1] + t[5]))
+                + ((t[2] + t[6]) + (t[3] + t[7]))
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON mask-expand row kernel: each packed byte is tested against
+    //! two 4-lane bit masks (`vtst` yields all-ones where the bit is
+    //! set) and the selected activations accumulate in two halves.
+
+    use std::arch::aarch64::*;
+
+    /// `Σ_{set bits} xp` for one packed row.
+    ///
+    /// # Safety
+    ///
+    /// NEON must be available on the running CPU, and `xp` must hold
+    /// at least `bits.len() * 8` floats (zero-padded activations).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn set_sum(bits: &[u8], xp: &[f32]) -> f32 {
+        unsafe {
+            let sel_lo = vld1q_u32([1u32, 2, 4, 8].as_ptr());
+            let sel_hi = vld1q_u32([16u32, 32, 64, 128].as_ptr());
+            let mut acc_lo = vdupq_n_f32(0.0);
+            let mut acc_hi = vdupq_n_f32(0.0);
+            for (k, &byte) in bits.iter().enumerate() {
+                let b = vdupq_n_u32(byte as u32);
+                let x_lo = vld1q_f32(xp.as_ptr().add(k * 8));
+                let x_hi = vld1q_f32(xp.as_ptr().add(k * 8 + 4));
+                acc_lo = vaddq_f32(
+                    acc_lo,
+                    vreinterpretq_f32_u32(vandq_u32(
+                        vreinterpretq_u32_f32(x_lo),
+                        vtstq_u32(b, sel_lo))));
+                acc_hi = vaddq_f32(
+                    acc_hi,
+                    vreinterpretq_f32_u32(vandq_u32(
+                        vreinterpretq_u32_f32(x_hi),
+                        vtstq_u32(b, sel_hi))));
+            }
+            vaddvq_f32(vaddq_f32(acc_lo, acc_hi))
+        }
+    }
+}
+
+/// `y = alpha * Sign(bits) @ x`; `bits` row-major `[n, ⌈m/8⌉]`,
+/// LSB-first, clear padding bits. Checked variant — see module docs.
+///
+/// Runs under the active dispatch tier (Four-Russians scalar / AVX2 /
+/// NEON) with rows tiled over the shared worker pool; the per-row
+/// stream is exactly the packed bytes, so the kernel stays
+/// memory-bound down to L2-resident sizes.
+pub fn try_binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
+                       alpha: f32, y: &mut [f32])
+                       -> Result<(), KernelShapeError> {
+    let mb = validate(bits, n, m, x, y)?;
+    let prep = Prep::new(x, mb);
+    let kern = prep.kernel();
+    let total = prep.total;
+    dispatch::run_rows(y, mb, &|r0, chunk: &mut [f32]| {
+        for (i, yv) in chunk.iter_mut().enumerate() {
+            let r = r0 + i;
+            let s = kern.set_sum(&bits[r * mb..(r + 1) * mb]);
+            *yv = alpha * (2.0 * s - total);
+        }
+    });
     Ok(())
 }
 
@@ -149,10 +345,9 @@ pub fn binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
 /// path): `y = Σ_l alpha_l · Sign(bits_l) @ x` over `levels` stacked
 /// `(packed bits, scale)` pairs sharing one logical shape `[n, m]`.
 ///
-/// The win over calling [`try_binary_gemv`] per level is that the two
-/// O(m) per-call preambles — the `Σx` total behind the
-/// `2·Σ_set − total` identity and the 16-entry nibble partial-sum
-/// tables — are built **once** and shared by every level, so level `l ≥
+/// The win over calling [`try_binary_gemv`] per level is that the
+/// per-call preamble ([`Prep`]: padded `x`, `Σx`, scalar-tier nibble
+/// tables) is built **once** and shared by every level, so level `l ≥
 /// 2` costs only its packed-byte stream. Per row,
 ///
 /// ```text
@@ -160,6 +355,11 @@ pub fn binary_gemv(bits: &[u8], n: usize, m: usize, x: &[f32],
 /// ```
 ///
 /// with `S_l(r)` the set-bit partial sum of level `l`'s row `r`.
+///
+/// Every level plane gets the full [`validate`] treatment
+/// (buffer-length *and* set-padding-bit checks); a malformed level
+/// reports its index, e.g. `packed gemv: level 1: row 0 has set
+/// padding bits …`.
 ///
 /// A level with `alpha == 0` contributes exactly `0.0` to both sums, so
 /// the engine's **zero-scale padding convention** (padding a tenant to
@@ -172,49 +372,24 @@ pub fn try_binary_gemv_multi(levels: &[(&[u8], f32)], n: usize, m: usize,
         return Err(err("multi-level gemv needs >= 1 level".into()));
     }
     let mut mb = 0usize;
-    for (bits, _) in levels {
-        mb = validate(bits, n, m, x, y)?;
+    for (l, (bits, _)) in levels.iter().enumerate() {
+        mb = validate(bits, n, m, x, y)
+            .map_err(|e| err(format!("level {l}: {}", e.0)))?;
     }
-
-    // shared preamble: zero-padded x, nibble tables, Σx (built once,
-    // reused by every level — the point of the fusion)
-    let padded;
-    let xp: &[f32] = if m == mb * 8 {
-        x
-    } else {
-        let mut v = x.to_vec();
-        v.resize(mb * 8, 0.0);
-        padded = v;
-        &padded
-    };
-    let groups = mb * 2;
-    let mut lut = vec![0f32; groups * 16];
-    for g in 0..groups {
-        let xs = &xp[g * 4..g * 4 + 4];
-        let t = &mut lut[g * 16..g * 16 + 16];
-        for v in 1usize..16 {
-            t[v] = t[v & (v - 1)] + xs[v.trailing_zeros() as usize];
-        }
-    }
-    let total: f32 = x.iter().sum();
-    let alpha_total: f32 = levels.iter().map(|(_, a)| a).sum::<f32>()
-        * total;
-
-    for r in 0..n {
-        let mut acc = 0f32;
-        for (bits, alpha) in levels {
-            let brow = &bits[r * mb..(r + 1) * mb];
-            let (mut a0, mut a1) = (0f32, 0f32);
-            for (k, &byte) in brow.iter().enumerate() {
-                let lo = (byte & 0xF) as usize;
-                let hi = (byte >> 4) as usize;
-                a0 += lut[(2 * k) * 16 + lo];
-                a1 += lut[(2 * k + 1) * 16 + hi];
+    let prep = Prep::new(x, mb);
+    let kern = prep.kernel();
+    let alpha_total: f32 =
+        levels.iter().map(|(_, a)| a).sum::<f32>() * prep.total;
+    dispatch::run_rows(y, mb * levels.len(), &|r0, chunk: &mut [f32]| {
+        for (i, yv) in chunk.iter_mut().enumerate() {
+            let r = r0 + i;
+            let mut acc = 0f32;
+            for (bits, alpha) in levels {
+                acc += alpha * kern.set_sum(&bits[r * mb..(r + 1) * mb]);
             }
-            acc += alpha * (a0 + a1);
+            *yv = 2.0 * acc - alpha_total;
         }
-        y[r] = 2.0 * acc - alpha_total;
-    }
+    });
     Ok(())
 }
 
@@ -376,6 +551,27 @@ mod tests {
     }
 
     #[test]
+    fn every_compiled_tier_matches_the_bitextract_witness() {
+        let _g = dispatch::test_lock();
+        let (n, m) = (11, 53);
+        let d = Tensor::randn(vec![n, m], 101);
+        let bits = pack_signs(d.data(), m);
+        let x = Tensor::randn(vec![m], 102);
+        let mut want = vec![0f32; n];
+        binary_gemv_bitextract(&bits, n, m, x.data(), 0.33, &mut want);
+        for tier in Tier::ALL {
+            dispatch::force_tier(Some(tier));
+            let mut y = vec![0f32; n];
+            binary_gemv(&bits, n, m, x.data(), 0.33, &mut y);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3,
+                        "tier {tier}: {a} vs {b}");
+            }
+        }
+        dispatch::force_tier(None);
+    }
+
+    #[test]
     fn malformed_padding_bits_rejected_with_clear_error() {
         let (n, m) = (2, 5);               // 1 byte/row, 3 padding bits
         let mut bits = pack_signs(&[1.0f32; 10], m);
@@ -461,6 +657,7 @@ mod tests {
         // zero-scale levels; the padded output must be *bit-identical*
         // to the tenant served alone at its own level count — the
         // mixed-fidelity batching guarantee.
+        let _g = dispatch::test_lock();
         let (n, m) = (7, 29);
         let d = Tensor::randn(vec![2, n, m], 77);
         let b0 = pack_signs(&d.data()[..n * m], m);
@@ -488,7 +685,24 @@ mod tests {
         let good = vec![0u8; 2];
         let bad = vec![0u8; 3];
         let levels: Vec<(&[u8], f32)> = vec![(&good, 1.0), (&bad, 1.0)];
-        assert!(try_binary_gemv_multi(&levels, 2, 8, &x, &mut y).is_err());
+        let e = try_binary_gemv_multi(&levels, 2, 8, &x, &mut y)
+            .unwrap_err();
+        assert!(e.to_string().contains("level 1"), "{e}");
+    }
+
+    #[test]
+    fn multi_level_set_padding_bits_name_the_level() {
+        let m = 5;                         // 3 padding bits per byte
+        let good = pack_signs(&[1.0f32; 10], m);
+        let mut bad = good.clone();
+        bad[0] |= 0b1110_0000;             // corrupt level 1, row 0
+        let x = [0.5f32; 5];
+        let mut y = [0f32; 2];
+        let levels: Vec<(&[u8], f32)> = vec![(&good, 0.4), (&bad, 0.1)];
+        let e = try_binary_gemv_multi(&levels, 2, m, &x, &mut y)
+            .unwrap_err();
+        assert!(e.to_string().contains("level 1"), "{e}");
+        assert!(e.to_string().contains("padding"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,498 @@
+//! Runtime kernel dispatch + shared worker pool for the packed GEMV
+//! engine.
+//!
+//! The binary-GEMV hot path ([`crate::gemm::binary`]) has one inner
+//! primitive — "sum the activations under a packed sign row" — with
+//! three interchangeable implementations:
+//!
+//! * **scalar** — the Four-Russians nibble-LUT walk; safe Rust,
+//!   universal fallback, and the bit-exactness reference;
+//! * **avx2** — x86_64 mask-expand over 8 lanes per packed byte
+//!   (`_mm256_cmpeq` select + masked add), runtime-detected;
+//! * **neon** — the aarch64 analog (`vtst` select over two 4-lane
+//!   halves per byte), runtime-detected.
+//!
+//! [`active_tier`] picks once per call site: a forced tier if one is
+//! set (env `BITDELTA_KERNEL=scalar|avx2|neon|auto`, or
+//! [`force_tier`] from tests/benches), else the best tier the CPU
+//! reports. Forcing a tier the host cannot run falls back to scalar,
+//! so a tier sweep is portable across machines.
+//!
+//! **Threading.** [`run_rows`] tiles an output vector into contiguous
+//! row chunks and fans them out over a lazily-spawned shared worker
+//! pool (env `BITDELTA_THREADS`, or [`set_pool_threads`] — the CLI
+//! `--threads` flag lands there). Chunks are sized by packed bytes so
+//! small GEMVs stay inline, and each row's arithmetic is independent,
+//! so results are bit-identical at every pool width. The caller
+//! thread helps drain the queue while it waits, so a 1-worker pool
+//! never deadlocks and an N-way `run_rows` uses N cores, not N−1.
+//!
+//! Adding a backend = one `row set-sum` kernel in `binary.rs`, one
+//! [`Tier`] variant here, and arms in [`Tier::ALL`]/detection — the
+//! property suite in `tests/properties.rs` sweeps every tier
+//! automatically.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One SIMD dispatch tier of the packed-GEMV engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Four-Russians nibble-LUT scalar kernel (universal fallback).
+    Scalar,
+    /// AVX2 mask-expand kernel (x86_64, runtime-detected).
+    Avx2,
+    /// NEON mask-expand kernel (aarch64, runtime-detected).
+    Neon,
+}
+
+impl Tier {
+    /// Every tier, for exhaustive sweeps in tests and benches.
+    pub const ALL: [Tier; 3] = [Tier::Scalar, Tier::Avx2, Tier::Neon];
+
+    /// Stable lowercase name (bench JSON rows, metrics, env parsing).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+
+    /// Parse a tier name as used by `BITDELTA_KERNEL` (`"auto"` and
+    /// unknown strings mean "no forced tier").
+    pub fn from_name(s: &str) -> Option<Tier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Tier::Scalar),
+            "avx2" => Some(Tier::Avx2),
+            "neon" => Some(Tier::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn have_avx2() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn have_neon() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn have_neon() -> bool {
+    false
+}
+
+/// Can this host actually execute `tier`?
+pub fn available(tier: Tier) -> bool {
+    match tier {
+        Tier::Scalar => true,
+        Tier::Avx2 => have_avx2(),
+        Tier::Neon => have_neon(),
+    }
+}
+
+/// Best tier the CPU reports, ignoring any forced override.
+pub fn detected_tier() -> Tier {
+    if have_avx2() {
+        Tier::Avx2
+    } else if have_neon() {
+        Tier::Neon
+    } else {
+        Tier::Scalar
+    }
+}
+
+// Forced-tier cell: 0 = auto (follow detection), 1..=3 = Tier::ALL
+// index + 1. Seeded once from BITDELTA_KERNEL, then owned by
+// force_tier (tests/benches sweep it).
+fn forced_cell() -> &'static AtomicU8 {
+    static CELL: OnceLock<AtomicU8> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let init = std::env::var("BITDELTA_KERNEL")
+            .ok()
+            .and_then(|s| Tier::from_name(&s))
+            .map_or(0, tier_code);
+        AtomicU8::new(init)
+    })
+}
+
+fn tier_code(t: Tier) -> u8 {
+    match t {
+        Tier::Scalar => 1,
+        Tier::Avx2 => 2,
+        Tier::Neon => 3,
+    }
+}
+
+/// Force a dispatch tier (`None` restores auto-detection). Global —
+/// tests that sweep tiers must serialize with each other.
+pub fn force_tier(tier: Option<Tier>) {
+    forced_cell().store(tier.map_or(0, tier_code), Ordering::SeqCst);
+}
+
+/// The currently forced tier, if any.
+pub fn forced_tier() -> Option<Tier> {
+    match forced_cell().load(Ordering::SeqCst) {
+        1 => Some(Tier::Scalar),
+        2 => Some(Tier::Avx2),
+        3 => Some(Tier::Neon),
+        _ => None,
+    }
+}
+
+/// The tier the next kernel call will run: the forced tier when set
+/// and runnable here (forcing an unavailable tier falls back to
+/// scalar, keeping tier sweeps portable), else the detected best.
+pub fn active_tier() -> Tier {
+    match forced_tier() {
+        Some(t) if available(t) => t,
+        Some(_) => Tier::Scalar,
+        None => detected_tier(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared worker pool
+// ---------------------------------------------------------------------
+
+type Task = Box<dyn FnOnce() + Send>;
+
+#[derive(Default)]
+struct PoolInner {
+    /// Pending tasks + shutdown flag; workers exit only once the flag
+    /// is set *and* the queue is drained, so a resize never drops
+    /// queued work.
+    queue: Mutex<(VecDeque<Task>, bool)>,
+    cv: Condvar,
+}
+
+impl PoolInner {
+    fn push(&self, task: Task) {
+        self.queue.lock().unwrap().0.push_back(task);
+        self.cv.notify_one();
+    }
+
+    /// Pop one task without blocking (callers helping to drain).
+    fn try_pop(&self) -> Option<Task> {
+        self.queue.lock().unwrap().0.pop_front()
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>) {
+    loop {
+        let task = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.0.pop_front() {
+                    break t;
+                }
+                if q.1 {
+                    return;
+                }
+                q = inner.cv.wait(q).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+struct PoolHandle {
+    inner: Arc<PoolInner>,
+    workers: usize,
+}
+
+fn pool_slot() -> &'static Mutex<Option<PoolHandle>> {
+    static SLOT: OnceLock<Mutex<Option<PoolHandle>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+fn threads_cell() -> &'static AtomicUsize {
+    static CELL: OnceLock<AtomicUsize> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let init = std::env::var("BITDELTA_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(1);
+        AtomicUsize::new(resolve_threads(init))
+    })
+}
+
+fn resolve_threads(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism().map_or(1, |p| p.get())
+    } else {
+        n
+    }
+}
+
+/// Set the kernel worker-pool width (`0` = one per available core).
+/// The pool itself is (re)spawned lazily on the next tiled call.
+pub fn set_pool_threads(n: usize) {
+    threads_cell().store(resolve_threads(n), Ordering::SeqCst);
+}
+
+/// Current kernel worker-pool width (1 = no pool, all inline).
+pub fn pool_threads() -> usize {
+    threads_cell().load(Ordering::SeqCst).max(1)
+}
+
+/// The live pool at the configured width, spawning or resizing it if
+/// needed. `None` when the configured width is 1 or no worker thread
+/// could be spawned (callers then run inline).
+fn current_pool() -> Option<Arc<PoolInner>> {
+    let want = pool_threads();
+    let mut slot = pool_slot().lock().unwrap();
+    if want <= 1 {
+        if let Some(old) = slot.take() {
+            old.inner.queue.lock().unwrap().1 = true;
+            old.inner.cv.notify_all();
+        }
+        return None;
+    }
+    if let Some(h) = slot.as_ref() {
+        if h.workers == want {
+            return Some(h.inner.clone());
+        }
+    }
+    if let Some(old) = slot.take() {
+        old.inner.queue.lock().unwrap().1 = true;
+        old.inner.cv.notify_all();
+    }
+    // The caller thread is worker 0; spawn the other want-1.
+    let inner: Arc<PoolInner> = Arc::default();
+    let mut spawned = 0;
+    for i in 1..want {
+        let arc = inner.clone();
+        let spawn = std::thread::Builder::new()
+            .name(format!("bitdelta-gemv-{i}"))
+            .spawn(move || worker_loop(arc));
+        if spawn.is_ok() {
+            spawned += 1;
+        }
+    }
+    if spawned == 0 {
+        return None;
+    }
+    *slot = Some(PoolHandle { inner: inner.clone(), workers: want });
+    Some(inner)
+}
+
+// ---------------------------------------------------------------------
+// Scoped spawn (borrowing tasks on the shared pool)
+// ---------------------------------------------------------------------
+
+struct ScopeSync {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+/// A `std::thread::scope`-alike over the shared pool: spawned
+/// closures may borrow from the caller's stack because the scope
+/// blocks (helping to drain the queue) until every task finished.
+struct Scope<'env> {
+    sync: Arc<ScopeSync>,
+    pool: Option<Arc<PoolInner>>,
+    _marker: std::marker::PhantomData<&'env mut ()>,
+}
+
+impl<'env> Scope<'env> {
+    fn spawn<F: FnOnce() + Send + 'env>(&self, f: F) {
+        let Some(pool) = &self.pool else {
+            f();
+            return;
+        };
+        *self.sync.remaining.lock().unwrap() += 1;
+        let sync = self.sync.clone();
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: lifetime erasure only — the fat pointer layout of
+        // `Box<dyn FnOnce>` is lifetime-independent, and `Scope::drop`
+        // blocks until `remaining == 0`, so the closure (and anything
+        // it borrows from 'env) never outlives the borrowed data.
+        let job: Task = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        pool.push(Box::new(move || {
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(job));
+            if r.is_err() {
+                sync.panicked.store(true, Ordering::SeqCst);
+            }
+            let mut left = sync.remaining.lock().unwrap();
+            *left -= 1;
+            if *left == 0 {
+                sync.cv.notify_all();
+            }
+        }));
+    }
+}
+
+impl Drop for Scope<'_> {
+    fn drop(&mut self) {
+        let Some(pool) = &self.pool else { return };
+        // Help drain: run queued tasks (ours or a concurrent scope's)
+        // on this thread instead of idling.
+        while let Some(task) = pool.try_pop() {
+            task();
+        }
+        let mut left = self.sync.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.sync.cv.wait(left).unwrap();
+        }
+    }
+}
+
+fn scope<'env, F: FnOnce(&Scope<'env>)>(f: F) {
+    let sc = Scope {
+        sync: Arc::new(ScopeSync {
+            remaining: Mutex::new(0),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }),
+        pool: current_pool(),
+        _marker: std::marker::PhantomData,
+    };
+    let sync = sc.sync.clone();
+    f(&sc);
+    drop(sc);
+    if sync.panicked.load(Ordering::SeqCst) {
+        panic!("bitdelta kernel worker task panicked");
+    }
+}
+
+/// Minimum packed bytes a chunk must cover before it is worth a
+/// cross-thread hand-off (empirically ~a few µs of scalar work).
+const MIN_BYTES_PER_CHUNK: usize = 8 << 10;
+
+/// Row-tiled parallel fill of `y`: splits the output rows into
+/// contiguous chunks and calls `f(first_row, chunk)` for each, inline
+/// when the pool is off or the matrix is small. `bytes_per_row` is
+/// the packed input traffic per output row (levels × row bytes) and
+/// sizes the chunks. Per-row results are independent of the split,
+/// so output bits do not depend on the pool width.
+pub fn run_rows<F>(y: &mut [f32], bytes_per_row: usize, f: &F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let rows = y.len();
+    let threads = pool_threads();
+    let min_rows = (MIN_BYTES_PER_CHUNK / bytes_per_row.max(1)).max(1);
+    if threads <= 1 || rows < 2 * min_rows {
+        f(0, y);
+        return;
+    }
+    let chunks = threads.min(rows / min_rows).max(1);
+    let per = (rows + chunks - 1) / chunks;
+    scope(|s| {
+        let mut rest = y;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let tmp = std::mem::take(&mut rest);
+            let (head, tail) = tmp.split_at_mut(take);
+            rest = tail;
+            let r0 = start;
+            start += take;
+            s.spawn(move || f(r0, head));
+        }
+    });
+}
+
+/// Unit tests mutating the global tier/pool config (or asserting
+/// bit-identity between two kernel calls) serialize on this lock so
+/// the harness's default test parallelism cannot interleave them.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_round_trip() {
+        for t in Tier::ALL {
+            assert_eq!(Tier::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Tier::from_name("auto"), None);
+        assert_eq!(Tier::from_name("AVX2"), Some(Tier::Avx2));
+    }
+
+    #[test]
+    fn scalar_always_available_and_detection_is_runnable() {
+        assert!(available(Tier::Scalar));
+        assert!(available(detected_tier()));
+    }
+
+    #[test]
+    fn forcing_unavailable_tier_falls_back_to_scalar() {
+        let _g = test_lock();
+        // At most one SIMD tier exists per arch, so the other one is
+        // always the portable "unavailable" probe.
+        let missing = if available(Tier::Avx2) {
+            Tier::Neon
+        } else {
+            Tier::Avx2
+        };
+        force_tier(Some(missing));
+        assert_eq!(active_tier(), Tier::Scalar);
+        force_tier(Some(Tier::Scalar));
+        assert_eq!(active_tier(), Tier::Scalar);
+        force_tier(None);
+        assert_eq!(active_tier(), detected_tier());
+    }
+
+    #[test]
+    fn run_rows_covers_every_row_once_at_any_width() {
+        let _g = test_lock();
+        for threads in [1usize, 2, 5] {
+            set_pool_threads(threads);
+            // bytes_per_row=2048 → min_rows=4 → tiling engages.
+            let mut y = vec![0f32; 37];
+            run_rows(&mut y, 2048, &|r0, chunk: &mut [f32]| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v += (r0 + i) as f32;
+                }
+            });
+            let want: Vec<f32> = (0..37).map(|r| r as f32).collect();
+            assert_eq!(y, want, "threads={threads}");
+        }
+        set_pool_threads(1);
+    }
+
+    #[test]
+    fn small_matrices_stay_inline() {
+        let _g = test_lock();
+        set_pool_threads(4);
+        let mut y = vec![0f32; 8];
+        // 1 byte/row → min_rows huge → must run as one inline chunk.
+        run_rows(&mut y, 1, &|r0, chunk: &mut [f32]| {
+            assert_eq!(r0, 0);
+            assert_eq!(chunk.len(), 8);
+            chunk.fill(1.0);
+        });
+        assert_eq!(y, vec![1.0; 8]);
+        set_pool_threads(1);
+    }
+}

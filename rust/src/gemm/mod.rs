@@ -17,13 +17,21 @@
 //! per-format apply path is dispatched through
 //! [`crate::delta::codec::DeltaCodec::forward_linear`], which routes to
 //! the right kernel for whichever delta codec a tenant uses.
+//!
+//! The packed [`binary`] kernels run under a small **kernel engine**
+//! ([`dispatch`]): runtime-detected SIMD tiers (AVX2/NEON, scalar
+//! Four-Russians fallback) and row-tiled execution over a shared
+//! worker pool, both overridable via `BITDELTA_KERNEL` /
+//! `BITDELTA_THREADS` (or the CLI `--threads` flag).
 
 pub mod binary;
 pub mod dense;
+pub mod dispatch;
 pub mod lora;
 
 pub use binary::{batched_binary_gemv, binary_gemv, binary_gemv_multi,
                  try_batched_binary_gemv, try_binary_gemv,
                  try_binary_gemv_multi, KernelShapeError};
+pub use dispatch::Tier;
 pub use dense::{batched_dense_gemv, dense_gemv};
 pub use lora::{batched_lora_gemv, lora_gemv};

@@ -41,16 +41,20 @@ COMMANDS:
   inspect      --delta F [--model sim-s]
   serve        [--codec bitdelta|lora|svd|dense] [--batch N]
                [--requests N] [--model sim-s]
-               [--tenant-codecs t1=lora,t2=bitdelta]  (mixed batches)
+               [--tenant-codecs t1=lora,t2=bitdelta]  (mixed batches
+               run natively, one sub-batch per codec)
                [--tenant-levels t1=2,t2=4]  (per-tenant fidelity tiers:
                serve the first K mask levels of a multi-level delta;
                tiers mix freely in one batch via zero-scale padding)
+               [--threads N]  (CPU kernel worker-pool width; 0 = one
+               per core; default = BITDELTA_THREADS or 1)
   serve-cluster multi-worker serving with tenant placement
                [--workers N] [--policy affinity|least-loaded|delta-aware]
                [--codec C] [--batch N] [--requests N] [--budget-mb MB]
                [--model sim-s] [--tenant-levels t1=2,...]
                [--admission-budget N]  (global in-flight cap at the
                cluster front door; 0 disables; default 256)
+               [--threads N]  (kernel worker-pool width per engine)
                (tiered tenants pay level-scaled delta bytes in placement)
   codecs       list the registered delta codecs
   table1       BitDelta vs SVD quality (paper Table 1)
@@ -75,6 +79,7 @@ COMMANDS:
                under sustained queue pressure, graceful-drain down when
                idle) [--admission-budget N] (cluster front-door
                in-flight cap; 0 disables; default 256)
+               [--threads N] (kernel worker-pool width; 0 = one per core)
                (workers > 1 or --autoscale runs the cluster)
   extras-quant INT8-compress a delta's embeddings/head (paper's
                future-work extension) [--tenant sim-s-chat]
@@ -143,6 +148,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
             parse_tenant_levels(args.get("tenant-levels"))?,
             args.get_usize("batch", 4)?,
             args.get_usize("requests", 12)?,
+            args.get_usize("threads", 0)?,
             args.get_or("model", "sim-s"))?,
         "serve-cluster" => serve_cluster(
             &artifacts,
@@ -155,6 +161,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
             args.get_usize("requests", 16)?,
             args.get_usize("budget-mb", 256)?,
             args.get_usize("admission-budget", 256)?,
+            args.get_usize("threads", 0)?,
             args.get_or("model", "sim-s"))?,
         "codecs" => {
             let registry = CodecRegistry::builtin();
@@ -200,6 +207,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
                 .unwrap_or(0.9);
             let batch = args.get_usize("batch", 4)?;
             let workers = args.get_usize("workers", 1)?;
+            let threads = args.get_usize("threads", 0)?;
             let tenant_levels =
                 parse_tenant_levels(args.get("tenant-levels"))?;
             let autoscale = parse_autoscale(args.get("autoscale"))?;
@@ -211,7 +219,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
                     .transpose()?.unwrap_or(6.0))?;
             if workers <= 1 && autoscale.is_none() {
                 loadtest(&artifacts, requests, rate, zipf_s, batch,
-                         tenant_levels, pattern)?
+                         threads, tenant_levels, pattern)?
             } else {
                 loadtest_cluster(
                     &artifacts, requests, rate, zipf_s, batch, workers,
@@ -220,7 +228,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
                     args.get_usize("tenants", 0)?,
                     args.get_usize("budget-mb", 256)?,
                     args.get_usize("admission-budget", 256)?,
-                    autoscale, pattern, tenant_levels)?
+                    threads, autoscale, pattern, tenant_levels)?
             }
         }
         "extras-quant" => extras_quant(
@@ -335,10 +343,12 @@ fn fire_requests(engine: &mut Engine, n: usize)
     Ok(chans)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_demo(artifacts: &Path, codec: &str,
               tenant_codecs: Option<&str>,
               tenant_levels: std::collections::HashMap<String, usize>,
-              batch: usize, requests: usize, model: &str) -> Result<()> {
+              batch: usize, requests: usize, threads: usize,
+              model: &str) -> Result<()> {
     let registry = CodecRegistry::builtin();
     let codec = registry.get(codec)?.name();   // validate + canonicalize
     let mut ec = EngineConfig::new(artifacts);
@@ -360,6 +370,7 @@ tenant=codec"))?;
     ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     ec.model = model.to_string();
+    ec.threads = threads;
     let mut engine = Engine::from_artifacts(ec)?;
     let assignments: Vec<String> = engine.tenants().iter()
         .map(|t| {
@@ -370,6 +381,9 @@ tenant=codec"))?;
         .collect();
     println!("engine up: codec={codec} batch={batch} \
 tenants={assignments:?}");
+    println!("kernel engine: dispatch={} threads={}",
+             bitdelta::gemm::dispatch::active_tier().name(),
+             bitdelta::gemm::dispatch::pool_threads());
     let t0 = std::time::Instant::now();
     let chans = fire_requests(&mut engine, requests)?;
     engine.run_until_idle(1_000_000)?;
@@ -402,7 +416,7 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
                  tenant_levels: std::collections::HashMap<String, usize>,
                  batch: usize, requests: usize,
                  budget_mb: usize, admission_budget: usize,
-                 model: &str) -> Result<()> {
+                 threads: usize, model: &str) -> Result<()> {
     use bitdelta::cluster::{policy_by_name, tenant_profiles, Cluster,
                             ClusterConfig};
     use bitdelta::coordinator::admission::AdmissionPolicy;
@@ -414,6 +428,7 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
     ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     ec.model = model.to_string();
+    ec.threads = threads;
     let profiles = tenant_profiles(&ec)?;
     let level_of: std::collections::HashMap<String, usize> = profiles
         .iter().map(|p| (p.name.clone(), p.levels)).collect();
@@ -431,6 +446,9 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
     let placed = handle.placement();
     println!("cluster up: {workers} workers, policy {policy_name}, \
 codec {codec}");
+    println!("kernel engine: dispatch={} threads={}",
+             bitdelta::gemm::dispatch::active_tier().name(),
+             bitdelta::gemm::dispatch::pool_threads());
     for t in &tenants {
         let lv = level_of.get(t).copied().unwrap_or(1);
         let tier = if lv > 1 { format!(" (tier l{lv})") }
@@ -522,7 +540,7 @@ fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
                     zipf_s: f64, batch: usize, workers: usize,
                     policy: &str, clients: usize, trace_tenants: usize,
                     budget_mb: usize, admission_budget: usize,
-                    autoscale: Option<(usize, usize)>,
+                    threads: usize, autoscale: Option<(usize, usize)>,
                     pattern: bitdelta::coordinator::workload::
                         ArrivalPattern,
                     tenant_levels: std::collections::HashMap<String,
@@ -539,6 +557,7 @@ fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
     let mut ec = EngineConfig::new(artifacts);
     ec.tenant_levels = tenant_levels;
     ec.batch = batch;
+    ec.threads = threads;
     let mut profiles = tenant_profiles(&ec)?;
     // trace ranks map onto engine tenants by rank % n — more ranks than
     // tenants lets a small tenant set carry an 8-way-skewed trace
@@ -626,6 +645,8 @@ policy {policy}, {clients} client threads"),
 {:.1} tok/s ({} errors, {} admission-rejected)",
              r.served(), r.tokens, r.wall_seconds, r.tok_per_s(),
              r.errors, r.rejected);
+    println!("kernel engine: dispatch={} threads={}",
+             r.dispatch_tier, r.kernel_threads);
     if r.served() > 0 {
         println!("latency p50 {:.0} ms, p99 {:.0} ms, max {:.0} ms",
                  r.quantile_ms(0.5), r.quantile_ms(0.99),
@@ -715,8 +736,9 @@ bitdelta fits all tested batches\n"));
     out
 }
 
+#[allow(clippy::too_many_arguments)]
 fn loadtest(artifacts: &Path, requests: usize, rate: f64,
-            zipf_s: f64, batch: usize,
+            zipf_s: f64, batch: usize, threads: usize,
             tenant_levels: std::collections::HashMap<String, usize>,
             pattern: bitdelta::coordinator::workload::ArrivalPattern)
             -> Result<()> {
@@ -725,6 +747,7 @@ fn loadtest(artifacts: &Path, requests: usize, rate: f64,
     let mut ec = EngineConfig::new(artifacts);
     ec.tenant_levels = tenant_levels;
     ec.batch = batch;
+    ec.threads = threads;
     let mut engine = Engine::from_artifacts(ec)?;
     let tenants = engine.tenants();
     let tcfg = TraceConfig {
@@ -786,6 +809,9 @@ traffic, {}/{} tenants hit",
     println!("served {} requests / {tokens} tokens in {wall:.2}s -> \
 {:.1} tok/s; mean batch occupancy {occ:.2}/{batch}",
              latencies.len(), tokens as f64 / wall);
+    println!("kernel engine: dispatch={} threads={}",
+             bitdelta::gemm::dispatch::active_tier().name(),
+             bitdelta::gemm::dispatch::pool_threads());
     if !latencies.is_empty() {
         println!("latency p50 {:.0} ms, p95 {:.0} ms, max {:.0} ms",
                  latencies[latencies.len() / 2] * 1e3,

@@ -14,11 +14,17 @@
 //!   per-tenant payloads re-stacked **only when the batch composition
 //!   changes** (hot-swap).
 //! * **mixed-format batch** — tenants on different codecs share one
-//!   decode step: each slot's payload is materialized into dense
-//!   weights (`codec.materialize`, cached per tenant) and the batch
-//!   runs the stacked-dense `decode_naive` executable. Correct for any
-//!   codec combination at the naive path's memory cost — the price of
-//!   format freedom, paid only by mixed compositions.
+//!   decode step: the active slots are grouped by codec and each
+//!   group runs **natively** as a sub-batch through its own codec's
+//!   `assemble` + executable (non-group slots carry padding payloads
+//!   and are masked at harvest); each sub's slot-owned logits and KV
+//!   rows are merged after the launches. No dense materialization, no
+//!   `4·N·M` byte detour — a mixed batch streams the same bytes per
+//!   tenant as a homogeneous one, at the cost of one executable
+//!   launch per distinct codec in the batch.
+//!   [`EngineConfig::mixed_dense_fallback`] restores the old behavior
+//!   (materialize every slot + one stacked-dense `decode_naive`
+//!   launch), kept as the A/B correctness reference.
 //!
 //! Within the `bitdelta` codec, tenants may additionally sit at
 //! different **fidelity tiers** ([`EngineConfig::tenant_levels`],
@@ -108,6 +114,16 @@ pub struct EngineConfig {
     pub stop_token: Option<i32>,
     /// Use pre-distilled scales (`.bdd`) vs initial (`.initial.bdd`).
     pub distilled: bool,
+    /// Serve mixed-format batches through dense materialization + the
+    /// stacked `decode_naive` executable instead of native per-codec
+    /// sub-batches. Kept as the A/B correctness reference (and an
+    /// escape hatch for a codec whose only executable is the naive
+    /// one).
+    pub mixed_dense_fallback: bool,
+    /// CPU kernel worker-pool width, applied at engine construction
+    /// (`0` = leave the process-global `BITDELTA_THREADS` setting
+    /// untouched; see [`crate::gemm::dispatch::set_pool_threads`]).
+    pub threads: usize,
 }
 
 impl EngineConfig {
@@ -123,6 +139,8 @@ impl EngineConfig {
             delta_budget_bytes: 256 << 20,
             stop_token: Some(10),
             distilled: true,
+            mixed_dense_fallback: false,
+            threads: 0,
         }
     }
 
@@ -144,15 +162,27 @@ pub struct StepReport {
     pub total_seconds: f64,
 }
 
-/// The stacked arguments + executable for one batch composition.
-struct StackedPlan {
-    comp: u64,
+/// One executable launch within a decode step: the stacked arguments,
+/// the executable, and the batch slots whose outputs it owns.
+struct SubPlan {
     exec: Rc<Executable>,
     /// Prepend the shared base linears to the argument list.
     needs_base: bool,
     /// Name of the executable kind (metrics label).
     exec_kind: &'static str,
     args: StackedArgs,
+    /// Slots harvested from this launch: all of them for a single-sub
+    /// plan, the codec group's own slots for a native mixed batch
+    /// (whose remaining slots carry padding payloads).
+    slots: Vec<usize>,
+}
+
+/// The execution plan for one batch composition: a single sub-batch
+/// for homogeneous (and dense-fallback mixed) compositions, one per
+/// codec group for native mixed-format batches.
+struct StackedPlan {
+    comp: u64,
+    subs: Vec<SubPlan>,
 }
 
 /// The multi-tenant serving engine (single-threaded; see
@@ -195,6 +225,9 @@ impl Engine {
     /// default codec's decode executable, loads the base weights,
     /// registers every tenant of the chosen model size under its codec.
     pub fn from_artifacts(econfig: EngineConfig) -> Result<Self> {
+        if econfig.threads > 0 {
+            crate::gemm::dispatch::set_pool_threads(econfig.threads);
+        }
         let manifest = Manifest::load(&econfig.artifacts_dir)?;
         let cfg = manifest.config(&econfig.model)?.clone();
         let mut rt = Runtime::cpu()?;
@@ -436,30 +469,67 @@ covering fidelity tier {lv}", codec.name());
         let rope_buf = self.rt.upload_f32(&rope, &[b])?;
 
         // ---- execute -----------------------------------------------------
-        let out = {
+        // one launch per sub-batch; every sub reads the same pre-step
+        // KV upload (subs own disjoint slots, so their updates never
+        // overlap)
+        let mut outs: Vec<(&[usize], DecodeOut)> = Vec::new();
+        {
             let plan = self.stacked.as_ref()
                 .ok_or_else(|| anyhow!("no stacked plan after assembly"))?;
-            let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
-            if plan.needs_base {
-                let bl = self.base_linears.as_ref().ok_or_else(
-                    || anyhow!("base linears missing for {}",
-                               plan.exec_kind))?;
-                args.extend(bl.buffers.iter());
-            }
-            args.extend(plan.args.buffers.iter());
-            args.push(&k_buf);
-            args.push(&v_buf);
-            args.push(&pos_buf);
-            args.push(&tok_buf);
-            args.push(&rope_buf);
+            for sub in &plan.subs {
+                let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+                if sub.needs_base {
+                    let bl = self.base_linears.as_ref().ok_or_else(
+                        || anyhow!("base linears missing for {}",
+                                   sub.exec_kind))?;
+                    args.extend(bl.buffers.iter());
+                }
+                args.extend(sub.args.buffers.iter());
+                args.push(&k_buf);
+                args.push(&v_buf);
+                args.push(&pos_buf);
+                args.push(&tok_buf);
+                args.push(&rope_buf);
 
-            let t_exec = Instant::now();
-            let lits = plan.exec.run_buffers(&args)?;
-            report.exec_seconds = t_exec.elapsed().as_secs_f64();
-            DecodeOut::from_literals(lits, b)?
-        };
-        self.kv_k = out.k.clone();
-        self.kv_v = out.v.clone();
+                let t_exec = Instant::now();
+                let lits = sub.exec.run_buffers(&args)?;
+                report.exec_seconds += t_exec.elapsed().as_secs_f64();
+                outs.push((&sub.slots,
+                           DecodeOut::from_literals(lits, b)?));
+            }
+        }
+        // harvest: a single-sub plan moves its outputs wholesale (the
+        // homogeneous fast path, cost unchanged); a native mixed plan
+        // merges each sub's slot-owned logits + KV rows, so every
+        // tenant's state comes from its own codec's executable
+        let (logits, vocab);
+        if outs.len() == 1 && outs[0].0.len() == b {
+            let (_, out) = outs.pop().unwrap();
+            vocab = out.vocab;
+            logits = out.logits;
+            self.kv_k = out.k;
+            self.kv_v = out.v;
+        } else {
+            vocab = outs.first()
+                .ok_or_else(|| anyhow!("no sub-batch outputs"))?.1.vocab;
+            let mut merged = vec![0f32; b * vocab];
+            let per_seq = self.cfg.n_heads * self.cfg.max_seq_len
+                * self.cfg.head_dim();
+            for (slots, out) in &outs {
+                for &i in *slots {
+                    merged[i * vocab..(i + 1) * vocab]
+                        .copy_from_slice(out.logits_row(i));
+                    for layer in 0..self.cfg.n_layers {
+                        let off = (layer * b + i) * per_seq;
+                        self.kv_k[off..off + per_seq]
+                            .copy_from_slice(&out.k[off..off + per_seq]);
+                        self.kv_v[off..off + per_seq]
+                            .copy_from_slice(&out.v[off..off + per_seq]);
+                    }
+                }
+            }
+            logits = merged;
+        }
 
         // ---- scatter results ---------------------------------------------
         let stop = self.econfig.stop_token;
@@ -478,7 +548,8 @@ covering fidelity tier {lv}", codec.name());
                 // first generated token from this step's logits
                 s.first_token_at = Some(Instant::now());
             }
-            let t = sample(out.logits_row(i), &s.req.request.sampling,
+            let t = sample(&logits[i * vocab..(i + 1) * vocab],
+                           &s.req.request.sampling,
                            s.generated.len() as u64);
             s.generated.push(t);
             s.next_token = t;
@@ -552,7 +623,8 @@ covering fidelity tier {lv}", codec.name());
         let homogeneous = codecs.windows(2)
             .all(|w| w[0].name() == w[1].name());
 
-        let (exec_kind, needs_base, args) = if homogeneous {
+        let mut subs: Vec<SubPlan> = Vec::new();
+        if homogeneous {
             let codec = codecs[0].clone();
             let mut payloads = Vec::new();
             for t in &tenants {
@@ -568,10 +640,21 @@ covering fidelity tier {lv}", codec.name());
             // a codec may retarget the batch (e.g. bitdelta raising a
             // mixed-fidelity batch to the decode_bitdelta_l{L} tier)
             let kind = args.exec_kind.unwrap_or_else(|| codec.exec_kind());
-            (kind, codec.needs_base(), args)
-        } else {
-            // mixed-format batch: materialize every slot into dense
-            // weights and run the stacked-dense executable
+            drop(refs);
+            drop(payloads);
+            let exec = self.exec_for(kind)?;
+            subs.push(SubPlan {
+                exec,
+                needs_base: codec.needs_base(),
+                exec_kind: kind,
+                args,
+                slots: (0..self.econfig.batch).collect(),
+            });
+        } else if self.econfig.mixed_dense_fallback {
+            // dense materialization: every slot's payload becomes full
+            // dense weights and one stacked `decode_naive` launch
+            // covers the batch — correct for any codec combination at
+            // the naive path's memory cost
             let mut models = Vec::new();
             for (t, c) in tenants.iter().zip(&codecs) {
                 models.push(self.fetch_materialized(t, c.clone())?);
@@ -588,21 +671,79 @@ covering fidelity tier {lv}", codec.name());
             // mode memory, invisible to the delta budget)
             self.materialized.retain(|t, _| tenants.contains(t));
             self.metrics.inc("mixed_batches", 1);
-            ("decode_naive", false, args)
-        };
+            let exec = self.exec_for("decode_naive")?;
+            subs.push(SubPlan {
+                exec,
+                needs_base: false,
+                exec_kind: "decode_naive",
+                args,
+                slots: (0..self.econfig.batch).collect(),
+            });
+        } else {
+            // native mixed-format batch: group the active slots by
+            // codec and stack each group through its own codec's
+            // assemble + executable — the 1-bit (or low-rank) traffic
+            // win survives mixing, no 4·N·M dense detour
+            let mut groups: Vec<(&'static str, Vec<usize>)> = Vec::new();
+            for &i in &slots {
+                let name = codecs[i].name();
+                match groups.iter_mut().find(|(n, _)| *n == name) {
+                    Some((_, g)) => g.push(i),
+                    None => groups.push((name, vec![i])),
+                }
+            }
+            for (_, group) in groups {
+                let codec = codecs[group[0]].clone();
+                // batch-width payload list: the group's slots carry
+                // their own tenant's payload; every other slot repeats
+                // the group's first payload as valid padding, masked
+                // out at harvest (only `group` slots are read back)
+                let mut payloads = Vec::new();
+                for i in 0..self.econfig.batch {
+                    let t = if group.contains(&i) {
+                        &tenants[i]
+                    } else {
+                        &tenants[group[0]]
+                    };
+                    payloads.push(self.deltas.fetch(t)?);
+                }
+                let refs: Vec<&dyn crate::delta::codec::Payload> =
+                    payloads.iter().map(|p| p.as_ref()).collect();
+                let args = codec.assemble(&self.rt, &self.cfg, &refs,
+                                          self.econfig.batch)?;
+                let kind = args.exec_kind
+                    .unwrap_or_else(|| codec.exec_kind());
+                drop(refs);
+                drop(payloads);
+                let exec = self.exec_for(kind)?;
+                subs.push(SubPlan {
+                    exec,
+                    needs_base: codec.needs_base(),
+                    exec_kind: kind,
+                    args,
+                    slots: group,
+                });
+            }
+            // the native path materializes nothing
+            self.materialized.clear();
+            self.metrics.inc("mixed_batches", 1);
+            self.metrics.inc("mixed_native_subbatches",
+                             subs.len() as u64);
+        }
 
-        if needs_base && self.base_linears.is_none() {
+        if subs.iter().any(|s| s.needs_base)
+            && self.base_linears.is_none() {
             self.base_linears = Some(BaseLinears::from_model(
                 &self.rt, &self.cfg, &self.base_model)?);
         }
-        let exec = self.exec_for(exec_kind)?;
         self.metrics.inc("delta_restacks", 1);
-        self.metrics.inc("delta_restack_bytes",
-                         args.staged_bytes as u64);
-        self.metrics.inc(exec_kind, 1);
-        self.stacked = Some(StackedPlan {
-            comp, exec, needs_base, exec_kind, args,
-        });
+        let staged: usize =
+            subs.iter().map(|s| s.args.staged_bytes).sum();
+        self.metrics.inc("delta_restack_bytes", staged as u64);
+        for s in &subs {
+            self.metrics.inc(s.exec_kind, 1);
+        }
+        self.stacked = Some(StackedPlan { comp, subs });
         Ok(true)
     }
 

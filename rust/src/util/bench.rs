@@ -3,8 +3,20 @@
 //! Warmup, fixed sample count, and a one-line report with
 //! mean / p50 / min — enough to read kernel and end-to-end latency
 //! shapes for Figures 4/6.
+//!
+//! [`write_snapshot`] is the shared perf-trajectory sink: every bench
+//! writes its JSON rows to `BENCH_<name>.json` in one schema (bench
+//! id, git rev, kernel thread/dispatch config, rows with
+//! throughput + p50/p99), and `scripts/compare_bench.py` diffs that
+//! file against the committed baseline under `perf/` — the CI
+//! `perf-smoke` job fails on regression beyond tolerance.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::gemm::dispatch;
+use crate::util::json::Json;
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -27,6 +39,16 @@ impl Measurement {
 
     pub fn min(&self) -> Duration {
         *self.samples.iter().min().unwrap()
+    }
+
+    /// Nearest-rank `q`-quantile of the samples (`q` in `[0, 1]`;
+    /// `quantile(0.99)` is the p99 the perf snapshots record).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let mut v = self.samples.clone();
+        v.sort();
+        let last = v.len().saturating_sub(1);
+        let idx = (last as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[idx.min(last)]
     }
 
     pub fn report(&self) -> String {
@@ -83,6 +105,43 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Short git revision of the working tree, `"unknown"` outside a
+/// checkout (perf snapshots must say what they measured).
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Write the shared-schema perf snapshot `BENCH_<name>.json` into the
+/// current directory and return its path. The envelope carries
+/// everything needed to attribute the numbers — bench id, schema
+/// version, git rev, smoke flag, kernel worker-pool width and active
+/// dispatch tier — and `rows` are the bench's own JSON records (the
+/// same objects it prints after `--- JSON ---`).
+pub fn write_snapshot(name: &str, smoke: bool, rows: Vec<Json>)
+                      -> std::io::Result<PathBuf> {
+    let mut o = BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str(name.to_string()));
+    o.insert("schema".to_string(), Json::Num(1.0));
+    o.insert("git_rev".to_string(), Json::Str(git_rev()));
+    o.insert("smoke".to_string(), Json::Bool(smoke));
+    o.insert("threads".to_string(),
+             Json::Num(dispatch::pool_threads() as f64));
+    o.insert("dispatch".to_string(),
+             Json::Str(dispatch::active_tier().name().to_string()));
+    o.insert("rows".to_string(), Json::Arr(rows));
+    let path = PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{}\n", Json::Obj(o)))?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +158,18 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].mean() > Duration::ZERO);
         assert!(acc > 0);
+    }
+
+    #[test]
+    fn quantile_brackets_the_samples() {
+        let m = Measurement {
+            name: "q".into(),
+            samples: (1..=100).map(Duration::from_micros).collect(),
+        };
+        assert_eq!(m.quantile(0.0), Duration::from_micros(1));
+        assert_eq!(m.quantile(1.0), Duration::from_micros(100));
+        assert_eq!(m.quantile(0.5), m.p50());
+        assert!(m.quantile(0.99) >= m.quantile(0.5));
     }
 
     #[test]

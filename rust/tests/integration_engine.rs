@@ -261,10 +261,88 @@ fn mixed_codec_batch_serves_end_to_end() {
     assert!(!r1.tokens.is_empty() && !r2.tokens.is_empty());
     assert_ne!(r1.tokens, r2.tokens,
                "mixed-codec tenants produced identical output");
-    // the mixed composition must have gone through the dense fallback
+    // the mixed composition must run as native per-codec sub-batches —
+    // never through the stacked-dense decode_naive materialization
     let metrics = engine.metrics.exposition();
     assert!(metrics.contains("bitdelta_mixed_batches_total"),
             "no mixed batch recorded:\n{metrics}");
+    assert!(metrics.contains("bitdelta_mixed_native_subbatches_total"),
+            "mixed batch did not run native sub-batches:\n{metrics}");
+    assert!(!metrics.contains("bitdelta_decode_naive_total"),
+            "mixed batch took the stacked-dense detour:\n{metrics}");
+}
+
+#[test]
+fn mixed_format_batch_native_equals_dense_fallback() {
+    // Four codecs in ONE decode batch — bitdelta at k=1 (chat-ext),
+    // bitdelta at k=2 (math via --tenant-levels), lora (chat
+    // override), svd (rlhf override) — served twice: natively (one
+    // sub-batch per codec) and through the materialize-everything
+    // `mixed_dense_fallback` escape hatch. Greedy outputs must match
+    // per tenant, and only the fallback run may touch decode_naive.
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    if m.tenants["sim-s-chat"].svd_r16.is_none() {
+        eprintln!("skipping: sim-s-chat has no svd factors");
+        return;
+    }
+    if m.find_exec("sim-s", "decode_bitdelta_l2", 4).is_none()
+        || m.find_exec("sim-s", "decode_lora", 4).is_none()
+        || m.find_exec("sim-s", "decode_naive", 4).is_none() {
+        eprintln!("skipping: no b4 executables (rebuild artifacts)");
+        return;
+    }
+    if !m.tenants.get("sim-s-math")
+        .map_or(false, |e| e.fidelity.contains_key("2")) {
+        eprintln!("skipping: fidelity artifacts missing \
+(rebuild artifacts)");
+        return;
+    }
+
+    let tenants = ["sim-s-chat-ext", "sim-s-math", "sim-s-chat",
+                   "sim-s-rlhf"];
+    let prompt = "Q: what color is the sky ?\nA:";
+    let run = |fallback: bool| -> Option<(Vec<Vec<i32>>, String)> {
+        let mut ec = EngineConfig::new("artifacts");
+        ec.batch = 4;
+        ec.tenant_levels.insert("sim-s-math".into(), 2);
+        ec.codec_overrides.insert("sim-s-chat".into(), "lora".into());
+        ec.codec_overrides.insert("sim-s-rlhf".into(), "svd".into());
+        ec.mixed_dense_fallback = fallback;
+        let mut engine = match Engine::from_artifacts(ec) {
+            Ok(e) => e,
+            Err(e) => {
+                // load-time svd factorization may be unavailable on
+                // thin artifacts; skip like the svd registry test
+                eprintln!("skipping: {e}");
+                return None;
+            }
+        };
+        let chans: Vec<_> = tenants.iter()
+            .map(|t| engine.submit(req(t, prompt, 12)).unwrap())
+            .collect();
+        engine.run_until_idle(100_000).unwrap();
+        let tokens = chans.into_iter()
+            .map(|c| c.recv().unwrap().tokens)
+            .collect();
+        Some((tokens, engine.metrics.exposition()))
+    };
+
+    let Some((native, nm)) = run(false) else { return };
+    let Some((fallback, fm)) = run(true) else { return };
+    for ((t, a), b) in tenants.iter().zip(&native).zip(&fallback) {
+        assert!(!a.is_empty(), "{t}: native run produced nothing");
+        assert_eq!(a, b, "{t}: native and dense-fallback mixed \
+batches decoded differently");
+    }
+    assert!(nm.contains("bitdelta_mixed_native_subbatches_total"),
+            "native run recorded no sub-batches:\n{nm}");
+    assert!(!nm.contains("bitdelta_decode_naive_total"),
+            "native run took the stacked-dense detour:\n{nm}");
+    assert!(fm.contains("bitdelta_decode_naive_total"),
+            "fallback run never hit decode_naive:\n{fm}");
 }
 
 #[test]

@@ -12,13 +12,24 @@ use bitdelta::coordinator::router::{Router, TenantInfo};
 use bitdelta::delta::packing::{pack_signs, packed_row_bytes, popcount,
                                unpack_signs};
 use bitdelta::gemm::binary::binary_gemv_bitextract;
+use bitdelta::gemm::dispatch::{self, Tier};
 use bitdelta::gemm::{batched_binary_gemv, binary_gemv, dense_gemv,
-                     lora_gemv, try_binary_gemv};
+                     lora_gemv, try_binary_gemv, try_binary_gemv_multi};
 use bitdelta::kvcache::SeqCache;
 use bitdelta::model::sampling::SamplingParams;
 use bitdelta::serving::request::{QueuedRequest, Request};
 use bitdelta::store::bdw::{parse_bdw, write_bdw, Bdw, RawTensor};
-use bitdelta::util::prop::run_cases;
+use bitdelta::util::prop::{run_cases, Rng};
+
+/// `force_tier` / `set_pool_threads` are process globals and this
+/// binary's tests run in parallel, so every test that mutates them —
+/// or asserts *exact* equality between two kernel calls that must see
+/// the same tier — serializes on this lock.
+static KERNEL_CONFIG: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn kernel_lock() -> std::sync::MutexGuard<'static, ()> {
+    KERNEL_CONFIG.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn tiny_cfg() -> ModelConfig {
     ModelConfig { name: "t".into(), vocab_size: 16, d_model: 8,
@@ -151,7 +162,122 @@ fn binary_gemv_agrees_with_dense_on_sign_matrix() {
 }
 
 #[test]
+fn every_dispatch_tier_matches_the_dense_reference() {
+    // The same randomized widths as the lut/bitextract agreement test
+    // — including logical widths that are NOT multiples of 8 — but
+    // swept across every dispatch tier via the force override.
+    // Forcing a tier this host cannot run falls back to scalar, so
+    // the sweep is portable across x86_64 / aarch64 / anything else.
+    let _g = kernel_lock();
+    for tier in Tier::ALL {
+        dispatch::force_tier(Some(tier));
+        run_cases(40, |rng| {
+            let n = rng.usize_in(1, 12);
+            let m = rng.usize_in(1, 41);
+            let vals = rng.f32_vec(n * m);
+            let bits = pack_signs(&vals, m);
+            let x = rng.f32_vec(m);
+            let alpha = rng.f32_pm1().abs() + 0.05;
+            let mut y = vec![0f32; n];
+            try_binary_gemv(&bits, n, m, &x, alpha, &mut y).unwrap();
+            let signs: Vec<f32> = vals.iter()
+                .map(|v| if *v > 0.0 { alpha } else { -alpha })
+                .collect();
+            let mut want = vec![0f32; n];
+            dense_gemv(&signs, n, m, &x, &mut want);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                        "tier {tier} n={n} m={m}: {a} vs dense {b}");
+            }
+        });
+    }
+    dispatch::force_tier(None);
+}
+
+#[test]
+fn threaded_tiling_is_bit_identical_on_every_tier() {
+    // Per-row results are independent of the row split, so the tiled
+    // multicore path must reproduce the single-thread output *bit for
+    // bit* on every tier. n=4096 rows of 8 packed bytes clears the
+    // 8 KiB-per-chunk tiling threshold at 4 threads (1024-row
+    // chunks), so the pool genuinely engages.
+    let _g = kernel_lock();
+    let prev_threads = dispatch::pool_threads();
+    let (n, m) = (4096usize, 64usize);
+    let mut rng = Rng::new(11);
+    let vals = rng.f32_vec(n * m);
+    let bits = pack_signs(&vals, m);
+    let vals2 = rng.f32_vec(n * m);
+    let bits2 = pack_signs(&vals2, m);
+    let x = rng.f32_vec(m);
+    let levels: Vec<(&[u8], f32)> =
+        vec![(bits.as_slice(), 0.07), (bits2.as_slice(), 0.03)];
+    for tier in Tier::ALL {
+        dispatch::force_tier(Some(tier));
+        dispatch::set_pool_threads(1);
+        let mut y1 = vec![0f32; n];
+        try_binary_gemv(&bits, n, m, &x, 0.05, &mut y1).unwrap();
+        let mut y1m = vec![0f32; n];
+        try_binary_gemv_multi(&levels, n, m, &x, &mut y1m).unwrap();
+        for threads in [2usize, 4] {
+            dispatch::set_pool_threads(threads);
+            let mut y = vec![0f32; n];
+            try_binary_gemv(&bits, n, m, &x, 0.05, &mut y).unwrap();
+            assert!(y.iter().zip(&y1)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "tier {tier} threads {threads}: single-level \
+output depends on the split");
+            let mut ym = vec![0f32; n];
+            try_binary_gemv_multi(&levels, n, m, &x, &mut ym).unwrap();
+            assert!(ym.iter().zip(&y1m)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "tier {tier} threads {threads}: multi-level \
+output depends on the split");
+        }
+    }
+    dispatch::force_tier(None);
+    dispatch::set_pool_threads(prev_threads);
+}
+
+#[test]
+fn zero_scale_levels_are_exact_noops_on_every_tier() {
+    // A zero-scale mask level (how narrower fidelity tiers pad up to
+    // a shared level count) must contribute exactly 0.0 on every
+    // tier, at any width — including non-multiples of 8.
+    let _g = kernel_lock();
+    for tier in Tier::ALL {
+        dispatch::force_tier(Some(tier));
+        run_cases(20, |rng| {
+            let n = rng.usize_in(1, 8);
+            let m = rng.usize_in(1, 33);
+            let vals = rng.f32_vec(n * m);
+            let bits = pack_signs(&vals, m);
+            let vals2 = rng.f32_vec(n * m);
+            let bits2 = pack_signs(&vals2, m);
+            let x = rng.f32_vec(m);
+            let with: Vec<(&[u8], f32)> =
+                vec![(bits.as_slice(), 0.06), (bits2.as_slice(), 0.0)];
+            let without: Vec<(&[u8], f32)> =
+                vec![(bits.as_slice(), 0.06)];
+            let mut ya = vec![0f32; n];
+            try_binary_gemv_multi(&with, n, m, &x, &mut ya).unwrap();
+            let mut yb = vec![0f32; n];
+            try_binary_gemv_multi(&without, n, m, &x, &mut yb)
+                .unwrap();
+            for (a, b) in ya.iter().zip(&yb) {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "tier {tier} n={n} m={m}: {a} vs {b}");
+            }
+        });
+    }
+    dispatch::force_tier(None);
+}
+
+#[test]
 fn batched_binary_gemv_equals_per_tenant_loop() {
+    // exact equality between two kernel calls — hold the config lock
+    // so a concurrent tier sweep cannot flip dispatch mid-compare
+    let _g = kernel_lock();
     run_cases(25, |rng| {
         let b = rng.usize_in(1, 5);
         let n = rng.usize_in(1, 6);

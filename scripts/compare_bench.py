@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: diff BENCH_<name>.json snapshots against the
+committed baselines under perf/.
+
+Usage:
+    compare_bench.py [--baseline-dir perf] [--tolerance 0.25]
+                     [--update] BENCH_fig4.json [more snapshots...]
+
+Snapshot schema (written by rust/src/util/bench.rs::write_snapshot):
+one JSON object per file with an envelope (bench, schema, git_rev,
+smoke, threads, dispatch) and a "rows" array. Each row mixes identity
+fields (strings, bools, and numbers with no known metric suffix) with
+metric fields; a row in the current snapshot is matched to the
+baseline row with the same identity, then each shared metric is
+compared directionally:
+
+  lower is better:  keys ending in _us / _ms / p50 / p99 / errors
+  higher is better: keys ending in gbps / tok_per_s / speedup / served
+
+A metric regresses when it is worse than baseline by more than
+--tolerance (relative). Rows or metrics missing on either side are
+reported and skipped, never failed: machines differ (dispatch tier,
+thread count are identity fields, so an avx2 baseline simply does not
+gate a neon runner).
+
+Baselines with "provisional": true in the envelope report but never
+fail — they mark hand-written placeholders committed before a real
+runner blessed them with --update.
+
+Exit codes: 0 ok / 1 regression / 2 bad input.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+LOWER_SUFFIXES = ("_us", "_ms", "p50", "p99", "errors")
+HIGHER_SUFFIXES = ("gbps", "tok_per_s", "speedup", "served")
+
+
+def metric_direction(key):
+    """-1 = lower is better, +1 = higher is better, None = identity."""
+    for s in LOWER_SUFFIXES:
+        if key.endswith(s):
+            return -1
+    for s in HIGHER_SUFFIXES:
+        if key.endswith(s):
+            return +1
+    return None
+
+
+def split_row(row):
+    """(identity dict, metrics dict) for one snapshot row."""
+    ident, metrics = {}, {}
+    for k, v in row.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                and metric_direction(k) is not None:
+            metrics[k] = float(v)
+        else:
+            ident[k] = v
+    return ident, metrics
+
+
+def row_key(ident):
+    return json.dumps(ident, sort_keys=True)
+
+
+def load_snapshot(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "rows" not in doc:
+        raise ValueError(f"{path}: not a bench snapshot (no rows)")
+    return doc
+
+
+def compare(current, baseline, tolerance, label):
+    """Return (regressions, notes) comparing two snapshot docs."""
+    base_rows = {}
+    for row in baseline.get("rows", []):
+        ident, metrics = split_row(row)
+        base_rows[row_key(ident)] = metrics
+    regressions, notes = [], []
+    for row in current.get("rows", []):
+        ident, metrics = split_row(row)
+        key = row_key(ident)
+        base = base_rows.get(key)
+        if base is None:
+            notes.append(f"{label}: no baseline row for {key} — skipped")
+            continue
+        for k, cur in sorted(metrics.items()):
+            if k not in base:
+                notes.append(
+                    f"{label}: {key}: metric {k} not in baseline — "
+                    "skipped")
+                continue
+            want = base[k]
+            direction = metric_direction(k)
+            if want == 0:
+                continue
+            if direction < 0:
+                ratio = cur / want          # >1 means slower
+            else:
+                ratio = want / cur          # >1 means less throughput
+            if ratio > 1.0 + tolerance:
+                regressions.append(
+                    f"{label}: {key}: {k} regressed "
+                    f"{cur:g} vs baseline {want:g} "
+                    f"({(ratio - 1.0) * 100:.0f}% worse, "
+                    f"tolerance {tolerance * 100:.0f}%)")
+    return regressions, notes
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="diff bench snapshots against committed baselines")
+    ap.add_argument("snapshots", nargs="+",
+                    help="BENCH_<name>.json files from a bench run")
+    ap.add_argument("--baseline-dir", default="perf",
+                    help="directory holding committed baselines")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative slack before a metric fails (0.25 "
+                         "= 25%% worse than baseline)")
+    ap.add_argument("--update", action="store_true",
+                    help="bless: copy the snapshots over the baselines "
+                         "instead of comparing")
+    args = ap.parse_args()
+
+    failed = False
+    regressed = False
+    for path in args.snapshots:
+        name = os.path.basename(path)
+        base_path = os.path.join(args.baseline_dir, name)
+        try:
+            current = load_snapshot(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            failed = True
+            continue
+        if args.update:
+            os.makedirs(args.baseline_dir, exist_ok=True)
+            current.pop("provisional", None)
+            with open(base_path, "w", encoding="utf-8") as f:
+                json.dump(current, f, indent=1, sort_keys=True)
+                f.write("\n")
+            print(f"blessed {base_path} "
+                  f"(git_rev {current.get('git_rev', '?')})")
+            continue
+        if not os.path.exists(base_path):
+            print(f"{name}: no baseline at {base_path} — skipped "
+                  "(run with --update to create one)")
+            continue
+        try:
+            baseline = load_snapshot(base_path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            failed = True
+            continue
+        regressions, notes = compare(current, baseline,
+                                     args.tolerance, name)
+        for n in notes:
+            print(n)
+        provisional = bool(baseline.get("provisional"))
+        for r in regressions:
+            tag = "would regress (provisional baseline)" if provisional \
+                else "REGRESSION"
+            print(f"{tag}: {r}")
+        if regressions and not provisional:
+            regressed = True
+        if not regressions:
+            n = len(current.get("rows", []))
+            print(f"{name}: ok ({n} rows within tolerance)")
+
+    if failed:
+        return 2
+    if regressed:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
