@@ -1,0 +1,241 @@
+//! KV paging — resident KV bytes and incremental-restack time vs
+//! sequence count × shared-prefix fraction.
+//!
+//! The claim under test (ROADMAP open item 2): the paged KV cache
+//! makes resident KV bytes **sublinear in sequence count** when
+//! sequences share a system prompt — the shared prefix is resident
+//! once, not once per sequence — while the dense-slab design pays
+//! `seqs * max_seq_len` regardless of actual lengths. The bench
+//! drives `bitdelta::kvcache` directly (no artifacts needed): one
+//! shared weight signature across four distinct tenant labels (the
+//! BitDelta cross-tenant case — all deltas ride one base, so
+//! identically-served prompts have bit-identical KV), a registered
+//! system-prompt prefix, and per-sequence divergent tails.
+//!
+//! Measured per (seqs × shared%) combo:
+//! * `resident_kib` vs the slab comparator `slab_kib` (exact,
+//!   deterministic — identity fields in the snapshot rows)
+//! * `fill_us` — one admission end-to-end: prefix lookup, shared-block
+//!   reuse, tail appends, release
+//! * `restack_us` — incremental restack: gather ONE slot into the
+//!   dense staging pair (the engine never rebuilds the whole batch)
+//! * `mem_speedup` — slab / paged resident bytes (higher is better)
+//!
+//! Emits a human table plus one JSON object per row and archives
+//! `BENCH_kv_paging.json` (shared snapshot schema) for the
+//! `scripts/compare_bench.py` baseline gate.
+//!
+//! Flags: `--smoke` (or env `KV_PAGING_SMOKE=1`) = 8/32 sequences at
+//! mean length 64 — a trend sample for CI, not a measurement.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use bitdelta::kvcache::{share_sig, BlockDims, BlockPool, BlockTable,
+                        PrefixIndex};
+use bitdelta::util::bench::{black_box, write_snapshot, Bench};
+use bitdelta::util::json::Json;
+
+/// Distinct tenant labels sharing one weight signature — prefix hits
+/// recorded below cross these tenant boundaries.
+const TENANTS: [&str; 4] = ["tenant-chat", "tenant-math",
+                            "tenant-rlhf", "tenant-code"];
+const BLOCK_SIZE: usize = 16;
+
+fn dims() -> BlockDims {
+    BlockDims { n_layers: 2, n_heads: 4, block_size: BLOCK_SIZE,
+                head_dim: 32 }
+}
+
+struct Row {
+    seqs: usize,
+    shared_pct: usize,
+    mean_len: usize,
+    prefix_hits: u64,
+    resident_kib: usize,
+    slab_kib: usize,
+    fill_us: f64,
+    restack_us: f64,
+    mem_speedup: f64,
+    smoke: bool,
+}
+
+fn run_combo(seqs: usize, shared_pct: usize, mean_len: usize,
+             smoke: bool) -> Row {
+    let d = dims();
+    let rf = d.row_floats();
+    // block-aligned shared prompt; block-aligned private tail
+    let shared_len =
+        (mean_len * shared_pct / 100) / BLOCK_SIZE * BLOCK_SIZE;
+    let shared_blocks = shared_len / BLOCK_SIZE;
+    let private_blocks = (mean_len - shared_len).div_ceil(BLOCK_SIZE);
+    let n_blocks = shared_blocks + seqs * private_blocks
+        + mean_len.div_ceil(BLOCK_SIZE) + 8;
+    let mut pool = BlockPool::new(d, n_blocks);
+    let mut index = PrefixIndex::new();
+
+    // every tenant label maps to the same served weights: same codec,
+    // same tier, same artifact — the only regime where cross-tenant
+    // KV sharing is sound
+    let sig = share_sig(&["bitdelta", "1", "base", "distilled"]);
+    let shared_toks: Vec<i32> = (0..shared_len as i32).collect();
+    let k_row = vec![0.37f32; rf];
+    let v_row = vec![-0.37f32; rf];
+
+    // prompt cache warm-up: one prefill owns the system prompt, the
+    // index keeps the blocks alive past the sequence
+    if shared_len > 0 {
+        let mut owner = BlockTable::new();
+        for _ in 0..shared_len {
+            owner.append_row(&mut pool, &k_row, &v_row).unwrap();
+        }
+        index.register(&mut pool, sig, 1.0, &shared_toks,
+                       owner.blocks());
+        owner.free(&mut pool);
+    }
+
+    // admit `seqs` sequences round-robin across the tenant labels:
+    // shared prefix reused from the index, divergent tail appended
+    let admit = |pool: &mut BlockPool, index: &mut PrefixIndex,
+                 seq_id: usize| -> BlockTable {
+        let _tenant = TENANTS[seq_id % TENANTS.len()];
+        let mut t = if shared_len > 0 {
+            let (blocks, len) = index
+                .lookup(sig, 1.0, &shared_toks, BLOCK_SIZE)
+                .expect("registered prefix must hit");
+            assert_eq!(len, shared_len);
+            BlockTable::with_shared_prefix(pool, &blocks)
+        } else {
+            BlockTable::new()
+        };
+        for _ in t.len()..mean_len {
+            t.append_row(pool, &k_row, &v_row).unwrap();
+        }
+        t
+    };
+    let mut tables: Vec<BlockTable> = (0..seqs)
+        .map(|i| admit(&mut pool, &mut index, i)).collect();
+
+    // deterministic accounting, recorded before the timed phase so
+    // timing iterations cannot perturb the counters
+    let prefix_hits = index.hits;
+    let resident_kib = pool.resident_bytes() / 1024;
+    let max_seq = 2 * mean_len; // the slab design preallocates this
+    let slab_kib = seqs * max_seq * rf * 4 * 2 / 1024;
+    let mem_speedup = slab_kib as f64 / resident_kib as f64;
+
+    let mut b = if smoke { Bench::new(1, 5) } else { Bench::new(3, 20) };
+    let label = format!("fill seqs={seqs} shared={shared_pct}%");
+    let fill = b.run(label, || {
+        let mut t = admit(&mut pool, &mut index, 0);
+        t.free(&mut pool);
+        black_box(t.len());
+    });
+    let fill_us = fill.mean().as_secs_f64() * 1e6;
+
+    let (batch, slot) = (4usize, 1usize);
+    let total = d.n_layers * batch * d.n_heads * max_seq * d.head_dim;
+    let mut k_dst = vec![0f32; total];
+    let mut v_dst = vec![0f32; total];
+    let label = format!("restack seqs={seqs} shared={shared_pct}%");
+    let restack = b.run(label, || {
+        tables[0].gather_into(&pool, slot, batch, max_seq, &mut k_dst,
+                              &mut v_dst);
+        black_box(k_dst[0]);
+    });
+    let restack_us = restack.mean().as_secs_f64() * 1e6;
+
+    for t in &mut tables {
+        t.free(&mut pool);
+    }
+    index.clear(&mut pool);
+    assert_eq!(pool.used_blocks(), 0, "bench leaked blocks");
+
+    Row { seqs, shared_pct, mean_len, prefix_hits, resident_kib,
+          slab_kib, fill_us, restack_us, mem_speedup, smoke }
+}
+
+fn json_row(r: &Row) -> Json {
+    let round1 = |x: f64| (x * 10.0).round() / 10.0;
+    let round2 = |x: f64| (x * 100.0).round() / 100.0;
+    let mut o = BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("kv_paging".to_string()));
+    o.insert("seqs".to_string(), Json::Num(r.seqs as f64));
+    o.insert("shared_pct".to_string(), Json::Num(r.shared_pct as f64));
+    o.insert("mean_len".to_string(), Json::Num(r.mean_len as f64));
+    o.insert("block_size".to_string(), Json::Num(BLOCK_SIZE as f64));
+    o.insert("tenants".to_string(),
+             Json::Num(TENANTS.len() as f64));
+    o.insert("prefix_hits".to_string(),
+             Json::Num(r.prefix_hits as f64));
+    o.insert("resident_kib".to_string(),
+             Json::Num(r.resident_kib as f64));
+    o.insert("slab_kib".to_string(), Json::Num(r.slab_kib as f64));
+    o.insert("fill_us".to_string(), Json::Num(round1(r.fill_us)));
+    o.insert("restack_us".to_string(),
+             Json::Num(round1(r.restack_us)));
+    o.insert("mem_speedup".to_string(),
+             Json::Num(round2(r.mem_speedup)));
+    o.insert("smoke".to_string(), Json::Bool(r.smoke));
+    Json::Obj(o)
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("KV_PAGING_SMOKE").is_ok();
+    let mean_len = if smoke { 64 } else { 256 };
+    let seq_counts: &[usize] =
+        if smoke { &[8, 32] } else { &[8, 32, 128] };
+
+    println!("kv_paging — mean len {mean_len} of {} slab, block {}, \
+{} tenant labels on one weight sig",
+             2 * mean_len, BLOCK_SIZE, TENANTS.len());
+    println!("{:<6} {:<8} {:>13} {:>10} {:>8} {:>9} {:>11} {:>6}",
+             "seqs", "shared", "resident KiB", "slab KiB", "win",
+             "fill us", "restack us", "hits");
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &shared_pct in &[0usize, 50] {
+        for &seqs in seq_counts {
+            let r = run_combo(seqs, shared_pct, mean_len, smoke);
+            println!("{:<6} {:<8} {:>13} {:>10} {:>7.2}x {:>9.1} \
+{:>11.1} {:>6}",
+                     r.seqs, format!("{}%", r.shared_pct),
+                     r.resident_kib, r.slab_kib, r.mem_speedup,
+                     r.fill_us, r.restack_us, r.prefix_hits);
+            rows.push(r);
+        }
+    }
+
+    // the acceptance gates, checked on every run:
+    // 1. shared prompts hit the prefix cache across tenant labels
+    for r in rows.iter().filter(|r| r.shared_pct > 0) {
+        assert!(r.prefix_hits as usize >= r.seqs,
+                "shared prompt never hit the index");
+    }
+    // 2. resident KV bytes are sublinear in sequence count when a
+    //    system prompt is shared (strictly better than pro-rata)
+    let shared: Vec<&Row> =
+        rows.iter().filter(|r| r.shared_pct > 0).collect();
+    for w in shared.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        assert!(b.resident_kib * a.seqs < a.resident_kib * b.seqs,
+                "resident KV not sublinear: {} seqs -> {} KiB, \
+{} seqs -> {} KiB",
+                a.seqs, a.resident_kib, b.seqs, b.resident_kib);
+    }
+    println!("\nresident KV is sublinear in sequence count under a \
+shared system prompt; prefix hits span {} tenant labels",
+             TENANTS.len());
+
+    println!("\n--- JSON ---");
+    let json_rows: Vec<Json> = rows.iter().map(json_row).collect();
+    for r in &json_rows {
+        println!("{r}");
+    }
+    match write_snapshot("kv_paging", smoke, json_rows) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nsnapshot write failed: {e}"),
+    }
+    Ok(())
+}

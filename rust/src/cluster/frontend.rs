@@ -24,7 +24,10 @@
 //! in-flight sequences run to completion (no KV-cache loss, unlike
 //! failover), and only then is the thread joined. The
 //! [`crate::cluster::autoscaler`] drives both from the live load
-//! signals workers already publish.
+//! signals workers already publish. Slot indices are stable forever;
+//! terminal slots are *compacted* to tombstones
+//! ([`ClusterHandle::compact_slots`]) so a long-lived cluster's slot
+//! table holds resources only for live workers.
 //!
 //! **Failover**: a worker that dies (engine error or panic) drops its
 //! `alive` flag; in-flight requests on it are answered with errors (the
@@ -97,12 +100,28 @@ pub enum WorkerState {
     Dead,
 }
 
-/// One worker's slot in the cluster table.
-struct Slot {
+/// The resource-holding half of a slot: the channel handle, the thread
+/// join handle, and the placement spec. Dropped wholesale when a
+/// terminal slot is compacted.
+struct LiveWorker {
     handle: WorkerHandle,
     join: Option<JoinHandle<Result<()>>>,
-    state: WorkerState,
     spec: WorkerSpec,
+}
+
+/// One worker's slot in the cluster table. Slots are never removed
+/// (indices are the stable external identity placements, routing state
+/// and metrics labels key on), but a **terminal** slot (Retired or
+/// Dead) can be *compacted*: its [`LiveWorker`] — channel, thread
+/// handle, spec — is dropped, leaving a tombstone that still answers
+/// lifecycle and metrics queries. A month-long elastic cluster that
+/// scaled up and down thousands of times keeps a bounded footprint
+/// instead of accreting dead worker handles.
+struct Slot {
+    /// `Some` while the worker holds real resources; `None` once a
+    /// terminal slot has been compacted.
+    live: Option<LiveWorker>,
+    state: WorkerState,
     routed: u64,
 }
 
@@ -110,10 +129,15 @@ impl Slot {
     /// Routable: Active *and* its thread still running — the one
     /// predicate routing, load sampling, and the metrics counts all
     /// share. (An Active slot whose thread has exited is dead but not
-    /// yet reaped.)
+    /// yet reaped; a compacted slot is terminal, hence never Active.)
     fn routable(&self) -> bool {
         self.state == WorkerState::Active
-            && self.handle.load().is_alive()
+            && self.live.as_ref()
+                .map_or(false, |l| l.handle.load().is_alive())
+    }
+
+    fn handle(&self) -> Option<&WorkerHandle> {
+        self.live.as_ref().map(|l| &l.handle)
     }
 }
 
@@ -159,7 +183,8 @@ struct SlotLoads<'a>(&'a [Slot]);
 
 impl LoadView for SlotLoads<'_> {
     fn score(&self, worker: usize) -> usize {
-        self.0.get(worker).map(|s| s.handle.load().score())
+        self.0.get(worker).and_then(|s| s.handle())
+            .map(|h| h.load().score())
             .unwrap_or(usize::MAX)
     }
 }
@@ -246,10 +271,12 @@ impl Cluster {
             let (handle, join) =
                 spawn_worker(format!("bitdelta-worker-{i}"), f)?;
             slots.push(Slot {
-                handle,
-                join: Some(join),
+                live: Some(LiveWorker {
+                    handle,
+                    join: Some(join),
+                    spec: specs[i].clone(),
+                }),
                 state: WorkerState::Active,
-                spec: specs[i].clone(),
                 routed: 0,
             });
         }
@@ -306,11 +333,14 @@ impl Cluster {
             let mut st = self.handle.shared.state.lock().unwrap();
             let mut joins = Vec::new();
             for slot in st.slots.iter_mut() {
+                let Some(live) = slot.live.as_mut() else {
+                    continue; // compacted: joined long ago
+                };
                 if matches!(slot.state, WorkerState::Active
                             | WorkerState::Draining) {
-                    slot.handle.shutdown_signal();
+                    live.handle.shutdown_signal();
                 }
-                if let Some(j) = slot.join.take() {
+                if let Some(j) = live.join.take() {
                     joins.push(j);
                 }
             }
@@ -365,12 +395,15 @@ impl ClusterHandle {
             // same lock, *then* signals shutdown) can never interleave:
             // every routed request is ordered before the drain command
             // and completes — the zero-error guarantee of scale-down
-            match st.slots[w].handle.submit(req.clone()) {
-                Ok(rx) => {
+            // pick_locked only returns routable slots, which are live
+            let sent = st.slots[w].handle()
+                .map(|h| h.submit(req.clone()));
+            match sent {
+                Some(Ok(rx)) => {
                     st.slots[w].routed += 1;
                     return Ok(ClusterTicket { rx, _permit: permit });
                 }
-                Err(_) => self.mark_dead_locked(&mut st, w),
+                _ => self.mark_dead_locked(&mut st, w),
             }
         }
     }
@@ -419,7 +452,8 @@ impl ClusterHandle {
         let st = self.shared.state.lock().unwrap();
         st.slots.iter()
             .filter(|s| s.routable())
-            .map(|s| s.handle.load().score())
+            .filter_map(|s| s.handle())
+            .map(|h| h.load().score())
             .sum()
     }
 
@@ -435,7 +469,8 @@ impl ClusterHandle {
         let st = self.shared.state.lock().unwrap();
         st.slots.iter().enumerate()
             .filter(|(_, s)| s.routable())
-            .min_by_key(|(w, s)| (s.handle.load().score(), *w))
+            .filter_map(|(w, s)| s.handle().map(|h| (w, h)))
+            .min_by_key(|(w, h)| (h.load().score(), *w))
             .map(|(w, _)| w)
     }
 
@@ -456,13 +491,15 @@ Cluster::spawn_elastic / spawn_engines clusters can scale up")
         let mut st = self.shared.state.lock().unwrap();
         let index = st.slots.len();
         st.slots.push(Slot {
-            handle,
-            join: Some(join),
+            live: Some(LiveWorker {
+                handle,
+                join: Some(join),
+                spec: WorkerSpec {
+                    index,
+                    delta_budget_bytes: self.shared.delta_budget_bytes,
+                },
+            }),
             state: WorkerState::Active,
-            spec: WorkerSpec {
-                index,
-                delta_budget_bytes: self.shared.delta_budget_bytes,
-            },
             routed: 0,
         });
         st.scale_ups += 1;
@@ -498,13 +535,15 @@ floor is {}", st.active_count(), min_active.max(1));
             if slot.state != WorkerState::Active {
                 bail!("worker {w} is {:?}, not Active", slot.state);
             }
+            let live = slot.live.as_mut()
+                .ok_or_else(|| anyhow!("worker {w} already compacted"))?;
             // take the join handle before flipping state, so a
             // concurrent shutdown can't leave the slot Draining with
             // nobody to join it
-            let join = slot.join.take()
+            let join = live.join.take()
                 .ok_or_else(|| anyhow!("worker {w} already joining"))?;
+            let handle = live.handle.clone();
             slot.state = WorkerState::Draining;
-            let handle = slot.handle.clone();
             // tenants leave the draining worker immediately: new
             // requests route to the survivors while the drain runs
             self.replace(&mut st);
@@ -515,6 +554,10 @@ floor is {}", st.active_count(), min_active.max(1));
         let result = join.join();
         let drain = t0.elapsed();
         let mut st = self.shared.state.lock().unwrap();
+        // the slot is terminal either way and its thread was just
+        // joined — compact it immediately so a long-lived elastic
+        // cluster never accretes dead handles across scale cycles
+        st.slots[w].live = None;
         match result {
             Ok(Ok(())) => {
                 st.slots[w].state = WorkerState::Retired;
@@ -538,6 +581,32 @@ floor is {}", st.active_count(), min_active.max(1));
         }
     }
 
+    /// Compact every terminal (Retired / Dead) slot whose thread has
+    /// already been joined: drop its channel handle, thread handle and
+    /// spec, keeping only the tombstone (state + lifetime routed
+    /// count). Slot indices never shift, so placements, routing state
+    /// and metrics labels stay valid. A dead worker that has **not**
+    /// been joined yet is left alone — [`Cluster::shutdown`] still owes
+    /// the caller that thread's error. Returns the number of slots
+    /// compacted; clean scale-downs compact eagerly, so this is mostly
+    /// a sweep for workers that died and were reaped.
+    pub fn compact_slots(&self) -> usize {
+        let mut st = self.shared.state.lock().unwrap();
+        self.reap(&mut st);
+        let mut n = 0;
+        for slot in st.slots.iter_mut() {
+            let terminal = matches!(slot.state, WorkerState::Retired
+                                    | WorkerState::Dead);
+            let joined = slot.live.as_ref()
+                .map_or(false, |l| l.join.is_none());
+            if terminal && joined {
+                slot.live = None;
+                n += 1;
+            }
+        }
+        n
+    }
+
     /// Cluster exposition: rollup across workers, cluster routing /
     /// failover / scale / admission series, then every live worker's
     /// own metrics re-labeled with `worker="i"`.
@@ -547,7 +616,9 @@ floor is {}", st.active_count(), min_active.max(1));
             let st = self.shared.state.lock().unwrap();
             st.slots.iter().enumerate()
                 .filter(|(_, s)| s.routable())
-                .map(|(w, s)| (w, s.handle.clone()))
+                .filter_map(|(w, s)| {
+                    s.handle().map(|h| (w, h.clone()))
+                })
                 .collect()
         };
         let mut texts = Vec::new();
@@ -643,8 +714,7 @@ floor is {}", st.active_count(), min_active.max(1));
     fn reap(&self, st: &mut ClusterState) {
         let mut newly_dead = 0u64;
         for slot in st.slots.iter_mut() {
-            if slot.state == WorkerState::Active
-                && !slot.handle.load().is_alive() {
+            if slot.state == WorkerState::Active && !slot.routable() {
                 slot.state = WorkerState::Dead;
                 newly_dead += 1;
             }
@@ -659,7 +729,8 @@ floor is {}", st.active_count(), min_active.max(1));
     fn replace(&self, st: &mut ClusterState) {
         let active: Vec<WorkerSpec> = st.slots.iter()
             .filter(|s| s.state == WorkerState::Active)
-            .map(|s| s.spec.clone()).collect();
+            .filter_map(|s| s.live.as_ref().map(|l| l.spec.clone()))
+            .collect();
         if active.is_empty() {
             return;
         }
@@ -799,11 +870,36 @@ pub struct ReplayReport {
     pub kernel_threads: usize,
     /// Active kernel dispatch tier (`"scalar"`, `"avx2"`, `"neon"`).
     pub dispatch_tier: &'static str,
+    /// KV block pool usage summed across workers, scraped from the
+    /// cluster rollup when the replay ends. All four stay 0 when the
+    /// workers run the dense-slab fallback (no kv series exported).
+    pub kv_blocks_used: u64,
+    pub kv_blocks_total: u64,
+    /// Prefix-cache admissions that reused at least one KV block.
+    pub kv_prefix_hits: u64,
+    pub kv_prefix_lookups: u64,
 }
 
 impl ReplayReport {
     pub fn served(&self) -> usize {
         self.latencies.len()
+    }
+
+    /// Fraction of the paged KV pool resident at replay end (0.0 under
+    /// the slab fallback).
+    pub fn kv_occupancy(&self) -> f64 {
+        if self.kv_blocks_total == 0 {
+            return 0.0;
+        }
+        self.kv_blocks_used as f64 / self.kv_blocks_total as f64
+    }
+
+    /// Fraction of admissions that reused prefix-cached KV blocks.
+    pub fn kv_prefix_hit_rate(&self) -> f64 {
+        if self.kv_prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.kv_prefix_hits as f64 / self.kv_prefix_lookups as f64
     }
 
     /// Aggregate decode throughput over the whole replay.
@@ -905,6 +1001,10 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
         wall_seconds: 0.0,
         kernel_threads: crate::gemm::dispatch::pool_threads(),
         dispatch_tier: crate::gemm::dispatch::active_tier().name(),
+        kv_blocks_used: 0,
+        kv_blocks_total: 0,
+        kv_prefix_hits: 0,
+        kv_prefix_lookups: 0,
     };
     for j in joins {
         let (l, t, e, rj) = j.join()
@@ -916,7 +1016,26 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
     }
     report.wall_seconds = t0.elapsed().as_secs_f64();
     report.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // scrape KV paging occupancy from the cluster rollup so the report
+    // carries cache behavior beside its latency quantiles
+    let m = handle.metrics();
+    report.kv_blocks_used = scrape(&m, "bitdelta_kv_blocks_used");
+    report.kv_blocks_total = scrape(&m, "bitdelta_kv_blocks_total");
+    report.kv_prefix_hits = scrape(&m, "bitdelta_kv_prefix_hits_total");
+    report.kv_prefix_lookups =
+        scrape(&m, "bitdelta_kv_prefix_lookups_total");
     Ok(report)
+}
+
+/// First un-labeled `name <value>` sample in a Prometheus exposition
+/// (the rollup section precedes the `{worker=…}` relabels, so this
+/// reads the cluster-wide sum). Missing series read as 0.
+fn scrape(exposition: &str, name: &str) -> u64 {
+    exposition.lines()
+        .filter_map(|l| l.trim().strip_prefix(name))
+        .filter_map(|rest| rest.strip_prefix(' '))
+        .find_map(|v| v.trim().parse::<f64>().ok())
+        .unwrap_or(0.0) as u64
 }
 
 #[cfg(test)]
@@ -1094,7 +1213,21 @@ mod tests {
         assert_eq!(r.tokens, 40);
         assert!(r.quantile_ms(0.99) >= r.quantile_ms(0.5));
         assert!(r.tok_per_s() > 0.0);
+        // mock cores export no kv series: the report reads as slab
+        assert_eq!(r.kv_blocks_total, 0);
+        assert_eq!(r.kv_occupancy(), 0.0);
+        assert_eq!(r.kv_prefix_hit_rate(), 0.0);
         cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn scrape_reads_rollup_not_relabeled_series() {
+        let text = "bitdelta_kv_blocks_used 12\n\
+                    bitdelta_kv_blocks_used{worker=\"0\"} 5\n\
+                    bitdelta_kv_blocks_total 64\n";
+        assert_eq!(scrape(text, "bitdelta_kv_blocks_used"), 12);
+        assert_eq!(scrape(text, "bitdelta_kv_blocks_total"), 64);
+        assert_eq!(scrape(text, "bitdelta_kv_prefix_hits_total"), 0);
     }
 
     #[test]
@@ -1194,6 +1327,34 @@ mod tests {
         let err = handle.retire_worker(0).unwrap_err().to_string();
         assert!(err.contains("only 1 active"), "{err}");
         // still serving
+        handle.generate(req("a")).unwrap();
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn compaction_frees_retired_slots_but_keeps_identity() {
+        let cluster = Cluster::spawn_elastic(
+            &cfg("least-loaded"), profiles(&["a"], 10), 3,
+            elastic_mock(Duration::ZERO)).unwrap();
+        let handle = cluster.handle();
+        for _ in 0..4 {
+            handle.generate(req("a")).unwrap();
+        }
+        // a clean retire compacts its slot eagerly…
+        handle.retire_worker(1).unwrap();
+        assert_eq!(handle.compact_slots(), 0,
+                   "retire already compacted its slot");
+        // …and the tombstone still answers every external query: the
+        // index, the lifecycle state, and the per-slot metrics label
+        assert_eq!(handle.n_workers(), 3);
+        assert_eq!(handle.active_workers(), 2);
+        let err = handle.retire_worker(1).unwrap_err().to_string();
+        assert!(err.contains("Retired"), "{err}");
+        let m = handle.metrics();
+        assert!(m.contains(
+            "bitdelta_cluster_routed_total{worker=\"1\"}"), "{m}");
+        // compacted slots are never reused: new workers extend the table
+        assert_eq!(handle.spawn_worker().unwrap(), 3);
         handle.generate(req("a")).unwrap();
         cluster.shutdown().unwrap();
     }

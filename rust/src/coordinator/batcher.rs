@@ -10,7 +10,7 @@
 
 use std::time::Instant;
 
-use crate::kvcache::SeqCache;
+use crate::kvcache::SeqKv;
 use crate::serving::request::QueuedRequest;
 
 /// One in-flight sequence.
@@ -18,9 +18,11 @@ pub struct ActiveSeq {
     pub req: QueuedRequest,
     pub tenant: String,
     pub rope_scale: f32,
-    pub cache: SeqCache,
+    /// KV backing: paged block table, or dense slab under
+    /// `EngineConfig::kv_slab_fallback`.
+    pub kv: SeqKv,
     pub prompt: Vec<i32>,
-    /// Prompt tokens already consumed (== cache.pos during prefill).
+    /// Prompt tokens already consumed (== kv.pos() during prefill).
     pub prompt_pos: usize,
     pub generated: Vec<i32>,
     /// Next token to feed to the decode step.
@@ -36,7 +38,7 @@ impl ActiveSeq {
 
     pub fn done(&self, max_seq: usize) -> bool {
         self.generated.len() >= self.req.request.max_new_tokens
-            || self.cache.pos + 1 >= max_seq
+            || self.kv.pos() + 1 >= max_seq
     }
 }
 
@@ -124,6 +126,7 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::kvcache::SeqCache;
     use crate::model::sampling::SamplingParams;
     use crate::serving::request::{QueuedRequest, Request};
 
@@ -141,7 +144,7 @@ mod tests {
             }, id),
             tenant: tenant.into(),
             rope_scale: 1.0,
-            cache: SeqCache::new(&cfg()),
+            kv: SeqKv::Slab(SeqCache::new(&cfg())),
             prompt: vec![97, 98],
             prompt_pos: 0,
             generated: vec![],
@@ -196,7 +199,7 @@ mod tests {
         s.generated = vec![1, 2];
         assert!(s.done(8));
         let mut s2 = seq("a", 2);
-        s2.cache.pos = 7;
+        s2.kv.slab_mut().pos = 7;
         assert!(s2.done(8));
     }
 }

@@ -1,13 +1,77 @@
 //! KV-cache management for batched multi-tenant decode.
 //!
 //! The decode executables take a stacked cache
-//! `[n_layers, B, n_heads, max_seq, head_dim]` plus a per-sequence `pos`
-//! vector. The engine keeps each *sequence's* cache as a host-side slab
-//! (`SeqCache`) so the batch can be re-stacked whenever its composition
-//! changes (admission / completion), and keeps the stacked cache on
-//! device between steps when it doesn't.
+//! `[n_layers, B, n_heads, max_seq, head_dim]` plus a per-sequence
+//! `pos` vector. Two designs for a sequence's backing memory coexist:
+//!
+//! * **Paged (default)** — [`BlockPool`] carves two flat K/V arenas
+//!   into fixed-size ref-counted blocks; each sequence owns a
+//!   [`BlockTable`] mapping positions onto blocks; appending past a
+//!   shared block copy-on-writes; a content-hash [`PrefixIndex`]
+//!   deduplicates identical token prefixes within and across tenants
+//!   (BitDelta tenants share one base, so identically-served prompts
+//!   produce bit-identical KV). Allocation failure is a typed
+//!   [`KvOomError`]. Restacking is incremental: only a changed batch
+//!   slot is gathered into the dense staging buffers.
+//! * **Slab (fallback)** — the pre-paging design: every sequence
+//!   preallocates a full `max_seq_len` dense slab ([`SeqCache`]).
+//!   Retained behind `EngineConfig::kv_slab_fallback` as the A/B
+//!   escape hatch; tests pin the two paths token-identical.
+//!
+//! [`SeqKv`] is the per-sequence handle the batcher carries — one
+//! variant per design, unified behind `pos()`.
+
+mod pool;
+mod prefix;
+mod table;
+
+pub use pool::{BlockDims, BlockId, BlockPool, KvOomError};
+pub use prefix::{share_sig, PrefixIndex};
+pub use table::BlockTable;
 
 use crate::config::ModelConfig;
+
+/// A sequence's KV backing: paged block table or dense slab.
+#[derive(Debug, Clone)]
+pub enum SeqKv {
+    /// Paged: positions live in pool blocks via a [`BlockTable`].
+    Paged(BlockTable),
+    /// Dense slab fallback (`EngineConfig::kv_slab_fallback`).
+    Slab(SeqCache),
+}
+
+impl SeqKv {
+    /// Current sequence length (valid KV positions).
+    pub fn pos(&self) -> usize {
+        match self {
+            SeqKv::Paged(t) => t.len(),
+            SeqKv::Slab(c) => c.pos,
+        }
+    }
+
+    /// The paged table (panics on a slab — caller knows the mode).
+    pub fn table(&self) -> &BlockTable {
+        match self {
+            SeqKv::Paged(t) => t,
+            SeqKv::Slab(_) => panic!("slab sequence has no BlockTable"),
+        }
+    }
+
+    pub fn table_mut(&mut self) -> &mut BlockTable {
+        match self {
+            SeqKv::Paged(t) => t,
+            SeqKv::Slab(_) => panic!("slab sequence has no BlockTable"),
+        }
+    }
+
+    /// The slab (panics on a paged table — caller knows the mode).
+    pub fn slab_mut(&mut self) -> &mut SeqCache {
+        match self {
+            SeqKv::Paged(_) => panic!("paged sequence has no SeqCache"),
+            SeqKv::Slab(c) => c,
+        }
+    }
+}
 
 /// Per-sequence KV cache: `[n_layers, n_heads, max_seq, head_dim]` pair.
 #[derive(Debug, Clone)]
@@ -159,5 +223,22 @@ mod tests {
         let c = SeqCache::new(&cfg);
         assert_eq!(c.layer_k(0).len(), c.layer_k(1).len());
         assert_eq!(c.layer_k(0).len() * cfg.n_layers, c.k.len());
+    }
+
+    #[test]
+    fn seqkv_pos_unifies_both_backings() {
+        let cfg = cfg();
+        let mut slab = SeqKv::Slab(SeqCache::new(&cfg));
+        assert_eq!(slab.pos(), 0);
+        slab.slab_mut().pos = 3;
+        assert_eq!(slab.pos(), 3);
+
+        let mut pool = BlockPool::new(BlockDims::from_config(&cfg, 2),
+                                      4);
+        let mut paged = SeqKv::Paged(BlockTable::new());
+        let row = vec![0.0; pool.dims().row_floats()];
+        paged.table_mut().append_row(&mut pool, &row, &row).unwrap();
+        assert_eq!(paged.pos(), 1);
+        paged.table_mut().free(&mut pool);
     }
 }

@@ -1,0 +1,343 @@
+//! Fixed-size KV block pool — the physical memory layer of the paged
+//! KV cache.
+//!
+//! A [`BlockPool`] owns two flat `f32` arenas (K and V) carved into
+//! `n_blocks` fixed-size blocks of [`BlockDims`] geometry
+//! `[n_layers, n_heads, block_size, head_dim]`. Allocation is a
+//! free-list pop; running out of blocks is a typed [`KvOomError`]
+//! callers can downcast and react to (the engine reclaims prefix-index
+//! entries and retries) instead of the old scheme of preallocating a
+//! full `max_seq_len` dense slab per sequence up front.
+//!
+//! Blocks are **ref-counted** so several sequences can map the same
+//! physical block (shared prompt prefixes, forked tables). Writers go
+//! through [`BlockTable::append_row`], which copy-on-writes a shared
+//! tail block before mutating it; the pool provides `retain` /
+//! `release` and counts the copies.
+//!
+//! [`BlockTable::append_row`]: crate::kvcache::BlockTable::append_row
+
+use std::fmt;
+
+use crate::config::ModelConfig;
+
+/// Identifier of one physical block in a [`BlockPool`].
+pub type BlockId = u32;
+
+/// Out-of-blocks: the pool could not satisfy an allocation. A typed
+/// error (downcast with `anyhow::Error::downcast_ref::<KvOomError>`)
+/// so admission control can distinguish "KV full" from a bug, instead
+/// of string-matching a panic message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvOomError {
+    /// Blocks the failed call asked for.
+    pub requested: usize,
+    /// Free blocks at the time of the failure.
+    pub free: usize,
+    /// Total blocks in the pool.
+    pub total: usize,
+}
+
+impl fmt::Display for KvOomError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "KV pool out of blocks: requested {} with {}/{} free",
+               self.requested, self.free, self.total)
+    }
+}
+
+impl std::error::Error for KvOomError {}
+
+/// Geometry of one KV block: a `[n_layers, n_heads, block_size,
+/// head_dim]` f32 tensor per arena (one K, one V), holding
+/// `block_size` consecutive token positions of one sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockDims {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Token positions per block.
+    pub block_size: usize,
+    pub head_dim: usize,
+}
+
+impl BlockDims {
+    pub fn from_config(cfg: &ModelConfig, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        Self { n_layers: cfg.n_layers, n_heads: cfg.n_heads,
+               block_size, head_dim: cfg.head_dim() }
+    }
+
+    /// f32 elements in one block (per arena).
+    pub fn block_floats(&self) -> usize {
+        self.n_layers * self.n_heads * self.block_size * self.head_dim
+    }
+
+    /// f32 elements in one token row: `[n_layers, n_heads, head_dim]`.
+    pub fn row_floats(&self) -> usize {
+        self.n_layers * self.n_heads * self.head_dim
+    }
+}
+
+/// Ref-counted free-list allocator over two flat K/V arenas.
+#[derive(Debug)]
+pub struct BlockPool {
+    dims: BlockDims,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Per-block reference count; 0 = on the free list.
+    refs: Vec<u32>,
+    free: Vec<BlockId>,
+    /// Lifetime allocation count (free-list pops).
+    pub allocs: u64,
+    /// Lifetime free count (refcount reaching zero).
+    pub frees: u64,
+    /// Copy-on-write block copies (bumped by `BlockTable`).
+    pub cow_copies: u64,
+    peak_used: usize,
+}
+
+impl BlockPool {
+    pub fn new(dims: BlockDims, n_blocks: usize) -> Self {
+        assert!(n_blocks > 0, "pool needs at least one block");
+        assert!(n_blocks <= BlockId::MAX as usize);
+        let per = dims.block_floats();
+        Self {
+            dims,
+            k: vec![0.0; n_blocks * per],
+            v: vec![0.0; n_blocks * per],
+            refs: vec![0; n_blocks],
+            // pop order low-to-high block ids (cosmetic, deterministic)
+            free: (0..n_blocks as BlockId).rev().collect(),
+            allocs: 0,
+            frees: 0,
+            cow_copies: 0,
+            peak_used: 0,
+        }
+    }
+
+    pub fn dims(&self) -> BlockDims {
+        self.dims
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks() - self.free_blocks()
+    }
+
+    /// High-water mark of `used_blocks()` over the pool's lifetime.
+    pub fn peak_used(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Bytes of K+V arena currently backing live blocks.
+    pub fn resident_bytes(&self) -> usize {
+        self.used_blocks() * self.dims.block_floats() * 4 * 2
+    }
+
+    /// Pop a free block (zeroed, refcount 1) or fail with a typed
+    /// [`KvOomError`] — never panics on exhaustion.
+    pub fn alloc(&mut self) -> Result<BlockId, KvOomError> {
+        let Some(id) = self.free.pop() else {
+            return Err(KvOomError { requested: 1, free: 0,
+                                    total: self.total_blocks() });
+        };
+        let per = self.dims.block_floats();
+        let at = id as usize * per;
+        self.k[at..at + per].fill(0.0);
+        self.v[at..at + per].fill(0.0);
+        self.refs[id as usize] = 1;
+        self.allocs += 1;
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(id)
+    }
+
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// Add a reference to a live block.
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refs[id as usize] > 0,
+                "retain of free block {id}");
+        self.refs[id as usize] += 1;
+    }
+
+    /// Drop a reference; the block returns to the free list when the
+    /// count reaches zero. Releasing an already-free block is a
+    /// double-free and panics.
+    pub fn release(&mut self, id: BlockId) {
+        let r = &mut self.refs[id as usize];
+        assert!(*r > 0, "double free of block {id}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(id);
+            self.frees += 1;
+        }
+    }
+
+    pub fn block_k(&self, id: BlockId) -> &[f32] {
+        let per = self.dims.block_floats();
+        let at = id as usize * per;
+        &self.k[at..at + per]
+    }
+
+    pub fn block_v(&self, id: BlockId) -> &[f32] {
+        let per = self.dims.block_floats();
+        let at = id as usize * per;
+        &self.v[at..at + per]
+    }
+
+    /// Write one token row (`[n_layers, n_heads, head_dim]` order)
+    /// into slot `q` of block `id`.
+    pub fn write_row(&mut self, id: BlockId, q: usize, k_row: &[f32],
+                     v_row: &[f32]) {
+        let d = self.dims;
+        assert!(q < d.block_size, "row {q} out of block");
+        assert_eq!(k_row.len(), d.row_floats());
+        assert_eq!(v_row.len(), d.row_floats());
+        let (bs, hd) = (d.block_size, d.head_dim);
+        let base = id as usize * d.block_floats();
+        for lh in 0..d.n_layers * d.n_heads {
+            let src = lh * hd;
+            let dst = base + (lh * bs + q) * hd;
+            self.k[dst..dst + hd]
+                .copy_from_slice(&k_row[src..src + hd]);
+            self.v[dst..dst + hd]
+                .copy_from_slice(&v_row[src..src + hd]);
+        }
+    }
+
+    /// Copy the full contents of block `src` into block `dst`
+    /// (copy-on-write body; the caller owns the bookkeeping).
+    pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        assert_ne!(src, dst);
+        let per = self.dims.block_floats();
+        let (s, d) = (src as usize * per, dst as usize * per);
+        self.k.copy_within(s..s + per, d);
+        self.v.copy_within(s..s + per, d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> BlockDims {
+        BlockDims { n_layers: 2, n_heads: 2, block_size: 4,
+                    head_dim: 3 }
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_and_counters() {
+        let mut p = BlockPool::new(dims(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.peak_used(), 2);
+        p.release(a);
+        assert_eq!(p.used_blocks(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(p.used_blocks(), 2);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.allocs, 3);
+        assert_eq!(p.frees, 3);
+        assert_eq!(p.peak_used(), 2);
+    }
+
+    #[test]
+    fn oom_is_a_typed_error_with_counts() {
+        let mut p = BlockPool::new(dims(), 2);
+        let _a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        let e = p.alloc().unwrap_err();
+        assert_eq!(e, KvOomError { requested: 1, free: 0, total: 2 });
+        assert!(e.to_string().contains("out of blocks"));
+    }
+
+    #[test]
+    fn refcounts_keep_shared_blocks_alive() {
+        let mut p = BlockPool::new(dims(), 2);
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        assert_eq!(p.ref_count(a), 2);
+        p.release(a);
+        assert_eq!(p.used_blocks(), 1, "still one live reference");
+        p.release(a);
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = BlockPool::new(dims(), 1);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    fn rows_land_in_block_layout() {
+        let d = dims();
+        let mut p = BlockPool::new(d, 1);
+        let id = p.alloc().unwrap();
+        let row_k: Vec<f32> = (0..d.row_floats())
+            .map(|i| i as f32).collect();
+        let row_v: Vec<f32> = row_k.iter().map(|x| -x).collect();
+        p.write_row(id, 2, &row_k, &row_v);
+        let bk = p.block_k(id);
+        let bv = p.block_v(id);
+        for lh in 0..d.n_layers * d.n_heads {
+            for e in 0..d.head_dim {
+                let got = bk[(lh * d.block_size + 2) * d.head_dim + e];
+                assert_eq!(got, (lh * d.head_dim + e) as f32);
+                let got = bv[(lh * d.block_size + 2) * d.head_dim + e];
+                assert_eq!(got, -((lh * d.head_dim + e) as f32));
+            }
+        }
+        // untouched slots stay zero
+        assert_eq!(bk[0], 0.0);
+    }
+
+    #[test]
+    fn realloc_zeroes_stale_contents() {
+        let d = dims();
+        let mut p = BlockPool::new(d, 1);
+        let id = p.alloc().unwrap();
+        p.write_row(id, 0, &vec![1.0; d.row_floats()],
+                    &vec![2.0; d.row_floats()]);
+        p.release(id);
+        let id2 = p.alloc().unwrap();
+        assert!(p.block_k(id2).iter().all(|&x| x == 0.0));
+        assert!(p.block_v(id2).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn copy_block_copies_both_arenas() {
+        let d = dims();
+        let mut p = BlockPool::new(d, 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        p.write_row(a, 1, &vec![3.5; d.row_floats()],
+                    &vec![-3.5; d.row_floats()]);
+        p.copy_block(a, b);
+        assert_eq!(p.block_k(a), p.block_k(b));
+        assert_eq!(p.block_v(a), p.block_v(b));
+    }
+
+    #[test]
+    fn resident_bytes_track_usage() {
+        let d = dims();
+        let mut p = BlockPool::new(d, 4);
+        assert_eq!(p.resident_bytes(), 0);
+        let _a = p.alloc().unwrap();
+        assert_eq!(p.resident_bytes(), d.block_floats() * 4 * 2);
+    }
+}

@@ -1,0 +1,308 @@
+//! Content-hash prefix index: sequences with identical token prefixes
+//! map to the same physical KV blocks — within **and across** tenants.
+//!
+//! The BitDelta twist on vLLM-style prefix caching: every tenant is a
+//! delta on one shared base model, so when two tenants are served
+//! through the *same* weights (same codec, fidelity level, artifact,
+//! and rope scale — summarized in a `sig` hash), an identical system
+//! prompt produces bit-identical KV, and the blocks can be shared
+//! across tenant boundaries. No per-model serving stack can do this.
+//!
+//! Correctness rule: KV at position `p` depends on the **entire**
+//! token prefix `[0..=p]`, the rope scale, and the serving weights.
+//! The index therefore keys on `(sig, rope_bits, full token prefix)`
+//! and verifies the stored tokens **exactly** on lookup — the FNV hash
+//! only buckets; a collision can never alias two different prefixes.
+//!
+//! Entries hold their own block references, so a registered prefix
+//! survives the sequence that produced it (a prompt cache). Under
+//! pool pressure [`PrefixIndex::reclaim`] drops the oldest entries
+//! until enough blocks are free.
+
+use std::collections::BTreeMap;
+
+use super::pool::{BlockId, BlockPool};
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Hash a set of string parts into a weight-identity signature (the
+/// `sig` half of the index key). The engine derives one per tenant
+/// from everything that changes served weights: codec name, fidelity
+/// level, artifact path, distillation flag.
+pub fn share_sig(parts: &[&str]) -> u64 {
+    let mut h = FNV_SEED;
+    for p in parts {
+        h = fnv1a(h, p.as_bytes());
+        h = fnv1a(h, &[0xff]); // separator: ("ab","c") != ("a","bc")
+    }
+    h
+}
+
+fn key_hash(sig: u64, rope_bits: u32, tokens: &[i32]) -> u64 {
+    let mut h = fnv1a(FNV_SEED, &sig.to_le_bytes());
+    h = fnv1a(h, &rope_bits.to_le_bytes());
+    for t in tokens {
+        h = fnv1a(h, &t.to_le_bytes());
+    }
+    h
+}
+
+#[derive(Debug)]
+struct Entry {
+    sig: u64,
+    rope_bits: u32,
+    tokens: Vec<i32>,
+    blocks: Vec<BlockId>,
+    stamp: u64,
+}
+
+impl Entry {
+    fn matches(&self, sig: u64, rope_bits: u32, tokens: &[i32])
+               -> bool {
+        self.sig == sig && self.rope_bits == rope_bits
+            && self.tokens == tokens
+    }
+}
+
+/// Exact-match prefix → block mapping with hit/lookup counters.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    buckets: BTreeMap<u64, Vec<Entry>>,
+    n_entries: usize,
+    /// Lifetime lookup count (admissions that consulted the index).
+    pub lookups: u64,
+    /// Lifetime hit count (admissions that reused at least one block).
+    pub hits: u64,
+    next_stamp: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_entries == 0
+    }
+
+    /// Register `blocks` as the KV of `tokens` (a whole number of
+    /// blocks: `tokens.len() == blocks.len() * block_size`) under
+    /// weight signature `sig` and rope scale `rope`. The index takes
+    /// its own references; re-registering a known prefix is a no-op.
+    /// Returns whether a new entry was added.
+    pub fn register(&mut self, pool: &mut BlockPool, sig: u64,
+                    rope: f32, tokens: &[i32], blocks: &[BlockId])
+                    -> bool {
+        assert_eq!(tokens.len(),
+                   blocks.len() * pool.dims().block_size,
+                   "prefix must cover whole blocks");
+        let rope_bits = rope.to_bits();
+        let h = key_hash(sig, rope_bits, tokens);
+        let bucket = self.buckets.entry(h).or_default();
+        if bucket.iter().any(|e| e.matches(sig, rope_bits, tokens)) {
+            return false;
+        }
+        for &b in blocks {
+            pool.retain(b);
+        }
+        bucket.push(Entry { sig, rope_bits, tokens: tokens.to_vec(),
+                            blocks: blocks.to_vec(),
+                            stamp: self.next_stamp });
+        self.next_stamp += 1;
+        self.n_entries += 1;
+        true
+    }
+
+    /// Longest registered prefix of `tokens` (in whole blocks) under
+    /// `(sig, rope)`. Returns the shared blocks and the prefix length
+    /// in tokens; the caller takes references via
+    /// [`BlockTable::with_shared_prefix`].
+    ///
+    /// [`BlockTable::with_shared_prefix`]:
+    /// crate::kvcache::BlockTable::with_shared_prefix
+    pub fn lookup(&mut self, sig: u64, rope: f32, tokens: &[i32],
+                  block_size: usize) -> Option<(Vec<BlockId>, usize)> {
+        self.lookups += 1;
+        let rope_bits = rope.to_bits();
+        for n in (1..=tokens.len() / block_size).rev() {
+            let len = n * block_size;
+            let h = key_hash(sig, rope_bits, &tokens[..len]);
+            let hit = self.buckets.get(&h).and_then(|b| {
+                b.iter().find(|e| e.matches(sig, rope_bits,
+                                            &tokens[..len]))
+            });
+            if let Some(e) = hit {
+                self.hits += 1;
+                return Some((e.blocks.clone(), len));
+            }
+        }
+        None
+    }
+
+    /// Drop oldest entries (releasing their blocks) until the pool has
+    /// at least `want_free` free blocks or the index is empty. Returns
+    /// the number of entries dropped.
+    pub fn reclaim(&mut self, pool: &mut BlockPool, want_free: usize)
+                   -> usize {
+        let mut dropped = 0;
+        while pool.free_blocks() < want_free && self.n_entries > 0 {
+            let (&h, _) = self.buckets.iter()
+                .filter(|(_, b)| !b.is_empty())
+                .min_by_key(|(_, b)| {
+                    b.iter().map(|e| e.stamp).min().unwrap()
+                })
+                .expect("n_entries > 0 implies a non-empty bucket");
+            let bucket = self.buckets.get_mut(&h).unwrap();
+            let oldest = bucket.iter().enumerate()
+                .min_by_key(|(_, e)| e.stamp).map(|(i, _)| i).unwrap();
+            let e = bucket.remove(oldest);
+            if bucket.is_empty() {
+                self.buckets.remove(&h);
+            }
+            for &b in &e.blocks {
+                pool.release(b);
+            }
+            self.n_entries -= 1;
+            dropped += 1;
+        }
+        dropped
+    }
+
+    /// Release every entry (pool drains back to free).
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        for (_, bucket) in std::mem::take(&mut self.buckets) {
+            for e in bucket {
+                for &b in &e.blocks {
+                    pool.release(b);
+                }
+            }
+        }
+        self.n_entries = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::BlockDims;
+    use super::super::table::BlockTable;
+    use super::*;
+
+    fn pool(n_blocks: usize) -> BlockPool {
+        BlockPool::new(BlockDims { n_layers: 1, n_heads: 1,
+                                   block_size: 2, head_dim: 2 },
+                       n_blocks)
+    }
+
+    fn table_of(p: &mut BlockPool, rows: usize, x: f32) -> BlockTable {
+        let mut t = BlockTable::new();
+        let r = vec![x; p.dims().row_floats()];
+        for _ in 0..rows {
+            t.append_row(p, &r, &r).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn longest_whole_block_prefix_wins() {
+        let mut p = pool(8);
+        let mut ix = PrefixIndex::new();
+        let t = table_of(&mut p, 4, 1.0);
+        let toks = [5, 6, 7, 8];
+        assert!(ix.register(&mut p, 42, 1.0, &toks[..2],
+                            &t.blocks()[..1]));
+        assert!(ix.register(&mut p, 42, 1.0, &toks, t.blocks()));
+        assert!(!ix.register(&mut p, 42, 1.0, &toks, t.blocks()),
+                "re-register is a no-op");
+        assert_eq!(ix.len(), 2);
+
+        // 5 prompt tokens: longest whole-block match is all 4
+        let (blocks, n) = ix.lookup(42, 1.0, &[5, 6, 7, 8, 9], 2)
+            .unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(blocks, t.blocks());
+        // 3 tokens: falls back to the 1-block entry
+        let (blocks, n) = ix.lookup(42, 1.0, &[5, 6, 7], 2).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(blocks, &t.blocks()[..1]);
+        assert_eq!(ix.hits, 2);
+        assert_eq!(ix.lookups, 2);
+    }
+
+    #[test]
+    fn sig_rope_and_tokens_all_gate_sharing() {
+        let mut p = pool(8);
+        let mut ix = PrefixIndex::new();
+        let t = table_of(&mut p, 2, 1.0);
+        ix.register(&mut p, 42, 1.0, &[5, 6], t.blocks());
+        assert!(ix.lookup(43, 1.0, &[5, 6], 2).is_none(),
+                "different weights must not share KV");
+        assert!(ix.lookup(42, 2.0, &[5, 6], 2).is_none(),
+                "different rope scale must not share KV");
+        assert!(ix.lookup(42, 1.0, &[5, 9], 2).is_none(),
+                "different tokens must not share KV");
+        assert!(ix.lookup(42, 1.0, &[5], 2).is_none(),
+                "sub-block prefixes never match");
+        assert_eq!(ix.hits, 0);
+        assert_eq!(ix.lookups, 4);
+    }
+
+    #[test]
+    fn index_refs_keep_blocks_alive_after_sequence_release() {
+        let mut p = pool(4);
+        let mut ix = PrefixIndex::new();
+        let mut t = table_of(&mut p, 2, 3.0);
+        let blocks = t.blocks().to_vec();
+        ix.register(&mut p, 1, 1.0, &[7, 8], &blocks);
+        t.free(&mut p);
+        // the prompt cache holds the block
+        assert_eq!(p.used_blocks(), 1);
+        let (got, n) = ix.lookup(1, 1.0, &[7, 8], 2).unwrap();
+        assert_eq!((got, n), (blocks, 2));
+        ix.clear(&mut p);
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn reclaim_drops_oldest_until_free() {
+        let mut p = pool(4);
+        let mut ix = PrefixIndex::new();
+        let mut tables = Vec::new();
+        for i in 0..4 {
+            let t = table_of(&mut p, 2, i as f32);
+            ix.register(&mut p, 9, 1.0, &[i, i + 1], t.blocks());
+            tables.push(t);
+        }
+        for mut t in tables {
+            t.free(&mut p);
+        }
+        assert_eq!(p.free_blocks(), 0);
+        let dropped = ix.reclaim(&mut p, 2);
+        assert_eq!(dropped, 2);
+        assert_eq!(p.free_blocks(), 2);
+        // oldest entries went first
+        assert!(ix.lookup(9, 1.0, &[0, 1], 2).is_none());
+        assert!(ix.lookup(9, 1.0, &[3, 4], 2).is_some());
+        ix.clear(&mut p);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn share_sig_separates_parts() {
+        assert_ne!(share_sig(&["ab", "c"]), share_sig(&["a", "bc"]));
+        assert_eq!(share_sig(&["bitdelta", "2"]),
+                   share_sig(&["bitdelta", "2"]));
+    }
+}

@@ -1,0 +1,271 @@
+//! Per-sequence block table: the paged replacement for the dense
+//! `SeqCache` slab.
+//!
+//! A [`BlockTable`] maps a sequence's token positions onto physical
+//! [`BlockPool`] blocks: position `p` lives in `blocks[p / block_size]`
+//! at in-block slot `p % block_size`. Appending grows the table one
+//! block at a time (explicit [`KvOomError`] instead of up-front
+//! `max_seq_len` preallocation), and appending into a block another
+//! table also references **copies on write** first, so a sequence that
+//! diverges from a shared prefix never corrupts its siblings.
+
+use super::pool::{BlockId, BlockPool, KvOomError};
+
+/// One sequence's view onto the pool.
+#[derive(Debug, Default, Clone)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a table over an already-populated shared prefix: every
+    /// block is retained (the prefix owner keeps its own references),
+    /// and `len` is the full `blocks.len() * block_size` positions.
+    pub fn with_shared_prefix(pool: &mut BlockPool, blocks: &[BlockId])
+                              -> Self {
+        for &b in blocks {
+            pool.retain(b);
+        }
+        Self { blocks: blocks.to_vec(),
+               len: blocks.len() * pool.dims().block_size }
+    }
+
+    /// Token positions stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Append one token row (`[n_layers, n_heads, head_dim]` order).
+    /// Allocates a fresh block at block boundaries; copy-on-writes a
+    /// shared tail block before mutating it. On [`KvOomError`] the
+    /// table is unchanged and the append can be retried after the
+    /// caller frees blocks elsewhere.
+    pub fn append_row(&mut self, pool: &mut BlockPool, k_row: &[f32],
+                      v_row: &[f32]) -> Result<(), KvOomError> {
+        let bs = pool.dims().block_size;
+        let q = self.len % bs;
+        if q == 0 {
+            let id = pool.alloc()?;
+            self.blocks.push(id);
+        } else {
+            let tail = *self.blocks.last().unwrap();
+            if pool.ref_count(tail) > 1 {
+                let copy = pool.alloc()?;
+                pool.copy_block(tail, copy);
+                pool.release(tail);
+                *self.blocks.last_mut().unwrap() = copy;
+                pool.cow_copies += 1;
+            }
+        }
+        pool.write_row(*self.blocks.last().unwrap(), q, k_row, v_row);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// A second table over the same physical blocks (every block
+    /// retained). Divergent appends trigger COW on the shared tail.
+    pub fn fork(&self, pool: &mut BlockPool) -> Self {
+        for &b in &self.blocks {
+            pool.retain(b);
+        }
+        Self { blocks: self.blocks.clone(), len: self.len }
+    }
+
+    /// Release every block reference and empty the table.
+    pub fn free(&mut self, pool: &mut BlockPool) {
+        for &b in &self.blocks {
+            pool.release(b);
+        }
+        self.blocks.clear();
+        self.len = 0;
+    }
+
+    /// Scatter this sequence into batch slot `slot` of a dense
+    /// `[n_layers, batch, n_heads, max_seq, head_dim]` staging pair —
+    /// the incremental restack: only the changed slot is rewritten,
+    /// never the whole batch.
+    pub fn gather_into(&self, pool: &BlockPool, slot: usize,
+                       batch: usize, max_seq: usize, k_dst: &mut [f32],
+                       v_dst: &mut [f32]) {
+        let d = pool.dims();
+        let (bs, hd) = (d.block_size, d.head_dim);
+        assert!(self.len <= max_seq, "sequence overflows staging");
+        for (bi, &id) in self.blocks.iter().enumerate() {
+            let start = bi * bs;
+            let n = bs.min(self.len - start);
+            let bk = pool.block_k(id);
+            let bv = pool.block_v(id);
+            for lh in 0..d.n_layers * d.n_heads {
+                let (l, h) = (lh / d.n_heads, lh % d.n_heads);
+                let src = lh * bs * hd;
+                let dst = (((l * batch + slot) * d.n_heads + h)
+                           * max_seq + start) * hd;
+                k_dst[dst..dst + n * hd]
+                    .copy_from_slice(&bk[src..src + n * hd]);
+                v_dst[dst..dst + n * hd]
+                    .copy_from_slice(&bv[src..src + n * hd]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::BlockDims;
+    use super::*;
+
+    fn pool(n_blocks: usize) -> BlockPool {
+        BlockPool::new(BlockDims { n_layers: 2, n_heads: 2,
+                                   block_size: 2, head_dim: 3 },
+                       n_blocks)
+    }
+
+    fn row(pool: &BlockPool, x: f32) -> Vec<f32> {
+        vec![x; pool.dims().row_floats()]
+    }
+
+    #[test]
+    fn append_grows_one_block_per_block_size_rows() {
+        let mut p = pool(4);
+        let mut t = BlockTable::new();
+        for i in 0..5 {
+            let r = row(&p, i as f32);
+            t.append_row(&mut p, &r, &r).unwrap();
+        }
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.n_blocks(), 3, "ceil(5/2) blocks");
+        assert_eq!(p.used_blocks(), 3);
+        t.free(&mut p);
+        assert_eq!(p.used_blocks(), 0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn append_oom_leaves_table_retryable() {
+        let mut p = pool(1);
+        let mut t = BlockTable::new();
+        let r = row(&p, 1.0);
+        t.append_row(&mut p, &r, &r).unwrap();
+        t.append_row(&mut p, &r, &r).unwrap();
+        let e = t.append_row(&mut p, &r, &r).unwrap_err();
+        assert_eq!(e.free, 0);
+        assert_eq!(t.len(), 2, "failed append must not half-commit");
+        // free something and the same append succeeds
+        let mut other = BlockTable::new();
+        assert!(other.append_row(&mut p, &r, &r).is_err());
+        t.free(&mut p);
+        other.append_row(&mut p, &r, &r).unwrap();
+    }
+
+    #[test]
+    fn fork_then_append_copies_on_write() {
+        let mut p = pool(4);
+        let mut a = BlockTable::new();
+        let r1 = row(&p, 1.0);
+        a.append_row(&mut p, &r1, &r1).unwrap();
+        let mut b = a.fork(&mut p);
+        assert_eq!(p.ref_count(a.blocks()[0]), 2);
+
+        // b writes into the shared, half-full tail block: must COW
+        let r2 = row(&p, 2.0);
+        b.append_row(&mut p, &r2, &r2).unwrap();
+        assert_eq!(p.cow_copies, 1);
+        assert_ne!(a.blocks()[0], b.blocks()[0]);
+        // a's copy of position 0 is untouched, b carried it over
+        assert_eq!(p.block_k(a.blocks()[0])[0], 1.0);
+        assert_eq!(p.block_k(b.blocks()[0])[0], 1.0);
+        a.free(&mut p);
+        b.free(&mut p);
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn full_shared_block_is_not_copied() {
+        let mut p = pool(4);
+        let mut a = BlockTable::new();
+        let r = row(&p, 1.0);
+        a.append_row(&mut p, &r, &r).unwrap();
+        a.append_row(&mut p, &r, &r).unwrap(); // block now full
+        let mut b = a.fork(&mut p);
+        b.append_row(&mut p, &r, &r).unwrap(); // new block, no COW
+        assert_eq!(p.cow_copies, 0);
+        assert_eq!(a.blocks()[0], b.blocks()[0]);
+        a.free(&mut p);
+        b.free(&mut p);
+    }
+
+    #[test]
+    fn gather_matches_dense_reference() {
+        let mut p = pool(8);
+        let d = p.dims();
+        let (batch, max_seq, slot) = (3usize, 6usize, 1usize);
+        let mut t = BlockTable::new();
+        let n_rows = 5;
+        // row r gets value r+1 in every element
+        for r in 0..n_rows {
+            let kr = row(&p, (r + 1) as f32);
+            let vr = row(&p, -((r + 1) as f32));
+            t.append_row(&mut p, &kr, &vr).unwrap();
+        }
+        let total = d.n_layers * batch * d.n_heads * max_seq
+            * d.head_dim;
+        let mut k = vec![9.9f32; total];
+        let mut v = vec![9.9f32; total];
+        // pre-zero the slot the way the engine does on admission
+        for l in 0..d.n_layers {
+            let per = d.n_heads * max_seq * d.head_dim;
+            let at = (l * batch + slot) * per;
+            k[at..at + per].fill(0.0);
+            v[at..at + per].fill(0.0);
+        }
+        t.gather_into(&p, slot, batch, max_seq, &mut k, &mut v);
+        for l in 0..d.n_layers {
+            for h in 0..d.n_heads {
+                for s in 0..max_seq {
+                    let at = (((l * batch + slot) * d.n_heads + h)
+                              * max_seq + s) * d.head_dim;
+                    let want = if s < n_rows { (s + 1) as f32 }
+                               else { 0.0 };
+                    assert_eq!(k[at], want, "k at l{l} h{h} s{s}");
+                    assert_eq!(v[at], -want, "v at l{l} h{h} s{s}");
+                }
+            }
+        }
+        // other slots untouched
+        assert_eq!(k[0], 9.9);
+        t.free(&mut p);
+    }
+
+    #[test]
+    fn shared_prefix_table_starts_at_prefix_len() {
+        let mut p = pool(4);
+        let mut a = BlockTable::new();
+        let r = row(&p, 4.0);
+        a.append_row(&mut p, &r, &r).unwrap();
+        a.append_row(&mut p, &r, &r).unwrap();
+        let t = BlockTable::with_shared_prefix(&mut p, a.blocks());
+        assert_eq!(t.len(), 2);
+        assert_eq!(p.ref_count(a.blocks()[0]), 2);
+        let mut t = t;
+        t.free(&mut p);
+        a.free(&mut p);
+        assert_eq!(p.used_blocks(), 0);
+    }
+}

@@ -15,7 +15,9 @@
 //!   ([`delta::codec`]: pluggable formats — `bitdelta`, `lora`, `svd`,
 //!   `dense` — behind one trait, with mixed-format decode batches), the
 //!   multi-tenant serving engine (router, continuous batcher, delta
-//!   hot-swap store, KV-cache manager), the **cluster layer**
+//!   hot-swap store, **paged KV cache** ([`kvcache`]: ref-counted
+//!   block pool, copy-on-write block tables, cross-tenant shared-prefix
+//!   reuse, dense-slab A/B fallback)), the **cluster layer**
 //!   ([`cluster`]: an elastic set of worker engines behind one handle,
 //!   with pluggable delta-aware tenant placement, failover,
 //!   queue-pressure autoscaling with graceful drain, and front-door

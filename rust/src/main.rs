@@ -48,6 +48,9 @@ COMMANDS:
                tiers mix freely in one batch via zero-scale padding)
                [--threads N]  (CPU kernel worker-pool width; 0 = one
                per core; default = BITDELTA_THREADS or 1)
+               [--kv-block-size N] [--kv-blocks N]  (paged KV pool
+               geometry; blocks 0 = auto-size) [--kv-slab]  (dense
+               per-sequence slabs, the pre-paging A/B fallback)
   serve-cluster multi-worker serving with tenant placement
                [--workers N] [--policy affinity|least-loaded|delta-aware]
                [--codec C] [--batch N] [--requests N] [--budget-mb MB]
@@ -55,6 +58,7 @@ COMMANDS:
                [--admission-budget N]  (global in-flight cap at the
                cluster front door; 0 disables; default 256)
                [--threads N]  (kernel worker-pool width per engine)
+               [--kv-block-size N] [--kv-blocks N] [--kv-slab]
                (tiered tenants pay level-scaled delta bytes in placement)
   codecs       list the registered delta codecs
   table1       BitDelta vs SVD quality (paper Table 1)
@@ -80,6 +84,7 @@ COMMANDS:
                idle) [--admission-budget N] (cluster front-door
                in-flight cap; 0 disables; default 256)
                [--threads N] (kernel worker-pool width; 0 = one per core)
+               [--kv-block-size N] [--kv-blocks N] [--kv-slab]
                (workers > 1 or --autoscale runs the cluster)
   extras-quant INT8-compress a delta's embeddings/head (paper's
                future-work extension) [--tenant sim-s-chat]
@@ -149,6 +154,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
             args.get_usize("batch", 4)?,
             args.get_usize("requests", 12)?,
             args.get_usize("threads", 0)?,
+            kv_flags(&args)?,
             args.get_or("model", "sim-s"))?,
         "serve-cluster" => serve_cluster(
             &artifacts,
@@ -162,6 +168,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
             args.get_usize("budget-mb", 256)?,
             args.get_usize("admission-budget", 256)?,
             args.get_usize("threads", 0)?,
+            kv_flags(&args)?,
             args.get_or("model", "sim-s"))?,
         "codecs" => {
             let registry = CodecRegistry::builtin();
@@ -211,6 +218,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
             let tenant_levels =
                 parse_tenant_levels(args.get("tenant-levels"))?;
             let autoscale = parse_autoscale(args.get("autoscale"))?;
+            let kvf = kv_flags(&args)?;
             let pattern = parse_trace_pattern(
                 args.get_or("trace", "steady"),
                 args.get("burst-period").map(|v| v.parse())
@@ -219,7 +227,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
                     .transpose()?.unwrap_or(6.0))?;
             if workers <= 1 && autoscale.is_none() {
                 loadtest(&artifacts, requests, rate, zipf_s, batch,
-                         threads, tenant_levels, pattern)?
+                         threads, tenant_levels, pattern, kvf)?
             } else {
                 loadtest_cluster(
                     &artifacts, requests, rate, zipf_s, batch, workers,
@@ -228,7 +236,7 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
                     args.get_usize("tenants", 0)?,
                     args.get_usize("budget-mb", 256)?,
                     args.get_usize("admission-budget", 256)?,
-                    threads, autoscale, pattern, tenant_levels)?
+                    threads, autoscale, pattern, tenant_levels, kvf)?
             }
         }
         "extras-quant" => extras_quant(
@@ -248,6 +256,32 @@ least one 1-bit mask; --levels K > 1 stacks K successive masks)");
         }
     }
     Ok(())
+}
+
+/// KV-cache geometry flags shared by every serving command.
+#[derive(Debug, Clone, Copy)]
+struct KvFlags {
+    slab: bool,
+    block_size: usize,
+    blocks: usize,
+}
+
+impl KvFlags {
+    fn apply(&self, ec: &mut EngineConfig) {
+        ec.kv_slab_fallback = self.slab;
+        ec.kv_block_size = self.block_size.max(1);
+        ec.kv_blocks = self.blocks;
+    }
+}
+
+/// Parse `--kv-slab`, `--kv-block-size N`, `--kv-blocks N` (defaults
+/// match [`EngineConfig`]: paged, 16-token blocks, auto-sized pool).
+fn kv_flags(args: &Args) -> Result<KvFlags> {
+    Ok(KvFlags {
+        slab: args.has("kv-slab"),
+        block_size: args.get_usize("kv-block-size", 16)?,
+        blocks: args.get_usize("kv-blocks", 0)?,
+    })
 }
 
 /// Parse `--tenant-levels t1=2,t2=4` into tenant → fidelity tier.
@@ -348,7 +382,7 @@ fn serve_demo(artifacts: &Path, codec: &str,
               tenant_codecs: Option<&str>,
               tenant_levels: std::collections::HashMap<String, usize>,
               batch: usize, requests: usize, threads: usize,
-              model: &str) -> Result<()> {
+              kvf: KvFlags, model: &str) -> Result<()> {
     let registry = CodecRegistry::builtin();
     let codec = registry.get(codec)?.name();   // validate + canonicalize
     let mut ec = EngineConfig::new(artifacts);
@@ -371,6 +405,7 @@ tenant=codec"))?;
     ec.batch = batch;
     ec.model = model.to_string();
     ec.threads = threads;
+    kvf.apply(&mut ec);
     let mut engine = Engine::from_artifacts(ec)?;
     let assignments: Vec<String> = engine.tenants().iter()
         .map(|t| {
@@ -416,7 +451,8 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
                  tenant_levels: std::collections::HashMap<String, usize>,
                  batch: usize, requests: usize,
                  budget_mb: usize, admission_budget: usize,
-                 threads: usize, model: &str) -> Result<()> {
+                 threads: usize, kvf: KvFlags, model: &str)
+                 -> Result<()> {
     use bitdelta::cluster::{policy_by_name, tenant_profiles, Cluster,
                             ClusterConfig};
     use bitdelta::coordinator::admission::AdmissionPolicy;
@@ -429,6 +465,7 @@ fn serve_cluster(artifacts: &Path, workers: usize, policy_name: &str,
     ec.batch = batch;
     ec.model = model.to_string();
     ec.threads = threads;
+    kvf.apply(&mut ec);
     let profiles = tenant_profiles(&ec)?;
     let level_of: std::collections::HashMap<String, usize> = profiles
         .iter().map(|p| (p.name.clone(), p.levels)).collect();
@@ -526,6 +563,20 @@ A100-80GB: {}", gb(bd.total_bytes), bd.fits_all);
 A100-80GB: {}", gb(nv.total_bytes), nv.fits_all);
     println!("  cluster-wide memory win: {:.2}x",
              nv.total_bytes as f64 / bd.total_bytes as f64);
+    // the paged-KV win beside the delta win: the same fleet's
+    // sequences priced under slab / paged / paged + shared system
+    // prompt, at 7B (MHA) and 70B (GQA: n_kv_heads = 8) scale
+    let seqs = workers * batch;
+    for spec in [ModelSpec::llama2_7b(), ModelSpec::llama2_70b()] {
+        let kv = memory::paged_kv_account(&spec, seqs, 4096, 512, 256,
+                                          kvf.block_size.max(1));
+        println!("  paged KV @ {} ({seqs} seqs, len 512 of 4096, \
+256-token shared prompt, block {}): slab {:.1} GB -> paged {:.1} GB \
+({:.1}x) -> shared-prefix {:.1} GB ({:.1}x)",
+                 spec.name, kv.block_size, gb(kv.slab_bytes),
+                 gb(kv.paged_bytes), kv.paged_win(),
+                 gb(kv.shared_bytes), kv.shared_win());
+    }
     cluster.shutdown()?;
     Ok(())
 }
@@ -544,7 +595,8 @@ fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
                     pattern: bitdelta::coordinator::workload::
                         ArrivalPattern,
                     tenant_levels: std::collections::HashMap<String,
-                                                             usize>)
+                                                             usize>,
+                    kvf: KvFlags)
                     -> Result<()> {
     use std::time::{Duration, Instant};
 
@@ -558,6 +610,7 @@ fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
     ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     ec.threads = threads;
+    kvf.apply(&mut ec);
     let mut profiles = tenant_profiles(&ec)?;
     // trace ranks map onto engine tenants by rank % n — more ranks than
     // tenants lets a small tenant set carry an 8-way-skewed trace
@@ -652,6 +705,15 @@ policy {policy}, {clients} client threads"),
                  r.quantile_ms(0.5), r.quantile_ms(0.99),
                  r.quantile_ms(1.0));
     }
+    if r.kv_blocks_total > 0 {
+        println!("kv cache: {}/{} blocks resident ({:.0}% occupancy), \
+prefix reuse {}/{} admissions ({:.0}%)",
+                 r.kv_blocks_used, r.kv_blocks_total,
+                 r.kv_occupancy() * 100.0, r.kv_prefix_hits,
+                 r.kv_prefix_lookups, r.kv_prefix_hit_rate() * 100.0);
+    } else {
+        println!("kv cache: dense slab fallback (no paging metrics)");
+    }
     if autoscale.is_some() {
         let (ups, downs) = handle.scale_events();
         println!("autoscale: peak {} worker slots, {} scale-up(s), \
@@ -740,7 +802,8 @@ bitdelta fits all tested batches\n"));
 fn loadtest(artifacts: &Path, requests: usize, rate: f64,
             zipf_s: f64, batch: usize, threads: usize,
             tenant_levels: std::collections::HashMap<String, usize>,
-            pattern: bitdelta::coordinator::workload::ArrivalPattern)
+            pattern: bitdelta::coordinator::workload::ArrivalPattern,
+            kvf: KvFlags)
             -> Result<()> {
     use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
 
@@ -748,6 +811,7 @@ fn loadtest(artifacts: &Path, requests: usize, rate: f64,
     ec.tenant_levels = tenant_levels;
     ec.batch = batch;
     ec.threads = threads;
+    kvf.apply(&mut ec);
     let mut engine = Engine::from_artifacts(ec)?;
     let tenants = engine.tenants();
     let tcfg = TraceConfig {

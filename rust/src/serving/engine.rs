@@ -38,6 +38,17 @@
 //! token per step through the same executable, so prefill and decode
 //! coexist in one batch and no separate prefill executable sits on the
 //! hot path.
+//!
+//! The KV cache is **paged** by default (see [`crate::kvcache`]):
+//! each sequence owns a block table over a ref-counted
+//! [`BlockPool`] instead of a preallocated `max_seq_len` slab, appends
+//! copy-on-write through shared blocks, and a content-hash prefix
+//! index turns a re-seen prompt prefix (same weights + rope + tokens)
+//! into shared physical blocks plus skipped prefill steps. The dense
+//! staging pair the executables consume is restacked *incrementally* —
+//! only an admitted slot is gathered, never the whole batch.
+//! [`EngineConfig::kv_slab_fallback`] restores the slab design as the
+//! A/B correctness reference, mirroring `mixed_dense_fallback`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -54,7 +65,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{Router, TenantInfo};
 use crate::delta::codec::{CodecRegistry, DeltaCodec, Model};
 use crate::delta::codecs::dense::stack_dense_models;
-use crate::kvcache::SeqCache;
+use crate::kvcache::{share_sig, BlockDims, BlockPool, BlockTable,
+                     PrefixIndex, SeqCache, SeqKv};
 use crate::model::sampling::sample;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::runtime::client::{Executable, Runtime};
@@ -120,6 +132,16 @@ pub struct EngineConfig {
     /// escape hatch for a codec whose only executable is the naive
     /// one).
     pub mixed_dense_fallback: bool,
+    /// Serve KV from the dense per-sequence slab (the pre-paging
+    /// design) instead of the paged block pool. Kept as the A/B
+    /// correctness reference; tests pin the two paths token-identical.
+    pub kv_slab_fallback: bool,
+    /// Tokens per KV block in paged mode (CLI `--kv-block-size`).
+    pub kv_block_size: usize,
+    /// Total blocks in the paged pool (CLI `--kv-blocks`). `0` =
+    /// auto-size to twice a full batch at `max_seq_len`, leaving
+    /// headroom for prompt-cache (prefix index) entries.
+    pub kv_blocks: usize,
     /// CPU kernel worker-pool width, applied at engine construction
     /// (`0` = leave the process-global `BITDELTA_THREADS` setting
     /// untouched; see [`crate::gemm::dispatch::set_pool_threads`]).
@@ -140,6 +162,9 @@ impl EngineConfig {
             stop_token: Some(10),
             distilled: true,
             mixed_dense_fallback: false,
+            kv_slab_fallback: false,
+            kv_block_size: 16,
+            kv_blocks: 0,
             threads: 0,
         }
     }
@@ -217,6 +242,18 @@ pub struct Engine {
     // authoritative stacked KV cache (host copy, ABI layout [L,B,H,S,hd])
     kv_k: Vec<f32>,
     kv_v: Vec<f32>,
+    /// Paged KV state (`None` under `kv_slab_fallback`).
+    kv_pool: Option<BlockPool>,
+    kv_prefix: PrefixIndex,
+    /// Tenant -> weight-identity signature (codec, fidelity tier,
+    /// artifact, distillation flag). Prefix sharing is gated on equal
+    /// sigs: only identically-served prompts have bit-identical KV.
+    share_sig_of: HashMap<String, u64>,
+    // Metrics counters are inc-only while pool/index totals are
+    // absolute; these remember what was already exported.
+    kv_hits_synced: u64,
+    kv_lookups_synced: u64,
+    kv_cow_synced: u64,
     next_id: u64,
 }
 
@@ -260,6 +297,7 @@ impl Engine {
         deltas.set_base(base_model.clone());
         let mut codec_of: HashMap<String, Rc<dyn DeltaCodec>> =
             HashMap::new();
+        let mut share_sig_of: HashMap<String, u64> = HashMap::new();
         for (tname, t) in &manifest.tenants {
             if t.config != econfig.model {
                 continue;
@@ -278,8 +316,20 @@ mask level (0 given)");
                 TenantInfo::new(tname.clone(), t.rope_scale)
                     .with_codec(codec.name())
                     .with_levels(levels));
-            match codec.artifact_path(&manifest, t, econfig.distilled,
-                                      levels) {
+            let apath = codec.artifact_path(&manifest, t,
+                                            econfig.distilled, levels);
+            // everything that changes the served weights goes into the
+            // KV-sharing signature: two tenants may share prefix KV
+            // only when their sigs (and rope scales + tokens) agree
+            let levels_s = levels.to_string();
+            let apath_s = apath.as_ref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "base".into());
+            share_sig_of.insert(tname.clone(), share_sig(&[
+                codec.name(), &levels_s, &apath_s,
+                if econfig.distilled { "distilled" } else { "initial" },
+            ]));
+            match apath {
                 Some(path) => deltas.register(tname.clone(),
                                               codec.clone(), path,
                                               levels),
@@ -322,6 +372,19 @@ covering fidelity tier {lv}", codec.name());
         let kv_len = cfg.n_layers * econfig.batch * cfg.n_heads
             * cfg.max_seq_len * cfg.head_dim();
         let batch = econfig.batch;
+        let kv_pool = if econfig.kv_slab_fallback {
+            None
+        } else {
+            let bs = econfig.kv_block_size.max(1);
+            let per_seq = cfg.max_seq_len.div_ceil(bs);
+            let n_blocks = if econfig.kv_blocks > 0 {
+                econfig.kv_blocks
+            } else {
+                batch * per_seq * 2
+            };
+            Some(BlockPool::new(BlockDims::from_config(&cfg, bs),
+                                n_blocks))
+        };
         Ok(Self {
             cfg, econfig, manifest, rt,
             tok: ByteTokenizer::new(),
@@ -337,6 +400,12 @@ covering fidelity tier {lv}", codec.name());
             metrics: Metrics::default(),
             kv_k: vec![0.0; kv_len],
             kv_v: vec![0.0; kv_len],
+            kv_pool,
+            kv_prefix: PrefixIndex::new(),
+            share_sig_of,
+            kv_hits_synced: 0,
+            kv_lookups_synced: 0,
+            kv_cow_synced: 0,
             next_id: 1,
         })
     }
@@ -408,13 +477,38 @@ covering fidelity tier {lv}", codec.name());
                     > self.cfg.max_seq_len {
                     bail!("request {} longer than max_seq_len", qreq.id);
                 }
-                let first = prompt[0];
+                // paged admission: reuse the longest registered prefix
+                // (same weights sig + rope + tokens). The matched
+                // prefill steps are skipped — the last prompt token
+                // always runs so this step's logits seed sampling.
+                let mut prompt_pos = 0usize;
+                let kv = match &mut self.kv_pool {
+                    None => SeqKv::Slab(SeqCache::new(&self.cfg)),
+                    Some(pool) => {
+                        let sig = self.share_sig_of
+                            .get(&qreq.request.tenant).copied()
+                            .unwrap_or(0);
+                        let bs = pool.dims().block_size;
+                        let usable = &prompt[..prompt.len() - 1];
+                        let table = match self.kv_prefix.lookup(
+                            sig, info.rope_scale, usable, bs) {
+                            Some((blocks, len)) => {
+                                prompt_pos = len;
+                                BlockTable::with_shared_prefix(
+                                    pool, &blocks)
+                            }
+                            None => BlockTable::new(),
+                        };
+                        SeqKv::Paged(table)
+                    }
+                };
+                let first = prompt[prompt_pos];
                 let seq = ActiveSeq {
                     tenant: qreq.request.tenant.clone(),
                     rope_scale: info.rope_scale,
-                    cache: SeqCache::new(&self.cfg),
+                    kv,
                     prompt,
-                    prompt_pos: 0,
+                    prompt_pos,
                     generated: vec![],
                     next_token: first,
                     started: qreq.enqueued_at,
@@ -423,7 +517,22 @@ covering fidelity tier {lv}", codec.name());
                 };
                 let slot = self.batcher.admit(seq)
                     .map_err(|_| anyhow!("no free slot after check"))?;
+                // incremental restack: only the admitted slot's staging
+                // region is rewritten, never the whole batch
                 self.zero_slot_cache(slot);
+                if let Some(pool) = &self.kv_pool {
+                    let s = self.batcher.slot(slot).unwrap();
+                    if let SeqKv::Paged(t) = &s.kv {
+                        if !t.is_empty() {
+                            t.gather_into(pool, slot,
+                                          self.econfig.batch,
+                                          self.cfg.max_seq_len,
+                                          &mut self.kv_k,
+                                          &mut self.kv_v);
+                        }
+                    }
+                }
+                self.metrics.inc("kv_restacked_slots", 1);
                 self.deltas.pin(&self.batcher.slot(slot).unwrap()
                     .tenant.clone());
                 report.admitted += 1;
@@ -456,7 +565,7 @@ covering fidelity tier {lv}", codec.name());
         for &i in &active {
             let s = self.batcher.slot(i).unwrap();
             tokens[i] = s.next_token;
-            pos[i] = s.cache.pos as i32;
+            pos[i] = s.kv.pos() as i32;
             rope[i] = s.rope_scale;
         }
 
@@ -536,8 +645,8 @@ covering fidelity tier {lv}", codec.name());
         let max_seq = self.cfg.max_seq_len;
         let mut to_release = Vec::new();
         for &i in &active {
+            self.bank_kv_row(i, b)?;
             let s = self.batcher.slot_mut(i).unwrap();
-            s.cache.pos += 1;
             if s.in_prefill() {
                 s.prompt_pos += 1;
                 if s.prompt_pos < s.prompt.len() {
@@ -563,7 +672,13 @@ covering fidelity tier {lv}", codec.name());
         }
 
         for i in to_release {
-            let s = self.batcher.release(i).unwrap();
+            let mut s = self.batcher.release(i).unwrap();
+            if let (Some(pool), SeqKv::Paged(t)) =
+                (&mut self.kv_pool, &mut s.kv) {
+                // prefix-index references keep registered prompt
+                // blocks alive past the sequence (the prompt cache)
+                t.free(pool);
+            }
             self.deltas.unpin(&s.tenant);
             let now = Instant::now();
             let latency = now.duration_since(s.started);
@@ -589,6 +704,7 @@ covering fidelity tier {lv}", codec.name());
             }
         }
 
+        self.sync_kv_metrics();
         report.total_seconds = t_start.elapsed().as_secs_f64();
         self.metrics.step_latency
             .observe(std::time::Duration::from_secs_f64(
@@ -597,6 +713,72 @@ covering fidelity tier {lv}", codec.name());
         self.metrics.set("batch_occupancy",
                          report.active as f64 / b as f64);
         Ok(report)
+    }
+
+    /// Scatter one slot's freshly produced KV row from the dense
+    /// staging pair into the sequence's backing store. Slab: bump
+    /// `pos` (the staging pair *is* the store). Paged: append the row
+    /// to the block table (copy-on-write through shared tails,
+    /// reclaiming prompt-cache entries under pool pressure) and
+    /// register completed prompt-region blocks in the prefix index.
+    fn bank_kv_row(&mut self, i: usize, b: usize) -> Result<()> {
+        let Some(pool) = &mut self.kv_pool else {
+            self.batcher.slot_mut(i).unwrap().kv.slab_mut().pos += 1;
+            return Ok(());
+        };
+        let s = self.batcher.slot_mut(i).unwrap();
+        let p = s.kv.pos();
+        let d = pool.dims();
+        let (hd, max_seq) = (d.head_dim, self.cfg.max_seq_len);
+        let mut row_k = vec![0.0f32; d.row_floats()];
+        let mut row_v = vec![0.0f32; d.row_floats()];
+        for lh in 0..d.n_layers * d.n_heads {
+            let (l, h) = (lh / d.n_heads, lh % d.n_heads);
+            let src = (((l * b + i) * d.n_heads + h) * max_seq + p)
+                * hd;
+            row_k[lh * hd..(lh + 1) * hd]
+                .copy_from_slice(&self.kv_k[src..src + hd]);
+            row_v[lh * hd..(lh + 1) * hd]
+                .copy_from_slice(&self.kv_v[src..src + hd]);
+        }
+        let table = s.kv.table_mut();
+        if table.append_row(pool, &row_k, &row_v).is_err() {
+            // drop oldest prompt-cache entries, then retry once; a
+            // still-full pool surfaces the typed KvOomError
+            let dropped = self.kv_prefix.reclaim(pool, 1);
+            self.metrics.inc("kv_prefix_reclaimed", dropped as u64);
+            table.append_row(pool, &row_k, &row_v)
+                .map_err(|e| anyhow::Error::new(e).context(
+                    "KV pool exhausted (raise --kv-blocks)"))?;
+        }
+        // register every completed prompt-region block: the prompt
+        // cache later admissions hit, within and across tenants
+        let len = table.len();
+        if len % d.block_size == 0 && len <= s.prompt.len() {
+            let sig = self.share_sig_of.get(&s.tenant).copied()
+                .unwrap_or(0);
+            self.kv_prefix.register(pool, sig, s.rope_scale,
+                                    &s.prompt[..len], table.blocks());
+        }
+        Ok(())
+    }
+
+    /// Export paged-KV occupancy gauges and bump the inc-only prefix /
+    /// COW counters by their deltas since the last step.
+    fn sync_kv_metrics(&mut self) {
+        let Some(pool) = &self.kv_pool else { return };
+        self.metrics.set("kv_blocks_used", pool.used_blocks() as f64);
+        self.metrics.set("kv_blocks_total",
+                         pool.total_blocks() as f64);
+        let hits = self.kv_prefix.hits - self.kv_hits_synced;
+        self.metrics.inc("kv_prefix_hits", hits);
+        self.kv_hits_synced = self.kv_prefix.hits;
+        let lookups = self.kv_prefix.lookups - self.kv_lookups_synced;
+        self.metrics.inc("kv_prefix_lookups", lookups);
+        self.kv_lookups_synced = self.kv_prefix.lookups;
+        let cow = pool.cow_copies - self.kv_cow_synced;
+        self.metrics.inc("kv_cow_copies", cow);
+        self.kv_cow_synced = pool.cow_copies;
     }
 
     /// Re-assemble the stacked per-tenant arguments if the batch

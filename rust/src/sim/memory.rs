@@ -348,6 +348,63 @@ pub fn scale_up_cost(spec: &ModelSpec, replica_levels: &[usize],
     }
 }
 
+/// Resident KV bytes for one worker's live sequences under the three
+/// cache designs the serving layer can run: the dense slab fallback,
+/// plain paging, and paging with shared-prefix reuse.
+#[derive(Debug, Clone)]
+pub struct PagedKvPoint {
+    pub seqs: usize,
+    pub block_size: usize,
+    /// Dense slab: every sequence preallocates `max_seq` positions
+    /// regardless of how many it uses.
+    pub slab_bytes: usize,
+    /// Paged: `ceil(len / block_size)` blocks per sequence.
+    pub paged_bytes: usize,
+    /// Paged + prefix sharing: the common prefix's whole blocks are
+    /// resident **once**, not once per sequence.
+    pub shared_bytes: usize,
+}
+
+impl PagedKvPoint {
+    /// Slab-over-paged memory factor.
+    pub fn paged_win(&self) -> f64 {
+        self.slab_bytes as f64 / self.paged_bytes.max(1) as f64
+    }
+
+    /// Slab-over-(paged + shared prefix) memory factor.
+    pub fn shared_win(&self) -> f64 {
+        self.slab_bytes as f64 / self.shared_bytes.max(1) as f64
+    }
+}
+
+/// Price the paged KV designs against the slab baseline: `seqs`
+/// concurrent sequences of `mean_len` live tokens — of which the first
+/// `shared_prefix_len` are a common system prompt — on a model whose
+/// slab would preallocate `max_seq` positions per sequence. Only the
+/// prefix's *whole* blocks are shareable (the engine's prefix index
+/// registers block-aligned prefixes), and GQA models price per
+/// [`ModelSpec::kv_bytes`], i.e. by `n_kv_heads`, which is what makes
+/// 70B-scale KV paging arithmetic differ from 7B.
+pub fn paged_kv_account(spec: &ModelSpec, seqs: usize, max_seq: usize,
+                        mean_len: usize, shared_prefix_len: usize,
+                        block_size: usize) -> PagedKvPoint {
+    let bs = block_size.max(1);
+    let mean_len = mean_len.min(max_seq);
+    let shared = shared_prefix_len.min(mean_len);
+    let block_bytes = spec.kv_bytes(bs);
+    let blocks_per_seq = mean_len.div_ceil(bs);
+    let shared_whole = shared / bs;
+    PagedKvPoint {
+        seqs,
+        block_size: bs,
+        slab_bytes: seqs * spec.kv_bytes(max_seq),
+        paged_bytes: seqs * blocks_per_seq * block_bytes,
+        shared_bytes: (shared_whole
+                       + seqs * (blocks_per_seq - shared_whole))
+            * block_bytes,
+    }
+}
+
 /// Figure 5 series: memory vs batch for one mode.
 pub fn figure5_series(spec: &ModelSpec, mode: ServingMode,
                       batches: &[usize], seq: usize, capacity: usize)
@@ -563,6 +620,63 @@ mod tests {
         assert_eq!(empty.delta_bytes, 0);
         assert_eq!(empty.total_bytes,
                    empty.base_bytes + empty.kv_act_bytes);
+    }
+
+    #[test]
+    fn paged_kv_prices_the_slab_overprovision() {
+        // 7B scale, 32 sequences averaging 512 of a 4096-token slab:
+        // paging alone reclaims the 8x preallocation
+        let spec = ModelSpec::llama2_7b();
+        let p = paged_kv_account(&spec, 32, 4096, 512, 0, 16);
+        assert_eq!(p.slab_bytes, 32 * spec.kv_bytes(4096));
+        assert_eq!(p.paged_bytes, 32 * 32 * spec.kv_bytes(16));
+        assert!((p.paged_win() - 8.0).abs() < 1e-9, "{}", p.paged_win());
+        // no shared prefix: the two paged designs price identically
+        assert_eq!(p.shared_bytes, p.paged_bytes);
+    }
+
+    #[test]
+    fn paged_kv_shared_prefix_is_resident_once() {
+        // a 256-token system prompt shared by 32 sequences of 512:
+        // its 16 whole blocks cost one residency, not 32
+        let spec = ModelSpec::llama2_7b();
+        let p = paged_kv_account(&spec, 32, 4096, 512, 256, 16);
+        let block = spec.kv_bytes(16);
+        assert_eq!(p.shared_bytes, (16 + 32 * (32 - 16)) * block);
+        assert!(p.shared_win() > p.paged_win());
+        // resident bytes grow sublinearly in sequence count: doubling
+        // the fleet costs less than double (the prefix is paid once)
+        let p2 = paged_kv_account(&spec, 64, 4096, 512, 256, 16);
+        assert!(p2.shared_bytes < 2 * p.shared_bytes,
+                "{} vs {}", p2.shared_bytes, 2 * p.shared_bytes);
+        assert_eq!(p2.paged_bytes, 2 * p.paged_bytes);
+    }
+
+    #[test]
+    fn paged_kv_prices_gqa_at_70b_scale() {
+        // 70B has 8 KV heads against 7B's 32: per-token KV is priced
+        // by n_kv_heads, so the same paging scenario costs 70B only
+        // head_dim-scaled bytes, not n_heads-scaled
+        let b7 = paged_kv_account(&ModelSpec::llama2_7b(),
+                                  16, 4096, 512, 256, 16);
+        let b70 = paged_kv_account(&ModelSpec::llama2_70b(),
+                                   16, 4096, 512, 256, 16);
+        let per_tok_7 = ModelSpec::llama2_7b().kv_bytes(1);
+        let per_tok_70 = ModelSpec::llama2_70b().kv_bytes(1);
+        assert_eq!(b70.shared_bytes * per_tok_7,
+                   b7.shared_bytes * per_tok_70);
+        // the memory *factors* are shape-independent ratios
+        assert!((b70.shared_win() - b7.shared_win()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paged_kv_partial_blocks_round_up_and_sub_block_prefix_rounds_down() {
+        let spec = ModelSpec::llama2_7b();
+        // 17 tokens at block 16 = 2 blocks; 15-token prefix shares 0
+        let p = paged_kv_account(&spec, 4, 64, 17, 15, 16);
+        assert_eq!(p.paged_bytes, 4 * 2 * spec.kv_bytes(16));
+        assert_eq!(p.shared_bytes, p.paged_bytes,
+                   "sub-block prefixes are not shareable");
     }
 
     #[test]

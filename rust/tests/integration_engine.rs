@@ -345,6 +345,128 @@ batches decoded differently");
             "fallback run never hit decode_naive:\n{fm}");
 }
 
+/// First value of an exposed metric series, 0 when absent (rollup
+/// line, not a `{worker=...}` relabel).
+fn metric(exposition: &str, name: &str) -> f64 {
+    exposition.lines()
+        .filter_map(|l| l.trim().strip_prefix(name))
+        .filter_map(|rest| rest.strip_prefix(' '))
+        .find_map(|v| v.trim().parse::<f64>().ok())
+        .unwrap_or(0.0)
+}
+
+#[test]
+fn paged_kv_equals_slab_fallback_across_churn() {
+    // The paged-KV acceptance gate: block-pooled tables with prefix
+    // sharing, COW, and incremental restacking must decode exactly
+    // like the dense-slab design — across admission/completion churn
+    // (more requests than batch slots), mixed tenants, mixed rope
+    // scales, and mixed fidelity tiers, with greedy sampling.
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    if m.find_exec("sim-s", "decode_bitdelta_l2", 2).is_none() {
+        eprintln!("skipping: no decode_bitdelta_l2_b2 executable \
+(rebuild artifacts)");
+        return;
+    }
+    if !m.tenants.get("sim-s-math")
+        .map_or(false, |e| e.fidelity.contains_key("2")) {
+        eprintln!("skipping: fidelity artifacts missing \
+(rebuild artifacts)");
+        return;
+    }
+
+    // six requests into two slots: admissions interleave with
+    // completions, slots get reused, and the repeated chat prompt
+    // exercises the prompt cache on the paged run
+    let jobs: [(&str, &str, usize); 6] = [
+        ("sim-s-chat", "Q: what color is the sky ?\nA:", 12),
+        ("sim-s-math", "Q: what color is the sky ?\nA:", 9),
+        ("sim-s-chat-ext", "Q: where does ada live ?\nA:", 14),
+        ("sim-s-rlhf", "Q: what color is the sky ?\nA:", 7),
+        ("sim-s-chat", "Q: what color is the sky ?\nA:", 12),
+        ("sim-s-math", "Q: what does bob eat ?\nA:", 10),
+    ];
+    let run = |slab: bool| -> (Vec<Vec<i32>>, String) {
+        let mut ec = EngineConfig::new("artifacts");
+        ec.batch = 2;
+        ec.tenant_levels.insert("sim-s-math".into(), 2);
+        ec.kv_slab_fallback = slab;
+        ec.kv_block_size = 4; // small blocks: boundaries every 4 rows
+        let mut engine = Engine::from_artifacts(ec).unwrap();
+        let chans: Vec<_> = jobs.iter()
+            .map(|(t, p, n)| engine.submit(req(t, p, *n)).unwrap())
+            .collect();
+        engine.run_until_idle(400_000).unwrap();
+        let tokens = chans.into_iter()
+            .map(|c| c.recv().unwrap().tokens)
+            .collect();
+        (tokens, engine.metrics.exposition())
+    };
+
+    let (paged, pm) = run(false);
+    let (slab, sm) = run(true);
+    for ((t, p, _), (a, b)) in jobs.iter().zip(paged.iter().zip(&slab)) {
+        assert!(!a.is_empty(), "{t} {p:?}: paged run produced nothing");
+        assert_eq!(a, b, "{t} {p:?}: paged and slab KV backings \
+decoded differently");
+    }
+    // identical requests decode identically regardless of whether the
+    // second admission re-derived the prompt KV or reused blocks
+    assert_eq!(paged[0], paged[4], "repeat request diverged");
+
+    // the paged run actually paged: pool gauges exported, every
+    // admission consulted the index, and the repeated prompt hit
+    assert!(metric(&pm, "bitdelta_kv_blocks_total") > 0.0,
+            "paged run exported no pool gauges:\n{pm}");
+    assert_eq!(metric(&pm, "bitdelta_kv_prefix_lookups_total"),
+               jobs.len() as f64, "every admission consults the index");
+    assert!(metric(&pm, "bitdelta_kv_prefix_hits_total") >= 1.0,
+            "repeated prompt never hit the prompt cache:\n{pm}");
+    // slab fallback must not fake paging metrics
+    assert_eq!(metric(&sm, "bitdelta_kv_blocks_total"), 0.0,
+               "slab run exported pool gauges:\n{sm}");
+}
+
+#[test]
+fn prefix_cache_survives_sequence_completion() {
+    // The prompt cache: a registered prefix outlives the sequence that
+    // produced it, so a later identical prompt skips prefill work and
+    // reuses physical blocks — while a *different* tenant with the
+    // same prompt must NOT share (weights differ => sig differs).
+    if !have_artifacts() {
+        return;
+    }
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = 1; // strictly sequential: completion precedes re-admission
+    ec.kv_block_size = 4;
+    let mut engine = Engine::from_artifacts(ec).unwrap();
+    let prompt = "Q: what color is the sky ?\nA:";
+
+    let c1 = engine.submit(req("sim-s-chat", prompt, 8)).unwrap();
+    engine.run_until_idle(100_000).unwrap();
+    let first = c1.recv().unwrap().tokens;
+    let hits_before =
+        metric(&engine.metrics.exposition(),
+               "bitdelta_kv_prefix_hits_total");
+
+    let c2 = engine.submit(req("sim-s-chat", prompt, 8)).unwrap();
+    let c3 = engine.submit(req("sim-s-math", prompt, 8)).unwrap();
+    engine.run_until_idle(100_000).unwrap();
+    let second = c2.recv().unwrap().tokens;
+    let other = c3.recv().unwrap().tokens;
+
+    assert_eq!(first, second,
+               "prefix reuse changed a greedy decode");
+    assert_ne!(second, other,
+               "different tenants must not share decode output");
+    let m = engine.metrics.exposition();
+    assert!(metric(&m, "bitdelta_kv_prefix_hits_total") > hits_before,
+            "second identical prompt missed the prompt cache:\n{m}");
+}
+
 #[test]
 fn svd_codec_serves_via_registry_only() {
     // The acceptance demo for "adding a codec costs one module + one

@@ -15,7 +15,8 @@ use bitdelta::gemm::binary::binary_gemv_bitextract;
 use bitdelta::gemm::dispatch::{self, Tier};
 use bitdelta::gemm::{batched_binary_gemv, binary_gemv, dense_gemv,
                      lora_gemv, try_binary_gemv, try_binary_gemv_multi};
-use bitdelta::kvcache::SeqCache;
+use bitdelta::kvcache::{BlockDims, BlockPool, BlockTable, PrefixIndex,
+                        SeqCache, SeqKv};
 use bitdelta::model::sampling::SamplingParams;
 use bitdelta::serving::request::{QueuedRequest, Request};
 use bitdelta::store::bdw::{parse_bdw, write_bdw, Bdw, RawTensor};
@@ -448,7 +449,7 @@ fn batcher_slots_conserved() {
                     req: mk_req("a", step as u64),
                     tenant: "a".into(),
                     rope_scale: 1.0,
-                    cache: SeqCache::new(&cfg),
+                    kv: SeqKv::Slab(SeqCache::new(&cfg)),
                     prompt: vec![1],
                     prompt_pos: 0,
                     generated: vec![],
@@ -495,5 +496,172 @@ fn admission_policy_total_ordering() {
             assert!(matches!(p.admit(t, g + 5), Verdict::Reject(_))
                     || t >= p.per_tenant_cap);
         }
+    });
+}
+
+#[test]
+fn block_pool_conserves_blocks_under_random_churn() {
+    // Shadow-refcount model: after any interleaving of alloc / retain /
+    // release, pool bookkeeping matches the model exactly — no leaks,
+    // no premature frees — and a full drain returns every block.
+    run_cases(30, |rng| {
+        let total = rng.usize_in(2, 13);
+        let dims = BlockDims { n_layers: 1, n_heads: 1,
+                               block_size: 2, head_dim: 2 };
+        let mut pool = BlockPool::new(dims, total);
+        let mut live: Vec<(u32, u32)> = Vec::new(); // (id, shadow rc)
+        for _ in 0..rng.usize_in(10, 60) {
+            match rng.usize_in(0, 3) {
+                0 => match pool.alloc() {
+                    Ok(id) => live.push((id, 1)),
+                    Err(e) => {
+                        assert_eq!(e.free, 0, "OOM only when empty");
+                        assert_eq!(pool.free_blocks(), 0);
+                    }
+                },
+                1 => if !live.is_empty() {
+                    let i = rng.usize_in(0, live.len());
+                    pool.retain(live[i].0);
+                    live[i].1 += 1;
+                },
+                _ => if !live.is_empty() {
+                    let i = rng.usize_in(0, live.len());
+                    pool.release(live[i].0);
+                    live[i].1 -= 1;
+                    if live[i].1 == 0 {
+                        live.swap_remove(i);
+                    }
+                },
+            }
+            assert_eq!(pool.used_blocks(), live.len());
+            assert_eq!(pool.used_blocks() + pool.free_blocks(),
+                       pool.total_blocks());
+            for &(id, rc) in &live {
+                assert_eq!(pool.ref_count(id), rc);
+            }
+        }
+        for (id, rc) in live.drain(..) {
+            for _ in 0..rc {
+                pool.release(id);
+            }
+        }
+        assert_eq!(pool.used_blocks(), 0);
+        assert_eq!(pool.free_blocks(), pool.total_blocks());
+        assert_eq!(pool.resident_bytes(), 0);
+    });
+}
+
+#[test]
+fn block_tables_waste_at_most_one_partial_block() {
+    // Unshared tables use exactly ceil(len / block_size) blocks each —
+    // internal fragmentation is bounded by one block per live
+    // sequence, and freeing a table returns all of its blocks.
+    run_cases(25, |rng| {
+        let bs = rng.usize_in(1, 5);
+        let dims = BlockDims { n_layers: 1, n_heads: 2,
+                               block_size: bs, head_dim: 2 };
+        let mut pool = BlockPool::new(dims, 64);
+        let rf = dims.row_floats();
+        let mut tables: Vec<BlockTable> = Vec::new();
+        for _ in 0..rng.usize_in(10, 50) {
+            match rng.usize_in(0, 3) {
+                0 => tables.push(BlockTable::new()),
+                1 => if !tables.is_empty() {
+                    let i = rng.usize_in(0, tables.len());
+                    let r = rng.f32_vec(rf);
+                    tables[i].append_row(&mut pool, &r, &r).unwrap();
+                },
+                _ => if !tables.is_empty() {
+                    let i = rng.usize_in(0, tables.len());
+                    let mut t = tables.swap_remove(i);
+                    t.free(&mut pool);
+                },
+            }
+            let want: usize = tables.iter()
+                .map(|t| t.len().div_ceil(bs)).sum();
+            assert_eq!(pool.used_blocks(), want);
+            for t in &tables {
+                assert!(t.n_blocks() * bs < t.len() + bs,
+                        "more than one partial block of waste");
+            }
+        }
+        for t in &mut tables {
+            t.free(&mut pool);
+        }
+        assert_eq!(pool.used_blocks(), 0);
+    });
+}
+
+#[test]
+fn shared_prefix_gather_is_bit_identical_to_private_copy() {
+    // A table admitted over an index-shared prefix must decode exactly
+    // like a table that wrote the same rows privately — bit-for-bit —
+    // and divergent appends by the prefix owner must not leak across.
+    run_cases(20, |rng| {
+        let dims = BlockDims { n_layers: 2, n_heads: 2,
+                               block_size: 2, head_dim: 3 };
+        let bs = dims.block_size;
+        let mut pool = BlockPool::new(dims, 64);
+        let rf = dims.row_floats();
+
+        let n_shared = rng.usize_in(1, 4) * bs;
+        let shared: Vec<(Vec<f32>, Vec<f32>)> = (0..n_shared)
+            .map(|_| (rng.f32_vec(rf), rng.f32_vec(rf))).collect();
+
+        // the owner prefills the prompt and registers it
+        let mut owner = BlockTable::new();
+        for (k, v) in &shared {
+            owner.append_row(&mut pool, k, v).unwrap();
+        }
+        let mut ix = PrefixIndex::new();
+        let toks: Vec<i32> = (0..n_shared as i32).collect();
+        let sig = rng.next_u64();
+        assert!(ix.register(&mut pool, sig, 1.0, &toks,
+                            owner.blocks()));
+
+        // a later admission reuses the prefix; a reference sequence
+        // writes the identical rows without sharing
+        let (blocks, len) = ix.lookup(sig, 1.0, &toks, bs).unwrap();
+        assert_eq!(len, n_shared);
+        let mut reuser =
+            BlockTable::with_shared_prefix(&mut pool, &blocks);
+        let mut reference = BlockTable::new();
+        for (k, v) in &shared {
+            reference.append_row(&mut pool, k, v).unwrap();
+        }
+
+        // both decode on; the owner diverges with different rows
+        for _ in 0..rng.usize_in(0, 5) {
+            let (k, v) = (rng.f32_vec(rf), rng.f32_vec(rf));
+            reuser.append_row(&mut pool, &k, &v).unwrap();
+            reference.append_row(&mut pool, &k, &v).unwrap();
+            let (ko, vo) = (rng.f32_vec(rf), rng.f32_vec(rf));
+            owner.append_row(&mut pool, &ko, &vo).unwrap();
+        }
+        assert_eq!(reuser.len(), reference.len());
+
+        let (batch, max_seq) = (2usize, 16usize);
+        let total = dims.n_layers * batch * dims.n_heads * max_seq
+            * dims.head_dim;
+        let mut k_a = vec![0f32; total];
+        let mut v_a = vec![0f32; total];
+        let mut k_b = vec![0f32; total];
+        let mut v_b = vec![0f32; total];
+        reuser.gather_into(&pool, 0, batch, max_seq, &mut k_a,
+                           &mut v_a);
+        reference.gather_into(&pool, 0, batch, max_seq, &mut k_b,
+                              &mut v_b);
+        assert!(k_a.iter().zip(k_b.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shared-prefix K diverged from private copy");
+        assert!(v_a.iter().zip(v_b.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shared-prefix V diverged from private copy");
+
+        owner.free(&mut pool);
+        reuser.free(&mut pool);
+        reference.free(&mut pool);
+        ix.clear(&mut pool);
+        assert_eq!(pool.used_blocks(), 0, "leak after full teardown");
     });
 }
