@@ -24,12 +24,12 @@
 //!
 //! [`WorkerLoad`]: crate::cluster::worker::WorkerLoad
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::cluster::frontend::ClusterHandle;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{thread, Arc};
 
 /// Autoscaler tuning. `Default` suits the in-repo loadtests: scale up
 /// after ~3 consecutive pressured samples, scale down only after a
@@ -158,7 +158,7 @@ impl Autoscaler {
         let interval = cfg.interval;
         let min_workers = cfg.min_workers;
         let mut model = ScalingModel::new(cfg);
-        let join = std::thread::Builder::new()
+        let join = thread::Builder::new()
             .name("bitdelta-autoscaler".into())
             .spawn(move || {
                 while !flag.load(Ordering::Relaxed) {
@@ -185,9 +185,11 @@ impl Autoscaler {
                         }
                         ScaleDecision::Hold => {}
                     }
-                    std::thread::sleep(interval);
+                    thread::sleep(interval);
                 }
             })
+            // lint: allow(expect, OS refusing to spawn the one control
+            // thread is unrecoverable at startup)
             .expect("spawn autoscaler thread");
         Self { stop, join: Some(join) }
     }
@@ -335,7 +337,7 @@ mod tests {
                 grew = true;
                 break;
             }
-            std::thread::sleep(Duration::from_millis(5));
+            thread::sleep(Duration::from_millis(5));
         }
         assert!(grew, "autoscaler never scaled up under sustained load");
 
@@ -352,7 +354,7 @@ mod tests {
                 shrank = true;
                 break;
             }
-            std::thread::sleep(Duration::from_millis(5));
+            thread::sleep(Duration::from_millis(5));
         }
         assert!(shrank, "autoscaler never drained back down when idle");
 

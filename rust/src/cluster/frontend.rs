@@ -39,12 +39,13 @@
 //! policy-respecting placement, routing degrades to
 //! everything-everywhere — availability over budget.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{lock, mpsc, thread, Arc, Mutex};
 
 use crate::cluster::metrics::{relabel, rollup};
 use crate::cluster::placement::{
@@ -330,7 +331,7 @@ impl Cluster {
     /// scale-down and don't participate.
     pub fn shutdown(self) -> Result<()> {
         let joins: Vec<JoinHandle<Result<()>>> = {
-            let mut st = self.handle.shared.state.lock().unwrap();
+            let mut st = lock(&self.handle.shared.state);
             let mut joins = Vec::new();
             for slot in st.slots.iter_mut() {
                 let Some(live) = slot.live.as_mut() else {
@@ -387,7 +388,7 @@ impl ClusterHandle {
         // or strictly shrinks the active set, until pick_locked
         // reports "no alive workers"
         loop {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock(&self.shared.state);
             self.reap(&mut st);
             let w = self.pick_locked(&st, &req.tenant)?;
             // the channel send happens under the state lock so a
@@ -420,7 +421,7 @@ impl ClusterHandle {
 
     /// Snapshot of the current placement.
     pub fn placement(&self) -> Placement {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         self.reap(&mut st);
         st.placement.clone()
     }
@@ -428,12 +429,12 @@ impl ClusterHandle {
     /// Total worker slots ever created (including retired and dead
     /// ones — slot indices are stable and never reused).
     pub fn n_workers(&self) -> usize {
-        self.shared.state.lock().unwrap().slots.len()
+        lock(&self.shared.state).slots.len()
     }
 
     /// Workers currently routable (Active and alive).
     pub fn active_workers(&self) -> usize {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         st.slots.iter().filter(|s| s.routable()).count()
     }
 
@@ -449,7 +450,7 @@ impl ClusterHandle {
     /// that phantom score would hold the pressure signal above the
     /// watermark forever.
     pub fn outstanding(&self) -> usize {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         st.slots.iter()
             .filter(|s| s.routable())
             .filter_map(|s| s.handle())
@@ -459,14 +460,14 @@ impl ClusterHandle {
 
     /// Lifetime scale event counts: `(scale-ups, graceful drains)`.
     pub fn scale_events(&self) -> (u64, u64) {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         (st.scale_ups, st.scale_downs)
     }
 
     /// The active worker with the least outstanding work — the natural
     /// scale-down victim (shortest drain).
     pub fn least_loaded_active(&self) -> Option<usize> {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         st.slots.iter().enumerate()
             .filter(|(_, s)| s.routable())
             .filter_map(|(w, s)| s.handle().map(|h| (w, h)))
@@ -488,7 +489,7 @@ Cluster::spawn_elastic / spawn_engines clusters can scale up")
         let factory = make(id);
         let (handle, join) =
             spawn_worker(format!("bitdelta-worker-{id}"), factory)?;
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         let index = st.slots.len();
         st.slots.push(Slot {
             live: Some(LiveWorker {
@@ -524,7 +525,7 @@ Cluster::spawn_elastic / spawn_engines clusters can scale up")
     pub fn retire_worker_floor(&self, w: usize, min_active: usize)
                                -> Result<Duration> {
         let (handle, join) = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock(&self.shared.state);
             self.reap(&mut st);
             if st.active_count() <= min_active.max(1) {
                 bail!("cannot retire worker {w}: only {} active, \
@@ -553,7 +554,7 @@ floor is {}", st.active_count(), min_active.max(1));
         handle.shutdown_signal();
         let result = join.join();
         let drain = t0.elapsed();
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         // the slot is terminal either way and its thread was just
         // joined — compact it immediately so a long-lived elastic
         // cluster never accretes dead handles across scale cycles
@@ -591,7 +592,7 @@ floor is {}", st.active_count(), min_active.max(1));
     /// compacted; clean scale-downs compact eagerly, so this is mostly
     /// a sweep for workers that died and were reaped.
     pub fn compact_slots(&self) -> usize {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         self.reap(&mut st);
         let mut n = 0;
         for slot in st.slots.iter_mut() {
@@ -613,7 +614,7 @@ floor is {}", st.active_count(), min_active.max(1));
     pub fn metrics(&self) -> String {
         // scrape outside the lock: worker metrics round-trip a channel
         let handles: Vec<(usize, WorkerHandle)> = {
-            let st = self.shared.state.lock().unwrap();
+            let st = lock(&self.shared.state);
             st.slots.iter().enumerate()
                 .filter(|(_, s)| s.routable())
                 .filter_map(|(w, s)| {
@@ -631,7 +632,7 @@ floor is {}", st.active_count(), min_active.max(1));
         }
         let mut out = rollup(&texts);
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock(&self.shared.state);
             self.reap(&mut st);
             let active = st.slots.iter()
                 .filter(|s| s.routable()).count();
@@ -937,7 +938,7 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
             prompts.iter().map(|p| p.to_string()).collect();
         let events: Vec<TraceEvent> =
             trace.iter().skip(c).step_by(clients).cloned().collect();
-        joins.push(std::thread::spawn(move || {
+        joins.push(thread::spawn(move || {
             let mut tickets: Vec<ClusterTicket> = Vec::new();
             let mut latencies = Vec::new();
             let mut tokens = 0usize;
@@ -946,7 +947,7 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
             for e in &events {
                 let now = t0.elapsed().as_secs_f64();
                 if e.at > now {
-                    std::thread::sleep(
+                    thread::sleep(
                         std::time::Duration::from_secs_f64(e.at - now));
                 }
                 // collect whatever finished during the wait *before*
@@ -1015,7 +1016,7 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
         report.rejected += rj;
     }
     report.wall_seconds = t0.elapsed().as_secs_f64();
-    report.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    report.latencies.sort_by(|a, b| a.total_cmp(b));
     // scrape KV paging occupancy from the cluster rollup so the report
     // carries cache behavior beside its latency quantiles
     let m = handle.metrics();
@@ -1041,8 +1042,9 @@ fn scrape(exposition: &str, name: &str) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicBool, Ordering};
     use std::time::Duration;
+
+    use crate::sync::atomic::AtomicBool;
 
     use crate::cluster::placement::policy_by_name;
     use crate::cluster::testutil::{elastic_mock, profiles, req,
@@ -1077,7 +1079,7 @@ mod tests {
         for c in 0..3 {
             let h = handle.clone();
             let ts = tenants.clone();
-            joins.push(std::thread::spawn(move || {
+            joins.push(thread::spawn(move || {
                 (0..5).map(|i| {
                     h.generate(req(&ts[(c + i) % ts.len()]))
                 }).collect::<Result<Vec<_>>>()
@@ -1140,7 +1142,7 @@ mod tests {
                     ok = Some(r);
                     break;
                 }
-                Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                Err(_) => thread::sleep(Duration::from_millis(2)),
             }
         }
         let r = ok.expect("tenant a never failed over");
@@ -1174,7 +1176,7 @@ mod tests {
                 break;
             }
             let _ = handle.generate(req("a"));
-            std::thread::sleep(Duration::from_millis(2));
+            thread::sleep(Duration::from_millis(2));
         }
         let err = handle.generate(req("a"));
         assert!(err.is_err());

@@ -144,13 +144,13 @@ codec=\"bitdelta\"} 64"), "{r}");
     #[test]
     fn rollup_sums_histogram_buckets() {
         let a = "bitdelta_ttft_us_bucket{le=\"100\"} 4\n\
-                 bitdelta_ttft_us_count 6\n".to_string();
+                 bitdelta_ttft_count 6\n".to_string();
         let b = "bitdelta_ttft_us_bucket{le=\"100\"} 1\n\
-                 bitdelta_ttft_us_count 2\n".to_string();
+                 bitdelta_ttft_count 2\n".to_string();
         let r = rollup(&[a, b]);
         assert!(r.contains("bitdelta_ttft_us_bucket{le=\"100\"} 5"),
                 "{r}");
-        assert!(r.contains("bitdelta_ttft_us_count 8"), "{r}");
+        assert!(r.contains("bitdelta_ttft_count 8"), "{r}");
     }
 
     #[test]

@@ -91,7 +91,7 @@ impl WorkerCore for MockCore {
             }
         }
         if let Some(d) = self.step_delay {
-            std::thread::sleep(d);
+            crate::sync::thread::sleep(d);
         }
         if let Some((req, tx)) = self.queue.pop_front() {
             let id = self.next_id;

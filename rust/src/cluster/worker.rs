@@ -11,12 +11,12 @@
 //! than the concrete engine so cluster scheduling and failover can be
 //! unit-tested with deterministic fake cores, no artifacts required.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::thread::JoinHandle;
-
 use anyhow::{anyhow, Result};
+
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::mpsc;
+use crate::sync::thread::JoinHandle;
+use crate::sync::Arc;
 
 use crate::serving::engine::Engine;
 use crate::serving::request::{Request, Response};
@@ -93,7 +93,7 @@ pub enum Command {
 /// signal least-loaded routing reads lock-free. `submitted` is bumped by
 /// the sending side, `ingested` by the worker, so `submitted - ingested`
 /// counts commands still in flight in the channel.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct WorkerLoad {
     pub queued: AtomicUsize,
     pub occupancy: AtomicUsize,
@@ -101,6 +101,21 @@ pub struct WorkerLoad {
     pub submitted: AtomicUsize,
     pub ingested: AtomicUsize,
     pub alive: AtomicBool,
+}
+
+// Written out (not derived) because loom's atomics are not
+// const-constructible and do not all implement `Default`.
+impl Default for WorkerLoad {
+    fn default() -> Self {
+        Self {
+            queued: AtomicUsize::new(0),
+            occupancy: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            submitted: AtomicUsize::new(0),
+            ingested: AtomicUsize::new(0),
+            alive: AtomicBool::new(false),
+        }
+    }
 }
 
 impl WorkerLoad {
@@ -173,7 +188,7 @@ pub fn spawn_worker(name: String, factory: CoreFactory)
     let (tx, rx) = mpsc::channel::<Command>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
     let thread_load = load.clone();
-    let join = std::thread::Builder::new()
+    let join = crate::sync::thread::Builder::new()
         .name(name)
         .spawn(move || worker_thread(factory, rx, ready_tx, thread_load))?;
     ready_rx.recv()

@@ -64,6 +64,7 @@ impl ModelConfig {
 
     /// (out_features, in_features) of a canonical linear weight.
     pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        // lint: allow(unwrap, rsplit always yields at least one piece)
         let kind = name.rsplit('.').next().unwrap();
         let (d, f) = (self.d_model, self.d_ff);
         match kind {

@@ -20,8 +20,9 @@
 //!   failures.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{lock, Arc, Mutex};
 
 /// Queue caps. `Default` is sized for the example workloads.
 #[derive(Debug, Clone, Copy)]
@@ -142,7 +143,7 @@ impl AdmissionGate {
     /// Reserve one in-flight slot for `tenant`, or reject.
     pub fn try_admit(&self, tenant: &str)
                      -> Result<AdmissionPermit, AdmissionError> {
-        let mut c = self.inner.counts.lock().unwrap();
+        let mut c = lock(&self.inner.counts);
         let tenant_now = c.per_tenant.get(tenant).copied().unwrap_or(0);
         match self.policy.admit(tenant_now, c.total) {
             Verdict::Admit => {
@@ -168,7 +169,7 @@ impl AdmissionGate {
 
     /// Live in-flight count across all tenants.
     pub fn in_flight(&self) -> usize {
-        self.inner.counts.lock().unwrap().total
+        lock(&self.inner.counts).total
     }
 
     /// `(per-tenant-cap, global-cap)` rejection counts so far.
@@ -188,7 +189,7 @@ pub struct AdmissionPermit {
 
 impl Drop for AdmissionPermit {
     fn drop(&mut self) {
-        let mut c = self.inner.counts.lock().unwrap();
+        let mut c = lock(&self.inner.counts);
         c.total = c.total.saturating_sub(1);
         if let Some(n) = c.per_tenant.get_mut(&self.tenant) {
             *n = n.saturating_sub(1);

@@ -116,8 +116,10 @@ impl Batcher {
 
     /// Tenant per occupied slot, the composition key.
     pub fn composition(&self) -> Vec<(usize, String)> {
-        self.active_slots().into_iter()
-            .map(|i| (i, self.slots[i].as_ref().unwrap().tenant.clone()))
+        self.slots.iter().enumerate()
+            .filter_map(|(i, s)| {
+                s.as_ref().map(|s| (i, s.tenant.clone()))
+            })
             .collect()
     }
 }

@@ -190,6 +190,8 @@ artifact (codec lacks one for this tenant?)"))?;
                 .map(|(k, _)| k.clone());
             match victim {
                 Some(k) => {
+                    // lint: allow(unwrap, victim key was drawn from
+                    // this map under the same &mut borrow)
                     let e = self.resident.remove(&k).unwrap();
                     self.stats.evictions += 1;
                     self.stats.by_codec

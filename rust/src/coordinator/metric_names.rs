@@ -1,0 +1,165 @@
+//! The declared registry of exported Prometheus series.
+//!
+//! Exposition is compositional ([`super::metrics::Metrics`] derives
+//! `bitdelta_{counter}_total`, `bitdelta_{gauge}`,
+//! `bitdelta_{name}{tenant=...}`, and the histogram family
+//! `bitdelta_{name}_us_{mean,p50,p99}` / `_us_bucket` / `_count` from
+//! short internal keys), so nothing at the update site spells out the
+//! full series name — which is exactly how docs, dashboards, and tests
+//! drift from what the process actually exports. This module is the
+//! fix: **every full series name lives here, once.**
+//!
+//! The house lint (`cargo xtask lint`, rule `metric`) extracts every
+//! `bitdelta_*` token found in Rust string literals and markdown code
+//! spans and checks it against [`EXPORTED_SERIES`]: a token passes if
+//! it is an exact member or a proper prefix of a member (docs often
+//! name a family by prefix, e.g. `bitdelta_cluster_admission_…`).
+//! Non-metric tokens that happen to share the prefix carry a
+//! `// lint: allow(metric, reason)` marker instead of polluting this
+//! list. Unit tests below tie the list back to the code that composes
+//! the names, so the registry cannot itself go stale.
+
+/// Every Prometheus series name this process can export, sorted.
+///
+/// Label sets are not part of the name: `bitdelta_queue_depth` stands
+/// for `bitdelta_queue_depth{tenant="..."}` and so on. When you add a
+/// metric, add the full exported name(s) here — the lint and the
+/// round-trip tests below will hold you to it.
+pub const EXPORTED_SERIES: &[&str] = &[
+    // --- engine counters (`Metrics::inc(k)` → `bitdelta_{k}_total`)
+    "bitdelta_completed_total",
+    "bitdelta_delta_restack_bytes_total",
+    "bitdelta_delta_restacks_total",
+    "bitdelta_kv_cow_copies_total",
+    "bitdelta_kv_prefix_hits_total",
+    "bitdelta_kv_prefix_lookups_total",
+    "bitdelta_kv_prefix_reclaimed_total",
+    "bitdelta_kv_restacked_slots_total",
+    "bitdelta_mixed_batches_total",
+    "bitdelta_mixed_native_subbatches_total",
+    "bitdelta_requests_total",
+    "bitdelta_steps_total",
+    "bitdelta_tokens_generated_total",
+    // --- per-executable launch counters (`Metrics::inc(exec_kind)`,
+    //     one per `crate::delta::codec::KNOWN_EXEC_KINDS` entry)
+    "bitdelta_decode_bitdelta_l2_total",
+    "bitdelta_decode_bitdelta_l4_total",
+    "bitdelta_decode_bitdelta_total",
+    "bitdelta_decode_dense_total",
+    "bitdelta_decode_lora_total",
+    "bitdelta_decode_naive_total",
+    // --- engine gauges (`Metrics::set(k)` → `bitdelta_{k}`)
+    "bitdelta_batch_occupancy",
+    "bitdelta_kv_blocks_total",
+    "bitdelta_kv_blocks_used",
+    // --- tenant-labeled gauges (`Metrics::set_tenant_gauge`)
+    "bitdelta_queue_depth",
+    // --- engine latency histograms (`bitdelta_{h}_us_*`; ttft
+    //     additionally exports cumulative `_us_bucket{le=...}` lines)
+    "bitdelta_request_latency_count",
+    "bitdelta_request_latency_us_mean",
+    "bitdelta_request_latency_us_p50",
+    "bitdelta_request_latency_us_p99",
+    "bitdelta_step_latency_count",
+    "bitdelta_step_latency_us_mean",
+    "bitdelta_step_latency_us_p50",
+    "bitdelta_step_latency_us_p99",
+    "bitdelta_ttft_count",
+    "bitdelta_ttft_us_bucket",
+    "bitdelta_ttft_us_mean",
+    "bitdelta_ttft_us_p50",
+    "bitdelta_ttft_us_p99",
+    // --- delta-store residency accounting (codec-labeled, emitted by
+    //     `Engine::codec_accounting`)
+    "bitdelta_delta_bytes_loaded_total",
+    "bitdelta_delta_evictions_total",
+    "bitdelta_delta_loads_total",
+    "bitdelta_delta_resident_bytes",
+    // --- cluster front door (`ClusterHandle::metrics_exposition`)
+    "bitdelta_cluster_admission_inflight",
+    "bitdelta_cluster_admission_rejected_total",
+    "bitdelta_cluster_drain_us_bucket",
+    "bitdelta_cluster_drain_us_count",
+    "bitdelta_cluster_drain_us_sum",
+    "bitdelta_cluster_failovers_total",
+    "bitdelta_cluster_replaced_tenants_total",
+    "bitdelta_cluster_routed_total",
+    "bitdelta_cluster_scale_events_total",
+    "bitdelta_cluster_workers_alive",
+    "bitdelta_cluster_workers_draining",
+];
+
+/// Exact-or-proper-prefix membership — the rule the house lint applies
+/// to every `bitdelta_*` token it finds in strings and docs.
+pub fn is_registered(token: &str) -> bool {
+    EXPORTED_SERIES.iter().any(|s| {
+        *s == token
+            || (s.len() > token.len() && s.starts_with(token))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use std::time::Duration;
+
+    #[test]
+    fn registry_is_sorted_within_sections_and_duplicate_free() {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in EXPORTED_SERIES {
+            assert!(seen.insert(*s), "duplicate registry entry {s}");
+            assert!(s.starts_with("bitdelta_"), "bad prefix: {s}");
+        }
+    }
+
+    #[test]
+    fn prefix_rule_accepts_families_and_rejects_strangers() {
+        assert!(is_registered("bitdelta_requests_total"));
+        // a docs-style family prefix
+        assert!(is_registered("bitdelta_cluster_admission_"));
+        assert!(is_registered("bitdelta_"));
+        // lint: allow(metric, deliberately unregistered drift examples)
+        assert!(!is_registered("bitdelta_requests_totals"));
+        assert!(!is_registered("bitdelta_queue_depths"));
+    }
+
+    /// Every composed series an exercised `Metrics` exports must be
+    /// registered — the registry cannot lag the exposition code.
+    #[test]
+    fn live_exposition_only_emits_registered_series() {
+        let mut m = Metrics::default();
+        for k in ["requests", "completed", "tokens_generated", "steps",
+                  "kv_restacked_slots", "kv_prefix_reclaimed",
+                  "kv_prefix_hits", "kv_prefix_lookups",
+                  "kv_cow_copies", "mixed_batches",
+                  "mixed_native_subbatches", "delta_restacks",
+                  "delta_restack_bytes"] {
+            m.inc(k, 1);
+        }
+        for k in crate::delta::codec::KNOWN_EXEC_KINDS {
+            m.inc(k, 1);
+        }
+        m.set("batch_occupancy", 0.5);
+        m.set("kv_blocks_used", 1.0);
+        m.set("kv_blocks_total", 2.0);
+        m.set_tenant_gauge("queue_depth", "t0", 1.0);
+        m.request_latency.observe(Duration::from_millis(3));
+        m.ttft.observe(Duration::from_millis(1));
+        m.step_latency.observe(Duration::from_millis(2));
+        for line in m.exposition().lines() {
+            let name = line.split(['{', ' ']).next().unwrap_or("");
+            assert!(is_registered(name),
+                    "exposition emits unregistered series {name:?}");
+        }
+    }
+
+    /// One registry entry per known executable kind, no extras.
+    #[test]
+    fn exec_kind_counters_track_the_exec_table() {
+        for k in crate::delta::codec::KNOWN_EXEC_KINDS {
+            assert!(is_registered(&format!("bitdelta_{k}_total")),
+                    "missing launch counter for exec kind {k}");
+        }
+    }
+}

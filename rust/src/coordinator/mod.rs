@@ -20,6 +20,7 @@
 pub mod admission;
 pub mod batcher;
 pub mod deltastore;
+pub mod metric_names;
 pub mod metrics;
 pub mod router;
 pub mod workload;

@@ -84,11 +84,12 @@ impl Router {
 
     /// Route one request into its tenant queue (admission-checked).
     pub fn enqueue(&mut self, req: QueuedRequest) -> Result<()> {
-        if !self.tenants.contains_key(&req.request.tenant) {
-            bail!("unknown tenant {}", req.request.tenant);
-        }
         let total = self.total_queued_inner();
-        let q = self.queues.get_mut(&req.request.tenant).unwrap();
+        // queues and tenants are inserted together in add(), so one
+        // lookup both authenticates the tenant and finds its queue
+        let Some(q) = self.queues.get_mut(&req.request.tenant) else {
+            bail!("unknown tenant {}", req.request.tenant);
+        };
         match self.policy.admit(q.len(), total) {
             Verdict::Admit => {
                 q.push_back(req);

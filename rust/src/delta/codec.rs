@@ -89,6 +89,26 @@ pub struct LoadCtx<'a> {
     pub levels: usize,
 }
 
+/// Every AOT executable kind any codec (or the engine's naive mixed
+/// path) may name — the one const table `exec_kind` strings come from.
+///
+/// These strings are load-bearing three times over: they key the
+/// manifest's executable lookup, they name the python↔rust ABI
+/// variant ([`crate::runtime::variants`]), and the engine counts
+/// launches per kind (`bitdelta_{kind}_total` in
+/// [`crate::coordinator::metric_names`]). The house lint
+/// (`cargo xtask lint`, rule `exec-kind`) checks every `decode_*`
+/// string literal in `src/` against this table, so a typo'd kind
+/// fails lint instead of failing a manifest lookup at 2am.
+pub const KNOWN_EXEC_KINDS: &[&str] = &[
+    "decode_dense",
+    "decode_naive",
+    "decode_bitdelta",
+    "decode_bitdelta_l2",
+    "decode_bitdelta_l4",
+    "decode_lora",
+];
+
 /// One delta representation: storage + ABI + kernels behind a single
 /// trait object. See the module docs for the layer-by-layer contract.
 pub trait DeltaCodec {
@@ -275,5 +295,46 @@ mod tests {
         let n = r.names().len();
         r.register(Rc::new(crate::delta::codecs::dense::DenseCodec));
         assert_eq!(r.names().len(), n);
+    }
+
+    /// Every exec kind a builtin codec can report — the default, and
+    /// every fidelity tier it covers — comes from the const table.
+    #[test]
+    fn builtin_exec_kinds_come_from_the_table() {
+        let r = CodecRegistry::builtin();
+        for c in r.iter() {
+            assert!(KNOWN_EXEC_KINDS.contains(&c.exec_kind()),
+                    "{} reports unknown exec kind {}",
+                    c.name(), c.exec_kind());
+            for levels in 0..=8 {
+                if let Some(k) = c.exec_kind_for_levels(levels) {
+                    assert!(KNOWN_EXEC_KINDS.contains(&k),
+                            "{} tier {levels} -> unknown kind {k}",
+                            c.name());
+                }
+            }
+        }
+    }
+
+    /// Every module under `src/delta/codecs/` is wired into
+    /// `builtin()` — a new format cannot be silently half-added. The
+    /// same invariant is enforced statically by `cargo xtask lint`
+    /// (rule `codec-registered`); this test keeps it visible to
+    /// `cargo test` alone.
+    #[test]
+    fn every_codec_module_is_registered() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("src/delta/codecs");
+        let names = CodecRegistry::builtin().names();
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let f = entry.unwrap().file_name();
+            let f = f.to_string_lossy();
+            let Some(module) = f.strip_suffix(".rs") else { continue };
+            if module == "mod" {
+                continue;
+            }
+            assert!(names.iter().any(|n| *n == module),
+                    "codec module {module} missing from builtin()");
+        }
     }
 }

@@ -126,6 +126,7 @@ level(s), fidelity tier {} requested", d.levels.len(), ctx.levels);
         let deltas: Vec<&DeltaFile> = payloads.iter()
             .map(|p| downcast::<DeltaFile>(*p, self.name()))
             .collect::<Result<_>>()?;
+        // lint: allow(unwrap, payloads checked non-empty above)
         let lmax = deltas.iter().map(|d| d.levels.len()).max().unwrap();
         let Some((lexec, exec_kind)) = exec_tier_for(lmax) else {
             let deepest = LEVEL_TIERS[LEVEL_TIERS.len() - 1].0;

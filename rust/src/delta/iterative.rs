@@ -41,6 +41,8 @@ pub fn compress_iterative(cfg: &ModelConfig,
         let mut scales = Vec::with_capacity(lin.len());
         for name in &lin {
             let (_, m) = cfg.linear_shape(name);
+            // lint: allow(unwrap, residual was built from this same
+            // `lin` name list a few lines up)
             let d = residual.get_mut(name).unwrap();
             let alpha = (d.iter().map(|x| x.abs() as f64).sum::<f64>()
                 / d.len() as f64) as f32;
@@ -71,6 +73,8 @@ pub fn residual_curve(cfg: &ModelConfig,
     let (_, m) = cfg.linear_shape(name);
     let wb = base[name].as_f32()?;
     let wf = fine[name].as_f32()?;
+    // lint: allow(unwrap, linear_shape(name) above already panicked on
+    // any name outside linear_names())
     let idx = cfg.linear_names().iter().position(|n| n == name).unwrap();
     let mut recon = vec![0f32; wb.len()];
     let mut out = Vec::new();

@@ -79,7 +79,7 @@ pub fn svd(a: &Tensor) -> Svd {
         let norm: f64 = (0..n).map(|r| w[r * m + j].powi(2)).sum();
         (norm.sqrt(), j)
     }).collect();
-    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    sv.sort_by(|a, b| b.0.total_cmp(&a.0));
 
     let mut u = vec![0f32; n * m];
     let mut vt = vec![0f32; m * m];

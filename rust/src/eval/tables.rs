@@ -321,7 +321,7 @@ pub fn fig3(ctx: &mut TableCtx, size: &str) -> Result<String> {
                           s.row("base (0 bits)", false), 1.0));
 
     let mut levels: Vec<usize> = t.fidelity.keys()
-        .map(|k| k.parse().unwrap()).collect();
+        .filter_map(|k| k.parse().ok()).collect();
     levels.sort_unstable();
     if let Some(&max) = levels.last() {
         let rel = &t.fidelity[&max.to_string()];

@@ -226,6 +226,9 @@ mod avx2 {
     /// at least `bits.len() * 8` floats (zero-padded activations).
     #[target_feature(enable = "avx2")]
     pub unsafe fn set_sum(bits: &[u8], xp: &[f32]) -> f32 {
+        // SAFETY: the caller contract above guarantees AVX2 is
+        // available and `xp.len() >= bits.len() * 8`, so every
+        // unaligned 8-lane load below reads in-bounds floats.
         unsafe {
             let bitsel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
             let mut acc0 = _mm256_setzero_ps();
@@ -283,6 +286,9 @@ mod neon {
     /// at least `bits.len() * 8` floats (zero-padded activations).
     #[target_feature(enable = "neon")]
     pub unsafe fn set_sum(bits: &[u8], xp: &[f32]) -> f32 {
+        // SAFETY: the caller contract above guarantees NEON is
+        // available and `xp.len() >= bits.len() * 8`, so both 4-lane
+        // loads per byte read in-bounds floats.
         unsafe {
             let sel_lo = vld1q_u32([1u32, 2, 4, 8].as_ptr());
             let sel_hi = vld1q_u32([16u32, 32, 64, 128].as_ptr());

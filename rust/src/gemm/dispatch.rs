@@ -33,8 +33,16 @@
 //! automatically.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// The process-global config cells below (forced tier, pool width, pool
+// slot) live in `static`s, which loom types cannot (no const
+// constructors) — they are configuration, deliberately outside every
+// loom model (see the `crate::sync` module docs).
+// lint: allow(std-sync, global config cells cannot be loom types)
+use std::sync::atomic::{AtomicU8, AtomicUsize};
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{lock, wait, Arc, Condvar, Mutex, OnceLock};
 
 /// One SIMD dispatch tier of the packed-GEMV engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -173,8 +181,13 @@ pub fn active_tier() -> Tier {
 
 type Task = Box<dyn FnOnce() + Send>;
 
-#[derive(Default)]
-struct PoolInner {
+/// The pool's wait/notify protocol object. `pub` only so the loom
+/// models in `tests/loom_models.rs` can drive the *real* queue,
+/// condvar, and shutdown-flag protocol with model-owned threads;
+/// production code reaches it exclusively through [`run_rows`] and the
+/// process-global pool.
+#[doc(hidden)]
+pub struct PoolInner {
     /// Pending tasks + shutdown flag; workers exit only once the flag
     /// is set *and* the queue is drained, so a resize never drops
     /// queued work.
@@ -183,21 +196,43 @@ struct PoolInner {
 }
 
 impl PoolInner {
+    // Written out (not derived) because loom's Mutex/Condvar are not
+    // const-constructible and do not implement `Default`.
+    #[doc(hidden)]
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self {
+            queue: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        }
+    }
+
     fn push(&self, task: Task) {
-        self.queue.lock().unwrap().0.push_back(task);
+        lock(&self.queue).0.push_back(task);
         self.cv.notify_one();
     }
 
     /// Pop one task without blocking (callers helping to drain).
     fn try_pop(&self) -> Option<Task> {
-        self.queue.lock().unwrap().0.pop_front()
+        lock(&self.queue).0.pop_front()
+    }
+
+    /// Raise the shutdown flag and wake every worker. Workers still
+    /// drain the queue before exiting (the respawn-vs-`run_rows` loom
+    /// model pins exactly this: shutdown never drops queued work).
+    #[doc(hidden)]
+    pub fn shut_down(&self) {
+        lock(&self.queue).1 = true;
+        self.cv.notify_all();
     }
 }
 
-fn worker_loop(inner: Arc<PoolInner>) {
+/// One pool worker's pump loop (`pub` for the loom models only).
+#[doc(hidden)]
+pub fn worker_loop(inner: Arc<PoolInner>) {
     loop {
         let task = {
-            let mut q = inner.queue.lock().unwrap();
+            let mut q = lock(&inner.queue);
             loop {
                 if let Some(t) = q.0.pop_front() {
                     break t;
@@ -205,18 +240,20 @@ fn worker_loop(inner: Arc<PoolInner>) {
                 if q.1 {
                     return;
                 }
-                q = inner.cv.wait(q).unwrap();
+                q = wait(&inner.cv, q);
             }
         };
         task();
     }
 }
 
+#[cfg(not(loom))]
 struct PoolHandle {
     inner: Arc<PoolInner>,
     workers: usize,
 }
 
+#[cfg(not(loom))]
 fn pool_slot() -> &'static Mutex<Option<PoolHandle>> {
     static SLOT: OnceLock<Mutex<Option<PoolHandle>>> = OnceLock::new();
     SLOT.get_or_init(|| Mutex::new(None))
@@ -235,7 +272,8 @@ fn threads_cell() -> &'static AtomicUsize {
 
 fn resolve_threads(n: usize) -> usize {
     if n == 0 {
-        std::thread::available_parallelism().map_or(1, |p| p.get())
+        crate::sync::thread::available_parallelism()
+            .map_or(1, |p| p.get())
     } else {
         n
     }
@@ -255,13 +293,13 @@ pub fn pool_threads() -> usize {
 /// The live pool at the configured width, spawning or resizing it if
 /// needed. `None` when the configured width is 1 or no worker thread
 /// could be spawned (callers then run inline).
+#[cfg(not(loom))]
 fn current_pool() -> Option<Arc<PoolInner>> {
     let want = pool_threads();
-    let mut slot = pool_slot().lock().unwrap();
+    let mut slot = lock(pool_slot());
     if want <= 1 {
         if let Some(old) = slot.take() {
-            old.inner.queue.lock().unwrap().1 = true;
-            old.inner.cv.notify_all();
+            old.inner.shut_down();
         }
         return None;
     }
@@ -271,15 +309,14 @@ fn current_pool() -> Option<Arc<PoolInner>> {
         }
     }
     if let Some(old) = slot.take() {
-        old.inner.queue.lock().unwrap().1 = true;
-        old.inner.cv.notify_all();
+        old.inner.shut_down();
     }
     // The caller thread is worker 0; spawn the other want-1.
-    let inner: Arc<PoolInner> = Arc::default();
+    let inner = Arc::new(PoolInner::new());
     let mut spawned = 0;
     for i in 1..want {
         let arc = inner.clone();
-        let spawn = std::thread::Builder::new()
+        let spawn = crate::sync::thread::Builder::new()
             .name(format!("bitdelta-gemv-{i}"))
             .spawn(move || worker_loop(arc));
         if spawn.is_ok() {
@@ -291,6 +328,14 @@ fn current_pool() -> Option<Arc<PoolInner>> {
     }
     *slot = Some(PoolHandle { inner: inner.clone(), workers: want });
     Some(inner)
+}
+
+/// Under loom there is no process-global pool: statics cannot hold
+/// loom types, and models drive [`scope_on`] with explicit pools and
+/// model-owned threads instead.
+#[cfg(loom)]
+fn current_pool() -> Option<Arc<PoolInner>> {
+    None
 }
 
 // ---------------------------------------------------------------------
@@ -306,19 +351,22 @@ struct ScopeSync {
 /// A `std::thread::scope`-alike over the shared pool: spawned
 /// closures may borrow from the caller's stack because the scope
 /// blocks (helping to drain the queue) until every task finished.
-struct Scope<'env> {
+/// `pub` only for the loom models (via [`scope_on`]).
+#[doc(hidden)]
+pub struct Scope<'env> {
     sync: Arc<ScopeSync>,
     pool: Option<Arc<PoolInner>>,
     _marker: std::marker::PhantomData<&'env mut ()>,
 }
 
 impl<'env> Scope<'env> {
-    fn spawn<F: FnOnce() + Send + 'env>(&self, f: F) {
+    #[doc(hidden)]
+    pub fn spawn<F: FnOnce() + Send + 'env>(&self, f: F) {
         let Some(pool) = &self.pool else {
             f();
             return;
         };
-        *self.sync.remaining.lock().unwrap() += 1;
+        *lock(&self.sync.remaining) += 1;
         let sync = self.sync.clone();
         let job: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
         // SAFETY: lifetime erasure only — the fat pointer layout of
@@ -337,7 +385,7 @@ impl<'env> Scope<'env> {
             if r.is_err() {
                 sync.panicked.store(true, Ordering::SeqCst);
             }
-            let mut left = sync.remaining.lock().unwrap();
+            let mut left = lock(&sync.remaining);
             *left -= 1;
             if *left == 0 {
                 sync.cv.notify_all();
@@ -354,21 +402,32 @@ impl Drop for Scope<'_> {
         while let Some(task) = pool.try_pop() {
             task();
         }
-        let mut left = self.sync.remaining.lock().unwrap();
+        let mut left = lock(&self.sync.remaining);
         while *left > 0 {
-            left = self.sync.cv.wait(left).unwrap();
+            left = wait(&self.sync.cv, left);
         }
     }
 }
 
 fn scope<'env, F: FnOnce(&Scope<'env>)>(f: F) {
+    scope_on(current_pool(), f)
+}
+
+/// [`scope`] with an explicit pool instead of the process-global one.
+/// `pub` only so the loom models can run the real scope protocol
+/// (spawn / help-drain / wait) against a model-owned [`PoolInner`].
+#[doc(hidden)]
+pub fn scope_on<'env, F: FnOnce(&Scope<'env>)>(
+    pool: Option<Arc<PoolInner>>,
+    f: F,
+) {
     let sc = Scope {
         sync: Arc::new(ScopeSync {
             remaining: Mutex::new(0),
             cv: Condvar::new(),
             panicked: AtomicBool::new(false),
         }),
-        pool: current_pool(),
+        pool,
         _marker: std::marker::PhantomData,
     };
     let sync = sc.sync.clone();
@@ -421,7 +480,7 @@ where
 /// bit-identity between two kernel calls) serialize on this lock so
 /// the harness's default test parallelism cannot interleave them.
 #[cfg(test)]
-pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+pub(crate) fn test_lock() -> crate::sync::MutexGuard<'static, ()> {
     static LOCK: Mutex<()> = Mutex::new(());
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }

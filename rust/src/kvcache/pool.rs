@@ -15,6 +15,13 @@
 //! tail block before mutating it; the pool provides `retain` /
 //! `release` and counts the copies.
 //!
+//! **Concurrency.** The pool is deliberately `&mut self`-only: all
+//! synchronization lives in the callers (the engine owns its pool; the
+//! cluster wraps shared pools in `crate::sync` locks). The refcount
+//! conservation law — `used + free == total`, every refcount matches
+//! the number of live table references — is model-checked under
+//! concurrent churn by the loom model in `tests/loom_models.rs`.
+//!
 //! [`BlockTable::append_row`]: crate::kvcache::BlockTable::append_row
 
 use std::fmt;

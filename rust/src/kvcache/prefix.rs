@@ -159,15 +159,17 @@ impl PrefixIndex {
                    -> usize {
         let mut dropped = 0;
         while pool.free_blocks() < want_free && self.n_entries > 0 {
-            let (&h, _) = self.buckets.iter()
-                .filter(|(_, b)| !b.is_empty())
-                .min_by_key(|(_, b)| {
-                    b.iter().map(|e| e.stamp).min().unwrap()
+            // One flat pass over every (bucket, entry) pair for the
+            // globally oldest stamp — no per-bucket min + re-lookup.
+            let victim = self.buckets.iter()
+                .flat_map(|(&h, b)| {
+                    b.iter().enumerate().map(move |(i, e)| (e.stamp, h, i))
                 })
-                .expect("n_entries > 0 implies a non-empty bucket");
-            let bucket = self.buckets.get_mut(&h).unwrap();
-            let oldest = bucket.iter().enumerate()
-                .min_by_key(|(_, e)| e.stamp).map(|(i, _)| i).unwrap();
+                .min_by_key(|&(stamp, _, _)| stamp);
+            let Some((_, h, oldest)) = victim else {
+                break; // n_entries drifted from the buckets; stop early
+            };
+            let Some(bucket) = self.buckets.get_mut(&h) else { break };
             let e = bucket.remove(oldest);
             if bucket.is_empty() {
                 self.buckets.remove(&h);

@@ -61,20 +61,27 @@ impl BlockTable {
                       v_row: &[f32]) -> Result<(), KvOomError> {
         let bs = pool.dims().block_size;
         let q = self.len % bs;
-        if q == 0 {
+        let dest = if q == 0 {
             let id = pool.alloc()?;
             self.blocks.push(id);
+            id
         } else {
-            let tail = *self.blocks.last().unwrap();
+            let Some(&tail) = self.blocks.last() else {
+                unreachable!("len % block_size != 0 implies a tail block");
+            };
             if pool.ref_count(tail) > 1 {
                 let copy = pool.alloc()?;
                 pool.copy_block(tail, copy);
                 pool.release(tail);
-                *self.blocks.last_mut().unwrap() = copy;
+                self.blocks.pop();
+                self.blocks.push(copy);
                 pool.cow_copies += 1;
+                copy
+            } else {
+                tail
             }
-        }
-        pool.write_row(*self.blocks.last().unwrap(), q, k_row, v_row);
+        };
+        pool.write_row(dest, q, k_row, v_row);
         self.len += 1;
         Ok(())
     }

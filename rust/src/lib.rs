@@ -57,6 +57,7 @@ pub mod runtime;
 pub mod serving;
 pub mod sim;
 pub mod store;
+pub mod sync;
 pub mod tensor;
 pub mod util;
 

@@ -689,7 +689,7 @@ policy {policy}, {clients} client threads"),
         let t0 = Instant::now();
         while handle.active_workers() > min_w
             && t0.elapsed() < Duration::from_secs(20) {
-            std::thread::sleep(Duration::from_millis(20));
+            bitdelta::sync::thread::sleep(Duration::from_millis(20));
         }
         s.stop();
     }
@@ -777,6 +777,7 @@ fn fig5() -> String {
     let spec = ModelSpec::llama2_7b();
     let batches: Vec<usize> = (0..=6).map(|i| 1usize << i).collect();
     let mut out = String::new();
+    // lint: allow(metric, bitdelta_gb is a CSV column, not a series)
     out.push_str("Figure 5 — memory vs batch (Llama 2-7B, seq 128, \
 A100-80GB)\nbatch,naive_gb,bitdelta_gb,slora_gb,naive_fits\n");
     for &b in &batches {
@@ -855,7 +856,8 @@ traffic, {}/{} tenants hit",
             || engine.router.total_queued() > 0 {
             step_reports.push(engine.step()?);
         } else if fired < trace.len() {
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            bitdelta::sync::thread::sleep(
+                std::time::Duration::from_micros(200));
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -867,7 +869,7 @@ traffic, {}/{} tenants hit",
             tokens += r.tokens.len();
         }
     }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(|a, b| a.total_cmp(b));
     let occ: f64 = step_reports.iter().map(|r| r.active as f64).sum::<f64>()
         / step_reports.len().max(1) as f64;
     println!("served {} requests / {tokens} tokens in {wall:.2}s -> \

@@ -31,9 +31,7 @@ pub fn sample(logits: &[f32], params: &SamplingParams, step: u64) -> i32 {
     // top-k filter
     let mut idx: Vec<usize> = (0..logits.len()).collect();
     if params.top_k > 0 && params.top_k < logits.len() {
-        idx.sort_unstable_by(|&a, &b| {
-            logits[b].partial_cmp(&logits[a]).unwrap()
-        });
+        idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
         idx.truncate(params.top_k);
     }
     // softmax at temperature over the kept set

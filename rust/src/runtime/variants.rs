@@ -118,8 +118,11 @@ impl DecodeOut {
             anyhow::bail!("decode output: want 3 literals, got {}",
                           lits.len());
         }
+        // lint: allow(unwrap, len == 3 was checked immediately above)
         let v = super::client::literal_f32(&lits.pop().unwrap())?;
+        // lint: allow(unwrap, len == 3 was checked immediately above)
         let k = super::client::literal_f32(&lits.pop().unwrap())?;
+        // lint: allow(unwrap, len == 3 was checked immediately above)
         let logits = super::client::literal_f32(&lits.pop().unwrap())?;
         let vocab = logits.len() / batch;
         Ok(Self { logits, vocab, k, v })

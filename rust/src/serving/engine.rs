@@ -521,6 +521,7 @@ covering fidelity tier {lv}", codec.name());
                 // region is rewritten, never the whole batch
                 self.zero_slot_cache(slot);
                 if let Some(pool) = &self.kv_pool {
+                    // lint: allow(unwrap, admit() just filled this slot)
                     let s = self.batcher.slot(slot).unwrap();
                     if let SeqKv::Paged(t) = &s.kv {
                         if !t.is_empty() {
@@ -533,6 +534,7 @@ covering fidelity tier {lv}", codec.name());
                     }
                 }
                 self.metrics.inc("kv_restacked_slots", 1);
+                // lint: allow(unwrap, admit() just filled this slot)
                 self.deltas.pin(&self.batcher.slot(slot).unwrap()
                     .tenant.clone());
                 report.admitted += 1;
@@ -563,6 +565,7 @@ covering fidelity tier {lv}", codec.name());
         let mut pos = vec![0i32; b];
         let mut rope = vec![1.0f32; b];
         for &i in &active {
+            // lint: allow(unwrap, active_slots() yields occupied slots)
             let s = self.batcher.slot(i).unwrap();
             tokens[i] = s.next_token;
             pos[i] = s.kv.pos() as i32;
@@ -613,6 +616,7 @@ covering fidelity tier {lv}", codec.name());
         // tenant's state comes from its own codec's executable
         let (logits, vocab);
         if outs.len() == 1 && outs[0].0.len() == b {
+            // lint: allow(unwrap, len == 1 checked on this same line)
             let (_, out) = outs.pop().unwrap();
             vocab = out.vocab;
             logits = out.logits;
@@ -646,6 +650,7 @@ covering fidelity tier {lv}", codec.name());
         let mut to_release = Vec::new();
         for &i in &active {
             self.bank_kv_row(i, b)?;
+            // lint: allow(unwrap, active_slots() yields occupied slots)
             let s = self.batcher.slot_mut(i).unwrap();
             if s.in_prefill() {
                 s.prompt_pos += 1;
@@ -672,6 +677,7 @@ covering fidelity tier {lv}", codec.name());
         }
 
         for i in to_release {
+            // lint: allow(unwrap, to_release holds active slot indices)
             let mut s = self.batcher.release(i).unwrap();
             if let (Some(pool), SeqKv::Paged(t)) =
                 (&mut self.kv_pool, &mut s.kv) {
@@ -723,9 +729,11 @@ covering fidelity tier {lv}", codec.name());
     /// register completed prompt-region blocks in the prefix index.
     fn bank_kv_row(&mut self, i: usize, b: usize) -> Result<()> {
         let Some(pool) = &mut self.kv_pool else {
+            // lint: allow(unwrap, callers pass active slot indices)
             self.batcher.slot_mut(i).unwrap().kv.slab_mut().pos += 1;
             return Ok(());
         };
+        // lint: allow(unwrap, callers pass active slot indices)
         let s = self.batcher.slot_mut(i).unwrap();
         let p = s.kv.pos();
         let d = pool.dims();
@@ -791,6 +799,7 @@ covering fidelity tier {lv}", codec.name());
         // slot-indexed tenant list, padding holes with the first active
         // tenant (padding slots are masked by bookkeeping)
         let tenants: Vec<String> = {
+            // lint: allow(unwrap, active_slots() yields occupied slots)
             let first = self.batcher.slot(slots[0]).unwrap().tenant.clone();
             (0..self.econfig.batch).map(|i| {
                 self.batcher.slot(i)

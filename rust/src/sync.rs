@@ -1,0 +1,157 @@
+//! Synchronization shim: `std::sync` in production, `loom` under test.
+//!
+//! The concurrency core (cluster frontend/worker/autoscaler, admission
+//! gate, the kernel worker pool, and the loom models that wrap
+//! [`crate::kvcache::BlockPool`]) imports every lock, condvar, atomic,
+//! and thread primitive from this module instead of `std`. Compiled
+//! normally the re-exports are zero-cost aliases of the `std` types;
+//! compiled with `RUSTFLAGS="--cfg loom"` they switch to the [`loom`]
+//! model-checker equivalents so `tests/loom_models.rs` can explore
+//! every interleaving of the load-bearing protocols exhaustively.
+//!
+//! House rules enforced by `cargo xtask lint` and `clippy.toml`:
+//!
+//! * migrated modules must not import `std::sync`/`std::thread`
+//!   directly (the lint's `std-sync` rule) — exceptions carry a
+//!   `// lint: allow(std-sync, ...)` marker (e.g. the `gemm::dispatch`
+//!   global config cells, which must stay `const`-constructible and
+//!   are deliberately *outside* every loom model);
+//! * `std::thread::sleep` is a disallowed method repo-wide; pacing
+//!   loops call [`thread::sleep`] here, which loom replaces with a
+//!   yield so models stay schedulable.
+//!
+//! Two deliberate gaps, documented rather than papered over:
+//!
+//! * [`mpsc`] is always the `std` implementation — loom's channel
+//!   model is incomplete, so loom models express channel protocols as
+//!   a `Mutex<VecDeque>` (see `route_ordered_before_drain`), and no
+//!   loom model may block on a real channel;
+//! * [`OnceLock`] is always the `std` implementation — loom types are
+//!   not const-constructible, so process-global config cells cannot be
+//!   modeled and must never guard state a loom model checks.
+//!
+//! [`loom`]: https://docs.rs/loom
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
+
+#[cfg(loom)]
+pub use loom::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
+
+/// Atomic types (`AtomicBool`, `AtomicUsize`, `Ordering`, ...).
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+
+/// Always `std`: loom's channel model is incomplete. Loom models
+/// express channel hand-off as an explicit `Mutex<VecDeque>` instead.
+pub use std::sync::mpsc;
+
+/// Always `std`: loom types cannot live in `static`s. Must only hold
+/// process-global configuration, never state a loom model checks.
+pub use std::sync::OnceLock;
+
+/// Lock a mutex, treating poisoning as fatal.
+///
+/// House policy: a poisoned lock means another holder panicked halfway
+/// through an invariant-carrying update (slot lifecycle, admission
+/// counts, pool queue). Continuing would serve corrupted shared state,
+/// so every production `lock()` goes through here and converts poison
+/// into an immediate panic with a greppable message.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // lint: allow(expect, poisoning is fatal by policy — a holder
+    // panicked mid-update and the guarded invariants cannot be trusted)
+    m.lock().expect("poisoned lock: a holder panicked mid-update")
+}
+
+/// [`Condvar::wait`] with the same poison-is-fatal policy as [`lock`].
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>)
+                   -> MutexGuard<'a, T> {
+    // lint: allow(expect, poisoning is fatal by policy — see lock())
+    cv.wait(guard).expect("poisoned lock: a holder panicked mid-update")
+}
+
+/// Thread primitives: `std::thread` in production, `loom::thread`
+/// under `--cfg loom` (where `sleep` degrades to a yield and `Builder`
+/// ignores thread names — loom models time-free, unnamed threads).
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{
+        available_parallelism, spawn, yield_now, Builder, JoinHandle,
+    };
+
+    /// The one blessed `sleep` call site (see `clippy.toml`): pacing
+    /// and polling loops route through here so the loom build can
+    /// replace blocking sleeps with scheduler yields.
+    #[allow(clippy::disallowed_methods)]
+    pub fn sleep(d: std::time::Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+
+    /// Loom models are time-free: a sleep is just a scheduling point.
+    pub fn sleep(_d: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+
+    /// Loom has no named-thread builder; names are dropped.
+    #[derive(Default)]
+    pub struct Builder;
+
+    impl Builder {
+        pub fn new() -> Self {
+            Builder
+        }
+
+        pub fn name(self, _name: String) -> Self {
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            Ok(spawn(f))
+        }
+    }
+
+    /// Loom models a fixed small thread set; report one core.
+    pub fn available_parallelism()
+        -> std::io::Result<std::num::NonZeroUsize> {
+        Ok(std::num::NonZeroUsize::MIN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_and_wait_round_trip() {
+        let m = Mutex::new(7usize);
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn shim_thread_spawn_and_sleep() {
+        let h = thread::spawn(|| {
+            thread::sleep(std::time::Duration::from_millis(1));
+            42
+        });
+        assert_eq!(h.join().expect("join"), 42);
+    }
+}

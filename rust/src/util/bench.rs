@@ -38,7 +38,7 @@ impl Measurement {
     }
 
     pub fn min(&self) -> Duration {
-        *self.samples.iter().min().unwrap()
+        self.samples.iter().min().copied().unwrap_or_default()
     }
 
     /// Nearest-rank `q`-quantile of the samples (`q` in `[0, 1]`;
@@ -85,6 +85,7 @@ impl Bench {
         let m = Measurement { name: name.into(), samples };
         println!("{}", m.report());
         self.results.push(m);
+        // lint: allow(unwrap, last() right after push())
         self.results.last().unwrap()
     }
 

@@ -27,6 +27,7 @@ impl Args {
                 // value flag if next token exists and isn't a flag
                 match it.peek() {
                     Some(v) if !v.starts_with("--") => {
+                        // lint: allow(unwrap, peek() just returned Some)
                         out.flags.insert(name.to_string(),
                                          it.next().unwrap());
                     }

@@ -1,0 +1,495 @@
+//! House lint (`cargo xtask lint`) — the repo's static rules that
+//! rustc/clippy cannot express, in the openvmm xtask style: a plain
+//! binary that parses `rust/src` with [`syn`] and greps the docs,
+//! wired into CI as its own job.
+//!
+//! Rules (each reported as `path:line: [rule] ...`):
+//!
+//! * `unwrap` / `expect` — forbidden outside tests unless the site (or
+//!   one of the 4 lines above it) carries
+//!   `// lint: allow(unwrap, reason)` (resp. `expect`). Honest
+//!   invariants get a grep-able justification; request paths get typed
+//!   errors.
+//! * `safety` — every `unsafe` block is preceded by a `// SAFETY:`
+//!   comment (attributes and comment lines may sit between).
+//! * `metric` — every `bitdelta_*` token in a string literal or a
+//!   docs code span must be an exact member or proper prefix of
+//!   `coordinator::metric_names::EXPORTED_SERIES`.
+//!   `// lint: allow(metric, reason)` exempts non-metric tokens.
+//! * `exec-kind` — every string literal that *is* a `decode_*` word
+//!   must be a member of `delta::codec::KNOWN_EXEC_KINDS`.
+//! * `codec-registered` — every module under `src/delta/codecs/` is
+//!   wired into `CodecRegistry::builtin()`.
+//! * `std-sync` — the migrated concurrency core must import sync and
+//!   thread primitives from `crate::sync`, not `std::sync` /
+//!   `std::thread` (loom swaps the shim; direct std types would be
+//!   invisible to the model checker). `// lint: allow(std-sync, ...)`
+//!   marks the deliberate exceptions (const-constructible config
+//!   cells).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use proc_macro2::TokenTree;
+use syn::visit::Visit;
+
+/// Files that must route all synchronization through `crate::sync`.
+const SYNC_MIGRATED: &[&str] = &[
+    "src/cluster/worker.rs",
+    "src/cluster/frontend.rs",
+    "src/cluster/autoscaler.rs",
+    "src/coordinator/admission.rs",
+    "src/gemm/dispatch.rs",
+    "src/kvcache/pool.rs",
+];
+
+/// Docs scanned by the `metric` rule (CHANGES.md is a historical log
+/// and deliberately not checked).
+const DOC_FILES: &[&str] = &["README.md", "ROADMAP.md"];
+
+fn main() -> ExitCode {
+    let mode = std::env::args().nth(1).unwrap_or_default();
+    if mode != "lint" {
+        eprintln!("usage: cargo xtask lint");
+        return ExitCode::from(2);
+    }
+    let root = repo_root();
+    let rust = root.join("rust");
+
+    let registry = parse_string_table(
+        &read(&rust.join("src/coordinator/metric_names.rs")),
+        "EXPORTED_SERIES",
+    );
+    let exec_kinds = parse_string_table(
+        &read(&rust.join("src/delta/codec.rs")),
+        "KNOWN_EXEC_KINDS",
+    );
+    if registry.is_empty() || exec_kinds.is_empty() {
+        eprintln!("xtask: failed to parse the metric/exec registries");
+        return ExitCode::FAILURE;
+    }
+
+    let mut findings: Vec<String> = Vec::new();
+    for file in rust_sources(&rust.join("src")) {
+        lint_rust_file(&file, &rust, &registry, &exec_kinds,
+                       &mut findings);
+    }
+    lint_codec_registration(&rust, &mut findings);
+    for doc in DOC_FILES {
+        lint_doc(&root.join(doc), &registry, &mut findings);
+    }
+    for doc in md_files(&root.join("docs")) {
+        lint_doc(&doc, &registry, &mut findings);
+    }
+
+    if findings.is_empty() {
+        println!("xtask lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        findings.sort();
+        for f in &findings {
+            println!("{f}");
+        }
+        println!("xtask lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn repo_root() -> PathBuf {
+    // run from rust/ (the cargo alias) or from the repo root
+    if Path::new("rust/src").is_dir() {
+        PathBuf::from(".")
+    } else {
+        PathBuf::from("..")
+    }
+}
+
+fn read(p: &Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_default()
+}
+
+fn rust_sources(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            out.extend(rust_sources(&p));
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+fn md_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.extension().is_some_and(|x| x == "md") {
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Extract the string members of `pub const NAME: &[&str] = &[...]`
+/// from a source file, without compiling the crate.
+fn parse_string_table(src: &str, name: &str) -> Vec<String> {
+    let Some(start) = src.find(&format!("const {name}")) else {
+        return Vec::new();
+    };
+    let Some(end) = src[start..].find("];") else { return Vec::new() };
+    let body = &src[start..start + end];
+    let mut out = Vec::new();
+    let mut rest = body;
+    while let Some(q0) = rest.find('"') {
+        let tail = &rest[q0 + 1..];
+        let Some(q1) = tail.find('"') else { break };
+        out.push(tail[..q1].to_string());
+        rest = &tail[q1 + 1..];
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rust-file rules (syn-driven)
+// ---------------------------------------------------------------------
+
+struct RustLinter<'a> {
+    rel: String,
+    lines: Vec<&'a str>,
+    registry: &'a [String],
+    exec_kinds: &'a [String],
+    in_tests: bool,
+    findings: &'a mut Vec<String>,
+}
+
+impl RustLinter<'_> {
+    fn allowed(&self, line: usize, rule: &str) -> bool {
+        let lo = line.saturating_sub(5); // site line + 4 above
+        self.lines[lo..line.min(self.lines.len())]
+            .iter()
+            .any(|l| l.contains("lint: allow(")
+                 && l.contains(rule))
+    }
+
+    fn finding(&mut self, line: usize, rule: &str, msg: String) {
+        self.findings
+            .push(format!("{}:{}: [{}] {}", self.rel, line, rule, msg));
+    }
+
+    fn check_call(&mut self, method: &str, line: usize) {
+        if self.in_tests || (method != "unwrap" && method != "expect") {
+            return;
+        }
+        if !self.allowed(line, method) {
+            self.finding(line, method.into(), format!(
+                ".{method}() without `// lint: allow({method}, reason)` \
+— return a typed error or justify the invariant"));
+        }
+    }
+
+    fn check_unsafe(&mut self, line: usize) {
+        // walk up over comments and attributes looking for SAFETY:
+        let mut i = line.saturating_sub(1); // 0-based index of prev line
+        while i > 0 {
+            let l = self.lines[i - 1].trim_start();
+            if l.starts_with("//") {
+                if l.contains("SAFETY:") {
+                    return;
+                }
+                i -= 1;
+            } else if l.starts_with("#[") || l.is_empty() {
+                i -= 1;
+            } else {
+                break;
+            }
+        }
+        // the unsafe keyword's own line may open mid-statement with
+        // the comment above the statement head; also accept same line
+        if self.lines.get(line.saturating_sub(1))
+            .is_some_and(|l| l.contains("SAFETY:"))
+        {
+            return;
+        }
+        self.finding(line, "safety",
+                     "unsafe block without a preceding // SAFETY: \
+comment".into());
+    }
+
+    fn check_literal(&mut self, text: &str, line: usize) {
+        // exec-kind: the literal as a whole is a decode_* word
+        if is_exec_word(text)
+            && !self.exec_kinds.iter().any(|k| k == text)
+            && !self.allowed(line, "exec-kind")
+        {
+            self.finding(line, "exec-kind", format!(
+                "{text:?} is not in delta::codec::KNOWN_EXEC_KINDS"));
+        }
+        // metric: every bitdelta_* token must be registered
+        for tok in metric_tokens(text) {
+            if !registered(self.registry, &tok)
+                && !self.allowed(line, "metric")
+            {
+                self.finding(line, "metric", format!(
+                    "{tok:?} is not in \
+metric_names::EXPORTED_SERIES (exact or prefix)"));
+            }
+        }
+    }
+
+    fn scan_macro_tokens(&mut self, ts: proc_macro2::TokenStream) {
+        for tt in ts {
+            match tt {
+                TokenTree::Group(g) => self.scan_macro_tokens(g.stream()),
+                TokenTree::Ident(id) => {
+                    let s = id.to_string();
+                    if s == "unwrap" || s == "expect" {
+                        self.check_call(&s, id.span().start().line);
+                    }
+                }
+                TokenTree::Literal(l) => {
+                    let s = l.to_string();
+                    if s.starts_with('"') && s.ends_with('"')
+                        && s.len() >= 2
+                    {
+                        self.check_literal(&s[1..s.len() - 1],
+                                           l.span().start().line);
+                    }
+                }
+                TokenTree::Punct(_) => {}
+            }
+        }
+    }
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path().is_ident("cfg")
+            && a.parse_args::<syn::Ident>()
+                .map(|i| i == "test")
+                .unwrap_or(false)
+    })
+}
+
+impl<'ast> Visit<'ast> for RustLinter<'_> {
+    fn visit_item_mod(&mut self, m: &'ast syn::ItemMod) {
+        let was = self.in_tests;
+        if is_cfg_test(&m.attrs) {
+            self.in_tests = true;
+        }
+        syn::visit::visit_item_mod(self, m);
+        self.in_tests = was;
+    }
+
+    fn visit_item_fn(&mut self, f: &'ast syn::ItemFn) {
+        let was = self.in_tests;
+        if is_cfg_test(&f.attrs)
+            || f.attrs.iter().any(|a| a.path().is_ident("test"))
+        {
+            self.in_tests = true;
+        }
+        syn::visit::visit_item_fn(self, f);
+        self.in_tests = was;
+    }
+
+    fn visit_expr_method_call(&mut self,
+                              e: &'ast syn::ExprMethodCall) {
+        let m = e.method.to_string();
+        self.check_call(&m, e.method.span().start().line);
+        syn::visit::visit_expr_method_call(self, e);
+    }
+
+    fn visit_expr_unsafe(&mut self, e: &'ast syn::ExprUnsafe) {
+        self.check_unsafe(e.unsafe_token.span.start().line);
+        syn::visit::visit_expr_unsafe(self, e);
+    }
+
+    fn visit_lit_str(&mut self, s: &'ast syn::LitStr) {
+        self.check_literal(&s.value(), s.span().start().line);
+    }
+
+    fn visit_macro(&mut self, m: &'ast syn::Macro) {
+        self.scan_macro_tokens(m.tokens.clone());
+        syn::visit::visit_macro(self, m);
+    }
+}
+
+fn lint_rust_file(path: &Path, rust_root: &Path, registry: &[String],
+                  exec_kinds: &[String],
+                  findings: &mut Vec<String>) {
+    let src = read(path);
+    let rel = path.strip_prefix(rust_root).unwrap_or(path)
+        .display().to_string();
+    let ast = match syn::parse_file(&src) {
+        Ok(a) => a,
+        Err(e) => {
+            findings.push(format!("{rel}:1: [parse] {e}"));
+            return;
+        }
+    };
+    let lines: Vec<&str> = src.lines().collect();
+    let mut linter = RustLinter {
+        rel: rel.clone(),
+        lines: lines.clone(),
+        registry,
+        exec_kinds,
+        in_tests: false,
+        findings,
+    };
+    linter.visit_file(&ast);
+
+    // std-sync: textual, on the migrated concurrency core only
+    if SYNC_MIGRATED.iter().any(|m| rel == *m) {
+        for (i, l) in non_test_lines(&lines) {
+            let code = l.split("//").next().unwrap_or("");
+            if (code.contains("std::sync::")
+                || code.contains("std::thread::"))
+                && !window_allows(&lines, i, "std-sync")
+            {
+                findings.push(format!(
+                    "{rel}:{i}: [std-sync] direct std primitive in a \
+loom-migrated module — import from crate::sync"));
+            }
+        }
+    }
+}
+
+/// `(1-based line, text)` for lines outside `#[cfg(test)] mod` regions.
+fn non_test_lines<'a>(lines: &'a [&'a str])
+                      -> Vec<(usize, &'a str)> {
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut test_at: Option<i64> = None;
+    let mut pending_cfg = false;
+    for (idx, l) in lines.iter().enumerate() {
+        let t = l.trim_start();
+        if t.starts_with("#[cfg(test)") {
+            pending_cfg = true;
+        } else if pending_cfg && t.starts_with("mod ") {
+            test_at = test_at.or(Some(depth));
+            pending_cfg = false;
+        } else if pending_cfg && !t.starts_with("#[") {
+            pending_cfg = false;
+        }
+        depth += l.matches('{').count() as i64;
+        depth -= l.matches('}').count() as i64;
+        if let Some(d) = test_at {
+            if depth <= d {
+                test_at = None;
+            }
+            continue;
+        }
+        out.push((idx + 1, *l));
+    }
+    out
+}
+
+fn window_allows(lines: &[&str], line: usize, rule: &str) -> bool {
+    let lo = line.saturating_sub(5);
+    lines[lo..line.min(lines.len())]
+        .iter()
+        .any(|l| l.contains("lint: allow(") && l.contains(rule))
+}
+
+// ---------------------------------------------------------------------
+// Token helpers
+// ---------------------------------------------------------------------
+
+fn is_exec_word(s: &str) -> bool {
+    s.strip_prefix("decode_").is_some_and(|rest| {
+        !rest.is_empty()
+            && rest.chars()
+                .all(|c| c.is_ascii_lowercase()
+                     || c.is_ascii_digit() || c == '_')
+    })
+}
+
+/// `bitdelta_*` word tokens in `text` (word-boundary on the left;
+/// stops at the first non-`[a-z0-9_]` char; trailing `_` trimmed so
+/// family prefixes compare cleanly).
+fn metric_tokens(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while let Some(p) = text[i..].find("bitdelta_") {
+        let at = i + p;
+        let boundary = at == 0 || {
+            let c = bytes[at - 1] as char;
+            !(c.is_ascii_alphanumeric() || c == '_')
+        };
+        let mut end = at;
+        while end < text.len() {
+            let c = bytes[end] as char;
+            if c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' {
+                end += 1;
+            } else {
+                break;
+            }
+        }
+        if boundary {
+            let tok = text[at..end].trim_end_matches('_');
+            if tok.len() > "bitdelta".len() {
+                out.push(tok.to_string());
+            }
+        }
+        i = end.max(at + 1);
+    }
+    out
+}
+
+fn registered(registry: &[String], tok: &str) -> bool {
+    registry.iter().any(|s| {
+        s == tok || (s.len() > tok.len() && s.starts_with(tok))
+    })
+}
+
+// ---------------------------------------------------------------------
+// Cross-file rules
+// ---------------------------------------------------------------------
+
+fn lint_codec_registration(rust: &Path, findings: &mut Vec<String>) {
+    let codec_rs = read(&rust.join("src/delta/codec.rs"));
+    let dir = rust.join("src/delta/codecs");
+    let Ok(entries) = std::fs::read_dir(&dir) else {
+        findings.push("src/delta/codecs:1: [codec-registered] \
+directory missing".into());
+        return;
+    };
+    for e in entries.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let Some(module) = name.strip_suffix(".rs") else { continue };
+        if module == "mod" {
+            continue;
+        }
+        if !codec_rs.contains(&format!("codecs::{module}::")) {
+            findings.push(format!(
+                "src/delta/codecs/{name}:1: [codec-registered] module \
+{module} is not registered in CodecRegistry::builtin()"));
+        }
+    }
+}
+
+fn lint_doc(path: &Path, registry: &[String],
+            findings: &mut Vec<String>) {
+    let src = read(path);
+    if src.is_empty() {
+        return;
+    }
+    let name = path.file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    for (i, line) in src.lines().enumerate() {
+        for tok in metric_tokens(line) {
+            if !registered(registry, &tok) {
+                findings.push(format!(
+                    "{name}:{}: [metric] {tok:?} is not in \
+metric_names::EXPORTED_SERIES (exact or prefix)", i + 1));
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of `cargo xtask lint`.
+
+CI runs the real linter (rust/xtask, syn-driven). This script mirrors
+its six rules with regexes so the lint gate can also run where no Rust
+toolchain is installed (pre-commit hooks, docs-only containers). Rule
+semantics are kept in lockstep with rust/xtask/src/main.rs — if you
+change one, change the other:
+
+  unwrap/expect     no .unwrap()/.expect() outside tests without a
+                    `// lint: allow(unwrap|expect, reason)` marker
+  safety            every `unsafe {` block preceded by `// SAFETY:`
+  metric            every bitdelta_* token in Rust string literals and
+                    docs is an exact member or proper prefix of
+                    coordinator::metric_names::EXPORTED_SERIES
+  exec-kind         string literals that are decode_* words must be in
+                    delta::codec::KNOWN_EXEC_KINDS
+  codec-registered  every src/delta/codecs/*.rs module is wired into
+                    CodecRegistry::builtin()
+  std-sync          the loom-migrated concurrency core imports sync
+                    primitives from crate::sync, not std::sync/thread
+
+Exit 0 and print `lint: clean` when green; exit 1 with
+`path:line: [rule] message` diagnostics otherwise.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+RUST = ROOT / "rust"
+
+SYNC_MIGRATED = {
+    "src/cluster/worker.rs",
+    "src/cluster/frontend.rs",
+    "src/cluster/autoscaler.rs",
+    "src/coordinator/admission.rs",
+    "src/gemm/dispatch.rs",
+    "src/kvcache/pool.rs",
+}
+
+DOC_FILES = ["README.md", "ROADMAP.md"]  # CHANGES.md is a log: skipped
+
+STRING_RE = re.compile(r'"((?:[^"\\]|\\.)*)"')
+CALL_RE = re.compile(r"\.\s*(unwrap|expect)\s*\(")
+METRIC_RE = re.compile(r"(?<![A-Za-z0-9_])(bitdelta_[a-z0-9_]*[a-z0-9])")
+EXEC_RE = re.compile(r"decode_[a-z0-9_]+\Z")
+
+
+def parse_string_table(src: str, name: str) -> list[str]:
+    start = src.find(f"const {name}")
+    if start < 0:
+        return []
+    end = src.find("];", start)
+    return re.findall(r'"([^"]+)"', src[start:end])
+
+
+def registered(registry: list[str], tok: str) -> bool:
+    return any(s == tok or (len(s) > len(tok) and s.startswith(tok))
+               for s in registry)
+
+
+def test_region_mask(lines: list[str]) -> list[bool]:
+    """True for lines inside `#[cfg(test)] mod`/`fn` regions."""
+    mask = [False] * len(lines)
+    depth = 0
+    region_depth: int | None = None
+    pending = False
+    for i, line in enumerate(lines):
+        t = line.lstrip()
+        if t.startswith("#[cfg(test)"):
+            pending = True
+        elif pending and (t.startswith("mod ") or t.startswith("fn ")
+                          or t.startswith("pub fn ")
+                          or t.startswith("pub(crate) fn ")):
+            if region_depth is None:
+                region_depth = depth
+            pending = False
+        elif pending and not t.startswith("#["):
+            pending = False
+        depth += line.count("{") - line.count("}")
+        if region_depth is not None:
+            mask[i] = True
+            if depth <= region_depth:
+                region_depth = None
+    return mask
+
+
+def window_allows(lines: list[str], i: int, rule: str) -> bool:
+    """Marker on the site line or any of the 4 lines above (i 0-based)."""
+    return any("lint: allow(" in w and rule in w
+               for w in lines[max(0, i - 4):i + 1])
+
+
+def strip_line_comment(line: str) -> str:
+    return line.split("//", 1)[0]
+
+
+def lint_rust_file(path: Path, registry: list[str],
+                   exec_kinds: list[str], findings: list[str]) -> None:
+    rel = path.relative_to(RUST).as_posix()
+    lines = path.read_text().splitlines()
+    in_tests = test_region_mask(lines)
+
+    for i, line in enumerate(lines):
+        code = strip_line_comment(line)
+
+        # unwrap / expect -------------------------------------------------
+        if not in_tests[i]:
+            for m in CALL_RE.finditer(code):
+                rule = m.group(1)
+                if not window_allows(lines, i, rule):
+                    findings.append(
+                        f"{rel}:{i + 1}: [{rule}] .{rule}() without "
+                        f"`// lint: allow({rule}, reason)` — return a "
+                        f"typed error or justify the invariant")
+
+        # safety ----------------------------------------------------------
+        if re.search(r"\bunsafe\s*\{", code) and "unsafe fn" not in code:
+            if "SAFETY:" not in line:
+                j = i - 1
+                ok = False
+                while j >= 0:
+                    t = lines[j].lstrip()
+                    if t.startswith("//"):
+                        if "SAFETY:" in t:
+                            ok = True
+                            break
+                        j -= 1
+                    elif t.startswith("#[") or not t:
+                        j -= 1
+                    else:
+                        break
+                if not ok:
+                    findings.append(
+                        f"{rel}:{i + 1}: [safety] unsafe block without "
+                        f"a preceding // SAFETY: comment")
+
+        # metric + exec-kind (string literals only) -----------------------
+        for sm in STRING_RE.finditer(code):
+            text = sm.group(1)
+            if EXEC_RE.fullmatch(text) and text not in exec_kinds \
+                    and not window_allows(lines, i, "exec-kind"):
+                findings.append(
+                    f"{rel}:{i + 1}: [exec-kind] \"{text}\" is not in "
+                    f"delta::codec::KNOWN_EXEC_KINDS")
+            for tok in METRIC_RE.findall(text):
+                tok = tok.rstrip("_")
+                if not registered(registry, tok) \
+                        and not window_allows(lines, i, "metric"):
+                    findings.append(
+                        f"{rel}:{i + 1}: [metric] \"{tok}\" is not in "
+                        f"metric_names::EXPORTED_SERIES "
+                        f"(exact or prefix)")
+
+        # std-sync --------------------------------------------------------
+        if rel in SYNC_MIGRATED and not in_tests[i]:
+            if ("std::sync::" in code or "std::thread::" in code) \
+                    and not window_allows(lines, i, "std-sync"):
+                findings.append(
+                    f"{rel}:{i + 1}: [std-sync] direct std primitive "
+                    f"in a loom-migrated module — import from "
+                    f"crate::sync")
+
+
+def lint_codec_registration(findings: list[str]) -> None:
+    codec_rs = (RUST / "src/delta/codec.rs").read_text()
+    for p in sorted((RUST / "src/delta/codecs").glob("*.rs")):
+        module = p.stem
+        if module == "mod":
+            continue
+        if f"codecs::{module}::" not in codec_rs:
+            findings.append(
+                f"src/delta/codecs/{p.name}:1: [codec-registered] "
+                f"module {module} is not registered in "
+                f"CodecRegistry::builtin()")
+
+
+def lint_doc(path: Path, registry: list[str],
+             findings: list[str]) -> None:
+    if not path.exists():
+        return
+    for i, line in enumerate(path.read_text().splitlines()):
+        for tok in METRIC_RE.findall(line):
+            tok = tok.rstrip("_")
+            if not registered(registry, tok):
+                findings.append(
+                    f"{path.name}:{i + 1}: [metric] \"{tok}\" is not "
+                    f"in metric_names::EXPORTED_SERIES "
+                    f"(exact or prefix)")
+
+
+def main() -> int:
+    registry = parse_string_table(
+        (RUST / "src/coordinator/metric_names.rs").read_text(),
+        "EXPORTED_SERIES")
+    exec_kinds = parse_string_table(
+        (RUST / "src/delta/codec.rs").read_text(), "KNOWN_EXEC_KINDS")
+    if not registry or not exec_kinds:
+        print("lint: failed to parse the metric/exec registries")
+        return 1
+
+    findings: list[str] = []
+    for path in sorted((RUST / "src").rglob("*.rs")):
+        lint_rust_file(path, registry, exec_kinds, findings)
+    lint_codec_registration(findings)
+    for doc in DOC_FILES:
+        lint_doc(ROOT / doc, registry, findings)
+    for doc in sorted((ROOT / "docs").glob("*.md")):
+        lint_doc(doc, registry, findings)
+
+    if not findings:
+        print("lint: clean")
+        return 0
+    for f in sorted(findings):
+        print(f)
+    print(f"lint: {len(findings)} finding(s)")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
