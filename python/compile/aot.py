@@ -47,22 +47,34 @@ from jax._src.lib import xla_client as xc
 # ---------------------------------------------------------------------------
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, *, untuple: bool = False) -> str:
+    """``untuple=True`` stops forcing the root into a tuple
+    (``return_tuple=False``). A multi-result computation keeps its
+    natural root tuple either way — PJRT execution untuples the root's
+    leaves, so each decode output (logits, k, v) arrives as its own
+    device buffer, the prerequisite for feeding outputs straight back
+    as next-step inputs (device-resident KV). What the flag protects
+    is the single-output exports: those stay force-wrapped in a
+    1-tuple, which the rust ``run_buffers`` tuple path expects."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+        str(mlir_mod), use_tuple_args=False, return_tuple=not untuple)
     return comp.as_hlo_text()
 
 
-def export_hlo(fn, args, path: str, tag: str) -> dict:
+def export_hlo(fn, args, path: str, tag: str, *,
+               untuple: bool = False) -> dict:
     t0 = time.time()
     lowered = jax.jit(fn).lower(*args)
-    text = to_hlo_text(lowered)
+    text = to_hlo_text(lowered, untuple=untuple)
     with open(path, "w") as f:
         f.write(text)
     print(f"[aot] lowered {tag} -> {os.path.basename(path)} "
           f"({len(text)} chars, {time.time() - t0:.1f}s)", flush=True)
-    return {"path": os.path.basename(path)}
+    entry = {"path": os.path.basename(path)}
+    if untuple:
+        entry["untupled"] = True
+    return entry
 
 
 def spec(shape, dtype=jnp.float32):
@@ -169,6 +181,9 @@ def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
     exes[name].update(kind="prefill", batch=1, seq=prefill_len)
 
     # --- decode steps, all modes -------------------------------------------
+    # every decode export is untupled: (logits, k, v) come back as three
+    # separate device buffers, so the engine can keep K/V device-resident
+    # and feed them straight into the next step
     for b in decode_batches["dense"]:
         name = f"decode_dense_b{b}"
         k_s, v_s = kv_specs(cfg, b)
@@ -176,7 +191,7 @@ def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
             lambda *a: decode_dense(cfg, list(a[:-5]), *a[-5:]),
             [*dense_param_specs(cfg), k_s, v_s, spec((b,), jnp.int32),
              spec((b,), jnp.int32), spec((b,))],
-            path(name), f"{cfg.name}.{name}")
+            path(name), f"{cfg.name}.{name}", untuple=True)
         exes[name].update(kind="decode_dense", batch=b)
 
     for b in decode_batches["naive"]:
@@ -186,7 +201,7 @@ def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
             lambda *a: decode_naive(cfg, list(a[:-5]), *a[-5:]),
             [*dense_param_specs(cfg, batch=b), k_s, v_s,
              spec((b,), jnp.int32), spec((b,), jnp.int32), spec((b,))],
-            path(name), f"{cfg.name}.{name}")
+            path(name), f"{cfg.name}.{name}", untuple=True)
         exes[name].update(kind="decode_naive", batch=b)
 
     nx = len(nonlinear_names(cfg))
@@ -208,7 +223,7 @@ def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
             bd_fn,
             [*base_s, *bits_s, scales_s, *extras_s, k_s, v_s,
              spec((b,), jnp.int32), spec((b,), jnp.int32), spec((b,))],
-            path(name), f"{cfg.name}.{name}")
+            path(name), f"{cfg.name}.{name}", untuple=True)
         exes[name].update(kind="decode_bitdelta", batch=b)
 
     # multi-level (Fig. 3 fidelity tier) decode: bits carry a level
@@ -236,7 +251,7 @@ def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
                 [*base_s, *bits_s, scales_s, *extras_s, k_s, v_s,
                  spec((b,), jnp.int32), spec((b,), jnp.int32),
                  spec((b,))],
-                path(name), f"{cfg.name}.{name}")
+                path(name), f"{cfg.name}.{name}", untuple=True)
             exes[name].update(kind=f"decode_bitdelta_l{lv}", batch=b,
                               levels=lv)
 
@@ -258,8 +273,31 @@ def export_executables(cfg: ModelConfig, hlo_dir: str, *, full: bool,
             lora_fn,
             [*base_s, *a_s, *bm_s, *extras_s, k_s, v_s,
              spec((b,), jnp.int32), spec((b,), jnp.int32), spec((b,))],
-            path(name), f"{cfg.name}.{name}")
+            path(name), f"{cfg.name}.{name}", untuple=True)
         exes[name].update(kind="decode_lora", batch=b, rank=lora_rank)
+
+    # --- KV row extract (device-resident decode download path) -------------
+    # pulls each slot's freshly written KV row out of the device-resident
+    # cache so the engine downloads (B, L, H, hd) per step instead of the
+    # full (L, B, H, S, hd) pair. One export per decode batch width.
+    all_widths = sorted({b for widths in decode_batches.values()
+                         for b in widths})
+    for b in all_widths:
+        name = f"kv_row_extract_b{b}"
+        k_s, v_s = kv_specs(cfg, b)
+
+        def row_fn(k, v, pos):
+            idx = pos.reshape(1, -1, 1, 1, 1)
+            rk = jnp.take_along_axis(k, idx, axis=3)[:, :, :, 0, :]
+            rv = jnp.take_along_axis(v, idx, axis=3)[:, :, :, 0, :]
+            # (L, B, H, hd) -> (B, L, H, hd): per-slot rows contiguous
+            return (jnp.transpose(rk, (1, 0, 2, 3)),
+                    jnp.transpose(rv, (1, 0, 2, 3)))
+
+        exes[name] = export_hlo(
+            row_fn, [k_s, v_s, spec((b,), jnp.int32)],
+            path(name), f"{cfg.name}.{name}", untuple=True)
+        exes[name].update(kind="kv_row_extract", batch=b)
 
     return exes
 

@@ -1,0 +1,203 @@
+//! Decode hot path — steady-state step latency with device-resident
+//! KV vs the per-step full-KV host<->device round trip
+//! (`--kv-roundtrip`).
+//!
+//! The claim under test: once a batch composition is steady, a decode
+//! step should move only the per-step small tensors (pos/token/rope up;
+//! logits + each slot's freshly written KV row down) — the KV tensors
+//! themselves stay on the device between launches. The round-trip mode
+//! re-uploads and re-downloads the full `[L, B, H, S, hd]` K and V
+//! every step; the ratio of the two step times is the headline number
+//! (`resident_speedup`), tracked by the `scripts/compare_bench.py`
+//! baseline gate.
+//!
+//! Per batch width the bench saturates every slot with long greedy
+//! generations (prefill excluded), measures steady-state `Engine::step`
+//! in both modes, and **asserts in-run** that the resident mode's
+//! steady-state steps perform zero full-KV transfers (per-step bytes a
+//! small fraction of the KV tensor footprint) whenever the fast path
+//! is available. Emits a human table plus JSON rows and archives
+//! `BENCH_decode_hotpath.json` — with an empty row set when artifacts
+//! (or the row-extract executable) are missing, so the CI artifact set
+//! stays stable.
+//!
+//! Flags: `--smoke` (or env `DECODE_HOTPATH_SMOKE=1`) = batch 2 only,
+//! 16 measured steps — a trend sample for CI, not a measurement.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use bitdelta::config::Manifest;
+use bitdelta::model::sampling::SamplingParams;
+use bitdelta::serving::engine::{Engine, EngineConfig};
+use bitdelta::serving::request::Request;
+use bitdelta::util::bench::write_snapshot;
+use bitdelta::util::json::Json;
+
+const PROMPT: &str = "Q: what color is the sky ?\nA:";
+
+/// One measured mode: mean step time plus deterministic per-step
+/// transfer accounting.
+struct ModeStats {
+    step_us: f64,
+    h2d_per_step: u64,
+    d2h_per_step: u64,
+    /// How many measured steps ran with KV left on the device.
+    resident_steps: u64,
+}
+
+/// First value of an exposed metric series, 0 when absent.
+fn metric(exposition: &str, name: &str) -> f64 {
+    exposition.lines()
+        .filter_map(|l| l.trim().strip_prefix(name))
+        .filter_map(|rest| rest.strip_prefix(' '))
+        .find_map(|v| v.trim().parse::<f64>().ok())
+        .unwrap_or(0.0)
+}
+
+fn steady_state(batch: usize, roundtrip: bool, steps: usize)
+                -> Result<Option<ModeStats>> {
+    let mut ec = EngineConfig::new("artifacts");
+    ec.batch = batch;
+    ec.stop_token = None;              // run full max_new_tokens
+    ec.kv_roundtrip = roundtrip;
+    let mut engine = match Engine::from_artifacts(ec) {
+        Ok(e) => e,
+        Err(_) => return Ok(None),     // batch size not exported
+    };
+    let tenants = engine.tenants();
+    for i in 0..batch {
+        engine.submit(Request {
+            tenant: tenants[i % tenants.len()].clone(),
+            prompt: PROMPT.into(),
+            max_new_tokens: steps + 96,
+            sampling: SamplingParams::greedy(),
+        })?;
+    }
+    // ramp until every slot is past prefill and the composition is
+    // steady (no admissions left to disturb the device cache)
+    for _ in 0..64 {
+        if engine.step().is_err() {
+            return Ok(None);
+        }
+        if engine.batcher.occupancy() == batch {
+            break;
+        }
+    }
+    let device_before =
+        metric(&engine.metrics.exposition(),
+               "bitdelta_step_kv_device_total");
+    let mut total_s = 0.0;
+    let (mut h2d, mut d2h) = (0u64, 0u64);
+    for _ in 0..steps {
+        let r = engine.step()?;
+        assert_eq!(r.admitted, 0, "steady state perturbed by admission");
+        total_s += r.total_seconds;
+        h2d += r.bytes_h2d;
+        d2h += r.bytes_d2h;
+    }
+    let device_after =
+        metric(&engine.metrics.exposition(),
+               "bitdelta_step_kv_device_total");
+    Ok(Some(ModeStats {
+        step_us: total_s / steps as f64 * 1e6,
+        h2d_per_step: h2d / steps as u64,
+        d2h_per_step: d2h / steps as u64,
+        resident_steps: (device_after - device_before) as u64,
+    }))
+}
+
+fn json_row(batch: usize, steps: usize, res: &ModeStats,
+            rt: &ModeStats, smoke: bool) -> Json {
+    let round1 = |x: f64| (x * 10.0).round() / 10.0;
+    let round2 = |x: f64| (x * 100.0).round() / 100.0;
+    let mut o = BTreeMap::new();
+    o.insert("bench".to_string(),
+             Json::Str("decode_hotpath".to_string()));
+    o.insert("batch".to_string(), Json::Num(batch as f64));
+    o.insert("steps".to_string(), Json::Num(steps as f64));
+    o.insert("resident_step_us".to_string(),
+             Json::Num(round1(res.step_us)));
+    o.insert("roundtrip_step_us".to_string(),
+             Json::Num(round1(rt.step_us)));
+    o.insert("resident_speedup".to_string(),
+             Json::Num(round2(rt.step_us / res.step_us)));
+    // deterministic identity fields: per-step transfer volume of each
+    // mode (a change here is a data-path change, not noise)
+    o.insert("resident_h2d_bytes".to_string(),
+             Json::Num(res.h2d_per_step as f64));
+    o.insert("resident_d2h_bytes".to_string(),
+             Json::Num(res.d2h_per_step as f64));
+    o.insert("roundtrip_h2d_bytes".to_string(),
+             Json::Num(rt.h2d_per_step as f64));
+    o.insert("smoke".to_string(), Json::Bool(smoke));
+    Json::Obj(o)
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("DECODE_HOTPATH_SMOKE").is_ok();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        // still write the snapshot so the CI artifact set is stable
+        match write_snapshot("decode_hotpath", smoke, Vec::new()) {
+            Ok(p) => println!("wrote {} (empty)", p.display()),
+            Err(e) => eprintln!("snapshot write failed: {e}"),
+        }
+        return Ok(());
+    }
+    let m = Manifest::load("artifacts")?;
+    let cfg = m.config("sim-s")?.clone();
+    let steps = if smoke { 16 } else { 64 };
+    let batches: &[usize] = if smoke { &[2] } else { &[2, 4] };
+
+    println!("decode_hotpath — steady-state decode step, resident KV \
+vs full round trip ({steps} steps/point)");
+    println!("{:<6} {:>14} {:>15} {:>9} {:>13} {:>13}",
+             "B", "resident us", "roundtrip us", "ratio",
+             "res h2d B/st", "rt h2d B/st");
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &batch in batches {
+        let (Some(res), Some(rt)) =
+            (steady_state(batch, false, steps)?,
+             steady_state(batch, true, steps)?)
+        else {
+            println!("{batch:<6} (no executable for this batch size)");
+            continue;
+        };
+        // k + v for the whole batch: what the round trip moves per step
+        let full_kv = (2 * cfg.n_layers * batch * cfg.n_heads
+                       * cfg.max_seq_len * cfg.head_dim() * 4) as u64;
+        // the acceptance gate, checked in-run: when every measured
+        // step kept KV on the device, none of them moved the full KV
+        if res.resident_steps >= steps as u64 {
+            assert!(res.h2d_per_step < full_kv / 8,
+                    "resident steady state still uploads KV: {} B of \
+full-KV {} B", res.h2d_per_step, full_kv);
+            assert!(res.d2h_per_step < full_kv / 8,
+                    "resident steady state still downloads full KV: \
+{} B", res.d2h_per_step);
+            assert!(rt.h2d_per_step >= full_kv,
+                    "round-trip mode moved less than the full KV");
+        } else {
+            println!("  (row-extract executable absent — resident \
+mode fell back to the round trip; rebuild artifacts)");
+        }
+        println!("{:<6} {:>14.1} {:>15.1} {:>8.2}x {:>13} {:>13}",
+                 batch, res.step_us, rt.step_us,
+                 rt.step_us / res.step_us, res.h2d_per_step,
+                 rt.h2d_per_step);
+        rows.push(json_row(batch, steps, &res, &rt, smoke));
+    }
+
+    println!("\n--- JSON ---");
+    for r in &rows {
+        println!("{r}");
+    }
+    match write_snapshot("decode_hotpath", smoke, rows) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nsnapshot write failed: {e}"),
+    }
+    Ok(())
+}

@@ -13,7 +13,7 @@ use crate::cluster::frontend::WorkerFactoryFn;
 use crate::cluster::placement::TenantProfile;
 use crate::cluster::worker::{CoreFactory, WorkerCore};
 use crate::model::sampling::SamplingParams;
-use crate::serving::request::{Request, Response};
+use crate::serving::request::{Request, RequestError, Response};
 
 /// A canned greedy request for `tenant`.
 pub fn req(tenant: &str) -> Request {
@@ -47,7 +47,8 @@ pub fn elastic_mock(step_delay: Duration) -> WorkerFactoryFn {
 /// worker death mid-flight.
 pub struct MockCore {
     id: usize,
-    queue: VecDeque<(Request, mpsc::Sender<Response>)>,
+    queue: VecDeque<(Request,
+                     mpsc::Sender<Result<Response, RequestError>>)>,
     kill: Option<Arc<AtomicBool>>,
     /// Optional per-step delay, to make load imbalance observable.
     pub step_delay: Option<Duration>,
@@ -78,7 +79,7 @@ impl MockCore {
 
 impl WorkerCore for MockCore {
     fn submit(&mut self, req: Request)
-              -> Result<mpsc::Receiver<Response>> {
+              -> Result<mpsc::Receiver<Result<Response, RequestError>>> {
         let (tx, rx) = mpsc::channel();
         self.queue.push_back((req, tx));
         Ok(rx)
@@ -97,7 +98,7 @@ impl WorkerCore for MockCore {
             let id = self.next_id;
             self.next_id += 1;
             self.served += 1;
-            let _ = tx.send(Response {
+            let _ = tx.send(Ok(Response {
                 id,
                 tenant: req.tenant,
                 text: format!("w{}", self.id),
@@ -105,7 +106,7 @@ impl WorkerCore for MockCore {
                 latency: Duration::from_micros(10),
                 ttft: Duration::from_micros(5),
                 prompt_tokens: req.prompt.len(),
-            });
+            }));
         }
         Ok(())
     }

@@ -19,15 +19,17 @@ use crate::sync::thread::JoinHandle;
 use crate::sync::Arc;
 
 use crate::serving::engine::Engine;
-use crate::serving::request::{Request, Response};
+use crate::serving::request::{Request, RequestError, Response};
 
 /// The engine surface the pump loop drives. Implemented by the real
 /// [`Engine`]; tests substitute deterministic fakes. Cores need not be
 /// `Send` — the factory builds them on the worker thread, which is
 /// exactly the constraint PJRT imposes.
 pub trait WorkerCore {
-    /// Accept a request; the response arrives on the returned channel.
-    fn submit(&mut self, req: Request) -> Result<mpsc::Receiver<Response>>;
+    /// Accept a request; the response — or a typed [`RequestError`]
+    /// for a malformed one — arrives on the returned channel.
+    fn submit(&mut self, req: Request)
+              -> Result<mpsc::Receiver<Result<Response, RequestError>>>;
     /// One scheduling/decode iteration.
     fn step(&mut self) -> Result<()>;
     /// Queued or in-slot work remains.
@@ -49,7 +51,8 @@ pub trait WorkerCore {
 }
 
 impl WorkerCore for Engine {
-    fn submit(&mut self, req: Request) -> Result<mpsc::Receiver<Response>> {
+    fn submit(&mut self, req: Request)
+              -> Result<mpsc::Receiver<Result<Response, RequestError>>> {
         Engine::submit(self, req)
     }
 
@@ -196,7 +199,7 @@ pub fn spawn_worker(name: String, factory: CoreFactory)
     Ok((WorkerHandle { tx, load }, join))
 }
 
-type Pending = Vec<(mpsc::Receiver<Response>,
+type Pending = Vec<(mpsc::Receiver<Result<Response, RequestError>>,
                     mpsc::Sender<Result<Response>>)>;
 
 /// Clears the published `alive` flag however the worker exits —
@@ -297,9 +300,15 @@ fn deliver_ready(pending: &mut Pending) {
     let mut i = 0;
     while i < pending.len() {
         match pending[i].0.try_recv() {
-            Ok(resp) => {
+            Ok(Ok(resp)) => {
                 let (_, reply) = pending.remove(i);
                 let _ = reply.send(Ok(resp));
+            }
+            Ok(Err(rej)) => {
+                // a malformed request: surface the engine's typed
+                // rejection to the caller, worker keeps serving
+                let (_, reply) = pending.remove(i);
+                let _ = reply.send(Err(anyhow::Error::new(rej)));
             }
             Err(mpsc::TryRecvError::Empty) => i += 1,
             Err(mpsc::TryRecvError::Disconnected) => {

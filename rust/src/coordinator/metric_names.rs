@@ -37,7 +37,16 @@ pub const EXPORTED_SERIES: &[&str] = &[
     "bitdelta_kv_restacked_slots_total",
     "bitdelta_mixed_batches_total",
     "bitdelta_mixed_native_subbatches_total",
+    "bitdelta_plan_cache_hits_total",
+    "bitdelta_rejected_total",
     "bitdelta_requests_total",
+    "bitdelta_step_bank_us_total",
+    "bitdelta_step_bytes_d2h_total",
+    "bitdelta_step_bytes_h2d_total",
+    "bitdelta_step_download_us_total",
+    "bitdelta_step_exec_us_total",
+    "bitdelta_step_kv_device_total",
+    "bitdelta_step_upload_us_total",
     "bitdelta_steps_total",
     "bitdelta_tokens_generated_total",
     // --- per-executable launch counters (`Metrics::inc(exec_kind)`,
@@ -134,7 +143,10 @@ mod tests {
                   "kv_prefix_hits", "kv_prefix_lookups",
                   "kv_cow_copies", "mixed_batches",
                   "mixed_native_subbatches", "delta_restacks",
-                  "delta_restack_bytes"] {
+                  "delta_restack_bytes", "plan_cache_hits", "rejected",
+                  "step_bytes_h2d", "step_bytes_d2h", "step_upload_us",
+                  "step_exec_us", "step_download_us", "step_bank_us",
+                  "step_kv_device"] {
             m.inc(k, 1);
         }
         for k in crate::delta::codec::KNOWN_EXEC_KINDS {

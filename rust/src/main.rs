@@ -51,6 +51,8 @@ COMMANDS:
                [--kv-block-size N] [--kv-blocks N]  (paged KV pool
                geometry; blocks 0 = auto-size) [--kv-slab]  (dense
                per-sequence slabs, the pre-paging A/B fallback)
+               [--kv-roundtrip]  (download + re-upload the full KV
+               every step — the pre-device-resident A/B fallback)
   serve-cluster multi-worker serving with tenant placement
                [--workers N] [--policy affinity|least-loaded|delta-aware]
                [--codec C] [--batch N] [--requests N] [--budget-mb MB]
@@ -59,6 +61,7 @@ COMMANDS:
                cluster front door; 0 disables; default 256)
                [--threads N]  (kernel worker-pool width per engine)
                [--kv-block-size N] [--kv-blocks N] [--kv-slab]
+               [--kv-roundtrip]
                (tiered tenants pay level-scaled delta bytes in placement)
   codecs       list the registered delta codecs
   table1       BitDelta vs SVD quality (paper Table 1)
@@ -85,6 +88,7 @@ COMMANDS:
                in-flight cap; 0 disables; default 256)
                [--threads N] (kernel worker-pool width; 0 = one per core)
                [--kv-block-size N] [--kv-blocks N] [--kv-slab]
+               [--kv-roundtrip] (per-step full-KV transfer A/B mode)
                (workers > 1 or --autoscale runs the cluster)
   extras-quant INT8-compress a delta's embeddings/head (paper's
                future-work extension) [--tenant sim-s-chat]
@@ -264,6 +268,7 @@ struct KvFlags {
     slab: bool,
     block_size: usize,
     blocks: usize,
+    roundtrip: bool,
 }
 
 impl KvFlags {
@@ -271,16 +276,19 @@ impl KvFlags {
         ec.kv_slab_fallback = self.slab;
         ec.kv_block_size = self.block_size.max(1);
         ec.kv_blocks = self.blocks;
+        ec.kv_roundtrip = self.roundtrip;
     }
 }
 
-/// Parse `--kv-slab`, `--kv-block-size N`, `--kv-blocks N` (defaults
-/// match [`EngineConfig`]: paged, 16-token blocks, auto-sized pool).
+/// Parse `--kv-slab`, `--kv-block-size N`, `--kv-blocks N`,
+/// `--kv-roundtrip` (defaults match [`EngineConfig`]: paged, 16-token
+/// blocks, auto-sized pool, device-resident decode KV).
 fn kv_flags(args: &Args) -> Result<KvFlags> {
     Ok(KvFlags {
         slab: args.has("kv-slab"),
         block_size: args.get_usize("kv-block-size", 16)?,
         blocks: args.get_usize("kv-blocks", 0)?,
+        roundtrip: args.has("kv-roundtrip"),
     })
 }
 
@@ -361,7 +369,8 @@ fn demo_prompts() -> Vec<&'static str> {
 
 fn fire_requests(engine: &mut Engine, n: usize)
                  -> Result<Vec<std::sync::mpsc::Receiver<
-                     bitdelta::serving::request::Response>>> {
+                     Result<bitdelta::serving::request::Response,
+                            bitdelta::serving::request::RequestError>>>> {
     let tenants = engine.tenants();
     let prompts = demo_prompts();
     let mut chans = Vec::new();
@@ -425,7 +434,7 @@ tenants={assignments:?}");
     let wall = t0.elapsed();
     let mut total_tokens = 0usize;
     for c in chans {
-        if let Ok(resp) = c.try_recv() {
+        if let Ok(Ok(resp)) = c.try_recv() {
             total_tokens += resp.tokens.len();
             println!("[{}] {:?} ({} tok, {:.1} ms, ttft {:.1} ms)",
                      resp.tenant, resp.text, resp.tokens.len(),
@@ -864,7 +873,7 @@ traffic, {}/{} tenants hit",
     let mut latencies: Vec<f64> = Vec::new();
     let mut tokens = 0usize;
     for c in &chans {
-        if let Ok(r) = c.try_recv() {
+        if let Ok(Ok(r)) = c.try_recv() {
             latencies.push(r.latency.as_secs_f64());
             tokens += r.tokens.len();
         }
@@ -883,6 +892,20 @@ traffic, {}/{} tenants hit",
                  latencies[latencies.len() / 2] * 1e3,
                  latencies[latencies.len() * 95 / 100] * 1e3,
                  latencies[latencies.len() - 1] * 1e3);
+    }
+    if !step_reports.is_empty() {
+        let n = step_reports.len() as f64;
+        let up: f64 = step_reports.iter().map(|r| r.upload_seconds).sum();
+        let ex: f64 = step_reports.iter().map(|r| r.exec_seconds).sum();
+        let dn: f64 = step_reports.iter()
+            .map(|r| r.download_seconds).sum();
+        let bk: f64 = step_reports.iter().map(|r| r.bank_seconds).sum();
+        let h2d: u64 = step_reports.iter().map(|r| r.bytes_h2d).sum();
+        let d2h: u64 = step_reports.iter().map(|r| r.bytes_d2h).sum();
+        println!("step phases (mean ms): upload {:.2}, exec {:.2}, \
+download {:.2}, bank {:.2}; transfer/step: {:.0} B h2d, {:.0} B d2h",
+                 up / n * 1e3, ex / n * 1e3, dn / n * 1e3, bk / n * 1e3,
+                 h2d as f64 / n, d2h as f64 / n);
     }
     println!("\n{}{}", engine.metrics.exposition(),
              engine.codec_accounting());
@@ -940,7 +963,7 @@ following (sim-s-chat)\n");
             sampling: SamplingParams::greedy(),
         })?;
         engine.run_until_idle(100_000)?;
-        let resp = chan.recv()?;
+        let resp = chan.recv()??;
         println!("{label:<22} -> {:?}", resp.text);
     }
     Ok(())

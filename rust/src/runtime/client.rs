@@ -90,24 +90,34 @@ impl Runtime {
 }
 
 impl Executable {
-    /// Execute over device buffers; returns the decomposed output tuple
-    /// as host literals (aot.py lowers with `return_tuple=True`).
+    /// Execute over device buffers; returns all outputs as host
+    /// literals. Handles both lowering shapes: tupled executables
+    /// (`return_tuple=True`, one tuple buffer to decompose) and
+    /// untupled ones (each output is its own buffer).
     pub fn run_buffers(&self, args: &[&xla::PjRtBuffer])
                        -> Result<Vec<xla::Literal>> {
         let out = self.exe.execute_b(args)
             .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        if out[0].len() > 1 {
+            // untupled lowering: literalize each output buffer in order
+            return out[0].iter()
+                .map(|b| b.to_literal_sync()
+                     .map_err(|e| anyhow!("fetch output {}: {e}",
+                                          self.name)))
+                .collect();
+        }
         let lit = out[0][0].to_literal_sync()
             .map_err(|e| anyhow!("fetch output {}: {e}", self.name))?;
         lit.to_tuple().map_err(|e| anyhow!("tuple {}: {e}", self.name))
     }
 
-    /// Execute but keep outputs on device (for chaining decode steps
-    /// without host round-trips — outputs feed the next `run_buffers`).
-    ///
-    /// Note: with `return_tuple=True` the executable's single output is
-    /// the tuple itself, which cannot be fed back as an input buffer;
-    /// decode chaining therefore goes through [`Self::run_buffers`] +
-    /// re-upload. Kept for single-output executables.
+    /// Execute and keep every output on device. With the untupled
+    /// decode lowering (aot.py `untuple=True`) this returns
+    /// `[logits, k, v]` as three separate `PjRtBuffer`s, each feedable
+    /// straight back into the next step's argument list — the primary
+    /// decode path (device-resident KV). For tupled executables the
+    /// single returned buffer is the tuple itself and cannot be fed
+    /// back; those go through [`Self::run_buffers`] instead.
     pub fn run_buffers_device(&self, args: &[&xla::PjRtBuffer])
                               -> Result<Vec<xla::PjRtBuffer>> {
         let mut out = self.exe.execute_b(args)

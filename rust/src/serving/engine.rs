@@ -49,6 +49,20 @@
 //! only an admitted slot is gathered, never the whole batch.
 //! [`EngineConfig::kv_slab_fallback`] restores the slab design as the
 //! A/B correctness reference, mirroring `mixed_dense_fallback`.
+//!
+//! Decode K/V is **device-resident** across steps on the single-launch
+//! fast path: the untupled decode executables return `[logits, k, v]`
+//! as three separate device buffers, the engine feeds `k`/`v` straight
+//! back into the next launch, and per step only the logits plus each
+//! active slot's freshly produced KV row (pulled by the
+//! `kv_row_extract` executable) cross the device boundary. The host
+//! staging pair stays authoritative — extracted rows are mirrored into
+//! it as they are banked — so admissions (which zero + gather their
+//! slot) and native mixed-codec compositions (whose sub-launches each
+//! rewrite disjoint slots of a full K/V) fall back transparently to
+//! the full round-trip merge. [`EngineConfig::kv_roundtrip`] forces
+//! the round-trip everywhere, kept as the A/B correctness reference,
+//! mirroring `kv_slab_fallback` and `mixed_dense_fallback`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -69,9 +83,10 @@ use crate::kvcache::{share_sig, BlockDims, BlockPool, BlockTable,
                      PrefixIndex, SeqCache, SeqKv};
 use crate::model::sampling::sample;
 use crate::model::tokenizer::ByteTokenizer;
-use crate::runtime::client::{Executable, Runtime};
+use crate::runtime::client::{literal_f32, Executable, Runtime};
 use crate::runtime::variants::{BaseLinears, DecodeOut, StackedArgs};
-use crate::serving::request::{QueuedRequest, Request, Response};
+use crate::serving::request::{QueuedRequest, Request, RequestError,
+                              Response};
 use crate::store::delta_file::load_model;
 
 /// Historical three-way mode switch, kept as a thin compatibility shim:
@@ -136,6 +151,12 @@ pub struct EngineConfig {
     /// design) instead of the paged block pool. Kept as the A/B
     /// correctness reference; tests pin the two paths token-identical.
     pub kv_slab_fallback: bool,
+    /// Force the full per-step KV host↔device round trip (the
+    /// pre-device-resident design) even on single-launch plans. Kept
+    /// as the A/B correctness reference (CLI `--kv-roundtrip`),
+    /// mirroring `kv_slab_fallback` and `mixed_dense_fallback`; tests
+    /// pin the two paths token-identical.
+    pub kv_roundtrip: bool,
     /// Tokens per KV block in paged mode (CLI `--kv-block-size`).
     pub kv_block_size: usize,
     /// Total blocks in the paged pool (CLI `--kv-blocks`). `0` =
@@ -163,6 +184,7 @@ impl EngineConfig {
             distilled: true,
             mixed_dense_fallback: false,
             kv_slab_fallback: false,
+            kv_roundtrip: false,
             kv_block_size: 16,
             kv_blocks: 0,
             threads: 0,
@@ -176,7 +198,12 @@ impl EngineConfig {
     }
 }
 
-/// Per-step report (metrics source + bench hook).
+/// Per-step report (metrics source + bench hook), with a phase
+/// breakdown of where the step spent its time and how many bytes
+/// crossed the host↔device boundary in each direction. On the
+/// device-resident fast path `bytes_h2d`/`bytes_d2h` shrink to the
+/// per-step tensors, logits, and per-slot KV rows; a full-KV transfer
+/// appearing here in steady state means the round-trip fallback ran.
 #[derive(Debug, Clone, Default)]
 pub struct StepReport {
     pub active: usize,
@@ -185,6 +212,41 @@ pub struct StepReport {
     pub restacked: bool,
     pub exec_seconds: f64,
     pub total_seconds: f64,
+    /// Host→device staging time (KV + per-step tensors).
+    pub upload_seconds: f64,
+    /// Device→host fetch time (logits, KV rows or full KV).
+    pub download_seconds: f64,
+    /// Paged-KV banking time (row scatter + prefix registration).
+    pub bank_seconds: f64,
+    /// Bytes uploaded this step (staged args counted on restack).
+    pub bytes_h2d: u64,
+    /// Bytes downloaded this step.
+    pub bytes_d2h: u64,
+}
+
+/// Reusable per-step buffers: the steady-state decode loop allocates
+/// nothing — token/position/rope staging, `bank_kv_row`'s two row
+/// gathers, and the mixed-batch merged-logits buffer all live here.
+struct StepScratch {
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    rope: Vec<f32>,
+    row_k: Vec<f32>,
+    row_v: Vec<f32>,
+    merged_logits: Vec<f32>,
+}
+
+impl StepScratch {
+    fn new(batch: usize) -> Self {
+        Self {
+            tokens: vec![0; batch],
+            pos: vec![0; batch],
+            rope: vec![1.0; batch],
+            row_k: Vec::new(),
+            row_v: Vec::new(),
+            merged_logits: Vec::new(),
+        }
+    }
 }
 
 /// One executable launch within a decode step: the stacked arguments,
@@ -207,8 +269,16 @@ struct SubPlan {
 /// codec group for native mixed-format batches.
 struct StackedPlan {
     comp: u64,
+    /// Composition *content* (slot → tenant), the plan-cache key.
+    /// `comp` ids are monotonic and never repeat, so recurring
+    /// compositions under churn are recognized by content.
+    key: Vec<(usize, String)>,
     subs: Vec<SubPlan>,
 }
+
+/// Stacked plans retained for recurring compositions (churny traffic
+/// re-admitting the same tenant mix skips re-assembly + re-upload).
+const PLAN_CACHE_CAP: usize = 8;
 
 /// The multi-tenant serving engine (single-threaded; see
 /// [`crate::serving::service`] for the async front-end).
@@ -231,6 +301,10 @@ pub struct Engine {
     base_linears: Option<BaseLinears>,
     /// Current composition's stacked arguments.
     stacked: Option<StackedPlan>,
+    /// Recently displaced plans, keyed by composition content (LRU,
+    /// oldest first). Device payload buffers stay resident with the
+    /// plan, so a cache hit re-uploads nothing.
+    plan_cache: Vec<(Vec<(usize, String)>, StackedPlan)>,
     /// Dense weights materialized for mixed-format batches, per tenant.
     materialized: HashMap<String, Rc<Model>>,
 
@@ -242,6 +316,19 @@ pub struct Engine {
     // authoritative stacked KV cache (host copy, ABI layout [L,B,H,S,hd])
     kv_k: Vec<f32>,
     kv_v: Vec<f32>,
+    /// Device-resident KV pair from the last fast-path step — fed
+    /// straight back into the next launch. `None` = host staging must
+    /// be (re-)uploaded (after admission gathers, fallback steps, or
+    /// before the first step).
+    kv_dev: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// The `kv_row_extract` executable at this batch width (absent on
+    /// artifact sets predating device-resident decode — the engine
+    /// then serves via the round-trip path).
+    row_extract: Option<Rc<Executable>>,
+    /// Sticky degrade: false once a decode launch returned a tupled
+    /// output (pre-untuple artifacts), pinning the round-trip path.
+    device_outputs_ok: bool,
+    scratch: StepScratch,
     /// Paged KV state (`None` under `kv_slab_fallback`).
     kv_pool: Option<BlockPool>,
     kv_prefix: PrefixIndex,
@@ -283,6 +370,14 @@ impl Engine {
         let mut execs: HashMap<&'static str, Rc<Executable>> =
             HashMap::new();
         execs.insert(kind, decode_exe);
+
+        // device-resident decode downloads per-slot KV rows through
+        // this helper; absent on older artifact sets (round-trip path)
+        let row_extract = match manifest.find_exec(
+            &econfig.model, "kv_row_extract", econfig.batch) {
+            Some(e) => Some(rt.load(manifest.path(&e.path))?),
+            None => None,
+        };
 
         // base model (shared linears + materialize/svd substrate)
         let base_name = format!("{}-base", econfig.model);
@@ -393,6 +488,7 @@ covering fidelity tier {lv}", codec.name());
             base_model,
             base_linears: None,
             stacked: None,
+            plan_cache: Vec::new(),
             materialized: HashMap::new(),
             router,
             batcher: Batcher::new(batch),
@@ -400,6 +496,10 @@ covering fidelity tier {lv}", codec.name());
             metrics: Metrics::default(),
             kv_k: vec![0.0; kv_len],
             kv_v: vec![0.0; kv_len],
+            kv_dev: None,
+            row_extract,
+            device_outputs_ok: true,
+            scratch: StepScratch::new(batch),
             kv_pool,
             kv_prefix: PrefixIndex::new(),
             share_sig_of,
@@ -430,9 +530,12 @@ covering fidelity tier {lv}", codec.name());
         self.router.tenant_names().to_vec()
     }
 
-    /// Submit a request; response arrives on the returned channel.
+    /// Submit a request; the response — or a typed
+    /// [`RequestError`] for a malformed request — arrives on the
+    /// returned channel.
     pub fn submit(&mut self, request: Request)
-                  -> Result<std::sync::mpsc::Receiver<Response>> {
+                  -> Result<std::sync::mpsc::Receiver<
+                      Result<Response, RequestError>>> {
         let (tx, rx) = std::sync::mpsc::channel();
         let id = self.next_id;
         self.next_id += 1;
@@ -470,12 +573,28 @@ covering fidelity tier {lv}", codec.name());
                 let info = self.router.tenant(&qreq.request.tenant)
                     .ok_or_else(|| anyhow!("tenant vanished"))?.clone();
                 let prompt = self.tok.encode(&qreq.request.prompt);
-                if prompt.is_empty() {
-                    bail!("empty prompt (request {})", qreq.id);
-                }
-                if prompt.len() + qreq.request.max_new_tokens
+                // a malformed request fails on its own response
+                // channel — never the step: in-flight sequences (and
+                // the rest of this admission drain) keep going
+                let malformed = if prompt.is_empty() {
+                    Some(RequestError::EmptyPrompt { id: qreq.id })
+                } else if prompt.len() + qreq.request.max_new_tokens
                     > self.cfg.max_seq_len {
-                    bail!("request {} longer than max_seq_len", qreq.id);
+                    Some(RequestError::TooLong {
+                        id: qreq.id,
+                        need: prompt.len()
+                            + qreq.request.max_new_tokens,
+                        max_seq_len: self.cfg.max_seq_len,
+                    })
+                } else {
+                    None
+                };
+                if let Some(err) = malformed {
+                    self.metrics.inc("rejected", 1);
+                    if let Some(tx) = &qreq.respond {
+                        let _ = tx.send(Err(err));
+                    }
+                    continue;
                 }
                 // paged admission: reuse the longest registered prefix
                 // (same weights sig + rope + tokens). The matched
@@ -558,37 +677,76 @@ covering fidelity tier {lv}", codec.name());
         // ---- per-tenant argument assembly (only on composition change)
         let comp = self.batcher.composition_id();
         report.restacked = self.ensure_stacked(comp)?;
+        if report.restacked {
+            if let Some(p) = &self.stacked {
+                report.bytes_h2d += p.subs.iter()
+                    .map(|s| s.args.staged_bytes as u64).sum::<u64>();
+            }
+        }
 
-        // ---- per-step tensors -----------------------------------------
+        // ---- per-step tensors (persistent scratch, zero allocation) ---
         let b = self.econfig.batch;
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        let mut rope = vec![1.0f32; b];
+        self.scratch.tokens.fill(0);
+        self.scratch.pos.fill(0);
+        self.scratch.rope.fill(1.0);
         for &i in &active {
             // lint: allow(unwrap, active_slots() yields occupied slots)
             let s = self.batcher.slot(i).unwrap();
-            tokens[i] = s.next_token;
-            pos[i] = s.kv.pos() as i32;
-            rope[i] = s.rope_scale;
+            let (nt, p, rs) = (s.next_token, s.kv.pos() as i32,
+                               s.rope_scale);
+            self.scratch.tokens[i] = nt;
+            self.scratch.pos[i] = p;
+            self.scratch.rope[i] = rs;
         }
+
+        // the fast path needs one launch owning every slot (homogeneous
+        // or dense-fallback mixed), untupled outputs, and the row
+        // extractor; otherwise this step runs the full round trip
+        let single_launch = self.stacked.as_ref().map_or(false, |p| {
+            p.subs.len() == 1 && p.subs[0].slots.len() == b
+        });
+        let fast = single_launch && !self.econfig.kv_roundtrip
+            && self.row_extract.is_some() && self.device_outputs_ok;
 
         let kv_shape = [self.cfg.n_layers, b, self.cfg.n_heads,
                         self.cfg.max_seq_len, self.cfg.head_dim()];
-        let k_buf = self.rt.upload_f32(&self.kv_k, &kv_shape)?;
-        let v_buf = self.rt.upload_f32(&self.kv_v, &kv_shape)?;
-        let pos_buf = self.rt.upload_i32(&pos, &[b])?;
-        let tok_buf = self.rt.upload_i32(&tokens, &[b])?;
-        let rope_buf = self.rt.upload_f32(&rope, &[b])?;
+        let t_upload = Instant::now();
+        let pos_buf = self.rt.upload_i32(&self.scratch.pos, &[b])?;
+        let tok_buf = self.rt.upload_i32(&self.scratch.tokens, &[b])?;
+        let rope_buf = self.rt.upload_f32(&self.scratch.rope, &[b])?;
+        report.bytes_h2d += (3 * b * 4) as u64;
+        // KV upload only when the device copy is stale (admission wrote
+        // host staging) or this step round-trips anyway; a steady-state
+        // fast-path step uploads 3 small per-step tensors and nothing
+        // else
+        let fresh_kv = if fast && self.kv_dev.is_some() {
+            None
+        } else {
+            let k_buf = self.rt.upload_f32(&self.kv_k, &kv_shape)?;
+            let v_buf = self.rt.upload_f32(&self.kv_v, &kv_shape)?;
+            report.bytes_h2d += (self.kv_k.len() + self.kv_v.len())
+                as u64 * 4;
+            Some((k_buf, v_buf))
+        };
+        report.upload_seconds = t_upload.elapsed().as_secs_f64();
 
-        // ---- execute -----------------------------------------------------
-        // one launch per sub-batch; every sub reads the same pre-step
-        // KV upload (subs own disjoint slots, so their updates never
-        // overlap)
-        let mut outs: Vec<(&[usize], DecodeOut)> = Vec::new();
-        {
-            let plan = self.stacked.as_ref()
-                .ok_or_else(|| anyhow!("no stacked plan after assembly"))?;
-            for sub in &plan.subs {
+        // ---- execute + harvest -------------------------------------------
+        // fast path: one launch, `[logits, k, v]` stay on device, K/V
+        // feed the next step; downloads = logits + per-slot KV rows.
+        // round trip: one launch per sub-batch, full K/V downloaded and
+        // merged on host (subs own disjoint slots, so their updates
+        // never overlap).
+        let logits: Vec<f32>;
+        let vocab: usize;
+        // per-slot new KV rows from the device path: `(B, L, H, hd)`
+        // each — slot i's row is `rows_*[i*row_len..(i+1)*row_len]`,
+        // already in `bank_row`'s `[L*H, hd]` layout
+        let mut rows: Option<(Vec<f32>, Vec<f32>)> = None;
+        if fast {
+            let mut out = {
+                let plan = self.stacked.as_ref().ok_or_else(
+                    || anyhow!("no stacked plan after assembly"))?;
+                let sub = &plan.subs[0];
                 let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
                 if sub.needs_base {
                     let bl = self.base_linears.as_ref().ok_or_else(
@@ -597,59 +755,169 @@ covering fidelity tier {lv}", codec.name());
                     args.extend(bl.buffers.iter());
                 }
                 args.extend(sub.args.buffers.iter());
-                args.push(&k_buf);
-                args.push(&v_buf);
+                let (k_ref, v_ref) =
+                    if let Some((k, v)) = &fresh_kv {
+                        (k, v)
+                    } else if let Some((k, v)) = &self.kv_dev {
+                        (k, v)
+                    } else {
+                        bail!("no KV source for device-resident step");
+                    };
+                args.push(k_ref);
+                args.push(v_ref);
                 args.push(&pos_buf);
                 args.push(&tok_buf);
                 args.push(&rope_buf);
-
                 let t_exec = Instant::now();
-                let lits = sub.exec.run_buffers(&args)?;
+                let out = sub.exec.run_buffers_device(&args)?;
                 report.exec_seconds += t_exec.elapsed().as_secs_f64();
-                outs.push((&sub.slots,
-                           DecodeOut::from_literals(lits, b)?));
+                out
+            };
+            if out.len() == 3 {
+                // lint: allow(unwrap, len == 3 checked just above)
+                let v_dev = out.pop().unwrap();
+                // lint: allow(unwrap, len == 3 checked just above)
+                let k_dev = out.pop().unwrap();
+                // lint: allow(unwrap, len == 3 checked just above)
+                let logits_dev = out.pop().unwrap();
+                let t_dl = Instant::now();
+                let lit = logits_dev.to_literal_sync()
+                    .map_err(|e| anyhow!("fetch logits: {e}"))?;
+                logits = literal_f32(&lit)?;
+                vocab = logits.len() / b;
+                // lint: allow(unwrap, `fast` implies row_extract is Some)
+                let rex = self.row_extract.as_ref().unwrap().clone();
+                let ex_args: [&xla::PjRtBuffer; 3] =
+                    [&k_dev, &v_dev, &pos_buf];
+                let row_lits = rex.run_buffers(&ex_args)?;
+                if row_lits.len() != 2 {
+                    bail!("kv_row_extract: want 2 outputs, got {}",
+                          row_lits.len());
+                }
+                let rows_k = literal_f32(&row_lits[0])?;
+                let rows_v = literal_f32(&row_lits[1])?;
+                report.bytes_d2h += (logits.len() + rows_k.len()
+                                     + rows_v.len()) as u64 * 4;
+                report.download_seconds +=
+                    t_dl.elapsed().as_secs_f64();
+                rows = Some((rows_k, rows_v));
+                self.kv_dev = Some((k_dev, v_dev));
+                self.metrics.inc("step_kv_device", 1);
+            } else {
+                // tupled output: artifacts predate the untupled
+                // lowering — decompose on host and degrade permanently
+                // to the round-trip path
+                self.device_outputs_ok = false;
+                let t_dl = Instant::now();
+                let lit = out[0].to_literal_sync()
+                    .map_err(|e| anyhow!("fetch decode tuple: {e}"))?;
+                let lits = lit.to_tuple()
+                    .map_err(|e| anyhow!("decode tuple: {e}"))?;
+                let dec = DecodeOut::from_literals(lits, b)?;
+                report.bytes_d2h += (dec.logits.len() + dec.k.len()
+                                     + dec.v.len()) as u64 * 4;
+                report.download_seconds +=
+                    t_dl.elapsed().as_secs_f64();
+                vocab = dec.vocab;
+                logits = dec.logits;
+                self.kv_k = dec.k;
+                self.kv_v = dec.v;
+                self.kv_dev = None;
             }
-        }
-        // harvest: a single-sub plan moves its outputs wholesale (the
-        // homogeneous fast path, cost unchanged); a native mixed plan
-        // merges each sub's slot-owned logits + KV rows, so every
-        // tenant's state comes from its own codec's executable
-        let (logits, vocab);
-        if outs.len() == 1 && outs[0].0.len() == b {
-            // lint: allow(unwrap, len == 1 checked on this same line)
-            let (_, out) = outs.pop().unwrap();
-            vocab = out.vocab;
-            logits = out.logits;
-            self.kv_k = out.k;
-            self.kv_v = out.v;
         } else {
-            vocab = outs.first()
-                .ok_or_else(|| anyhow!("no sub-batch outputs"))?.1.vocab;
-            let mut merged = vec![0f32; b * vocab];
-            let per_seq = self.cfg.n_heads * self.cfg.max_seq_len
-                * self.cfg.head_dim();
-            for (slots, out) in &outs {
-                for &i in *slots {
-                    merged[i * vocab..(i + 1) * vocab]
-                        .copy_from_slice(out.logits_row(i));
-                    for layer in 0..self.cfg.n_layers {
-                        let off = (layer * b + i) * per_seq;
-                        self.kv_k[off..off + per_seq]
-                            .copy_from_slice(&out.k[off..off + per_seq]);
-                        self.kv_v[off..off + per_seq]
-                            .copy_from_slice(&out.v[off..off + per_seq]);
+            let (k_buf, v_buf) = fresh_kv.as_ref().ok_or_else(
+                || anyhow!("round-trip step without KV upload"))?;
+            let mut outs: Vec<(&[usize], DecodeOut)> = Vec::new();
+            {
+                let plan = self.stacked.as_ref().ok_or_else(
+                    || anyhow!("no stacked plan after assembly"))?;
+                for sub in &plan.subs {
+                    let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+                    if sub.needs_base {
+                        let bl = self.base_linears.as_ref().ok_or_else(
+                            || anyhow!("base linears missing for {}",
+                                       sub.exec_kind))?;
+                        args.extend(bl.buffers.iter());
                     }
+                    args.extend(sub.args.buffers.iter());
+                    args.push(k_buf);
+                    args.push(v_buf);
+                    args.push(&pos_buf);
+                    args.push(&tok_buf);
+                    args.push(&rope_buf);
+
+                    let t_exec = Instant::now();
+                    let lits = sub.exec.run_buffers(&args)?;
+                    report.exec_seconds +=
+                        t_exec.elapsed().as_secs_f64();
+                    let t_dl = Instant::now();
+                    let dec = DecodeOut::from_literals(lits, b)?;
+                    report.bytes_d2h += (dec.logits.len() + dec.k.len()
+                                         + dec.v.len()) as u64 * 4;
+                    report.download_seconds +=
+                        t_dl.elapsed().as_secs_f64();
+                    outs.push((&sub.slots, dec));
                 }
             }
-            logits = merged;
+            // the round trip leaves host staging authoritative; any
+            // device KV pair is stale from here on
+            self.kv_dev = None;
+            if outs.len() == 1 && outs[0].0.len() == b {
+                // lint: allow(unwrap, len == 1 checked on this same line)
+                let (_, out) = outs.pop().unwrap();
+                vocab = out.vocab;
+                logits = out.logits;
+                self.kv_k = out.k;
+                self.kv_v = out.v;
+            } else {
+                vocab = outs.first().ok_or_else(
+                    || anyhow!("no sub-batch outputs"))?.1.vocab;
+                let mut merged =
+                    std::mem::take(&mut self.scratch.merged_logits);
+                merged.clear();
+                merged.resize(b * vocab, 0.0);
+                let per_seq = self.cfg.n_heads * self.cfg.max_seq_len
+                    * self.cfg.head_dim();
+                for (slots, out) in &outs {
+                    for &i in *slots {
+                        merged[i * vocab..(i + 1) * vocab]
+                            .copy_from_slice(out.logits_row(i));
+                        for layer in 0..self.cfg.n_layers {
+                            let off = (layer * b + i) * per_seq;
+                            self.kv_k[off..off + per_seq]
+                                .copy_from_slice(
+                                    &out.k[off..off + per_seq]);
+                            self.kv_v[off..off + per_seq]
+                                .copy_from_slice(
+                                    &out.v[off..off + per_seq]);
+                        }
+                    }
+                }
+                logits = merged;
+            }
         }
 
         // ---- scatter results ---------------------------------------------
         let stop = self.econfig.stop_token;
         let max_seq = self.cfg.max_seq_len;
+        let row_len = self.cfg.n_layers * self.cfg.n_heads
+            * self.cfg.head_dim();
         let mut to_release = Vec::new();
         for &i in &active {
-            self.bank_kv_row(i, b)?;
+            let t_bank = Instant::now();
+            if let Some((rows_k, rows_v)) = &rows {
+                // device path: bank the extracted row directly and
+                // mirror it into host staging, which stays
+                // authoritative for fallback steps + admission gathers
+                let p = self.scratch.pos[i] as usize;
+                let rk = &rows_k[i * row_len..(i + 1) * row_len];
+                let rv = &rows_v[i * row_len..(i + 1) * row_len];
+                self.mirror_row_to_staging(i, b, p, rk, rv);
+                self.bank_row(i, rk, rv)?;
+            } else {
+                self.bank_kv_row(i, b)?;
+            }
+            report.bank_seconds += t_bank.elapsed().as_secs_f64();
             // lint: allow(unwrap, active_slots() yields occupied slots)
             let s = self.batcher.slot_mut(i).unwrap();
             if s.in_prefill() {
@@ -706,9 +974,12 @@ covering fidelity tier {lv}", codec.name());
                 prompt_tokens: s.prompt.len(),
             };
             if let Some(tx) = &s.req.respond {
-                let _ = tx.send(resp);
+                let _ = tx.send(Ok(resp));
             }
         }
+
+        // recycle the step's logits buffer (mixed merges resize it)
+        self.scratch.merged_logits = logits;
 
         self.sync_kv_metrics();
         report.total_seconds = t_start.elapsed().as_secs_f64();
@@ -716,30 +987,41 @@ covering fidelity tier {lv}", codec.name());
             .observe(std::time::Duration::from_secs_f64(
                 report.total_seconds));
         self.metrics.inc("steps", 1);
+        self.metrics.inc("step_bytes_h2d", report.bytes_h2d);
+        self.metrics.inc("step_bytes_d2h", report.bytes_d2h);
+        self.metrics.inc("step_upload_us",
+                         (report.upload_seconds * 1e6) as u64);
+        self.metrics.inc("step_exec_us",
+                         (report.exec_seconds * 1e6) as u64);
+        self.metrics.inc("step_download_us",
+                         (report.download_seconds * 1e6) as u64);
+        self.metrics.inc("step_bank_us",
+                         (report.bank_seconds * 1e6) as u64);
         self.metrics.set("batch_occupancy",
                          report.active as f64 / b as f64);
         Ok(report)
     }
 
     /// Scatter one slot's freshly produced KV row from the dense
-    /// staging pair into the sequence's backing store. Slab: bump
-    /// `pos` (the staging pair *is* the store). Paged: append the row
-    /// to the block table (copy-on-write through shared tails,
-    /// reclaiming prompt-cache entries under pool pressure) and
-    /// register completed prompt-region blocks in the prefix index.
+    /// staging pair into the sequence's backing store (the round-trip
+    /// path: gathers the row out of staging, then banks it). The
+    /// device path skips the gather and calls [`Self::bank_row`] with
+    /// the extracted row directly.
     fn bank_kv_row(&mut self, i: usize, b: usize) -> Result<()> {
-        let Some(pool) = &mut self.kv_pool else {
+        let Some(pool) = &self.kv_pool else {
+            // slab: the staging pair *is* the store — just bump pos
             // lint: allow(unwrap, callers pass active slot indices)
             self.batcher.slot_mut(i).unwrap().kv.slab_mut().pos += 1;
             return Ok(());
         };
-        // lint: allow(unwrap, callers pass active slot indices)
-        let s = self.batcher.slot_mut(i).unwrap();
-        let p = s.kv.pos();
         let d = pool.dims();
+        // lint: allow(unwrap, callers pass active slot indices)
+        let p = self.batcher.slot(i).unwrap().kv.pos();
         let (hd, max_seq) = (d.head_dim, self.cfg.max_seq_len);
-        let mut row_k = vec![0.0f32; d.row_floats()];
-        let mut row_v = vec![0.0f32; d.row_floats()];
+        let mut row_k = std::mem::take(&mut self.scratch.row_k);
+        let mut row_v = std::mem::take(&mut self.scratch.row_v);
+        row_k.resize(d.row_floats(), 0.0);
+        row_v.resize(d.row_floats(), 0.0);
         for lh in 0..d.n_layers * d.n_heads {
             let (l, h) = (lh / d.n_heads, lh % d.n_heads);
             let src = (((l * b + i) * d.n_heads + h) * max_seq + p)
@@ -749,13 +1031,35 @@ covering fidelity tier {lv}", codec.name());
             row_v[lh * hd..(lh + 1) * hd]
                 .copy_from_slice(&self.kv_v[src..src + hd]);
         }
+        let res = self.bank_row(i, &row_k, &row_v);
+        self.scratch.row_k = row_k;
+        self.scratch.row_v = row_v;
+        res
+    }
+
+    /// Append one freshly produced KV row (layout `[L*H, hd]`) to slot
+    /// `i`'s backing store. Slab: bump `pos` (the staging pair *is*
+    /// the store). Paged: append the row to the block table
+    /// (copy-on-write through shared tails, reclaiming prompt-cache
+    /// entries under pool pressure) and register completed
+    /// prompt-region blocks in the prefix index.
+    fn bank_row(&mut self, i: usize, row_k: &[f32], row_v: &[f32])
+                -> Result<()> {
+        let Some(pool) = &mut self.kv_pool else {
+            // lint: allow(unwrap, callers pass active slot indices)
+            self.batcher.slot_mut(i).unwrap().kv.slab_mut().pos += 1;
+            return Ok(());
+        };
+        let d = pool.dims();
+        // lint: allow(unwrap, callers pass active slot indices)
+        let s = self.batcher.slot_mut(i).unwrap();
         let table = s.kv.table_mut();
-        if table.append_row(pool, &row_k, &row_v).is_err() {
+        if table.append_row(pool, row_k, row_v).is_err() {
             // drop oldest prompt-cache entries, then retry once; a
             // still-full pool surfaces the typed KvOomError
             let dropped = self.kv_prefix.reclaim(pool, 1);
             self.metrics.inc("kv_prefix_reclaimed", dropped as u64);
-            table.append_row(pool, &row_k, &row_v)
+            table.append_row(pool, row_k, row_v)
                 .map_err(|e| anyhow::Error::new(e).context(
                     "KV pool exhausted (raise --kv-blocks)"))?;
         }
@@ -769,6 +1073,23 @@ covering fidelity tier {lv}", codec.name());
                                     &s.prompt[..len], table.blocks());
         }
         Ok(())
+    }
+
+    /// Mirror one slot's device-extracted KV row into the host staging
+    /// pair at its ABI offsets, keeping staging authoritative for
+    /// round-trip steps and admission-time gathers.
+    fn mirror_row_to_staging(&mut self, i: usize, b: usize, p: usize,
+                             row_k: &[f32], row_v: &[f32]) {
+        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        let max_seq = self.cfg.max_seq_len;
+        for lh in 0..self.cfg.n_layers * nh {
+            let (l, h) = (lh / nh, lh % nh);
+            let dst = (((l * b + i) * nh + h) * max_seq + p) * hd;
+            self.kv_k[dst..dst + hd]
+                .copy_from_slice(&row_k[lh * hd..(lh + 1) * hd]);
+            self.kv_v[dst..dst + hd]
+                .copy_from_slice(&row_v[lh * hd..(lh + 1) * hd]);
+        }
     }
 
     /// Export paged-KV occupancy gauges and bump the inc-only prefix /
@@ -790,9 +1111,31 @@ covering fidelity tier {lv}", codec.name());
     }
 
     /// Re-assemble the stacked per-tenant arguments if the batch
-    /// composition changed. Returns true if a re-stack happened.
+    /// composition changed. Returns true if a re-stack happened
+    /// (plan-cache hits swap in a retained plan without one).
     fn ensure_stacked(&mut self, comp: u64) -> Result<bool> {
         if self.stacked.as_ref().map(|p| p.comp) == Some(comp) {
+            return Ok(false);
+        }
+        // the composition *id* moved, but ids are monotonic (bumped on
+        // admit AND release) — recognize recurring compositions by
+        // content so churny traffic skips re-assembly + re-upload
+        let key = self.batcher.composition();
+        if let Some(plan) = &mut self.stacked {
+            if plan.key == key {
+                plan.comp = comp;
+                self.metrics.inc("plan_cache_hits", 1);
+                return Ok(false);
+            }
+        }
+        if let Some(idx) = self.plan_cache.iter()
+            .position(|(k, _)| *k == key) {
+            let (_, mut plan) = self.plan_cache.remove(idx);
+            plan.comp = comp;
+            if let Some(old) = self.stacked.replace(plan) {
+                self.stash_plan(old);
+            }
+            self.metrics.inc("plan_cache_hits", 1);
             return Ok(false);
         }
         let slots = self.batcher.active_slots();
@@ -934,8 +1277,21 @@ covering fidelity tier {lv}", codec.name());
         for s in &subs {
             self.metrics.inc(s.exec_kind, 1);
         }
-        self.stacked = Some(StackedPlan { comp, subs });
+        if let Some(old) =
+            self.stacked.replace(StackedPlan { comp, key, subs }) {
+            self.stash_plan(old);
+        }
         Ok(true)
+    }
+
+    /// Retain a displaced plan for later reuse (bounded LRU: oldest
+    /// entry evicted at capacity, dropping its device buffers).
+    fn stash_plan(&mut self, plan: StackedPlan) {
+        if self.plan_cache.len() >= PLAN_CACHE_CAP {
+            self.plan_cache.remove(0);
+        }
+        let key = plan.key.clone();
+        self.plan_cache.push((key, plan));
     }
 
     /// Executable for an exec kind at the engine's batch width (lazy,
@@ -1004,5 +1360,8 @@ covering fidelity tier {lv}", codec.name());
             self.kv_k[off..off + per_seq].fill(0.0);
             self.kv_v[off..off + per_seq].fill(0.0);
         }
+        // host staging just diverged from the device pair (admission
+        // zeroes + gathers its slot): next step re-uploads staging
+        self.kv_dev = None;
     }
 }

@@ -37,16 +37,44 @@ impl Response {
     }
 }
 
+/// A malformed request, rejected at admission on its own response
+/// channel. Never fails the engine step: in-flight sequences keep
+/// decoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// Prompt tokenized to zero tokens.
+    EmptyPrompt { id: u64 },
+    /// Prompt + max_new_tokens exceeds the model's context window.
+    TooLong { id: u64, need: usize, max_seq_len: usize },
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::EmptyPrompt { id } => {
+                write!(f, "empty prompt (request {id})")
+            }
+            RequestError::TooLong { id, need, max_seq_len } => {
+                write!(f, "request {id} needs {need} tokens but \
+max_seq_len is {max_seq_len}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
 /// A request inside the coordinator, with its response channel.
 pub struct QueuedRequest {
     pub request: Request,
     pub id: u64,
-    pub respond: Option<Sender<Response>>,
+    pub respond: Option<Sender<Result<Response, RequestError>>>,
     pub enqueued_at: std::time::Instant,
 }
 
 impl QueuedRequest {
-    pub fn new(request: Request, id: u64, respond: Sender<Response>)
+    pub fn new(request: Request, id: u64,
+               respond: Sender<Result<Response, RequestError>>)
                -> Self {
         Self { request, id, respond: Some(respond),
                enqueued_at: std::time::Instant::now() }
