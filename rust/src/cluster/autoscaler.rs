@@ -28,6 +28,7 @@ use std::time::Duration;
 
 use crate::cluster::frontend::ClusterHandle;
 use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::clock;
 use crate::sync::thread::JoinHandle;
 use crate::sync::{thread, Arc};
 
@@ -185,7 +186,10 @@ impl Autoscaler {
                         }
                         ScaleDecision::Hold => {}
                     }
-                    thread::sleep(interval);
+                    // the clock seam: real pacing in production, one
+                    // virtual `interval` per driver tick under the
+                    // simulation harness
+                    clock::sleep(interval);
                 }
             })
             // lint: allow(expect, OS refusing to spawn the one control
@@ -303,8 +307,13 @@ mod tests {
 
     // -- end-to-end against a mock cluster ----------------------------
 
+    /// Runs entirely on the virtual clock: the test thread is the time
+    /// driver (1 virtual ms per tick), so the grow/serve/shrink cycle
+    /// is paced by simulated time instead of machine load — the
+    /// wall-clock version of this test flaked under slow CI runners.
     #[test]
     fn autoscaler_grows_under_burst_and_drains_back_down() {
+        let guard = clock::install();
         let ccfg = ClusterConfig {
             policy: policy_by_name("least-loaded").unwrap(),
             delta_budget_bytes: 1 << 20,
@@ -326,38 +335,47 @@ mod tests {
         });
 
         // burst: pile up far more work than one 2ms/step worker clears
-        let tickets: Vec<ClusterTicket> = (0..120)
+        let mut tickets: Vec<ClusterTicket> = (0..120)
             .map(|i| handle.submit(req(["a", "b"][i % 2])).unwrap())
             .collect();
 
-        // the sustained backlog must grow the cluster
+        // drive: advance virtual time, harvest, watch the worker count
+        // ride the burst up and the idle tail back down
         let mut grew = false;
-        for _ in 0..400 {
+        let mut served = 0usize;
+        let mut shrank = false;
+        for _ in 0..20_000 {
+            clock::advance(Duration::from_millis(1));
+            // real pacing so worker/autoscaler threads get scheduled
+            // between virtual ticks
+            // lint: allow(raw-time, the driver's real pacing nap — the
+            // one wall-clock sleep a virtual-time test needs)
+            thread::sleep(Duration::from_micros(200));
+            tickets.retain(|t| match t.try_recv() {
+                None => true,
+                Some(r) => {
+                    // scale events never shed or lose accepted work
+                    r.expect("request lost during scale events");
+                    served += 1;
+                    false
+                }
+            });
             if handle.active_workers() >= 2 {
                 grew = true;
-                break;
             }
-            thread::sleep(Duration::from_millis(5));
-        }
-        assert!(grew, "autoscaler never scaled up under sustained load");
-
-        // every burst request completes (scale events never shed or
-        // lose accepted work)
-        for t in tickets {
-            t.recv().expect("request lost during scale events");
-        }
-
-        // idle: the autoscaler must drain back down to min
-        let mut shrank = false;
-        for _ in 0..400 {
-            if handle.active_workers() == 1 {
+            if grew && tickets.is_empty()
+                && handle.active_workers() == 1 {
                 shrank = true;
                 break;
             }
-            thread::sleep(Duration::from_millis(5));
         }
+        assert!(grew, "autoscaler never scaled up under sustained load");
+        assert_eq!(served, 120);
         assert!(shrank, "autoscaler never drained back down when idle");
 
+        // uninstall first: wakes any virtually-parked sleeper so the
+        // stop/join below cannot deadlock on frozen time
+        drop(guard);
         scaler.stop();
         let m = handle.metrics();
         assert!(m.contains(

@@ -39,17 +39,19 @@
 //! policy-respecting placement, routing degrades to
 //! everything-everywhere — availability over budget.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::clock::{self, Instant};
 use crate::sync::thread::JoinHandle;
 use crate::sync::{lock, mpsc, thread, Arc, Mutex};
 
 use crate::cluster::metrics::{relabel, rollup};
 use crate::cluster::placement::{
-    LoadView, Placement, PlacementPolicy, TenantProfile, WorkerSpec,
+    LoadView, Placement, PlacementPolicy, RouteError, TenantProfile,
+    WorkerSpec,
 };
 use crate::cluster::worker::{
     spawn_worker, CoreFactory, WorkerCore, WorkerHandle,
@@ -149,7 +151,16 @@ impl Slot {
 /// [`WorkerLoad`]: crate::cluster::worker::WorkerLoad
 struct ClusterState {
     slots: Vec<Slot>,
+    /// The tenant set the placement was computed from. Behind the
+    /// mutex (not in [`Shared`]) because delta churn can swap it at
+    /// runtime via [`ClusterHandle::update_tenants`].
+    profiles: Vec<TenantProfile>,
     placement: Placement,
+    /// The last re-placement fell back to everything-everywhere
+    /// (active budgets could not hold a policy-respecting placement).
+    /// While set, per-worker budget accounting is knowingly violated —
+    /// availability over budget.
+    degraded: bool,
     failovers: u64,
     replaced_tenants: u64,
     scale_ups: u64,
@@ -169,7 +180,6 @@ impl ClusterState {
 struct Shared {
     policy: Arc<dyn PlacementPolicy>,
     delta_budget_bytes: usize,
-    profiles: Vec<TenantProfile>,
     /// Present only for elastic clusters; fixed clusters cannot grow.
     factory_fn: Option<WorkerFactoryFn>,
     admission: Option<AdmissionGate>,
@@ -201,6 +211,22 @@ pub struct Cluster {
 #[derive(Clone)]
 pub struct ClusterHandle {
     shared: Arc<Shared>,
+}
+
+/// A consistent routing-state snapshot (one lock acquisition) — see
+/// [`ClusterHandle::routing_snapshot`]. This is what the simulation
+/// harness's invariant monitor reads: checking placement against a
+/// routable set captured at a different instant would report phantom
+/// violations around every failover.
+#[derive(Debug, Clone)]
+pub struct RoutingSnapshot {
+    pub placement: Placement,
+    /// Slot indices that are Active with a live thread.
+    pub routable: Vec<usize>,
+    /// The placement is the everything-everywhere fallback: per-worker
+    /// budget accounting is knowingly suspended until a policy
+    /// placement fits again.
+    pub degraded: bool,
 }
 
 /// One submitted request: the response channel plus (when cluster
@@ -284,13 +310,14 @@ impl Cluster {
         let shared = Arc::new(Shared {
             policy: cfg.policy.clone(),
             delta_budget_bytes: cfg.delta_budget_bytes,
-            profiles,
             factory_fn,
             admission: cfg.admission.map(AdmissionGate::new),
             next_worker_id: AtomicUsize::new(n),
             state: Mutex::new(ClusterState {
                 slots,
+                profiles,
                 placement,
+                degraded: false,
                 failovers: 0,
                 replaced_tenants: 0,
                 scale_ups: 0,
@@ -416,7 +443,8 @@ impl ClusterHandle {
 
     /// Tenants the cluster places (sorted at profile construction).
     pub fn tenants(&self) -> Vec<String> {
-        self.shared.profiles.iter().map(|t| t.name.clone()).collect()
+        lock(&self.shared.state).profiles.iter()
+            .map(|t| t.name.clone()).collect()
     }
 
     /// Snapshot of the current placement.
@@ -424,6 +452,70 @@ impl ClusterHandle {
         let mut st = lock(&self.shared.state);
         self.reap(&mut st);
         st.placement.clone()
+    }
+
+    /// One consistent routing snapshot — placement, routable slots and
+    /// the degraded flag read under a single lock acquisition (with a
+    /// reap first), so an invariant checker never sees a placement
+    /// from before a failover paired with a routable set from after.
+    pub fn routing_snapshot(&self) -> RoutingSnapshot {
+        let mut st = lock(&self.shared.state);
+        self.reap(&mut st);
+        RoutingSnapshot {
+            placement: st.placement.clone(),
+            routable: st.slots.iter().enumerate()
+                .filter(|(_, s)| s.routable())
+                .map(|(w, _)| w).collect(),
+            degraded: st.degraded,
+        }
+    }
+
+    /// The last re-placement degraded to everything-everywhere (see
+    /// [`RoutingSnapshot::degraded`]).
+    pub fn placement_degraded(&self) -> bool {
+        lock(&self.shared.state).degraded
+    }
+
+    /// Per-slot lifetime routed counts, indexed by slot. Every
+    /// successful [`Self::submit`] increments exactly one slot's count
+    /// under the routing lock, so the sum equals the number of
+    /// successfully routed requests — the no-double-routing invariant
+    /// the simulation monitor checks.
+    pub fn routed_counts(&self) -> Vec<u64> {
+        lock(&self.shared.state).slots.iter()
+            .map(|s| s.routed).collect()
+    }
+
+    /// The per-worker delta residency budget the cluster packs against.
+    pub fn delta_budget_bytes(&self) -> usize {
+        self.shared.delta_budget_bytes
+    }
+
+    /// Live in-flight count of the cluster admission gate (`None`
+    /// without one).
+    pub fn admission_in_flight(&self) -> Option<usize> {
+        self.shared.admission.as_ref().map(|g| g.in_flight())
+    }
+
+    /// Replace the tenant population and re-place it across the
+    /// active workers — the delta hot-churn path: a model update
+    /// re-weights and re-sizes deltas, and placement must follow
+    /// without a cluster restart. Profiles are sorted by name (same
+    /// normalization as [`tenant_profiles`]) so placement stays
+    /// deterministic. Requests for tenants no longer in the set still
+    /// route (any active worker serves unknown tenants), they just
+    /// lose their placement affinity.
+    pub fn update_tenants(&self, mut profiles: Vec<TenantProfile>)
+                          -> Result<()> {
+        if profiles.is_empty() {
+            bail!("update_tenants: refusing an empty tenant set");
+        }
+        profiles.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut st = lock(&self.shared.state);
+        self.reap(&mut st);
+        st.profiles = profiles;
+        self.replace(&mut st);
+        Ok(())
     }
 
     /// Total worker slots ever created (including retired and dead
@@ -641,14 +733,15 @@ floor is {}", st.active_count(), min_active.max(1));
             out.push_str(&format!(
                 "bitdelta_cluster_workers_alive {active}\n\
                  bitdelta_cluster_workers_draining {draining}\n\
+                 bitdelta_cluster_placement_degraded {}\n\
                  bitdelta_cluster_failovers_total {}\n\
                  bitdelta_cluster_replaced_tenants_total {}\n\
                  bitdelta_cluster_scale_events_total\
 {{direction=\"up\"}} {}\n\
                  bitdelta_cluster_scale_events_total\
 {{direction=\"down\"}} {}\n",
-                st.failovers, st.replaced_tenants, st.scale_ups,
-                st.scale_downs));
+                st.degraded as u8, st.failovers, st.replaced_tenants,
+                st.scale_ups, st.scale_downs));
             out.push_str(&st.drain.bucket_exposition("cluster_drain"));
             out.push_str(&format!(
                 "bitdelta_cluster_drain_us_count {}\n\
@@ -692,7 +785,13 @@ floor is {}", st.active_count(), min_active.max(1));
                 .collect();
         }
         if cands.is_empty() {
-            bail!("cluster has no alive workers");
+            // typed, like every other routing failure: a churn race
+            // (the only replica died between place and route, and no
+            // survivor exists) must surface as a downcastable error
+            // the caller can distinguish from an engine fault
+            return Err(RouteError::NoCandidates {
+                tenant: tenant.to_string(),
+            }.into());
         }
         // a typed RouteError (empty replica set mid-failover) surfaces
         // as a request error on the caller side, not a routing panic
@@ -735,30 +834,31 @@ floor is {}", st.active_count(), min_active.max(1));
         if active.is_empty() {
             return;
         }
-        let moved = self.shared.profiles.iter().filter(|t| {
+        let moved = st.profiles.iter().filter(|t| {
             st.placement.workers_of(&t.name).iter().any(|&w| {
                 st.slots.get(w)
                     .map_or(true, |s| s.state != WorkerState::Active)
             })
         }).count() as u64;
         st.replaced_tenants += moved;
-        st.placement =
-            match self.shared.policy.place(&self.shared.profiles,
-                                           &active) {
-                Ok(p) => p,
+        let (placement, degraded) =
+            match self.shared.policy.place(&st.profiles, &active) {
+                Ok(p) => (p, false),
                 Err(_) => {
                     // the active workers' budgets cannot hold a
                     // policy-respecting placement — degrade to
                     // everything-everywhere: availability over budget
                     let mut p = Placement::default();
-                    for t in &self.shared.profiles {
+                    for t in &st.profiles {
                         for s in &active {
                             p.add(&t.name, s.index, t.resident_bytes);
                         }
                     }
-                    p
+                    (p, true)
                 }
             };
+        st.placement = placement;
+        st.degraded = degraded;
     }
 }
 
@@ -929,7 +1029,7 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
                     names: &[String], prompts: &[&str], clients: usize)
                     -> Result<ReplayReport> {
     let clients = clients.max(1);
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut joins = Vec::new();
     for c in 0..clients {
         let h = handle.clone();
@@ -947,8 +1047,7 @@ pub fn replay_trace(handle: &ClusterHandle, trace: &[TraceEvent],
             for e in &events {
                 let now = t0.elapsed().as_secs_f64();
                 if e.at > now {
-                    thread::sleep(
-                        std::time::Duration::from_secs_f64(e.at - now));
+                    clock::sleep(Duration::from_secs_f64(e.at - now));
                 }
                 // collect whatever finished during the wait *before*
                 // submitting, so its admission permit frees up first:
@@ -1142,7 +1241,7 @@ mod tests {
                     ok = Some(r);
                     break;
                 }
-                Err(_) => thread::sleep(Duration::from_millis(2)),
+                Err(_) => clock::sleep(Duration::from_millis(2)),
             }
         }
         let r = ok.expect("tenant a never failed over");
@@ -1176,10 +1275,12 @@ mod tests {
                 break;
             }
             let _ = handle.generate(req("a"));
-            thread::sleep(Duration::from_millis(2));
+            clock::sleep(Duration::from_millis(2));
         }
-        let err = handle.generate(req("a"));
-        assert!(err.is_err());
+        let err = handle.generate(req("a")).unwrap_err();
+        // no survivors: the routing failure is the typed RouteError,
+        // not an opaque engine fault — churn callers key on this
+        assert!(err.downcast_ref::<RouteError>().is_some(), "{err:#}");
         let _ = cluster.shutdown();
     }
 
@@ -1409,6 +1510,84 @@ mod tests {
         t1.recv().unwrap();
         t2.recv().unwrap();
         handle.submit(req("a")).unwrap().recv().unwrap();
+        assert_eq!(handle.admission_in_flight(), Some(0));
+        cluster.shutdown().unwrap();
+    }
+
+    // -- churn + snapshot accessors -----------------------------------
+
+    #[test]
+    fn update_tenants_replaces_population_and_replaces_placement() {
+        let cluster = Cluster::spawn_elastic(
+            &cfg("least-loaded"), profiles(&["a", "b"], 10), 2,
+            elastic_mock(Duration::ZERO)).unwrap();
+        let handle = cluster.handle();
+        assert_eq!(handle.tenants(), vec!["a", "b"]);
+
+        // churn: swap in a re-weighted, re-sized population (out of
+        // order — update_tenants normalizes by sorting)
+        handle.update_tenants(profiles(&["d", "c", "a"], 20)).unwrap();
+        assert_eq!(handle.tenants(), vec!["a", "c", "d"]);
+        let snap = handle.routing_snapshot();
+        assert!(!snap.degraded);
+        for t in ["a", "c", "d"] {
+            let ws = snap.placement.workers_of(t);
+            assert!(ws.iter().any(|w| snap.routable.contains(w)),
+                    "tenant {t} placed on {ws:?}, routable {:?}",
+                    snap.routable);
+        }
+        // dropped tenant still routes (any worker serves unknowns)
+        handle.generate(req("b")).unwrap();
+        // new tenant serves
+        handle.generate(req("c")).unwrap();
+
+        assert!(handle.update_tenants(Vec::new()).is_err(),
+                "empty tenant set must be refused");
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn routed_counts_sum_to_successful_submits() {
+        let cluster = Cluster::spawn(
+            &cfg("least-loaded"), profiles(&["a", "b"], 10),
+            mock_factories(2)).unwrap();
+        let handle = cluster.handle();
+        for i in 0..9 {
+            handle.generate(req(["a", "b"][i % 2])).unwrap();
+        }
+        assert_eq!(handle.routed_counts().iter().sum::<u64>(), 9);
+        assert_eq!(handle.delta_budget_bytes(), 1 << 20);
+        assert_eq!(handle.admission_in_flight(), None);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn budget_overload_degrades_and_recovery_clears_the_flag() {
+        let config = ClusterConfig {
+            policy: policy_by_name("delta-aware").unwrap(),
+            delta_budget_bytes: 25,
+            admission: None,
+        };
+        // two 10 B tenants fit two budget-25 workers one-per-worker
+        let cluster = Cluster::spawn_elastic(
+            &config, profiles(&["a", "b"], 10), 2,
+            elastic_mock(Duration::ZERO)).unwrap();
+        let handle = cluster.handle();
+        assert!(!handle.placement_degraded());
+
+        // churn to three 10 B tenants on one eventual survivor: after
+        // retiring a worker the packing (30 B into 25 B) is impossible
+        // and the placement must degrade rather than refuse to serve
+        handle.update_tenants(profiles(&["a", "b", "c"], 10)).unwrap();
+        handle.retire_worker(0).unwrap();
+        assert!(handle.placement_degraded());
+        handle.generate(req("c")).unwrap();
+
+        // scale back up: a policy placement fits again, flag clears
+        handle.spawn_worker().unwrap();
+        assert!(!handle.placement_degraded());
+        let snap = handle.routing_snapshot();
+        assert!(!snap.degraded);
         cluster.shutdown().unwrap();
     }
 }

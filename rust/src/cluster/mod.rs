@@ -43,7 +43,8 @@ pub mod metrics;
 pub mod placement;
 pub mod worker;
 
-#[cfg(test)]
+// not cfg(test): the deterministic simulation harness
+// (crate::simharness) drives real clusters over these mock cores
 pub(crate) mod testutil;
 
 pub use autoscaler::{
@@ -52,7 +53,7 @@ pub use autoscaler::{
 pub use frontend::{
     apply_trace_weights, replay_trace, tenant_profiles, Cluster,
     ClusterConfig, ClusterHandle, ClusterTicket, ReplayReport,
-    WorkerFactoryFn, WorkerState,
+    RoutingSnapshot, WorkerFactoryFn, WorkerState,
 };
 pub use placement::{
     policy_by_name, Placement, PlacementPolicy, RouteError, TenantProfile,

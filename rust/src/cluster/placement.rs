@@ -523,4 +523,114 @@ mod tests {
         assert_eq!(stable_hash("sim-s-chat"), stable_hash("sim-s-chat"));
         assert_ne!(stable_hash("a"), stable_hash("b"));
     }
+
+    /// Seed-parameterized law check over all three built-ins: random
+    /// populations (sizes, tiers, codecs, skews) on random fleets must
+    /// always yield placements where every tenant is placed on valid
+    /// workers, routing picks a replica, budgets hold, and delta-aware
+    /// replication triggers exactly when `ceil(share * N) > 1`. On
+    /// failure `run_cases` panics with the case seed, which replays
+    /// the exact population (the generator is seed-deterministic).
+    #[test]
+    fn property_policies_place_route_and_respect_budgets() {
+        use crate::util::prop::run_cases;
+        run_cases(64, |rng| {
+            let n_workers = 1 + rng.usize_in(0, 8);
+            let n_tenants = 1 + rng.usize_in(0, 40);
+            let codecs = ["bitdelta", "lora", "svd", "dense"];
+            let raw: Vec<f64> = (0..n_tenants)
+                .map(|_| 1.0 + (rng.next_u64() % 1000) as f64)
+                .collect();
+            let total_w: f64 = raw.iter().sum();
+            let ts: Vec<TenantProfile> = raw.iter().enumerate()
+                .map(|(i, w)| {
+                    let levels = 1 + rng.usize_in(0, 4);
+                    TenantProfile {
+                        name: format!("p{i:03}"),
+                        codec: (*rng.choose(&codecs)).to_string(),
+                        resident_bytes:
+                            (1 + rng.usize_in(0, 64)) * levels,
+                        weight: w / total_w,
+                        levels,
+                    }
+                }).collect();
+            let max_item = ts.iter().map(|t| t.resident_bytes)
+                .max().unwrap();
+            let total: usize =
+                ts.iter().map(|t| t.resident_bytes).sum();
+            // tight budgets still satisfy the first-fit-decreasing
+            // feasibility bound (budget >= 2*max item and
+            // total <= n*budget/2), so `place` must never error;
+            // ample budgets let replication run to its target
+            let ample = rng.bool();
+            let budget = if ample {
+                2 * total + max_item
+            } else {
+                (2 * total).div_ceil(n_workers).max(2 * max_item)
+            };
+            let ws = workers(n_workers, budget);
+            let loads: Vec<usize> = (0..n_workers)
+                .map(|_| rng.usize_in(0, 16)).collect();
+
+            for name in ["affinity", "least-loaded", "delta-aware"] {
+                let p = policy_by_name(name).unwrap();
+                let placed = p.place(&ts, &ws).unwrap();
+                let replay = p.place(&ts, &ws).unwrap();
+                for t in &ts {
+                    let cands = placed.workers_of(&t.name);
+                    assert!(!cands.is_empty(),
+                            "[{name}] {} unplaced", t.name);
+                    assert!(cands.iter().all(|&w| w < n_workers),
+                            "[{name}] {} on bogus worker {cands:?}",
+                            t.name);
+                    assert_eq!(cands, replay.workers_of(&t.name),
+                               "[{name}] placement not deterministic");
+                    let r = p.route(&t.name, cands,
+                                    &loads.as_slice()).unwrap();
+                    assert!(cands.contains(&r),
+                            "[{name}] routed {} off-replica", t.name);
+                }
+                match name {
+                    "affinity" => {
+                        for t in &ts {
+                            assert_eq!(placed.replica_count(&t.name),
+                                       1);
+                        }
+                    }
+                    "least-loaded" => {
+                        for t in &ts {
+                            assert_eq!(placed.replica_count(&t.name),
+                                       n_workers);
+                        }
+                    }
+                    _ => {
+                        for w in 0..n_workers {
+                            assert!(placed.placed_bytes(w) <= budget,
+                                    "[delta-aware] worker {w}: {} > \
+budget {budget}", placed.placed_bytes(w));
+                        }
+                        for t in &ts {
+                            let want = ((t.weight * n_workers as f64)
+                                        .ceil() as usize)
+                                .clamp(1, n_workers);
+                            let got = placed.replica_count(&t.name);
+                            assert!(got <= want,
+                                    "[delta-aware] {} over-replicated \
+{got} > {want}", t.name);
+                            if ample {
+                                assert_eq!(got, want,
+                                           "[delta-aware] {} under \
+ample budget: {got} != {want}", t.name);
+                            }
+                            if want == 1 {
+                                assert_eq!(got, 1,
+                                           "[delta-aware] cold tenant \
+{} replicated", t.name);
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
 }

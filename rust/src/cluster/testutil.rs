@@ -1,6 +1,9 @@
 //! Deterministic fake [`WorkerCore`] — lets cluster scheduling,
 //! failover, and metrics rollup be unit-tested without artifacts or a
-//! PJRT runtime.
+//! PJRT runtime. Compiled into the library proper (not `cfg(test)`)
+//! because [`crate::simharness`] drives real clusters over these
+//! mocks; the step delay goes through the [`crate::sync::clock`] seam
+//! so a simulated core's service time dilates with virtual time.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -21,7 +24,9 @@ pub fn req(tenant: &str) -> Request {
               max_new_tokens: 4, sampling: SamplingParams::greedy() }
 }
 
-/// Uniform-weight tenant profiles, `bytes` resident each.
+/// Uniform-weight tenant profiles, `bytes` resident each. (Unit-test
+/// only: the simulation harness generates its own populations.)
+#[cfg_attr(not(test), allow(dead_code))]
 pub fn profiles(names: &[&str], bytes: usize) -> Vec<TenantProfile> {
     let w = 1.0 / names.len() as f64;
     names.iter().map(|n| TenantProfile {
@@ -31,7 +36,10 @@ pub fn profiles(names: &[&str], bytes: usize) -> Vec<TenantProfile> {
 }
 
 /// Elastic worker factory minting [`MockCore`]s with a per-step delay
-/// (zero = as fast as the pump loop spins).
+/// (zero = as fast as the pump loop spins). (Unit-test only: the
+/// harness wires kill switches into its factory, see
+/// `simharness::harness`.)
+#[cfg_attr(not(test), allow(dead_code))]
 pub fn elastic_mock(step_delay: Duration) -> WorkerFactoryFn {
     Box::new(move |id| {
         let f: CoreFactory = Box::new(move || {
@@ -92,7 +100,8 @@ impl WorkerCore for MockCore {
             }
         }
         if let Some(d) = self.step_delay {
-            crate::sync::thread::sleep(d);
+            // virtual under an installed sim clock, real otherwise
+            crate::sync::clock::sleep(d);
         }
         if let Some((req, tx)) = self.queue.pop_front() {
             let id = self.next_id;

@@ -18,6 +18,12 @@
 //!   up) releases the slot. Rejections are typed ([`AdmissionError`])
 //!   so load generators can count shed load separately from real
 //!   failures.
+//!
+//! The gate is deliberately time-free: no deadlines, no rate windows —
+//! only live counts, released by RAII. That makes it clock-agnostic
+//! (identical behavior under the `crate::sync::clock` virtual clock),
+//! and the `raw-time` house-lint rule keeps wall-clock reads from
+//! creeping in.
 
 use std::collections::HashMap;
 

@@ -91,6 +91,7 @@ pub const EXPORTED_SERIES: &[&str] = &[
     "bitdelta_cluster_drain_us_count",
     "bitdelta_cluster_drain_us_sum",
     "bitdelta_cluster_failovers_total",
+    "bitdelta_cluster_placement_degraded",
     "bitdelta_cluster_replaced_tenants_total",
     "bitdelta_cluster_routed_total",
     "bitdelta_cluster_scale_events_total",

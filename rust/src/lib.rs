@@ -56,6 +56,7 @@ pub mod quant;
 pub mod runtime;
 pub mod serving;
 pub mod sim;
+pub mod simharness;
 pub mod store;
 pub mod sync;
 pub mod tensor;

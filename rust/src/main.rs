@@ -607,11 +607,12 @@ fn loadtest_cluster(artifacts: &Path, requests: usize, rate: f64,
                                                              usize>,
                     kvf: KvFlags)
                     -> Result<()> {
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     use bitdelta::cluster::{apply_trace_weights, policy_by_name,
                             replay_trace, tenant_profiles, Autoscaler,
                             AutoscalerConfig, Cluster, ClusterConfig};
+    use bitdelta::sync::clock::{self, Instant};
     use bitdelta::coordinator::admission::AdmissionPolicy;
     use bitdelta::coordinator::workload::{generate, stats, TraceConfig};
 
@@ -698,7 +699,7 @@ policy {policy}, {clients} client threads"),
         let t0 = Instant::now();
         while handle.active_workers() > min_w
             && t0.elapsed() < Duration::from_secs(20) {
-            bitdelta::sync::thread::sleep(Duration::from_millis(20));
+            clock::sleep(Duration::from_millis(20));
         }
         s.stop();
     }

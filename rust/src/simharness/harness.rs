@@ -1,0 +1,520 @@
+//! The simulation driver: a real [`Cluster`] on a virtual clock.
+//!
+//! Everything here is the production code path — real
+//! [`ClusterHandle`] routing, real placement policies, a real
+//! [`Autoscaler`] control loop, the real admission gate — driven over
+//! mock [`crate::cluster::testutil::MockCore`]s whose service time
+//! goes through the [`crate::sync::clock`] seam. The driver owns the
+//! only call to [`clock::advance`]: each tick it fires due
+//! [`FaultSchedule`] events, submits due trace arrivals, harvests
+//! resolved tickets, runs the [`InvariantMonitor`], then advances
+//! virtual time by one quantum (with one *real* sub-millisecond nap so
+//! the worker / autoscaler OS threads get scheduled — the single
+//! wall-clock dependency, which paces but never orders the
+//! simulation).
+//!
+//! Determinism boundary, stated honestly: the tenant population, the
+//! arrival trace and the fault schedule are bit-deterministic per
+//! seed; OS thread interleavings are not. The monitor therefore checks
+//! *safety* properties that must hold under every interleaving, and a
+//! failing run's seed + schedule reproduce the same scripted inputs
+//! exactly (throughput-style counts may wiggle run to run; violations
+//! must stay at zero on every run).
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::autoscaler::{Autoscaler, AutoscalerConfig};
+use crate::cluster::frontend::{
+    Cluster, ClusterConfig, ClusterHandle, ClusterTicket,
+    WorkerFactoryFn,
+};
+use crate::cluster::placement::{policy_by_name, RouteError};
+use crate::cluster::testutil::{req, MockCore};
+use crate::cluster::worker::{CoreFactory, WorkerCore};
+use crate::coordinator::admission::{AdmissionError, AdmissionPolicy};
+use crate::coordinator::workload::{
+    self, ArrivalPattern, TraceConfig, TraceEvent,
+};
+use crate::sync::clock;
+
+use super::monitor::{InvariantMonitor, Violation};
+use super::schedule::{FaultEvent, FaultSchedule};
+use super::tenants::{
+    generate_population, tenant_name, PopulationConfig,
+};
+
+/// What one simulation run produced. `violations` empty means every
+/// invariant held on every tick; the counts are descriptive (they may
+/// wiggle run-to-run with OS scheduling — only the violations are the
+/// pass/fail signal).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub seed: u64,
+    /// The driven schedule, in its printable DSL form.
+    pub schedule: String,
+    pub ticks: u64,
+    pub violations: Vec<Violation>,
+    pub submitted: u64,
+    pub served: u64,
+    pub errored: u64,
+    pub rejected: u64,
+    /// Submits that failed with a typed `RouteError` (no routable
+    /// replica — a schedule that killed every survivor). Legal, typed,
+    /// and permit-releasing; counted so tests can require them.
+    pub route_errors: u64,
+    /// Submits that failed with anything *else* — always a bug signal
+    /// (the route path must only fail typed).
+    pub submit_errors: u64,
+    /// Schedule events the cluster refused (e.g. retiring an
+    /// already-dead slot) — legal outcomes, counted for visibility.
+    pub event_errors: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub failovers: u64,
+    pub final_workers: usize,
+    pub final_active: usize,
+}
+
+/// Everything a simulation run is parameterized by. All randomness
+/// derives from `seed`.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub seed: u64,
+    /// Population size (10^4 for the CI smoke tier, 10^5–10^6 soak).
+    pub n_tenants: usize,
+    pub initial_workers: usize,
+    /// Placement policy name (see `policy_by_name`).
+    pub policy: String,
+    /// Zipf exponent shared by the population weights and the trace.
+    pub zipf_s: f64,
+    /// Total trace arrivals over the run.
+    pub requests: usize,
+    /// Virtual length of the driven window, milliseconds.
+    pub sim_ms: u64,
+    /// Virtual time advanced per driver tick.
+    pub quantum: Duration,
+    /// Mock per-request service time (virtual).
+    pub step_delay: Duration,
+    /// Valley arrival rate, requests per virtual second.
+    pub rate: f64,
+    pub pattern: ArrivalPattern,
+    pub admission: Option<AdmissionPolicy>,
+    pub autoscaler: Option<AutoscalerConfig>,
+    /// Fault injection for the monitor's own regression test: never
+    /// harvest any ticket, so admission permits are held past quiesce
+    /// and the hung-ticket / permit-leak invariants must fire.
+    pub leak_tickets: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            n_tenants: 500,
+            initial_workers: 2,
+            policy: "delta-aware".into(),
+            zipf_s: 1.0,
+            requests: 200,
+            sim_ms: 250,
+            quantum: Duration::from_millis(1),
+            step_delay: Duration::from_millis(1),
+            rate: 1_000.0,
+            pattern: ArrivalPattern::Steady,
+            admission: Some(AdmissionPolicy {
+                per_tenant_cap: 16,
+                total_cap: 64,
+            }),
+            autoscaler: None,
+            leak_tickets: false,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The CI smoke tier: 10^4 tenants, square-wave load that forces
+    /// autoscale oscillation, an admission gate tight enough to shed
+    /// storms. Pairs with [`smoke_schedule`]. Completes in seconds.
+    pub fn smoke(seed: u64) -> Self {
+        Self {
+            seed,
+            n_tenants: 10_000,
+            initial_workers: 3,
+            requests: 2_500,
+            sim_ms: 1_200,
+            rate: 1_200.0,
+            pattern: ArrivalPattern::Burst {
+                half_period: 0.2,
+                high_mult: 4.0,
+            },
+            autoscaler: Some(AutoscalerConfig {
+                min_workers: 2,
+                max_workers: 6,
+                high_watermark: 6.0,
+                low_watermark: 0.5,
+                up_ticks: 2,
+                down_ticks: 4,
+                cooldown_ticks: 2,
+                interval: Duration::from_millis(4),
+            }),
+            ..Self::default()
+        }
+    }
+}
+
+/// The canonical smoke schedule: every fault kind, including the
+/// kill-mid-drain pair (retire slot 1, then kill it one virtual ms
+/// later, while its drain is still joining) and a kill landing in the
+/// post-churn re-placement window.
+pub fn smoke_schedule() -> FaultSchedule {
+    FaultSchedule::new()
+        .at_ms(100, FaultEvent::SpawnWorker)
+        .at_ms(200, FaultEvent::RetireWorker { slot: 1 })
+        .at_ms(201, FaultEvent::KillWorker { slot: 1 })
+        .at_ms(350, FaultEvent::KillWorker { slot: 0 })
+        .at_ms(500, FaultEvent::DeltaChurn { reseed: 1 })
+        .at_ms(520, FaultEvent::CompactSlots)
+        .at_ms(600, FaultEvent::AdmissionStorm {
+            tenant_rank: 0,
+            burst: 256,
+        })
+        .at_ms(700, FaultEvent::DeltaChurn { reseed: 2 })
+        .at_ms(750, FaultEvent::SpawnWorker)
+        .at_ms(900, FaultEvent::RetireWorker { slot: 3 })
+}
+
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One real sub-millisecond nap per virtual tick, so worker /
+/// autoscaler threads get CPU between advances. Pacing only — it never
+/// orders events, which is why it is the one blessed wall-clock sleep
+/// in the harness.
+fn pace() {
+    // lint: allow(raw-time, the driver's single real pacing nap —
+    // virtual time cannot schedule OS threads)
+    crate::sync::thread::sleep(Duration::from_micros(150));
+}
+
+fn pop_cfg(cfg: &SimConfig) -> PopulationConfig {
+    PopulationConfig {
+        n_tenants: cfg.n_tenants,
+        zipf_s: cfg.zipf_s,
+        min_bytes: 512,
+        max_bytes: 4096,
+    }
+}
+
+fn harvest(tickets: &mut Vec<ClusterTicket>,
+           mon: &mut InvariantMonitor) {
+    tickets.retain(|t| match t.try_recv() {
+        None => true,
+        Some(Ok(_)) => {
+            mon.resolved_ok += 1;
+            false
+        }
+        Some(Err(_)) => {
+            mon.resolved_err += 1;
+            false
+        }
+    });
+}
+
+/// Drive one simulation run to completion. Setup failures (bad policy
+/// name, impossible initial packing) are `Err`; invariant violations
+/// are *not* — they come back in the report so the caller can print
+/// the seed and schedule.
+pub fn run(cfg: &SimConfig, schedule: &FaultSchedule)
+           -> Result<SimReport> {
+    let guard = clock::install();
+    let t0 = clock::virtual_now();
+
+    // -- deterministic inputs ----------------------------------------
+    let pop = generate_population(cfg.seed, &pop_cfg(cfg));
+    let total: usize = pop.iter().map(|t| t.resident_bytes).sum();
+    let max_item = pop.iter().map(|t| t.resident_bytes).max()
+        .unwrap_or(1);
+    // 3x headroom over an even split, and never tighter than a few of
+    // the largest deltas: the initial FFD packing must succeed, and
+    // any surviving subset of workers must be able to absorb a
+    // re-placement (the budget invariant still binds per worker)
+    let budget = (3 * total / cfg.initial_workers.max(1))
+        .max(4 * max_item);
+    let trace = workload::generate(&TraceConfig {
+        n_tenants: cfg.n_tenants.min(20_000),
+        n_requests: cfg.requests,
+        rate: cfg.rate,
+        zipf_s: cfg.zipf_s,
+        min_tokens: 2,
+        max_tokens: 6,
+        seed: cfg.seed,
+        pattern: cfg.pattern,
+    });
+
+    // -- real cluster over killable mock cores -----------------------
+    // worker factory ids equal slot indices (both start at
+    // `initial_workers` and increment in lockstep; slots are
+    // append-only), so the kill registry can key by factory id
+    let kills: Arc<Mutex<HashMap<usize, Arc<AtomicBool>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let kills_f = kills.clone();
+    let step = cfg.step_delay;
+    let make: WorkerFactoryFn = Box::new(move |id| {
+        let kill = Arc::new(AtomicBool::new(false));
+        locked(&kills_f).insert(id, kill.clone());
+        let f: CoreFactory = Box::new(move || {
+            Ok(Box::new(MockCore::new(id)
+                        .with_kill_switch(kill.clone())
+                        .with_step_delay(step))
+               as Box<dyn WorkerCore>)
+        });
+        f
+    });
+    let ccfg = ClusterConfig {
+        policy: policy_by_name(&cfg.policy)?,
+        delta_budget_bytes: budget,
+        admission: cfg.admission,
+    };
+    let cluster =
+        Cluster::spawn_elastic(&ccfg, pop, cfg.initial_workers, make)
+            .context("simharness: cluster spawn")?;
+    let handle = cluster.handle();
+    let scaler = cfg.autoscaler.clone()
+        .map(|a| Autoscaler::spawn(handle.clone(), a));
+
+    // -- driver loop -------------------------------------------------
+    let cap = cfg.admission.map(|p| p.total_cap);
+    let mut mon = InvariantMonitor::new(cfg.policy == "delta-aware");
+    let mut tickets: Vec<ClusterTicket> = Vec::new();
+    let mut leaked: Vec<ClusterTicket> = Vec::new();
+    let mut helpers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut ev_cursor = 0usize;
+    let mut tr_cursor = 0usize;
+    let mut event_errors = 0u64;
+    let quantum_ms = (cfg.quantum.as_millis().max(1)) as u64;
+    let ticks = cfg.sim_ms.max(1) / quantum_ms;
+
+    let mut errs = SubmitErrors::default();
+    let submit_one = |tenant: usize,
+                          mon: &mut InvariantMonitor,
+                          tickets: &mut Vec<ClusterTicket>,
+                          leaked: &mut Vec<ClusterTicket>,
+                          errs: &mut SubmitErrors| {
+        match handle.submit(req(&tenant_name(tenant))) {
+            Ok(t) => {
+                mon.submitted_ok += 1;
+                if cfg.leak_tickets {
+                    leaked.push(t);
+                } else {
+                    tickets.push(t);
+                }
+            }
+            Err(e) if e.downcast_ref::<AdmissionError>()
+                .is_some() => mon.rejected += 1,
+            Err(e) if e.downcast_ref::<RouteError>()
+                .is_some() => errs.route += 1,
+            Err(_) => errs.other += 1,
+        }
+    };
+
+    for tick in 0..ticks {
+        let now = clock::virtual_now().saturating_sub(t0);
+        let mut fired = false;
+
+        while ev_cursor < schedule.events().len()
+            && schedule.events()[ev_cursor].at <= now
+        {
+            let ev = schedule.events()[ev_cursor].event.clone();
+            ev_cursor += 1;
+            fired = true;
+            match ev {
+                FaultEvent::KillWorker { slot } => {
+                    if let Some(k) = locked(&kills).get(&slot) {
+                        k.store(true, Ordering::Relaxed);
+                    }
+                }
+                FaultEvent::RetireWorker { slot } => {
+                    // the drain join blocks until the worker empties
+                    // its queue, which needs the driver to keep
+                    // advancing — so it runs on a helper thread
+                    let h = handle.clone();
+                    helpers.push(std::thread::spawn(move || {
+                        // kill-mid-drain makes this Err by design
+                        let _ = h.retire_worker_floor(slot, 1);
+                    }));
+                }
+                FaultEvent::SpawnWorker => {
+                    let before = handle.n_workers();
+                    match handle.spawn_worker() {
+                        Ok(idx) if idx < before => {
+                            mon.violation(now, "slot-stability",
+                                format!("spawn returned recycled \
+slot {idx} (table already had {before})"));
+                        }
+                        Ok(_) => {}
+                        Err(_) => event_errors += 1,
+                    }
+                }
+                FaultEvent::AdmissionStorm { tenant_rank, burst } => {
+                    for _ in 0..burst {
+                        submit_one(tenant_rank, &mut mon,
+                                   &mut tickets, &mut leaked,
+                                   &mut errs);
+                    }
+                }
+                FaultEvent::DeltaChurn { reseed } => {
+                    let churn_seed = cfg.seed
+                        ^ reseed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                    let next = generate_population(
+                        churn_seed, &pop_cfg(cfg));
+                    if handle.update_tenants(next).is_err() {
+                        event_errors += 1;
+                    }
+                }
+                FaultEvent::CompactSlots => {
+                    let before = handle.n_workers();
+                    handle.compact_slots();
+                    if handle.n_workers() < before {
+                        mon.violation(now, "slot-stability",
+                            format!("compaction shrank the slot \
+table below {before}"));
+                    }
+                }
+            }
+        }
+
+        while tr_cursor < trace.len()
+            && duration_of(&trace[tr_cursor]) <= now
+        {
+            let tenant = trace[tr_cursor].tenant;
+            tr_cursor += 1;
+            submit_one(tenant, &mut mon, &mut tickets, &mut leaked,
+                       &mut errs);
+        }
+
+        harvest(&mut tickets, &mut mon);
+        mon.check_tick(&handle, now, cap);
+        if fired || tick % 32 == 0 {
+            mon.check_placement(&handle, now);
+        }
+
+        clock::advance(cfg.quantum);
+        pace();
+    }
+
+    // -- quiesce: drain outstanding work in virtual time -------------
+    let mut spare = 0u64;
+    while spare < 4 * ticks.max(500) {
+        harvest(&mut tickets, &mut mon);
+        if tickets.is_empty()
+            && helpers.iter().all(|h| h.is_finished())
+        {
+            break;
+        }
+        clock::advance(cfg.quantum);
+        pace();
+        spare += 1;
+    }
+    let now = clock::virtual_now().saturating_sub(t0);
+    mon.check_placement(&handle, now);
+    mon.check_quiesced(&handle, now,
+                       tickets.len() + leaked.len());
+
+    // -- report, then teardown in real time --------------------------
+    let (scale_ups, scale_downs) = handle.scale_events();
+    let failovers =
+        metric_u64(&handle.metrics(),
+                   "bitdelta_cluster_failovers_total");
+    let report = SimReport {
+        seed: cfg.seed,
+        schedule: schedule.to_string(),
+        ticks: ticks + spare,
+        violations: mon.violations().to_vec(),
+        submitted: mon.submitted_ok,
+        served: mon.resolved_ok,
+        errored: mon.resolved_err,
+        rejected: mon.rejected,
+        route_errors: errs.route,
+        submit_errors: errs.other,
+        event_errors,
+        scale_ups,
+        scale_downs,
+        failovers,
+        final_workers: handle.n_workers(),
+        final_active: handle.active_workers(),
+    };
+
+    // uninstall the clock *before* joining anything: remaining sleeps
+    // (worker steps, the autoscaler interval) become real and short,
+    // so the joins below cannot deadlock on frozen virtual time
+    drop(leaked);
+    drop(guard);
+    for h in helpers {
+        let _ = h.join();
+    }
+    if let Some(s) = scaler {
+        s.stop();
+    }
+    // killed workers make shutdown report their (expected) deaths;
+    // the run's failure signal is the monitor, not this error
+    let _ = cluster.shutdown();
+    Ok(report)
+}
+
+fn duration_of(e: &TraceEvent) -> Duration {
+    Duration::from_secs_f64(e.at.max(0.0))
+}
+
+/// Driver-side submit failure tally (see the report fields).
+#[derive(Debug, Default)]
+struct SubmitErrors {
+    route: u64,
+    other: u64,
+}
+
+/// First `name <value>` line of a Prometheus-style exposition.
+fn metric_u64(text: &str, name: &str) -> u64 {
+    text.lines()
+        .filter_map(|l| l.strip_prefix(name))
+        .find_map(|rest| rest.trim().parse::<u64>().ok())
+        .unwrap_or(0)
+}
+
+impl SimReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable failure block: the seed to replay, the schedule
+    /// that was driven, every violation. This is what the soak CI job
+    /// uploads as its artifact.
+    pub fn render_failure(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "simulation seed {} — replay with \
+SIM_SEED={}", self.seed, self.seed);
+        let _ = writeln!(out, "schedule:");
+        for line in self.schedule.lines() {
+            let _ = writeln!(out, "  {line}");
+        }
+        let _ = writeln!(out, "violations ({}):",
+                         self.violations.len());
+        for v in &self.violations {
+            let _ = writeln!(out, "  {v}");
+        }
+        let _ = writeln!(out,
+            "counts: submitted={} served={} errored={} rejected={} \
+route_errors={} submit_errors={} event_errors={} scale=+{}/-{} \
+failovers={} workers={}/{} active",
+            self.submitted, self.served, self.errored, self.rejected,
+            self.route_errors, self.submit_errors, self.event_errors,
+            self.scale_ups, self.scale_downs, self.failovers,
+            self.final_active, self.final_workers);
+        out
+    }
+}

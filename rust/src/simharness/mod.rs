@@ -1,0 +1,43 @@
+//! Deterministic simulation harness for the cluster layer.
+//!
+//! The cluster's hardest bugs — hung tickets after a worker dies
+//! mid-drain, leaked admission permits, placements pointing at dead
+//! workers, autoscaler oscillation races — live in timing windows that
+//! wall-clock tests hit once in a thousand runs. This harness makes
+//! those windows schedulable: it runs the **real** cluster stack
+//! (routing, placement, failover, graceful drain, the autoscaler
+//! control loop, the admission gate) over mock worker cores on the
+//! [`crate::sync::clock`] virtual clock, drives it with a seeded Zipf
+//! tenant population (10^4–10^6 tenants) and a declarative
+//! [`schedule::FaultSchedule`], and checks invariants *continuously*
+//! with the [`monitor::InvariantMonitor`].
+//!
+//! Layout:
+//!
+//! * [`tenants`]  — seeded population generator (names, sizes, tiers,
+//!   codecs, Zipf weights), bit-deterministic per seed;
+//! * [`schedule`] — the fault DSL: kills (incl. mid-drain), retires,
+//!   spawns, admission storms, delta hot-churn, compaction — printable
+//!   one event per line for CI artifacts;
+//! * [`monitor`]  — the invariant oracle (no double-routing, admission
+//!   within budget, tenants always routable, per-worker delta bytes
+//!   within budget, append-only slot table, nothing hung at quiesce);
+//! * [`harness`]  — the driver: one tick = fire faults, submit
+//!   arrivals, harvest tickets, check invariants, advance the clock.
+//!
+//! A failing run's [`SimReport`] renders the seed and the schedule —
+//! `SimConfig::smoke(seed)` + the same schedule replays the identical
+//! scripted inputs. The smoke tier (10^4 tenants, every fault kind,
+//! seconds of wall time) runs in default `cargo test` via
+//! `tests/sim_cluster.rs`; the nightly soak tier scales the population
+//! to 10^5–10^6 with rotating seeds.
+
+pub mod harness;
+pub mod monitor;
+pub mod schedule;
+pub mod tenants;
+
+pub use harness::{run, smoke_schedule, SimConfig, SimReport};
+pub use monitor::{InvariantMonitor, Violation};
+pub use schedule::{FaultEvent, FaultSchedule, ScheduledFault};
+pub use tenants::{generate_population, tenant_name, PopulationConfig};

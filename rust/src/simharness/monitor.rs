@@ -1,0 +1,186 @@
+//! Continuous invariant checking over a live cluster.
+//!
+//! The [`InvariantMonitor`] is the harness's oracle: the driver feeds
+//! it its own request bookkeeping (it is the only submitter) and the
+//! monitor cross-checks that against the cluster's observable state
+//! every tick. All checks are *safety* properties — they must hold
+//! under every OS interleaving, which is what makes them meaningful
+//! even though only the schedule (not the thread scheduler) is
+//! deterministic. The invariant vocabulary is stable, asserted by the
+//! regression tests:
+//!
+//! * `no-double-routing` — the per-slot routed counters sum exactly to
+//!   the requests the driver successfully submitted; a request routed
+//!   to two workers (or zero) breaks the equality.
+//! * `admission-in-flight` — the gate's live count never exceeds its
+//!   global budget, and returns to zero once every ticket resolved.
+//! * `slot-stability` — the slot table only appends: worker indices
+//!   survive retires, deaths and compaction (placements and metrics
+//!   labels key on them).
+//! * `tenant-routable` — every placed tenant keeps at least one
+//!   replica on a routable worker (checked against a single-lock
+//!   [`RoutingSnapshot`], so placement and liveness are consistent).
+//! * `delta-budget` — no routable worker's placed delta bytes exceed
+//!   its budget, unless the placement honestly declared itself
+//!   degraded (the everything-everywhere fallback).
+//! * `hung-tickets` / `bookkeeping` — at quiesce, no ticket is still
+//!   unresolved and submitted == served + errored.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::cluster::frontend::ClusterHandle;
+
+/// One invariant violation, timestamped in virtual time.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub at: Duration,
+    /// Stable invariant name (see the module docs).
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[t+{}ms] {}: {}",
+               self.at.as_millis(), self.invariant, self.detail)
+    }
+}
+
+/// Driver-side bookkeeping plus the invariant checks.
+#[derive(Debug, Default)]
+pub struct InvariantMonitor {
+    /// Requests the driver submitted and got a ticket for.
+    pub submitted_ok: u64,
+    /// Typed admission rejections (shed load, not failures).
+    pub rejected: u64,
+    /// Tickets resolved with a response.
+    pub resolved_ok: u64,
+    /// Tickets resolved with an error (failover casualties).
+    pub resolved_err: u64,
+    /// Enforce the `delta-budget` invariant (off for policies that
+    /// place without budgets, e.g. least-loaded).
+    pub check_budget: bool,
+    last_n_workers: usize,
+    violations: Vec<Violation>,
+}
+
+impl InvariantMonitor {
+    pub fn new(check_budget: bool) -> Self {
+        Self { check_budget, ..Self::default() }
+    }
+
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Outstanding tickets by the driver's own arithmetic.
+    pub fn outstanding(&self) -> u64 {
+        self.submitted_ok
+            .saturating_sub(self.resolved_ok + self.resolved_err)
+    }
+
+    /// Record a violation found by the driver itself (e.g. a spawn
+    /// returning a recycled slot index).
+    pub fn violation(&mut self, at: Duration, invariant: &'static str,
+                     detail: String) {
+        self.violations.push(Violation { at, invariant, detail });
+    }
+
+    /// Cheap per-tick checks: routed-count conservation, admission
+    /// budget, slot-table monotonicity.
+    pub fn check_tick(&mut self, handle: &ClusterHandle, at: Duration,
+                      admission_cap: Option<usize>) {
+        let routed: u64 = handle.routed_counts().iter().sum();
+        if routed != self.submitted_ok {
+            self.violation(at, "no-double-routing", format!(
+                "slots routed {} requests, driver submitted {}",
+                routed, self.submitted_ok));
+        }
+        if let (Some(cap), Some(in_flight)) =
+            (admission_cap, handle.admission_in_flight())
+        {
+            if in_flight > cap {
+                self.violation(at, "admission-in-flight", format!(
+                    "gate holds {in_flight} > budget {cap}"));
+            }
+        }
+        let n = handle.n_workers();
+        if n < self.last_n_workers {
+            self.violation(at, "slot-stability", format!(
+                "slot table shrank {} -> {n}", self.last_n_workers));
+        }
+        self.last_n_workers = n;
+    }
+
+    /// Heavier placement checks (clones the placement): every tenant
+    /// routable, budgets respected. Run on fault ticks and on a
+    /// coarse cadence — at 10^6 tenants this is the expensive check.
+    pub fn check_placement(&mut self, handle: &ClusterHandle,
+                           at: Duration) {
+        let snap = handle.routing_snapshot();
+        if snap.routable.is_empty() {
+            // nothing to route to at all — a schedule that kills every
+            // worker; the routing invariants are vacuous, submits
+            // surface typed RouteErrors instead
+            return;
+        }
+        let mut unroutable = 0usize;
+        let mut example = String::new();
+        for t in snap.placement.tenants() {
+            let ws = snap.placement.workers_of(t);
+            if !ws.iter().any(|w| snap.routable.contains(w)) {
+                unroutable += 1;
+                if example.is_empty() {
+                    example = format!("{t} -> {ws:?}");
+                }
+            }
+        }
+        if unroutable > 0 {
+            self.violation(at, "tenant-routable", format!(
+                "{unroutable} tenant(s) without a routable replica \
+(routable {:?}; first: {example})", snap.routable));
+        }
+        if self.check_budget && !snap.degraded {
+            let budget = handle.delta_budget_bytes();
+            for &w in &snap.routable {
+                let placed = snap.placement.placed_bytes(w);
+                if placed > budget {
+                    self.violation(at, "delta-budget", format!(
+                        "worker {w} holds {placed} B > budget \
+{budget} B (placement not degraded)"));
+                }
+            }
+        }
+    }
+
+    /// End-of-run checks, after the drain window: nothing hung,
+    /// admission fully released, arithmetic closed.
+    pub fn check_quiesced(&mut self, handle: &ClusterHandle,
+                          at: Duration, tickets_open: usize) {
+        if tickets_open > 0 || self.outstanding() > 0 {
+            self.violation(at, "hung-tickets", format!(
+                "{tickets_open} ticket(s) still unresolved after \
+quiesce ({} by driver arithmetic)", self.outstanding()));
+        }
+        if let Some(in_flight) = handle.admission_in_flight() {
+            if in_flight > 0 {
+                self.violation(at, "admission-in-flight", format!(
+                    "gate still holds {in_flight} permit(s) after \
+quiesce — a permit leaked"));
+            }
+        }
+        if self.submitted_ok
+            != self.resolved_ok + self.resolved_err + tickets_open as u64
+        {
+            self.violation(at, "bookkeeping", format!(
+                "submitted {} != served {} + errored {} + open {}",
+                self.submitted_ok, self.resolved_ok,
+                self.resolved_err, tickets_open));
+        }
+    }
+}

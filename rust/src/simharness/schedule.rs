@@ -1,0 +1,212 @@
+//! The declarative fault-schedule DSL.
+//!
+//! A [`FaultSchedule`] is a time-sorted list of [`FaultEvent`]s the
+//! harness driver fires against the cluster at virtual-time offsets:
+//! worker kills (including mid-drain, by pairing a kill right after a
+//! retire of the same slot), graceful retires, explicit spawns,
+//! admission storms, delta hot-churn re-placements and slot-table
+//! compactions. Schedules print as one event per line —
+//!
+//! ```text
+//! t+000200ms retire-worker slot=1
+//! t+000201ms kill-worker slot=1
+//! t+000600ms admission-storm tenant=0 burst=256
+//! ```
+//!
+//! — which is exactly what a failing CI run uploads next to its seed,
+//! so a failure is replayable from the artifact alone.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::util::prop::Rng;
+
+/// One fault the driver can inject.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Flip the slot's kill switch: its next `step` fails, modelling a
+    /// worker death (mid-flight, or mid-drain when paired with a
+    /// preceding [`FaultEvent::RetireWorker`] of the same slot).
+    KillWorker { slot: usize },
+    /// Graceful scale-down of one slot (runs on a helper thread — the
+    /// drain join must not block the virtual-clock driver).
+    RetireWorker { slot: usize },
+    /// Explicit scale-up through the elastic factory.
+    SpawnWorker,
+    /// Burst-submit `burst` requests for one tenant rank in a single
+    /// tick, driving the admission gate into typed rejections.
+    AdmissionStorm { tenant_rank: usize, burst: usize },
+    /// Delta hot-churn: regenerate the tenant population with a
+    /// perturbed seed (new sizes / tiers / weights, same names) and
+    /// re-place it on the live cluster.
+    DeltaChurn { reseed: u64 },
+    /// Sweep joined terminal slots; indices must not shift.
+    CompactSlots,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultEvent::KillWorker { slot } => {
+                write!(f, "kill-worker slot={slot}")
+            }
+            FaultEvent::RetireWorker { slot } => {
+                write!(f, "retire-worker slot={slot}")
+            }
+            FaultEvent::SpawnWorker => write!(f, "spawn-worker"),
+            FaultEvent::AdmissionStorm { tenant_rank, burst } => {
+                write!(f, "admission-storm tenant={tenant_rank} \
+burst={burst}")
+            }
+            FaultEvent::DeltaChurn { reseed } => {
+                write!(f, "delta-churn reseed={reseed}")
+            }
+            FaultEvent::CompactSlots => write!(f, "compact-slots"),
+        }
+    }
+}
+
+/// A fault at a virtual-time offset from simulation start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduledFault {
+    pub at: Duration,
+    pub event: FaultEvent,
+}
+
+/// A time-sorted fault script. Built with [`FaultSchedule::at_ms`]
+/// (insertion order is preserved among events at the same instant, so
+/// "retire then kill" pairs stay ordered).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    events: Vec<ScheduledFault>,
+}
+
+impl FaultSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an event at `ms` virtual milliseconds, keeping the
+    /// script sorted (stable, so same-instant events keep build order).
+    pub fn at_ms(mut self, ms: u64, event: FaultEvent) -> Self {
+        self.events.push(ScheduledFault {
+            at: Duration::from_millis(ms),
+            event,
+        });
+        self.events.sort_by_key(|e| e.at);
+        self
+    }
+
+    pub fn events(&self) -> &[ScheduledFault] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// A seed-derived schedule covering every fault kind — the soak
+    /// generator. Events land in `[horizon/10, horizon)` virtual ms;
+    /// kills / retires target slots `< slot_hint` (initial workers
+    /// plus early spawns). Retires get a trailing same-slot kill half
+    /// the time, exercising the kill-mid-drain race. Deterministic per
+    /// seed.
+    pub fn random(seed: u64, horizon_ms: u64, slot_hint: usize)
+                  -> Self {
+        let mut rng = Rng::new(seed ^ 0x5eed_5c4e_d01e_5eed);
+        let lo = (horizon_ms / 10).max(1) as usize;
+        let hi = horizon_ms.max(2) as usize;
+        let mut s = Self::new();
+        let n = 6 + rng.usize_in(0, 6);
+        for _ in 0..n {
+            let at = rng.usize_in(lo, hi) as u64;
+            let slot = rng.usize_in(0, slot_hint.max(1));
+            match rng.usize_in(0, 6) {
+                0 => {
+                    s = s.at_ms(at, FaultEvent::KillWorker { slot });
+                }
+                1 => {
+                    s = s.at_ms(at,
+                                FaultEvent::RetireWorker { slot });
+                    if rng.bool() {
+                        // kill mid-drain
+                        s = s.at_ms(at + 1,
+                                    FaultEvent::KillWorker { slot });
+                    }
+                }
+                2 => s = s.at_ms(at, FaultEvent::SpawnWorker),
+                3 => {
+                    let burst = 64 + rng.usize_in(0, 512);
+                    s = s.at_ms(at, FaultEvent::AdmissionStorm {
+                        tenant_rank: rng.usize_in(0, 8),
+                        burst,
+                    });
+                }
+                4 => {
+                    s = s.at_ms(at, FaultEvent::DeltaChurn {
+                        reseed: rng.next_u64() | 1,
+                    });
+                }
+                _ => s = s.at_ms(at, FaultEvent::CompactSlots),
+            }
+        }
+        s
+    }
+}
+
+impl fmt::Display for FaultSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for e in &self.events {
+            writeln!(f, "t+{:06}ms {}", e.at.as_millis(), e.event)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sorts_and_keeps_same_instant_order() {
+        let s = FaultSchedule::new()
+            .at_ms(50, FaultEvent::SpawnWorker)
+            .at_ms(10, FaultEvent::RetireWorker { slot: 1 })
+            .at_ms(10, FaultEvent::KillWorker { slot: 1 });
+        let ev = s.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].event, FaultEvent::RetireWorker { slot: 1 });
+        assert_eq!(ev[1].event, FaultEvent::KillWorker { slot: 1 });
+        assert_eq!(ev[2].at, Duration::from_millis(50));
+    }
+
+    #[test]
+    fn display_prints_one_replayable_line_per_event() {
+        let s = FaultSchedule::new()
+            .at_ms(201, FaultEvent::KillWorker { slot: 1 })
+            .at_ms(600, FaultEvent::AdmissionStorm {
+                tenant_rank: 0, burst: 256,
+            });
+        let text = s.to_string();
+        assert_eq!(text, "t+000201ms kill-worker slot=1\n\
+                          t+000600ms admission-storm tenant=0 \
+burst=256\n");
+    }
+
+    #[test]
+    fn random_schedule_is_deterministic_and_in_horizon() {
+        let a = FaultSchedule::random(42, 1000, 4);
+        let b = FaultSchedule::random(42, 1000, 4);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        for e in a.events() {
+            // +1ms slack for the paired mid-drain kill
+            assert!(e.at <= Duration::from_millis(1001), "{e:?}");
+        }
+        assert_ne!(a, FaultSchedule::random(43, 1000, 4));
+    }
+}

@@ -135,6 +135,195 @@ pub mod thread {
     }
 }
 
+/// The time half of the shim: a process-global virtual clock.
+///
+/// Production code never reads `std::time::Instant` or calls a raw
+/// sleep in the migrated cluster/coordinator modules (the lint's
+/// `raw-time` rule); it calls [`clock::Instant::now`] and
+/// [`clock::sleep`] instead. With no virtual clock installed both are
+/// zero-cost aliases of wall time — one relaxed atomic load on the
+/// fast path. Under an installed clock (see [`clock::install`]) time
+/// is a `u64` nanosecond counter that only moves when a driver calls
+/// [`clock::advance`], and sleeps park on a condvar until the counter
+/// passes their deadline. This is the seam the deterministic
+/// simulation harness ([`crate::simharness`]) drives: autoscaler
+/// sampling, drain pacing, mock-core service time, and trace replay
+/// all dilate together, so a scripted fault schedule plays out
+/// identically regardless of machine load.
+///
+/// Semantics chosen for safety over cleverness:
+///
+/// * the virtual counter is **monotonic across installs** and never
+///   resets, so an `Instant` captured under one installation stays
+///   finite (frozen) after uninstall instead of dangling;
+/// * `Instant::Real` values always measure real elapsed time even
+///   while a virtual clock is installed (mixed-mode safe);
+/// * dropping the install guard wakes every parked sleeper — the
+///   remaining sleeps in the tree are pacing/polling loops that
+///   re-check their condition, so an early return is harmless;
+/// * [`clock::install`] holds a global mutex for the guard's
+///   lifetime, serializing virtual-time tests against each other
+///   under the parallel test harness.
+///
+/// The globals here use `std` primitives directly: like [`OnceLock`],
+/// the clock is process-global configuration outside every loom model
+/// (loom types cannot live in `static`s).
+pub mod clock {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+    use std::time::Duration;
+
+    /// Fast-path mirror of `State::active`, so `Instant::now()` and
+    /// `sleep()` cost one relaxed load when no clock is installed.
+    static VIRTUAL: AtomicBool = AtomicBool::new(false);
+
+    /// Serializes virtual-time tests: `install` holds this for the
+    /// guard's lifetime. Survives poisoning (a panicking sim test must
+    /// not cascade into every later one).
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    struct State {
+        active: bool,
+        now_nanos: u64,
+        sleepers: usize,
+    }
+
+    struct VirtualClock {
+        state: Mutex<State>,
+        cv: Condvar,
+    }
+
+    fn global() -> &'static VirtualClock {
+        static CLOCK: OnceLock<VirtualClock> = OnceLock::new();
+        CLOCK.get_or_init(|| VirtualClock {
+            state: Mutex::new(State {
+                active: false,
+                now_nanos: 0,
+                sleepers: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Clock state is a bool + two counters: nothing a panicking
+    /// holder can half-update, so poisoning is survivable here (unlike
+    /// [`super::lock`]'s fatal policy for invariant-carrying state).
+    fn state(c: &VirtualClock) -> MutexGuard<'_, State> {
+        c.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn nanos(d: Duration) -> u64 {
+        u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    /// Is a virtual clock currently installed?
+    pub fn is_virtual() -> bool {
+        VIRTUAL.load(Ordering::Relaxed)
+    }
+
+    /// Install the virtual clock for the guard's lifetime. Blocks
+    /// until any other holder (parallel test) releases it. Dropping
+    /// the guard uninstalls the clock and wakes every parked sleeper.
+    pub fn install() -> VirtualClockGuard {
+        let serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        let c = global();
+        state(c).active = true;
+        VIRTUAL.store(true, Ordering::Relaxed);
+        VirtualClockGuard { _serial: serial }
+    }
+
+    /// RAII handle returned by [`install`]; see there.
+    pub struct VirtualClockGuard {
+        _serial: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for VirtualClockGuard {
+        fn drop(&mut self) {
+            let c = global();
+            state(c).active = false;
+            VIRTUAL.store(false, Ordering::Relaxed);
+            c.cv.notify_all();
+        }
+    }
+
+    /// Advance virtual time by `d` and wake sleepers whose deadlines
+    /// passed. Only meaningful while a clock is installed; the counter
+    /// moves regardless (it is monotonic and shared across installs).
+    pub fn advance(d: Duration) {
+        let c = global();
+        let mut st = state(c);
+        st.now_nanos = st.now_nanos.saturating_add(nanos(d));
+        drop(st);
+        c.cv.notify_all();
+    }
+
+    /// Threads currently parked in [`sleep`] on the virtual clock.
+    /// Drivers use this to wait until workers are quiescent before
+    /// advancing, making wake-ups deterministic.
+    pub fn sleepers() -> usize {
+        state(global()).sleepers
+    }
+
+    /// The current virtual time as an offset from process start.
+    pub fn virtual_now() -> Duration {
+        Duration::from_nanos(state(global()).now_nanos)
+    }
+
+    /// Drop-in for `std::time::Instant` in migrated modules: real wall
+    /// time normally, a virtual timestamp under an installed clock.
+    #[derive(Clone, Copy, Debug)]
+    pub enum Instant {
+        Real(std::time::Instant),
+        Virtual(u64),
+    }
+
+    impl Instant {
+        pub fn now() -> Self {
+            if VIRTUAL.load(Ordering::Relaxed) {
+                Instant::Virtual(state(global()).now_nanos)
+            } else {
+                Instant::Real(std::time::Instant::now())
+            }
+        }
+
+        /// Real instants always measure real elapsed time (even under
+        /// an installed clock); virtual instants measure the distance
+        /// the virtual counter has moved, which freezes (stays finite)
+        /// once the clock is uninstalled.
+        pub fn elapsed(&self) -> Duration {
+            match self {
+                Instant::Real(t) => t.elapsed(),
+                Instant::Virtual(t0) => Duration::from_nanos(
+                    state(global()).now_nanos.saturating_sub(*t0),
+                ),
+            }
+        }
+    }
+
+    /// Drop-in for `thread::sleep` in migrated modules: a real sleep
+    /// normally; under an installed clock, parks until virtual time
+    /// passes the deadline (or the clock is uninstalled — pacing
+    /// loops re-check their condition, so early return is safe).
+    pub fn sleep(d: Duration) {
+        if !VIRTUAL.load(Ordering::Relaxed) {
+            return super::thread::sleep(d);
+        }
+        let c = global();
+        let mut st = state(c);
+        if !st.active {
+            drop(st);
+            return super::thread::sleep(d);
+        }
+        let deadline = st.now_nanos.saturating_add(nanos(d));
+        st.sleepers += 1;
+        while st.active && st.now_nanos < deadline {
+            st = c.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.sleepers -= 1;
+        drop(st);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +342,51 @@ mod tests {
             42
         });
         assert_eq!(h.join().expect("join"), 42);
+    }
+
+    #[test]
+    fn clock_is_real_time_when_not_installed() {
+        use std::time::Duration;
+        assert!(!clock::is_virtual());
+        let t0 = clock::Instant::now();
+        clock::sleep(Duration::from_millis(1));
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn virtual_sleep_wakes_exactly_on_advance() {
+        use std::time::Duration;
+        let guard = clock::install();
+        assert!(clock::is_virtual());
+        let t0 = clock::Instant::now();
+        let h = thread::spawn(|| {
+            let s0 = clock::Instant::now();
+            clock::sleep(Duration::from_millis(5));
+            s0.elapsed()
+        });
+        // wait for the sleeper to park, then move time exactly 5ms
+        while clock::sleepers() == 0 {
+            thread::yield_now();
+        }
+        clock::advance(Duration::from_millis(5));
+        let slept = h.join().expect("sleeper");
+        assert_eq!(slept, Duration::from_millis(5));
+        assert_eq!(t0.elapsed(), Duration::from_millis(5));
+        drop(guard);
+        assert!(!clock::is_virtual());
+    }
+
+    #[test]
+    fn uninstall_wakes_parked_sleepers() {
+        use std::time::Duration;
+        let guard = clock::install();
+        let h = thread::spawn(|| {
+            clock::sleep(Duration::from_secs(3600));
+        });
+        while clock::sleepers() == 0 {
+            thread::yield_now();
+        }
+        drop(guard); // must wake the hour-long virtual sleep
+        h.join().expect("sleeper woke on uninstall");
     }
 }

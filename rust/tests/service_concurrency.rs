@@ -2,6 +2,14 @@
 //! threads submitting at once, shutdown draining every in-flight
 //! request, and clean errors (never hangs) after shutdown. Skipped
 //! cleanly when artifacts are missing.
+//!
+//! Wall-clock-free by contract: these tests synchronize on channels
+//! and joins only — no sleep pacing, no `Instant` deadlines — so they
+//! cannot go flaky under load and stay valid under the virtual clock.
+//! The `raw-time` rule of `cargo xtask lint` enforces that this file
+//! stays that way (any timing-dependent scenario belongs in the
+//! `bitdelta::simharness` virtual-clock harness, see
+//! `tests/sim_cluster.rs`).
 
 use std::path::Path;
 

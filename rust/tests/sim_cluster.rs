@@ -1,0 +1,177 @@
+//! Simulation-harness tiers over the real cluster stack.
+//!
+//! Smoke tier (default `cargo test`): 10^4 tenants, the canonical
+//! schedule with every fault kind — kill mid-drain, kill during
+//! re-placement, autoscale oscillation under square-wave load, an
+//! admission storm, delta hot-churn — with the invariant monitor
+//! running continuously. Soak tier (`-- --ignored`, nightly CI):
+//! 10^5–10^6 tenants with a rotating seed and a seed-derived random
+//! schedule; on failure it writes `sim_soak_failure.log` (seed +
+//! schedule + violations) for CI to upload.
+//!
+//! Everything runs on the `bitdelta::sync::clock` virtual clock — no
+//! raw sleeps and no wall-clock `Instant` in this file (lint-enforced
+//! by the `raw-time` rule of `cargo xtask lint`).
+
+use bitdelta::coordinator::workload::{self, TraceConfig};
+use bitdelta::simharness::{
+    generate_population, run, smoke_schedule, FaultEvent,
+    FaultSchedule, PopulationConfig, SimConfig,
+};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The CI smoke run: a real elastic cluster with admission and an
+/// autoscaler, 10^4 Zipf tenants, every fault kind scripted, all
+/// invariants green. `SIM_SEED` rotates the seed from CI.
+#[test]
+fn sim_smoke_full_schedule_keeps_every_invariant() {
+    let cfg = SimConfig::smoke(env_u64("SIM_SEED", 11));
+    let report = run(&cfg, &smoke_schedule()).unwrap();
+    assert!(report.ok(), "{}", report.render_failure());
+    // the run must have actually exercised the machinery it claims to
+    assert!(report.submitted > 500,
+            "too little load ran: {}", report.render_failure());
+    assert!(report.served > 0, "{}", report.render_failure());
+    assert!(report.rejected > 0,
+            "the admission storm should shed load: {}",
+            report.render_failure());
+    assert!(report.failovers >= 1,
+            "scripted kills should surface as failovers: {}",
+            report.render_failure());
+    assert!(report.scale_ups >= 2,
+            "two spawns are scripted: {}", report.render_failure());
+    assert_eq!(report.route_errors + report.submit_errors, 0,
+               "a survivor was always routable: {}",
+               report.render_failure());
+}
+
+/// Injected-violation regression: a harness configured to leak every
+/// ticket (permits never released, responses never harvested) must be
+/// caught by the monitor — with the seed and printable schedule in the
+/// failure rendering, so the report is replayable as-is.
+#[test]
+fn leaked_permits_and_hung_tickets_are_caught_and_replayable() {
+    let cfg = SimConfig {
+        seed: 1234,
+        n_tenants: 200,
+        requests: 120,
+        sim_ms: 150,
+        leak_tickets: true,
+        ..SimConfig::default()
+    };
+    let schedule = FaultSchedule::new()
+        .at_ms(40, FaultEvent::AdmissionStorm {
+            tenant_rank: 0,
+            burst: 32,
+        });
+    let report = run(&cfg, &schedule).unwrap();
+    assert!(!report.ok(), "the leak must be detected");
+    let names: Vec<&str> =
+        report.violations.iter().map(|v| v.invariant).collect();
+    assert!(names.contains(&"hung-tickets"), "{names:?}");
+    assert!(names.contains(&"admission-in-flight"), "{names:?}");
+    assert_eq!(report.seed, 1234);
+    let failure = report.render_failure();
+    assert!(failure.contains("SIM_SEED=1234"), "{failure}");
+    assert!(failure.contains("admission-storm tenant=0 burst=32"),
+            "{failure}");
+}
+
+/// Churn regression (the place/route race): a tenant whose only
+/// replica dies keeps getting *typed* `RouteError`s — never a hang —
+/// and every admission permit comes back. The cluster has one worker
+/// and no autoscaler, so the kill leaves zero survivors.
+#[test]
+fn killed_last_replica_fails_typed_and_releases_every_permit() {
+    let cfg = SimConfig {
+        seed: 77,
+        n_tenants: 300,
+        initial_workers: 1,
+        requests: 150,
+        sim_ms: 200,
+        ..SimConfig::default()
+    };
+    let schedule = FaultSchedule::new()
+        .at_ms(60, FaultEvent::KillWorker { slot: 0 });
+    let report = run(&cfg, &schedule).unwrap();
+    // no hung tickets, no leaked permits, bookkeeping closed — the
+    // invariants hold even with the whole fleet dead
+    assert!(report.ok(), "{}", report.render_failure());
+    assert!(report.route_errors > 0,
+            "submits after the kill must fail with RouteError: {}",
+            report.render_failure());
+    assert_eq!(report.submit_errors, 0,
+               "no untyped submit failures allowed: {}",
+               report.render_failure());
+    assert_eq!(report.served + report.errored, report.submitted,
+               "{}", report.render_failure());
+}
+
+/// Seed replay is exact: population, trace and random schedules are
+/// bit-identical across generations — the property that makes a
+/// failing seed from CI reproducible anywhere.
+#[test]
+fn seed_replays_population_trace_and_schedule_bit_identically() {
+    let pcfg = PopulationConfig {
+        n_tenants: 10_000,
+        ..PopulationConfig::default()
+    };
+    let a = generate_population(42, &pcfg);
+    let b = generate_population(42, &pcfg);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.codec, y.codec);
+        assert_eq!(x.resident_bytes, y.resident_bytes);
+        assert_eq!(x.levels, y.levels);
+        assert_eq!(x.weight.to_bits(), y.weight.to_bits());
+    }
+
+    let tc = TraceConfig {
+        n_tenants: 10_000,
+        n_requests: 500,
+        seed: 42,
+        ..TraceConfig::default()
+    };
+    let t1 = workload::generate(&tc);
+    let t2 = workload::generate(&tc);
+    assert_eq!(t1.len(), t2.len());
+    for (x, y) in t1.iter().zip(&t2) {
+        assert_eq!(x.at.to_bits(), y.at.to_bits());
+        assert_eq!(x.tenant, y.tenant);
+        assert_eq!(x.max_new_tokens, y.max_new_tokens);
+    }
+
+    assert_eq!(FaultSchedule::random(42, 2000, 4),
+               FaultSchedule::random(42, 2000, 4));
+}
+
+/// Nightly soak: 10^5 (default) to 10^6 tenants, seed-derived random
+/// schedule covering every fault kind. On violation, writes the
+/// replayable failure block to `sim_soak_failure.log` (uploaded by
+/// the `sim-soak` CI job) and panics with it.
+#[test]
+#[ignore = "soak tier — run nightly via `cargo test -- --ignored` \
+with SIM_SEED / SIM_TENANTS"]
+fn sim_soak_random_schedule_at_scale() {
+    let seed = env_u64("SIM_SEED", 1);
+    let cfg = SimConfig {
+        n_tenants: env_u64("SIM_TENANTS", 100_000) as usize,
+        requests: 4_000,
+        sim_ms: 2_000,
+        ..SimConfig::smoke(seed)
+    };
+    let schedule = FaultSchedule::random(
+        seed, cfg.sim_ms, cfg.initial_workers + 1);
+    let report = run(&cfg, &schedule).unwrap();
+    if !report.ok() {
+        let failure = report.render_failure();
+        let _ = std::fs::write("sim_soak_failure.log", &failure);
+        panic!("{failure}");
+    }
+}

@@ -26,6 +26,15 @@
 //!   invisible to the model checker). `// lint: allow(std-sync, ...)`
 //!   marks the deliberate exceptions (const-constructible config
 //!   cells).
+//! * `raw-time` — the clock-migrated files (cluster layer, admission,
+//!   the simulation harness and its test suites) must take time from
+//!   `crate::sync::clock` (`clock::Instant` / `clock::sleep`), never
+//!   `std::time::Instant` or a `thread::sleep` — a raw source would
+//!   not dilate under the simulation harness's virtual clock. Unlike
+//!   `std-sync` this rule scans *test* code too (sleep-paced tests are
+//!   exactly what the virtual clock retires);
+//!   `// lint: allow(raw-time, reason)` marks the deliberate real
+//!   pacing naps.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -41,6 +50,28 @@ const SYNC_MIGRATED: &[&str] = &[
     "src/coordinator/admission.rs",
     "src/gemm/dispatch.rs",
     "src/kvcache/pool.rs",
+];
+
+/// Files (relative to `rust/`) whose time sources must route through
+/// `crate::sync::clock`. Includes integration tests — unlike the
+/// syn-driven rules, `raw-time` deliberately covers test regions.
+/// `src/sync.rs` itself is excluded (it implements the seam) and so
+/// is `src/main.rs` (binary entry points measure real wall time).
+const TIME_MIGRATED: &[&str] = &[
+    "src/cluster/autoscaler.rs",
+    "src/cluster/frontend.rs",
+    "src/cluster/metrics.rs",
+    "src/cluster/placement.rs",
+    "src/cluster/testutil.rs",
+    "src/cluster/worker.rs",
+    "src/coordinator/admission.rs",
+    "src/simharness/harness.rs",
+    "src/simharness/mod.rs",
+    "src/simharness/monitor.rs",
+    "src/simharness/schedule.rs",
+    "src/simharness/tenants.rs",
+    "tests/service_concurrency.rs",
+    "tests/sim_cluster.rs",
 ];
 
 /// Docs scanned by the `metric` rule (CHANGES.md is a historical log
@@ -75,6 +106,7 @@ fn main() -> ExitCode {
                        &mut findings);
     }
     lint_codec_registration(&rust, &mut findings);
+    lint_raw_time(&rust, &mut findings);
     for doc in DOC_FILES {
         lint_doc(&root.join(doc), &registry, &mut findings);
     }
@@ -470,6 +502,40 @@ directory missing".into());
             findings.push(format!(
                 "src/delta/codecs/{name}:1: [codec-registered] module \
 {module} is not registered in CodecRegistry::builtin()"));
+        }
+    }
+}
+
+/// `raw-time`: wall-clock sources in clock-migrated files. A separate
+/// textual pass (not part of `lint_rust_file`) because it covers
+/// `tests/` binaries the syn walk never visits, and because — unlike
+/// `std-sync` — test regions are *not* exempt. Matches
+/// `std::time::Instant` (construction or paths) and any
+/// `thread::sleep(` call (std's or the `crate::sync::thread` wrapper —
+/// in a migrated file both must be `clock::sleep` or carry an allow).
+fn lint_raw_time(rust: &Path, findings: &mut Vec<String>) {
+    for rel in TIME_MIGRATED {
+        let src = read(&rust.join(rel));
+        if src.is_empty() {
+            findings.push(format!(
+                "{rel}:1: [raw-time] listed in TIME_MIGRATED but \
+missing or unreadable — fix the list or restore the file"));
+            continue;
+        }
+        let lines: Vec<&str> = src.lines().collect();
+        for (idx, l) in lines.iter().enumerate() {
+            let i = idx + 1;
+            let code = l.split("//").next().unwrap_or("");
+            if (code.contains("std::time::Instant")
+                || code.contains("thread::sleep("))
+                && !window_allows(&lines, i, "raw-time")
+            {
+                findings.push(format!(
+                    "{rel}:{i}: [raw-time] wall-clock time source in \
+a clock-migrated file — use crate::sync::clock (Instant / sleep) so \
+the simulation harness's virtual clock dilates it, or justify with \
+`// lint: allow(raw-time, reason)`"));
+            }
         }
     }
 }

@@ -2,10 +2,10 @@
 """Toolchain-free mirror of `cargo xtask lint`.
 
 CI runs the real linter (rust/xtask, syn-driven). This script mirrors
-its six rules with regexes so the lint gate can also run where no Rust
-toolchain is installed (pre-commit hooks, docs-only containers). Rule
-semantics are kept in lockstep with rust/xtask/src/main.rs — if you
-change one, change the other:
+its seven rules with regexes so the lint gate can also run where no
+Rust toolchain is installed (pre-commit hooks, docs-only containers).
+Rule semantics are kept in lockstep with rust/xtask/src/main.rs — if
+you change one, change the other:
 
   unwrap/expect     no .unwrap()/.expect() outside tests without a
                     `// lint: allow(unwrap|expect, reason)` marker
@@ -19,6 +19,12 @@ change one, change the other:
                     CodecRegistry::builtin()
   std-sync          the loom-migrated concurrency core imports sync
                     primitives from crate::sync, not std::sync/thread
+  raw-time          clock-migrated files (cluster, admission, the sim
+                    harness and its tests) never read std::time::Instant
+                    or call raw thread::sleep — time goes through
+                    crate::sync::clock. Unlike std-sync this rule scans
+                    test code too: a raw sleep in a virtual-clock test
+                    is exactly the flake the rule exists to prevent
 
 Exit 0 and print `lint: clean` when green; exit 1 with
 `path:line: [rule] message` diagnostics otherwise.
@@ -41,6 +47,27 @@ SYNC_MIGRATED = {
     "src/gemm/dispatch.rs",
     "src/kvcache/pool.rs",
 }
+
+# Files migrated onto the crate::sync::clock virtual-clock seam. Kept in
+# lockstep with TIME_MIGRATED in rust/xtask/src/main.rs. src/sync.rs is
+# deliberately absent (it *implements* the seam) and so is src/main.rs
+# (the CLI measures real wall time by design).
+TIME_MIGRATED = [
+    "src/cluster/autoscaler.rs",
+    "src/cluster/frontend.rs",
+    "src/cluster/metrics.rs",
+    "src/cluster/placement.rs",
+    "src/cluster/testutil.rs",
+    "src/cluster/worker.rs",
+    "src/coordinator/admission.rs",
+    "src/simharness/harness.rs",
+    "src/simharness/mod.rs",
+    "src/simharness/monitor.rs",
+    "src/simharness/schedule.rs",
+    "src/simharness/tenants.rs",
+    "tests/service_concurrency.rs",
+    "tests/sim_cluster.rs",
+]
 
 DOC_FILES = ["README.md", "ROADMAP.md"]  # CHANGES.md is a log: skipped
 
@@ -166,6 +193,29 @@ def lint_rust_file(path: Path, registry: list[str],
                     f"crate::sync")
 
 
+def lint_raw_time(findings: list[str]) -> None:
+    """Wall-clock sources in clock-migrated files (tests included)."""
+    for rel in TIME_MIGRATED:
+        path = RUST / rel
+        if not path.exists():
+            findings.append(
+                f"{rel}:1: [raw-time] listed in TIME_MIGRATED but "
+                f"missing or unreadable")
+            continue
+        lines = path.read_text().splitlines()
+        for i, line in enumerate(lines):
+            code = strip_line_comment(line)
+            if ("std::time::Instant" in code
+                    or "thread::sleep(" in code) \
+                    and not window_allows(lines, i, "raw-time"):
+                findings.append(
+                    f"{rel}:{i + 1}: [raw-time] wall-clock time source "
+                    f"in a clock-migrated file — use crate::sync::clock "
+                    f"(Instant / sleep) so virtual-clock runs stay "
+                    f"deterministic, or justify the one real wait with "
+                    f"`// lint: allow(raw-time, reason)`")
+
+
 def lint_codec_registration(findings: list[str]) -> None:
     codec_rs = (RUST / "src/delta/codec.rs").read_text()
     for p in sorted((RUST / "src/delta/codecs").glob("*.rs")):
@@ -206,6 +256,7 @@ def main() -> int:
     findings: list[str] = []
     for path in sorted((RUST / "src").rglob("*.rs")):
         lint_rust_file(path, registry, exec_kinds, findings)
+    lint_raw_time(findings)
     lint_codec_registration(findings)
     for doc in DOC_FILES:
         lint_doc(ROOT / doc, registry, findings)
